@@ -1,0 +1,88 @@
+//! Compressor laboratory: empirically estimate every compressor's
+//! contraction/variance parameter and check it against the §3 theory —
+//! including Proposition 3.2's composition parameter
+//! `δ = R/(d(ω₁+1)(ω₂+1))` and Lemma 3.1's symmetrization claim.
+//!
+//! ```bash
+//! cargo run --release --example compressor_lab
+//! ```
+
+use basis_learn::compressors::{CompressorClass, CompressorSpec};
+use basis_learn::linalg::Mat;
+use basis_learn::rng::Rng;
+
+fn empirical(spec: &CompressorSpec, d: usize, trials: usize, rng: &mut Rng) -> (f64, f64, f64) {
+    // Returns (E‖C(A)−A‖²/‖A‖², ‖E C(A) − A‖/‖A‖, avg bits).
+    let comp = spec.build_mat(d);
+    let mut rel_err = 0.0;
+    let mut bits = 0.0;
+    let mut a = Mat::from_fn(d, d, |_, _| rng.normal());
+    a.symmetrize();
+    let mut mean = Mat::zeros(d, d);
+    for _ in 0..trials {
+        let (c, cost) = comp.compress(&a, rng);
+        rel_err += (&c - &a).fro_norm_sq() / a.fro_norm_sq();
+        bits += cost.total_bits(64);
+        mean.add_scaled(1.0 / trials as f64, &c);
+    }
+    let bias = (&mean - &a).fro_norm() / a.fro_norm();
+    (rel_err / trials as f64, bias, bits / trials as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let d = 24;
+    let mut rng = Rng::new(123);
+    let specs = [
+        "identity", "topk:24", "randk:24", "rank:1", "rank:4", "dith:5", "nat",
+        "rrank:1", "nrank:1", "rtopk:24", "ntopk:24",
+    ];
+    println!("d = {d}; 400 trials per compressor; symmetric Gaussian input\n");
+    println!(
+        "{:<12}{:>16}{:>16}{:>12}{:>12}{:>14}",
+        "compressor", "E‖C−A‖²/‖A‖²", "theory (1−δ)", "bias", "bits/msg", "class"
+    );
+    for s in specs {
+        let spec = CompressorSpec::parse(s)?;
+        let comp = spec.build_mat(d);
+        let class = comp.class(d * d, d);
+        let (err, bias, bits) = empirical(&spec, d, 400, &mut rng);
+        let (theory, class_name) = match class {
+            CompressorClass::Contractive { delta } => (format!("{:.4}", 1.0 - delta), "contract"),
+            CompressorClass::Unbiased { omega } => (format!("ω={omega:.2}"), "unbiased"),
+        };
+        println!(
+            "{:<12}{:>16.4}{:>16}{:>12.4}{:>12.0}{:>14}",
+            s, err, theory, bias, bits, class_name
+        );
+        // Hard checks, mirroring the unit tests but at higher trial counts.
+        match class {
+            CompressorClass::Contractive { delta } => {
+                assert!(err <= (1.0 - delta) * 1.05 + 1e-9, "{s}: contraction violated");
+            }
+            CompressorClass::Unbiased { omega } => {
+                // The Monte-Carlo mean of an ω-variance estimator over T
+                // trials deviates by ~√(ω/T); allow 3 standard errors.
+                let tol = 3.0 * (omega / 400.0).sqrt() + 0.02;
+                assert!(bias < tol, "{s}: biased output ({bias} > {tol})");
+            }
+        }
+    }
+
+    println!("\nProposition 3.2 spot check (RRank-1, varying dithering levels):");
+    for levels in [1u32, 2, 4, 16] {
+        let spec = CompressorSpec::RRank(1, Some(levels));
+        let comp = spec.build_mat(d);
+        let delta = match comp.class(d * d, d) {
+            CompressorClass::Contractive { delta } => delta,
+            _ => unreachable!(),
+        };
+        let (err, _, _) = empirical(&spec, d, 400, &mut rng);
+        println!(
+            "  s={levels:<3} δ_theory={delta:.5}  empirical E‖C−A‖²/‖A‖²={err:.4} ≤ 1−δ={:.5}",
+            1.0 - delta
+        );
+        assert!(err <= 1.0 - delta + 0.03);
+    }
+    println!("\nall checks passed");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! End-to-end driver over the **full three-layer stack** (DESIGN.md §5).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example federated_logreg
+//! ```
+//!
+//! Generates an a1a-shaped federated dataset (shape (m, d) = (100, 30) per
+//! client, in the AOT shape grid), builds PJRT-backed local problems — every
+//! loss/gradient/Hessian evaluation on the hot path executes the HLO
+//! artifacts that were AOT-lowered from the JAX model (L2) calling the
+//! Pallas kernels (L1) — and trains with BL1, FedNL and GD for a few hundred
+//! rounds, logging gap-vs-bits curves to `runs/` and printing the headline
+//! comparison. The run recorded in EXPERIMENTS.md §E2E comes from here.
+
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, RunConfig};
+use basis_learn::coordinator::run_federated_with;
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::linalg::Mat;
+use basis_learn::problem::LocalProblem;
+use basis_learn::runtime::{PjrtProblem, Runtime};
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = Rc::new(Runtime::load(Path::new(&dir))?);
+    println!(
+        "PJRT runtime up: platform={}, lossgrad shapes={:?}",
+        rt.platform(),
+        rt.shapes("logreg_lossgrad")
+    );
+
+    // 8 clients × 100 points, d=30, r=6 — the (100, 30) artifact shape.
+    let fed = FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 8,
+        m_per_client: 100,
+        dim: 30,
+        intrinsic_dim: 6,
+        noise: 0.0,
+        seed: 7,
+    });
+    println!(
+        "dataset {}: n={} d={} r={:.0}, {} points",
+        fed.name,
+        fed.n_clients(),
+        fed.dim(),
+        fed.avg_intrinsic_dim(1e-9),
+        fed.total_points()
+    );
+
+    let build_locals = || -> anyhow::Result<Vec<Box<dyn LocalProblem>>> {
+        fed.clients
+            .iter()
+            .map(|c| {
+                Ok(Box::new(PjrtProblem::new(rt.clone(), c.a.clone(), c.b.clone())?)
+                    as Box<dyn LocalProblem>)
+            })
+            .collect()
+    };
+
+    let runs = [
+        ("bl1", RunConfig {
+            algorithm: Algorithm::Bl1,
+            hess_comp: CompressorSpec::TopK(6),
+            rounds: 400,
+            ..RunConfig::default()
+        }),
+        ("fednl", RunConfig {
+            algorithm: Algorithm::FedNl,
+            hess_comp: CompressorSpec::RankR(1),
+            rounds: 400,
+            ..RunConfig::default()
+        }),
+        ("gd", RunConfig {
+            algorithm: Algorithm::Gd,
+            rounds: 400,
+            ..RunConfig::default()
+        }),
+    ];
+
+    println!(
+        "\n{:<10}{:>8}{:>12}{:>16}{:>14}{:>12}",
+        "method", "rounds", "wall (s)", "bits/node", "final gap", "‖∇f‖"
+    );
+    for (name, mut cfg) in runs {
+        cfg.lambda = 1e-3;
+        cfg.target_gap = 1e-12;
+        let locals = build_locals()?;
+        let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+        let t0 = Instant::now();
+        let out = run_federated_with(&locals, features, &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let last = out.history.records.last().unwrap();
+        println!(
+            "{:<10}{:>8}{:>12.2}{:>16.3e}{:>14.2e}{:>12.2e}",
+            name,
+            out.history.records.len(),
+            wall,
+            out.bits_per_node(),
+            out.final_gap(),
+            last.grad_norm
+        );
+        let mut hist = out.history;
+        hist.label = format!("pjrt_{name}");
+        let path = hist.write_csv(Path::new("runs"), "e2e")?;
+        println!("          loss curve → {}", path.display());
+    }
+
+    println!("\nEvery local evaluation above ran through PJRT-loaded HLO (JAX L2 + Pallas L1).");
+    Ok(())
+}

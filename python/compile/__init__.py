@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels, L2 model, AOT lowering).
+
+Never imported at run time: the Rust binary consumes only the HLO text
+artifacts this package emits.
+"""

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: the scaled Gram product ``Aᵀ diag(s) A``.
+
+This is the arithmetic hot-spot of the whole system — the GLM Hessian
+assembly (paper eq. 3), `O(m·d²)` per client per round versus the server's
+`O(d³)` solve. The kernel tiles the reduction dimension ``m`` and the output
+``d×d`` into VMEM-resident blocks and walks the grid ``(d/bd, d/bd, m/bm)``:
+
+* grid step ``(i, j, k)`` loads ``A[k·bm:, i·bd:]`` and ``A[k·bm:, j·bd:]``
+  (plus the matching slice of ``s``), scales the right tile's rows on the VPU
+  and accumulates ``bd×bd`` output tiles with an MXU matmul;
+* the output BlockSpec pins tile ``(i, j)`` across all ``k`` so the
+  accumulation happens in VMEM (standard reduction-tiled matmul schedule —
+  see DESIGN.md §Hardware-Adaptation).
+
+VMEM footprint per step: ``2·bm·bd + bm + bd²`` floats. With the default
+``bm = bd = 128`` at f32 that is ≈ 197 KiB, comfortably inside a TPU core's
+~16 MiB VMEM with room for double-buffering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the Rust runtime. Real-TPU performance is *estimated* from the tiling
+(see DESIGN.md §Perf), never measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest block ≤ target; n is padded to a multiple of the result."""
+    return min(n, target) if n > 0 else 1
+
+
+def _gram_kernel(a_i_ref, a_j_ref, s_ref, o_ref):
+    """One grid step: ``o[i,j] += (A_k_i)ᵀ (s_k ⊙ A_k_j)``."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_i = a_i_ref[...]  # (bm, bd)
+    sa_j = s_ref[...][:, None] * a_j_ref[...]  # VPU elementwise scale
+    # MXU contraction over the bm rows.
+    o_ref[...] += jax.lax.dot_general(
+        a_i,
+        sa_j,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "interpret"))
+def scaled_gram(a: jax.Array, s: jax.Array, *, bm: int = 128, bd: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """``Aᵀ diag(s) A`` via the tiled Pallas kernel.
+
+    Inputs of any ``(m, d)`` shape are zero-padded to block multiples
+    (zero rows/columns contribute nothing to the Gram product, so padding is
+    exact); the result is sliced back to ``(d, d)``.
+    """
+    m, d = a.shape
+    assert s.shape == (m,), f"weights shape {s.shape} != ({m},)"
+    bm = _pick_block(m, bm)
+    bd = _pick_block(d, bd)
+    m_pad = pl.cdiv(m, bm) * bm
+    d_pad = pl.cdiv(d, bd) * bd
+    a_p = jnp.pad(a, ((0, m_pad - m), (0, d_pad - d)))
+    s_p = jnp.pad(s, (0, m_pad - m))
+
+    grid = (d_pad // bd, d_pad // bd, m_pad // bm)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bm, bd), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, d_pad), a.dtype),
+        interpret=interpret,
+    )(a_p, a_p, s_p)
+    return out[:d, :d]
+
+
+def vmem_floats(bm: int, bd: int) -> int:
+    """Estimated VMEM working set in floats (two A tiles, s tile, out tile).
+
+    Used by DESIGN.md §Perf and the kernel-structure tests — not a runtime
+    quantity.
+    """
+    return 2 * bm * bd + bm + bd * bd

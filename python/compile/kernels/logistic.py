@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused logistic loss + gradient.
+
+One pass over the data per evaluation: each grid step loads a ``(bm, d)``
+tile of ``A`` plus the matching labels, computes the margins ``z = A x`` on
+the MXU, the stable ``log(1+e^{−bz})`` / ``σ(−bz)`` terms on the VPU, and
+accumulates both the scalar loss and the ``d``-vector gradient contribution
+``Aᵀu`` in VMEM-resident output blocks (the output BlockSpecs pin the same
+block for every grid step).
+
+The model dimension ``d`` stays resident (the paper's problems have
+``d ≤ 500`` — a ``128×500`` f32 tile is 256 KiB); the data dimension ``m``
+is tiled. Zero-padding rows is exact: a padded row has ``b = 0``, and the
+kernel masks padded rows explicitly via the label (``b = 0 ⇒`` the row is
+excluded from both loss and gradient).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lossgrad_kernel(a_ref, b_ref, x_ref, loss_ref, grad_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    a = a_ref[...]  # (bm, d)
+    b = b_ref[...]  # (bm,)
+    x = x_ref[...]  # (d,)
+    z = a @ x  # MXU matvec
+    bz = b * z
+    mask = (b != 0.0).astype(a.dtype)  # padded rows have b == 0
+    loss_ref[...] += jnp.sum(mask * jnp.logaddexp(0.0, -bz))
+    u = mask * (-b) * jax.nn.sigmoid(-bz)
+    grad_ref[...] += u @ a  # VPU/MXU reduction to (d,)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def logistic_lossgrad(a: jax.Array, b: jax.Array, x: jax.Array, *,
+                      bm: int = 128, interpret: bool = True):
+    """Summed logistic loss and gradient (1/m normalization happens in L2).
+
+    Returns ``(loss_scalar, grad_d)``.
+    """
+    m, d = a.shape
+    assert b.shape == (m,) and x.shape == (d,)
+    bm = min(m, bm) if m > 0 else 1
+    m_pad = pl.cdiv(m, bm) * bm
+    a_p = jnp.pad(a, ((0, m_pad - m), (0, 0)))
+    b_p = jnp.pad(b, (0, m_pad - m))
+
+    loss, grad = pl.pallas_call(
+        _lossgrad_kernel,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda k: (k, 0)),
+            pl.BlockSpec((bm,), lambda k: (k,)),
+            pl.BlockSpec((d,), lambda k: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((), lambda k: ()),
+            pl.BlockSpec((d,), lambda k: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((), a.dtype),
+            jax.ShapeDtypeStruct((d,), a.dtype),
+        ],
+        interpret=interpret,
+    )(a_p, b_p, x)
+    return loss, grad

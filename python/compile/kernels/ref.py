@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy ops; pytest asserts allclose agreement across a
+hypothesis-driven sweep of shapes and dtypes (python/tests/test_kernels.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def scaled_gram_ref(a: jax.Array, s: jax.Array) -> jax.Array:
+    """``Aᵀ diag(s) A`` — the GLM Hessian core (paper eq. 3).
+
+    Args:
+        a: ``(m, d)`` feature matrix.
+        s: ``(m,)`` per-row weights.
+
+    Returns:
+        ``(d, d)`` symmetric matrix.
+    """
+    return a.T @ (s[:, None] * a)
+
+
+def logistic_lossgrad_ref(a: jax.Array, b: jax.Array, x: jax.Array):
+    """Summed logistic loss and gradient (no 1/m factor; the model layer
+    normalizes).
+
+    ``loss = Σ_j log(1 + exp(−b_j a_jᵀx))``,
+    ``grad = Aᵀ u`` with ``u_j = −b_j σ(−b_j a_jᵀx)``.
+    """
+    z = a @ x
+    bz = b * z
+    loss = jnp.sum(jnp.logaddexp(0.0, -bz))
+    u = -b * jax.nn.sigmoid(-bz)
+    grad = a.T @ u
+    return loss, grad
+
+
+def logistic_hess_weights_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """Per-row Hessian weights ``φ″(a_jᵀx) = σ(z)σ(−z)`` (label-free)."""
+    z = a @ x
+    return jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)
+
+
+def logistic_hess_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """Summed logistic Hessian ``Aᵀ diag(σσ′) A`` (no 1/m factor)."""
+    return scaled_gram_ref(a, logistic_hess_weights_ref(a, x))

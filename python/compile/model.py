@@ -1,0 +1,44 @@
+"""L2: the local GLM objective as a JAX program calling the L1 kernels.
+
+These are the functions AOT-lowered (per data shape) into the HLO artifacts
+the Rust runtime executes on the coordinator's hot path:
+
+* ``logreg_lossgrad(a, b, x) → (loss, grad)`` — the client's local loss and
+  gradient (data term only; the ridge λ lives at the server, see
+  DESIGN.md §6.3), fused into a single data pass via the Pallas
+  ``logistic_lossgrad`` kernel;
+* ``logreg_hess(a, x) → (hess,)`` — the local Hessian, whose scaled-Gram
+  core is the Pallas ``scaled_gram`` kernel.
+
+Everything is f64 (the coordinator drives gaps to 1e-12; see DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import gram, logistic  # noqa: E402
+
+
+def logreg_lossgrad(a: jax.Array, b: jax.Array, x: jax.Array):
+    """``f_i(x), ∇f_i(x)`` for ``f_i(x) = (1/m) Σ log(1+exp(−b a_jᵀx))``."""
+    m = a.shape[0]
+    loss_sum, grad_sum = logistic.logistic_lossgrad(a, b, x)
+    return loss_sum / m, grad_sum / m
+
+
+def logreg_hess(a: jax.Array, x: jax.Array):
+    """``∇²f_i(x) = (1/m) Aᵀ diag(σ(z)σ(−z)) A`` (label-free weights)."""
+    m = a.shape[0]
+    z = a @ x
+    s = jax.nn.sigmoid(z) * jax.nn.sigmoid(-z) / m
+    h = gram.scaled_gram(a, s)
+    # Exact symmetry for the coordinator's Cholesky path.
+    return ((h + h.T) * 0.5,)
+
+
+def logreg_loss_ref(a: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Plain-jnp local loss — autodiff oracle for the model tests."""
+    z = a @ x
+    return jnp.mean(jnp.logaddexp(0.0, -b * z))

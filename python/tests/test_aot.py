@@ -1,0 +1,74 @@
+"""AOT pipeline tests: lowering, manifest format, artifact content."""
+
+import pathlib
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def test_parse_shapes():
+    assert aot.parse_shapes("50x40,30x10") == [(50, 40), (30, 10)]
+    assert aot.parse_shapes(" 7X5 ") == [(7, 5)]
+    assert aot.parse_shapes("") == []
+
+
+def test_lower_entry_produces_hlo_text():
+    text = aot.lower_entry("logreg_lossgrad", 7, 5)
+    assert text.startswith("HloModule")
+    # f64 throughout.
+    assert "f64[7,5]" in text
+    assert "f32" not in text
+    hess = aot.lower_entry("logreg_hess", 7, 5)
+    assert "f64[5,5]" in hess
+
+
+def test_lower_entry_rejects_unknown():
+    try:
+        aot.lower_entry("nope", 2, 2)
+    except ValueError as e:
+        assert "nope" in str(e)
+    else:
+        raise AssertionError("expected ValueError")
+
+
+def test_build_writes_manifest_and_artifacts(tmp_path: pathlib.Path):
+    lines = aot.build(tmp_path, [(6, 4)])
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "logreg_lossgrad 6 4 logreg_lossgrad_6x4.hlo.txt" in manifest
+    assert "logreg_hess 6 4 logreg_hess_6x4.hlo.txt" in manifest
+    assert len([l for l in lines if not l.startswith("#")]) == 2
+    for f in ("logreg_lossgrad_6x4.hlo.txt", "logreg_hess_6x4.hlo.txt"):
+        assert (tmp_path / f).read_text().startswith("HloModule")
+
+
+def test_lowered_computation_matches_eager(tmp_path: pathlib.Path):
+    """Compile the lowered HLO back through jax and compare numerics —
+    the python-side half of the round-trip the Rust integration test does."""
+    m, d = 9, 4
+    rng = np.random.default_rng(3)
+    a = np.asarray(rng.normal(size=(m, d)))
+    b = np.where(rng.uniform(size=m) < 0.5, -1.0, 1.0)
+    x = rng.normal(size=(d,))
+
+    f64 = jax.numpy.float64
+    lowered = jax.jit(model.logreg_lossgrad).lower(
+        jax.ShapeDtypeStruct((m, d), f64),
+        jax.ShapeDtypeStruct((m,), f64),
+        jax.ShapeDtypeStruct((d,), f64),
+    )
+    compiled = lowered.compile()
+    loss, grad = compiled(a, b, x)
+    rloss, rgrad = ref.logistic_lossgrad_ref(a, b, x)
+    np.testing.assert_allclose(loss, rloss / m, rtol=1e-12)
+    np.testing.assert_allclose(grad, rgrad / m, rtol=1e-10, atol=1e-15)
+
+
+def test_default_shapes_cover_registry_and_tests():
+    # The shapes the Rust side depends on must stay in the default grid.
+    required = {(50, 40), (30, 10), (100, 30)}
+    assert required.issubset(set(aot.DEFAULT_SHAPES))

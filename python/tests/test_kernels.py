@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, block sizes and dtypes; every property asserts
+allclose against `compile.kernels.ref`. This is the CORE correctness signal
+for the kernels the AOT artifacts embed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import gram, logistic, ref  # noqa: E402
+
+dims = st.integers(min_value=1, max_value=37)
+rows = st.integers(min_value=1, max_value=150)
+blocks = st.sampled_from([1, 2, 3, 8, 16, 128])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def make_data(m, d, seed, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, d)).astype(dtype))
+    s = jnp.asarray(rng.uniform(0.0, 1.0, size=(m,)).astype(dtype))
+    b = jnp.asarray(np.where(rng.uniform(size=m) < 0.5, -1.0, 1.0).astype(dtype))
+    x = jnp.asarray(rng.normal(size=(d,)).astype(dtype))
+    return a, s, b, x
+
+
+class TestScaledGram:
+    @settings(max_examples=40, deadline=None)
+    @given(m=rows, d=dims, seed=seeds)
+    def test_matches_ref(self, m, d, seed):
+        a, s, _, _ = make_data(m, d, seed)
+        got = gram.scaled_gram(a, s)
+        want = ref.scaled_gram_ref(a, s)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=rows, d=dims, bm=blocks, bd=blocks, seed=seeds)
+    def test_block_size_invariance(self, m, d, bm, bd, seed):
+        """The result must not depend on the tiling."""
+        a, s, _, _ = make_data(m, d, seed)
+        got = gram.scaled_gram(a, s, bm=bm, bd=bd)
+        want = ref.scaled_gram_ref(a, s)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=rows, d=dims, seed=seeds)
+    def test_output_symmetric(self, m, d, seed):
+        a, s, _, _ = make_data(m, d, seed)
+        g = np.asarray(gram.scaled_gram(a, s))
+        np.testing.assert_allclose(g, g.T, rtol=0, atol=1e-11)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=rows, d=dims, seed=seeds)
+    def test_psd_for_nonnegative_weights(self, m, d, seed):
+        a, s, _, _ = make_data(m, d, seed)
+        g = np.asarray(gram.scaled_gram(a, s))
+        eig = np.linalg.eigvalsh((g + g.T) / 2)
+        assert eig.min() >= -1e-9
+
+    def test_float32(self):
+        a, s, _, _ = make_data(64, 16, 0, dtype=np.float32)
+        got = gram.scaled_gram(a, s)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(got, ref.scaled_gram_ref(a, s), rtol=1e-5, atol=1e-5)
+
+    def test_zero_weights_give_zero(self):
+        a, _, _, _ = make_data(20, 6, 1)
+        z = gram.scaled_gram(a, jnp.zeros(20, dtype=a.dtype))
+        np.testing.assert_array_equal(np.asarray(z), 0.0)
+
+    def test_vmem_estimate(self):
+        # 128×128 f32 default tiling working set ≈ 197 KiB.
+        floats = gram.vmem_floats(128, 128)
+        assert floats == 2 * 128 * 128 + 128 + 128 * 128
+        assert floats * 4 < 16 * 2**20  # fits VMEM with headroom
+
+
+class TestLogisticLossgrad:
+    @settings(max_examples=40, deadline=None)
+    @given(m=rows, d=dims, seed=seeds)
+    def test_matches_ref(self, m, d, seed):
+        a, _, b, x = make_data(m, d, seed)
+        loss, grad = logistic.logistic_lossgrad(a, b, x)
+        rloss, rgrad = ref.logistic_lossgrad_ref(a, b, x)
+        np.testing.assert_allclose(loss, rloss, rtol=1e-10)
+        np.testing.assert_allclose(grad, rgrad, rtol=1e-9, atol=1e-12)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=rows, d=dims, bm=blocks, seed=seeds)
+    def test_block_size_invariance(self, m, d, bm, seed):
+        a, _, b, x = make_data(m, d, seed)
+        loss, grad = logistic.logistic_lossgrad(a, b, x, bm=bm)
+        rloss, rgrad = ref.logistic_lossgrad_ref(a, b, x)
+        np.testing.assert_allclose(loss, rloss, rtol=1e-10)
+        np.testing.assert_allclose(grad, rgrad, rtol=1e-9, atol=1e-12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=rows, d=dims, seed=seeds)
+    def test_grad_matches_autodiff(self, m, d, seed):
+        """Kernel gradient == jax.grad of the summed reference loss."""
+        a, _, b, x = make_data(m, d, seed)
+        _, grad = logistic.logistic_lossgrad(a, b, x)
+        auto = jax.grad(lambda xx: ref.logistic_lossgrad_ref(a, b, xx)[0])(x)
+        np.testing.assert_allclose(grad, auto, rtol=1e-9, atol=1e-12)
+
+    def test_loss_at_zero_is_m_log2(self):
+        a, _, b, _ = make_data(33, 5, 2)
+        loss, grad = logistic.logistic_lossgrad(a, b, jnp.zeros(5, dtype=a.dtype))
+        np.testing.assert_allclose(loss, 33 * np.log(2.0), rtol=1e-12)
+
+    def test_extreme_margins_are_stable(self):
+        """log1p/sigmoid must not overflow at |z| ~ 700."""
+        a = jnp.asarray(np.full((4, 2), 500.0))
+        b = jnp.asarray([1.0, -1.0, 1.0, -1.0])
+        x = jnp.asarray([1.0, 1.0])
+        loss, grad = logistic.logistic_lossgrad(a, b, x)
+        assert np.isfinite(float(loss))
+        assert np.isfinite(np.asarray(grad)).all()
+
+
+class TestHessianComposition:
+    """The L2 Hessian (gram kernel fed with σσ' weights) vs oracle."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=rows, d=dims, seed=seeds)
+    def test_hess_matches_ref(self, m, d, seed):
+        a, _, _, x = make_data(m, d, seed)
+        w = ref.logistic_hess_weights_ref(a, x)
+        got = gram.scaled_gram(a, w)
+        want = ref.logistic_hess_ref(a, x)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(2, 60), d=st.integers(1, 20), seed=seeds)
+    def test_hess_matches_jax_hessian(self, m, d, seed):
+        a, _, b, x = make_data(m, d, seed)
+        got = gram.scaled_gram(a, ref.logistic_hess_weights_ref(a, x))
+        auto = jax.hessian(lambda xx: ref.logistic_lossgrad_ref(a, b, xx)[0])(x)
+        np.testing.assert_allclose(got, auto, rtol=1e-8, atol=1e-10)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,65 @@
+"""L2 correctness: the model entry points that get AOT-lowered."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def make(m, d, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, d)) / np.sqrt(d))
+    b = jnp.asarray(np.where(rng.uniform(size=m) < 0.5, -1.0, 1.0))
+    x = jnp.asarray(rng.normal(size=(d,)))
+    return a, b, x
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 80), d=st.integers(1, 25), seed=seeds)
+def test_lossgrad_is_mean_normalized(m, d, seed):
+    a, b, x = make(m, d, seed)
+    loss, grad = model.logreg_lossgrad(a, b, x)
+    rloss, rgrad = ref.logistic_lossgrad_ref(a, b, x)
+    np.testing.assert_allclose(loss, rloss / m, rtol=1e-10)
+    np.testing.assert_allclose(grad, rgrad / m, rtol=1e-9, atol=1e-14)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 60), d=st.integers(1, 20), seed=seeds)
+def test_grad_is_autodiff_of_loss(m, d, seed):
+    a, b, x = make(m, d, seed)
+    _, grad = model.logreg_lossgrad(a, b, x)
+    auto = jax.grad(model.logreg_loss_ref, argnums=2)(a, b, x)
+    np.testing.assert_allclose(grad, auto, rtol=1e-9, atol=1e-14)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 50), d=st.integers(1, 15), seed=seeds)
+def test_hess_is_autodiff_hessian(m, d, seed):
+    a, b, x = make(m, d, seed)
+    (h,) = model.logreg_hess(a, x)
+    auto = jax.hessian(model.logreg_loss_ref, argnums=2)(a, b, x)
+    np.testing.assert_allclose(h, auto, rtol=1e-8, atol=1e-11)
+
+
+def test_hess_exactly_symmetric():
+    a, b, x = make(40, 12, 7)
+    (h,) = model.logreg_hess(a, x)
+    h = np.asarray(h)
+    np.testing.assert_array_equal(h, h.T)
+
+
+def test_outputs_are_f64():
+    a, b, x = make(10, 4, 0)
+    loss, grad = model.logreg_lossgrad(a, b, x)
+    (h,) = model.logreg_hess(a, x)
+    assert loss.dtype == jnp.float64
+    assert grad.dtype == jnp.float64
+    assert h.dtype == jnp.float64

@@ -1,0 +1,133 @@
+//! Hot-path micro-benchmarks (the §Perf targets of EXPERIMENTS.md):
+//! linalg primitives, compressors, bases, local oracles, the server solve,
+//! and the PJRT dispatch overhead vs the native oracle.
+//!
+//! ```bash
+//! cargo bench --bench hot_path            # all groups
+//! cargo bench --bench hot_path -- gram    # filter by substring
+//! ```
+
+use basis_learn::basis::{HessianBasis, PsdBasis, StandardBasis, SubspaceBasis};
+use basis_learn::bench_util::{black_box, Bench};
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::coordinator::project_psd;
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::linalg::{cholesky_solve, svd, sym_eigen, Mat};
+use basis_learn::problem::{LocalProblem, LogisticProblem};
+use basis_learn::rng::Rng;
+
+fn filter_match(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(1);
+
+    // ── linalg primitives ──
+    if filter_match("linalg") {
+        b.group("linalg (d=123, the a1a dimension)");
+        let d = 123;
+        let a = Mat::from_fn(d, d, |_, _| rng.normal());
+        let mut spd = a.transpose().matmul(&a);
+        spd.add_diag(1.0);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        b.bench("linalg/matmul 123x123", || a.matmul(&a));
+        b.bench("linalg/matvec 123x123", || a.matvec(&x));
+        b.bench("linalg/cholesky_solve 123", || cholesky_solve(&spd, &x).unwrap());
+        b.bench("linalg/sym_eigen 123", || sym_eigen(&spd));
+        b.bench("linalg/svd 123", || svd(&a));
+        b.bench("linalg/project_psd 123", || project_psd(&spd, 1e-3));
+    }
+
+    // ── the Hessian assembly (native mirror of the L1 Pallas kernel) ──
+    if filter_match("gram") {
+        b.group("scaled Gram Aᵀdiag(s)A (the L1 kernel's native mirror)");
+        for (m, d) in [(100, 123), (1000, 123), (500, 300)] {
+            let a = Mat::from_fn(m, d, |_, _| rng.normal());
+            let s: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+            b.bench(format!("gram/{m}x{d}"), || a.gram_scaled(&s));
+        }
+    }
+
+    // ── local oracles ──
+    if filter_match("oracle") {
+        b.group("logistic oracle (m=100, d=123)");
+        let fed = FederatedDataset::synthetic(&SyntheticSpec {
+            n_clients: 1,
+            m_per_client: 100,
+            dim: 123,
+            intrinsic_dim: 60,
+            noise: 0.0,
+            seed: 5,
+        });
+        let p = LogisticProblem::new(fed.clients[0].a.clone(), fed.clients[0].b.clone());
+        let x: Vec<f64> = (0..123).map(|_| rng.normal() * 0.1).collect();
+        b.bench("oracle/loss_grad", || p.loss_grad(&x));
+        b.bench("oracle/hess", || p.hess(&x));
+        b.bench("oracle/hess_vec", || p.hess_vec(&x, &x));
+    }
+
+    // ── compressors on d×d Hessian-difference-like inputs ──
+    if filter_match("compress") {
+        b.group("matrix compressors (64×64 symmetric input)");
+        let d = 64;
+        let mut a = Mat::from_fn(d, d, |_, _| rng.normal());
+        a.symmetrize();
+        for spec in ["topk:64", "randk:64", "rank:1", "dith:8", "nat", "rrank:1", "ntopk:64"] {
+            let comp = CompressorSpec::parse(spec).unwrap().build_mat(d);
+            let mut r = rng.derive(9);
+            b.bench(format!("compress/{spec}"), || comp.compress(black_box(&a), &mut r));
+        }
+    }
+
+    // ── bases ──
+    if filter_match("basis") {
+        b.group("basis encode/decode (d=123, r=60)");
+        let d = 123;
+        let v = basis_learn::basis::subspace::orthonormal_cols(d, 60, &mut rng);
+        let bases: Vec<Box<dyn HessianBasis>> = vec![
+            Box::new(StandardBasis::new(d)),
+            Box::new(SubspaceBasis::new(v)),
+            Box::new(PsdBasis::new(d)),
+        ];
+        let mut h = Mat::from_fn(d, d, |_, _| rng.normal());
+        h.symmetrize();
+        for basis in &bases {
+            let coeff = basis.encode(&h);
+            b.bench(format!("basis/encode/{}", basis.name()), || basis.encode(black_box(&h)));
+            b.bench(format!("basis/decode/{}", basis.name()), || basis.decode(black_box(&coeff)));
+        }
+    }
+
+    // ── PJRT dispatch vs native (needs artifacts) ──
+    if filter_match("pjrt") {
+        b.group("PJRT dispatch vs native oracle (m=100, d=30)");
+        match basis_learn::runtime::Runtime::load(std::path::Path::new("artifacts")) {
+            Ok(rt) => {
+                let rt = std::rc::Rc::new(rt);
+                let fed = FederatedDataset::synthetic(&SyntheticSpec {
+                    n_clients: 1,
+                    m_per_client: 100,
+                    dim: 30,
+                    intrinsic_dim: 6,
+                    noise: 0.0,
+                    seed: 6,
+                });
+                let c = &fed.clients[0];
+                let native = LogisticProblem::new(c.a.clone(), c.b.clone());
+                let pjrt =
+                    basis_learn::runtime::PjrtProblem::new(rt, c.a.clone(), c.b.clone()).unwrap();
+                let x: Vec<f64> = (0..30).map(|_| rng.normal() * 0.1).collect();
+                b.bench("pjrt/loss_grad native", || native.loss_grad(&x));
+                b.bench("pjrt/loss_grad pjrt", || pjrt.loss_grad(&x));
+                b.bench("pjrt/hess native", || native.hess(&x));
+                b.bench("pjrt/hess pjrt", || pjrt.hess(&x));
+            }
+            Err(e) => println!("  (skipping PJRT group: {e:#})"),
+        }
+    }
+
+    println!("\n{} cases measured.", b.results().len());
+}

@@ -1,0 +1,128 @@
+//! Hessian representation bases (paper §2.3, §4, §5).
+//!
+//! The central abstraction of *Basis Learn*: a client's Hessian
+//! `∇²f_i(x) ∈ R^{d×d}` is re-expressed as a coefficient matrix
+//! `h^i(∇²f_i(x))` with respect to a basis `{B_i^{jl}}` of (a subspace of)
+//! the matrix space, the *coefficients* are compressed and learned
+//! (`L_i^k`), and the server decodes `Σ_{jl} (L_i^k)_{jl} B_i^{jl}`.
+//! Choosing a basis adapted to the client's data makes `h` dramatically
+//! sparser / smaller than the raw Hessian — communication savings for free.
+//!
+//! Implementations:
+//! * [`StandardBasis`] — Example 4.1, `h(A) = A`. BL1/BL2 with this basis are
+//!   exactly FedNL / FedNL-PP / FedNL-BC.
+//! * [`SymTriBasis`] — Example 4.2, `h(A)` = lower-triangular packing of a
+//!   symmetric matrix (halves the float count).
+//! * [`SubspaceBasis`] — §2.3: the data-driven basis `{v_t v_lᵀ}` built from
+//!   an orthonormal basis `V ∈ R^{d×r}` of the client's data span;
+//!   `h(A) = VᵀAV ∈ R^{r×r}` and gradients compress to `r` coefficients.
+//! * [`PsdBasis`] — Example 5.1: a basis of `S^d` whose elements are PSD,
+//!   enabling BL3's projection-free positive-definiteness trick.
+
+mod psd;
+mod standard;
+pub mod subspace;
+
+pub use psd::PsdBasis;
+pub use standard::{StandardBasis, SymTriBasis};
+pub use subspace::SubspaceBasis;
+
+use crate::linalg::Mat;
+
+/// A basis of (a subspace of) the space of `d×d` matrices, with the
+/// coefficient transforms the Basis-Learn algorithms need.
+pub trait HessianBasis: Send + Sync {
+    /// Ambient dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Shape of the coefficient object `h(A)` (rows, cols).
+    fn coeff_shape(&self) -> (usize, usize);
+
+    /// Coefficients `h(A)` of a (symmetric) matrix in this basis.
+    ///
+    /// For bases spanning a strict subspace (e.g. [`SubspaceBasis`]) this is
+    /// the orthogonal projection onto the span — lossless whenever `A` lies
+    /// in the span, which holds for GLM data-Hessians by construction (§2.3).
+    fn encode(&self, a: &Mat) -> Mat;
+
+    /// Reconstruct `Σ_{jl} h_{jl} B^{jl}` from coefficients.
+    fn decode(&self, h: &Mat) -> Mat;
+
+    /// `N_B` of eq. (10): 1 if the basis matrices are mutually orthogonal
+    /// (in the Frobenius inner product), `d²` otherwise.
+    fn n_b(&self) -> f64;
+
+    /// `R` of Assumption 4.7: `max_{jl} ‖B^{jl}‖_F`.
+    fn max_fro(&self) -> f64;
+
+    /// Whether every basis element is PSD (required by BL3, §5).
+    fn is_psd_basis(&self) -> bool {
+        false
+    }
+
+    /// Number of float coefficients in the gradient representation.
+    /// Defaults to `d` (standard coordinates).
+    fn grad_coeff_len(&self) -> usize {
+        self.dim()
+    }
+
+    /// Gradient coefficients (defaults to identity).
+    fn encode_grad(&self, g: &[f64]) -> Vec<f64> {
+        g.to_vec()
+    }
+
+    /// Reconstruct a gradient from its coefficients.
+    fn decode_grad(&self, c: &[f64]) -> Vec<f64> {
+        c.to_vec()
+    }
+
+    /// Human-readable name.
+    fn name(&self) -> String;
+}
+
+/// Round-trip checks shared by all basis tests (and reused by integration
+/// tests): encode∘decode and decode∘encode identities on in-span matrices.
+#[cfg(test)]
+pub(crate) fn check_roundtrip(basis: &dyn HessianBasis, a: &Mat, tol: f64) {
+    let h = basis.encode(a);
+    assert_eq!((h.rows(), h.cols()), basis.coeff_shape(), "{}", basis.name());
+    let rec = basis.decode(&h);
+    let err = (&rec - a).fro_norm() / (1.0 + a.fro_norm());
+    assert!(err < tol, "{}: decode(encode(A)) err={err}", basis.name());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// decode must be linear: decode(αh₁ + h₂) = α·decode(h₁) + decode(h₂).
+    #[test]
+    fn decode_linearity_all_bases() {
+        let mut rng = Rng::new(70);
+        let d = 6;
+        let v = crate::basis::subspace::orthonormal_cols(d, 3, &mut rng);
+        let bases: Vec<Box<dyn HessianBasis>> = vec![
+            Box::new(StandardBasis::new(d)),
+            Box::new(SymTriBasis::new(d)),
+            Box::new(SubspaceBasis::new(v)),
+            Box::new(PsdBasis::new(d)),
+        ];
+        for b in &bases {
+            let (r, c) = b.coeff_shape();
+            let h1 = Mat::from_fn(r, c, |_, _| rng.normal());
+            let h2 = Mat::from_fn(r, c, |_, _| rng.normal());
+            let alpha = 0.7;
+            let mut comb = h1.clone();
+            comb.data_mut().iter_mut().zip(h2.data()).for_each(|(x, y)| *x = alpha * *x + y);
+            let lhs = b.decode(&comb);
+            let mut rhs = b.decode(&h1);
+            rhs.data_mut()
+                .iter_mut()
+                .zip(b.decode(&h2).data())
+                .for_each(|(x, y)| *x = alpha * *x + y);
+            let err = (&lhs - &rhs).fro_norm();
+            assert!(err < 1e-10, "{}: decode not linear, err={err}", b.name());
+        }
+    }
+}

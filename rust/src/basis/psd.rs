@@ -1,0 +1,205 @@
+//! The PSD basis of `S^d` (Example 5.1) used by BL3.
+//!
+//! Basis elements: for `j ≠ l`, `B^{jl}` has ones at `(j,l), (l,j), (j,j),
+//! (l,l)` (PSD: it is the Gram matrix of `e_j + e_l` restricted to the 2×2
+//! block); for `j = l`, `B^{jj} = e_j e_jᵀ`. Every element is PSD, which lets
+//! BL3 keep its Hessian estimator `Σ (β(L+2γ) − 2γ)_{jl} B^{jl}` provably
+//! `⪰ ∇²f_i` without eigenvalue projections.
+//!
+//! Coefficient convention (paper §5): `h̃(A)` is stored as a *symmetric* `d×d`
+//! matrix with `h̃(A)_{jl} = ½·c_{jl}` for `j ≠ l` and `h̃(A)_{jj} = c_{jj}`,
+//! where `c` are the unique expansion coefficients over ordered pairs
+//! `j ≥ l`. With the convention `B^{lj} := B^{jl}`, decoding sums over *all*
+//! `(j,l)` pairs, so `decode(h̃) = Σ_{j,l} h̃_{jl} B^{jl}`.
+//!
+//! Closed forms (no `Ñ×Ñ` matrix inversion needed):
+//! `c_{jl} = A_{jl}` for `j ≠ l`, and `c_{jj} = A_{jj} − Σ_{l≠j} A_{jl}`.
+
+use super::HessianBasis;
+use crate::linalg::Mat;
+
+/// Example 5.1 PSD basis of the symmetric matrix space.
+#[derive(Clone, Copy, Debug)]
+pub struct PsdBasis {
+    d: usize,
+}
+
+impl PsdBasis {
+    pub fn new(d: usize) -> Self {
+        PsdBasis { d }
+    }
+
+    /// Materialize basis element `B^{jl}` (test/diagnostic helper).
+    pub fn element(&self, j: usize, l: usize) -> Mat {
+        let mut b = Mat::zeros(self.d, self.d);
+        if j == l {
+            b[(j, j)] = 1.0;
+        } else {
+            b[(j, l)] = 1.0;
+            b[(l, j)] = 1.0;
+            b[(j, j)] = 1.0;
+            b[(l, l)] = 1.0;
+        }
+        b
+    }
+
+    /// The matrix `Σ_{j,l} w_{jl} B^{jl}` for a symmetric weight matrix `w` —
+    /// shared by [`HessianBasis::decode`] and by BL3's `A_i^k`/`C_i^k`
+    /// bookkeeping where the weights are affine transforms of `L_i^k`.
+    pub fn weighted_sum(&self, w: &Mat) -> Mat {
+        let d = self.d;
+        debug_assert_eq!(w.rows(), d);
+        let mut out = Mat::zeros(d, d);
+        // Off-diagonal (p≠q): out_pq = w_pq + w_qp.
+        // Diagonal: out_pp = w_pp + Σ_{q≠p} (w_pq + w_qp).
+        for p in 0..d {
+            let mut diag = w[(p, p)];
+            for q in 0..d {
+                if q == p {
+                    continue;
+                }
+                let s = w[(p, q)] + w[(q, p)];
+                out[(p, q)] = s;
+                diag += s;
+            }
+            out[(p, p)] = diag;
+        }
+        out
+    }
+}
+
+impl HessianBasis for PsdBasis {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn coeff_shape(&self) -> (usize, usize) {
+        (self.d, self.d)
+    }
+
+    fn encode(&self, a: &Mat) -> Mat {
+        debug_assert!(a.is_symmetric(1e-9), "PsdBasis expects symmetric input");
+        let d = self.d;
+        // c_{jl} = A_{jl} (j≠l), c_{jj} = A_{jj} − Σ_{l≠j} A_{jl};
+        // stored with the ½ convention off-diagonal.
+        let mut h = Mat::zeros(d, d);
+        for j in 0..d {
+            let mut off_sum = 0.0;
+            for l in 0..d {
+                if l == j {
+                    continue;
+                }
+                off_sum += a[(j, l)];
+                h[(j, l)] = 0.5 * a[(j, l)];
+            }
+            h[(j, j)] = a[(j, j)] - off_sum;
+        }
+        h
+    }
+
+    fn decode(&self, h: &Mat) -> Mat {
+        self.weighted_sum(h)
+    }
+
+    fn n_b(&self) -> f64 {
+        // Elements overlap on diagonals ⇒ not orthogonal.
+        (self.d * self.d) as f64
+    }
+
+    fn max_fro(&self) -> f64 {
+        2.0 // ‖B^{jl}‖_F = 2 for j ≠ l (four unit entries)
+    }
+
+    fn is_psd_basis(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> String {
+        "psd".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::check_roundtrip;
+    use crate::linalg::sym_eigen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn elements_are_psd() {
+        let b = PsdBasis::new(5);
+        for j in 0..5 {
+            for l in 0..=j {
+                let e = sym_eigen(&b.element(j, l));
+                assert!(
+                    e.values.iter().all(|&lam| lam >= -1e-12),
+                    "B^{{{j},{l}}} not PSD: {:?}",
+                    e.values
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_symmetric() {
+        let mut rng = Rng::new(90);
+        for d in [1, 2, 3, 6, 11] {
+            let mut a = Mat::from_fn(d, d, |_, _| rng.normal());
+            a.symmetrize();
+            check_roundtrip(&PsdBasis::new(d), &a, 1e-12);
+        }
+    }
+
+    #[test]
+    fn decode_matches_explicit_basis_expansion() {
+        let mut rng = Rng::new(91);
+        let d = 4;
+        let basis = PsdBasis::new(d);
+        let mut h = Mat::from_fn(d, d, |_, _| rng.normal());
+        h.symmetrize();
+        let fast = basis.decode(&h);
+        // Explicit Σ_{j,l} h_jl B^{jl} (over all ordered pairs).
+        let mut explicit = Mat::zeros(d, d);
+        for j in 0..d {
+            for l in 0..d {
+                explicit.add_scaled(h[(j, l)], &basis.element(j, l));
+            }
+        }
+        assert!((&fast - &explicit).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn encode_identity_matrix() {
+        // I = Σ_j B^{jj}: coefficients are 1 on the diagonal, 0 elsewhere.
+        let d = 5;
+        let h = PsdBasis::new(d).encode(&Mat::eye(d));
+        for j in 0..d {
+            for l in 0..d {
+                let expect = if j == l { 1.0 } else { 0.0 };
+                assert!((h[(j, l)] - expect).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn coefficients_of_single_element() {
+        // encode(B^{jl}) should give ½ at (j,l),(l,j) and 0 diag contributions.
+        let d = 4;
+        let basis = PsdBasis::new(d);
+        let h = basis.encode(&basis.element(2, 0));
+        assert!((h[(2, 0)] - 0.5).abs() < 1e-14);
+        assert!((h[(0, 2)] - 0.5).abs() < 1e-14);
+        assert!(h[(1, 1)].abs() < 1e-14);
+        assert!(h[(0, 0)].abs() < 1e-14, "h00={}", h[(0, 0)]);
+        assert!(h[(2, 2)].abs() < 1e-14);
+    }
+
+    #[test]
+    fn decode_always_symmetric() {
+        let mut rng = Rng::new(92);
+        let mut h = Mat::from_fn(6, 6, |_, _| rng.normal());
+        h.symmetrize();
+        assert!(PsdBasis::new(6).decode(&h).is_symmetric(1e-12));
+    }
+}

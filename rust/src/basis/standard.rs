@@ -1,0 +1,180 @@
+//! Standard bases of `R^{d×d}` and of the symmetric subspace (Ex. 4.1/4.2).
+
+use super::HessianBasis;
+use crate::linalg::Mat;
+
+/// Example 4.1: the canonical basis `E_{jl}`; `h(A) = A`.
+///
+/// BL1/BL2 instantiated with this basis reduce exactly to FedNL variants —
+/// that identity is exploited by the FedNL implementations in
+/// `coordinator::fednl` and asserted by integration tests.
+#[derive(Clone, Copy, Debug)]
+pub struct StandardBasis {
+    d: usize,
+}
+
+impl StandardBasis {
+    pub fn new(d: usize) -> Self {
+        StandardBasis { d }
+    }
+}
+
+impl HessianBasis for StandardBasis {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn coeff_shape(&self) -> (usize, usize) {
+        (self.d, self.d)
+    }
+
+    fn encode(&self, a: &Mat) -> Mat {
+        a.clone()
+    }
+
+    fn decode(&self, h: &Mat) -> Mat {
+        h.clone()
+    }
+
+    fn n_b(&self) -> f64 {
+        1.0 // canonical basis is orthonormal
+    }
+
+    fn max_fro(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> String {
+        "standard".into()
+    }
+}
+
+/// Example 4.2: a basis adapted to symmetric matrices. For symmetric `A`,
+/// `h(A)` is the lower-triangular packing (strict lower triangle + diagonal,
+/// upper triangle zero), so only `d(d+1)/2` coefficients are non-zero.
+///
+/// `B^{jl}` (`j>l`) has ones at `(j,l)` and `(l,j)` (`‖B‖_F = √2`), the
+/// diagonal elements are `E_{jj}`; the antisymmetric completion of the basis
+/// is never exercised because all encoded matrices are symmetric.
+#[derive(Clone, Copy, Debug)]
+pub struct SymTriBasis {
+    d: usize,
+}
+
+impl SymTriBasis {
+    pub fn new(d: usize) -> Self {
+        SymTriBasis { d }
+    }
+}
+
+impl HessianBasis for SymTriBasis {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn coeff_shape(&self) -> (usize, usize) {
+        (self.d, self.d)
+    }
+
+    fn encode(&self, a: &Mat) -> Mat {
+        debug_assert!(a.is_symmetric(1e-9), "SymTriBasis expects symmetric input");
+        let d = self.d;
+        Mat::from_fn(d, d, |j, l| if j >= l { a[(j, l)] } else { 0.0 })
+    }
+
+    fn decode(&self, h: &Mat) -> Mat {
+        let d = self.d;
+        // Lower-triangular coefficients; reflect across the diagonal. Upper
+        // coefficients, if a compressor produced any, map to the same basis
+        // elements (B^{jl} = B^{lj} convention) and are folded in.
+        let mut out = Mat::zeros(d, d);
+        for j in 0..d {
+            for l in 0..d {
+                let c = h[(j, l)];
+                if c == 0.0 {
+                    continue;
+                }
+                if j == l {
+                    out[(j, j)] += c;
+                } else {
+                    out[(j, l)] += c;
+                    out[(l, j)] += c;
+                }
+            }
+        }
+        out
+    }
+
+    fn n_b(&self) -> f64 {
+        1.0 // elements are mutually Frobenius-orthogonal
+    }
+
+    fn max_fro(&self) -> f64 {
+        std::f64::consts::SQRT_2
+    }
+
+    fn name(&self) -> String {
+        "symtri".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::check_roundtrip;
+    use crate::rng::Rng;
+
+    #[test]
+    fn standard_is_identity() {
+        let mut rng = Rng::new(71);
+        let a = Mat::from_fn(5, 5, |_, _| rng.normal());
+        let b = StandardBasis::new(5);
+        assert_eq!(b.encode(&a), a);
+        assert_eq!(b.decode(&a), a);
+        check_roundtrip(&b, &a, 1e-14);
+    }
+
+    #[test]
+    fn symtri_roundtrip() {
+        let mut rng = Rng::new(72);
+        for d in [1, 2, 3, 7, 12] {
+            let mut a = Mat::from_fn(d, d, |_, _| rng.normal());
+            a.symmetrize();
+            check_roundtrip(&SymTriBasis::new(d), &a, 1e-13);
+        }
+    }
+
+    #[test]
+    fn symtri_encode_is_lower_triangular() {
+        let mut rng = Rng::new(73);
+        let mut a = Mat::from_fn(4, 4, |_, _| rng.normal());
+        a.symmetrize();
+        let h = SymTriBasis::new(4).encode(&a);
+        for j in 0..4 {
+            for l in (j + 1)..4 {
+                assert_eq!(h[(j, l)], 0.0);
+            }
+        }
+        assert_eq!(h[(2, 1)], a[(2, 1)]);
+        assert_eq!(h[(3, 3)], a[(3, 3)]);
+    }
+
+    #[test]
+    fn symtri_decode_always_symmetric() {
+        // Even on arbitrary (compressor-mangled) coefficients.
+        let mut rng = Rng::new(74);
+        let h = Mat::from_fn(5, 5, |_, _| rng.normal());
+        let out = SymTriBasis::new(5).decode(&h);
+        assert!(out.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn symtri_nonzero_coeff_count() {
+        let d = 6;
+        let mut a = Mat::from_fn(d, d, |i, j| (i + j) as f64 + 1.0);
+        a.symmetrize();
+        let h = SymTriBasis::new(d).encode(&a);
+        let nnz = h.data().iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz, d * (d + 1) / 2);
+    }
+}

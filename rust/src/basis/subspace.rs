@@ -1,0 +1,249 @@
+//! The data-driven subspace basis of §2.3 — the paper's headline trick.
+//!
+//! If all of a client's data vectors lie in an `r`-dimensional subspace
+//! `G_i = span(V)` with `V ∈ R^{d×r}` orthonormal, then every GLM
+//! data-Hessian (eq. 3) lies in `span{v_t v_lᵀ}` and its coefficient matrix
+//! in that basis is `h(A) = VᵀAV ∈ R^{r×r}` (eq. 5); gradients lie in `G_i`
+//! itself with coefficients `Vᵀg ∈ R^r`. Communication per round drops from
+//! `O(d²)` to `O(r²)` — lossless.
+//!
+//! `V` is extracted once per client before training (the paper uses
+//! `scipy.linalg.orth`; we use our one-sided-Jacobi SVD), at a one-time cost
+//! of `r·d` floats (Table 1).
+
+use super::HessianBasis;
+use crate::linalg::{svd, Mat};
+use crate::rng::Rng;
+
+/// Basis `{v_t v_lᵀ : t,l ∈ [r]}` for orthonormal columns `V = [v_1 … v_r]`.
+#[derive(Clone, Debug)]
+pub struct SubspaceBasis {
+    /// `d×r` orthonormal matrix.
+    v: Mat,
+}
+
+impl SubspaceBasis {
+    /// Build from an orthonormal `d×r` matrix (validated).
+    pub fn new(v: Mat) -> Self {
+        let r = v.cols();
+        let vtv = v.transpose().matmul(&v);
+        let err = (&vtv - &Mat::eye(r)).fro_norm();
+        assert!(
+            err < 1e-8,
+            "SubspaceBasis requires orthonormal columns (‖VᵀV−I‖={err:.2e})"
+        );
+        SubspaceBasis { v }
+    }
+
+    /// Extract an orthonormal basis of the row space of a data matrix
+    /// `A ∈ R^{m×d}` (rows are data points), keeping singular directions
+    /// above `rel_tol·σ_max` — the `linalg.orth` step of §6.1.
+    pub fn from_data(a: &Mat, rel_tol: f64) -> Self {
+        let dec = svd(&a.transpose()); // columns of U span the row space of A
+        let rank = dec.rank(rel_tol).max(1);
+        let d = a.cols();
+        let mut v = Mat::zeros(d, rank);
+        for k in 0..rank {
+            for i in 0..d {
+                v[(i, k)] = dec.u[(i, k)];
+            }
+        }
+        SubspaceBasis::new(v)
+    }
+
+    /// Subspace dimension `r`.
+    pub fn r(&self) -> usize {
+        self.v.cols()
+    }
+
+    /// The orthonormal matrix `V`.
+    pub fn v(&self) -> &Mat {
+        &self.v
+    }
+
+    /// One-time setup communication in floats (`r·d`, Table 1 row
+    /// "initial communication cost").
+    pub fn setup_floats(&self) -> usize {
+        self.v.rows() * self.v.cols()
+    }
+}
+
+impl HessianBasis for SubspaceBasis {
+    fn dim(&self) -> usize {
+        self.v.rows()
+    }
+
+    fn coeff_shape(&self) -> (usize, usize) {
+        (self.r(), self.r())
+    }
+
+    fn encode(&self, a: &Mat) -> Mat {
+        // h(A) = Vᵀ A V  — the orthogonal projection coefficients.
+        let av = a.matmul(&self.v);
+        self.v.transpose().matmul(&av)
+    }
+
+    fn decode(&self, h: &Mat) -> Mat {
+        // A = V h Vᵀ
+        let vh = self.v.matmul(h);
+        vh.matmul(&self.v.transpose())
+    }
+
+    fn n_b(&self) -> f64 {
+        1.0 // {v_t v_lᵀ} is Frobenius-orthonormal for orthonormal v's
+    }
+
+    fn max_fro(&self) -> f64 {
+        1.0 // ‖v_t v_lᵀ‖_F = ‖v_t‖‖v_l‖ = 1
+    }
+
+    fn grad_coeff_len(&self) -> usize {
+        self.r()
+    }
+
+    fn encode_grad(&self, g: &[f64]) -> Vec<f64> {
+        self.v.matvec_t(g)
+    }
+
+    fn decode_grad(&self, c: &[f64]) -> Vec<f64> {
+        self.v.matvec(c)
+    }
+
+    fn name(&self) -> String {
+        format!("subspace(r={})", self.r())
+    }
+}
+
+/// Random orthonormal `d×r` matrix (QR of a Gaussian via Gram–Schmidt);
+/// shared by tests and the synthetic data generator.
+pub fn orthonormal_cols(d: usize, r: usize, rng: &mut Rng) -> Mat {
+    assert!(r <= d);
+    let mut v = Mat::zeros(d, r);
+    for k in 0..r {
+        let mut col: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        // Gram–Schmidt against previous columns (twice, for stability).
+        for _ in 0..2 {
+            for prev in 0..k {
+                let pc = v.col(prev);
+                let proj = crate::linalg::dot(&col, &pc);
+                crate::linalg::axpy(-proj, &pc, &mut col);
+            }
+        }
+        let nrm = crate::linalg::norm2(&col);
+        assert!(nrm > 1e-12, "degenerate random draw");
+        for i in 0..d {
+            v[(i, k)] = col[i] / nrm;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::check_roundtrip;
+    use crate::linalg::norm2;
+
+    #[test]
+    fn roundtrip_on_in_span_matrices() {
+        let mut rng = Rng::new(80);
+        let (d, r) = (10, 4);
+        let v = orthonormal_cols(d, r, &mut rng);
+        let basis = SubspaceBasis::new(v.clone());
+        // A = V C Vᵀ for random C — exactly in the span.
+        let c = Mat::from_fn(r, r, |_, _| rng.normal());
+        let a = v.matmul(&c).matmul(&v.transpose());
+        check_roundtrip(&basis, &a, 1e-12);
+        // And the coefficients are exactly C.
+        let h = basis.encode(&a);
+        assert!((&h - &c).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn encode_is_projection_for_out_of_span() {
+        let mut rng = Rng::new(81);
+        let (d, r) = (8, 3);
+        let v = orthonormal_cols(d, r, &mut rng);
+        let basis = SubspaceBasis::new(v);
+        let a = Mat::from_fn(d, d, |_, _| rng.normal());
+        let p = basis.decode(&basis.encode(&a));
+        // Projection is idempotent.
+        let p2 = basis.decode(&basis.encode(&p));
+        assert!((&p2 - &p).fro_norm() < 1e-10);
+        // And never increases the Frobenius norm.
+        assert!(p.fro_norm() <= a.fro_norm() + 1e-12);
+    }
+
+    #[test]
+    fn gradient_coefficients_roundtrip() {
+        let mut rng = Rng::new(82);
+        let (d, r) = (12, 5);
+        let v = orthonormal_cols(d, r, &mut rng);
+        let basis = SubspaceBasis::new(v.clone());
+        // g in the span.
+        let c: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+        let g = v.matvec(&c);
+        let enc = basis.encode_grad(&g);
+        assert_eq!(enc.len(), r);
+        for (x, y) in enc.iter().zip(&c) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        let back = basis.decode_grad(&enc);
+        assert!(norm2(&crate::linalg::sub(&back, &g)) < 1e-10);
+    }
+
+    #[test]
+    fn from_data_recovers_planted_subspace() {
+        let mut rng = Rng::new(83);
+        let (d, r, m) = (15, 4, 40);
+        let v = orthonormal_cols(d, r, &mut rng);
+        // m data points in span(V).
+        let mut a = Mat::zeros(m, d);
+        for i in 0..m {
+            let coef: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            let x = v.matvec(&coef);
+            a.row_mut(i).copy_from_slice(&x);
+        }
+        let basis = SubspaceBasis::from_data(&a, 1e-9);
+        assert_eq!(basis.r(), r);
+        // Every data point reconstructs through the basis.
+        for i in 0..m {
+            let g = a.row(i).to_vec();
+            let back = basis.decode_grad(&basis.encode_grad(&g));
+            assert!(norm2(&crate::linalg::sub(&back, &g)) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn from_data_full_rank_data() {
+        let mut rng = Rng::new(84);
+        let a = Mat::from_fn(30, 6, |_, _| rng.normal());
+        let basis = SubspaceBasis::from_data(&a, 1e-9);
+        assert_eq!(basis.r(), 6);
+    }
+
+    #[test]
+    fn setup_cost_matches_table_1() {
+        let mut rng = Rng::new(85);
+        let v = orthonormal_cols(9, 3, &mut rng);
+        let basis = SubspaceBasis::new(v);
+        assert_eq!(basis.setup_floats(), 27);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_orthonormal() {
+        let v = Mat::from_vec(2, 2, vec![1.0, 1.0, 0.0, 1.0]);
+        SubspaceBasis::new(v);
+    }
+
+    #[test]
+    fn orthonormal_cols_is_orthonormal() {
+        let mut rng = Rng::new(86);
+        for (d, r) in [(5, 5), (20, 7), (3, 1)] {
+            let v = orthonormal_cols(d, r, &mut rng);
+            let vtv = v.transpose().matmul(&v);
+            assert!((&vtv - &Mat::eye(r)).fro_norm() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal benchmarking harness (criterion is not available in this
+//! environment's crate registry, so we ship our own).
+//!
+//! Provides warmup, adaptive iteration counts targeting a fixed measurement
+//! window, and robust statistics (median + MAD), with the familiar
+//! `group/bench` shape. Used by both `rust/benches/*` entry points.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the name bench code expects.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Iterations per sample.
+    pub iters: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    /// Pretty "value unit" like criterion's output.
+    pub fn human(&self) -> String {
+        let ns = self.ns();
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.3} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bench {
+    /// Target wall-clock per measured case.
+    pub budget: Duration,
+    pub warmup: Duration,
+    pub min_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(600),
+            warmup: Duration::from_millis(120),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile (used by CI-ish test runs): tiny budget.
+    pub fn quick() -> Self {
+        Bench {
+            budget: Duration::from_millis(60),
+            warmup: Duration::from_millis(10),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one case: `f` is called repeatedly; its return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &BenchResult {
+        let name = name.into();
+        // Warmup and iteration-count calibration.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            bb(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        // Aim for ~min_samples..64 samples within the budget.
+        let samples = self.min_samples.max(
+            ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize).min(64).max(self.min_samples),
+        );
+        let iters =
+            ((self.budget.as_secs_f64() / samples as f64 / per_iter.max(1e-9)).ceil() as u64).max(1);
+
+        let mut times: Vec<f64> = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            times.push(s.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let result = BenchResult {
+            name,
+            median: Duration::from_secs_f64(median),
+            mad: Duration::from_secs_f64(mad),
+            iters,
+            samples,
+        };
+        println!(
+            "{:<52} {:>12}  (±{:.1}%, {} samples × {} iters)",
+            result.name,
+            result.human(),
+            100.0 * result.mad.as_secs_f64() / result.median.as_secs_f64().max(1e-12),
+            result.samples,
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Section header in the output.
+    pub fn group(&mut self, title: &str) {
+        println!("\n── {title} ──");
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::quick();
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(bb(i) * i);
+            }
+            s
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.samples >= 5);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let mut b = Bench::quick();
+        // black_box inside the loop so LLVM cannot closed-form the sum.
+        let work = |n: u64| {
+            let mut s = 0u64;
+            for i in 0..n {
+                s = s.wrapping_add(bb(i));
+            }
+            s
+        };
+        let fast = b.bench("fast", || work(100)).ns();
+        let slow = b.bench("slow", || work(100_000)).ns();
+        assert!(slow > fast * 5.0, "fast={fast}ns slow={slow}ns");
+    }
+
+    #[test]
+    fn human_formatting() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: Duration::from_nanos(1500),
+            mad: Duration::ZERO,
+            iters: 1,
+            samples: 1,
+        };
+        assert_eq!(r.human(), "1.50 µs");
+    }
+}

@@ -1,0 +1,294 @@
+//! Sparsification compressors: Identity, Top-K (greedy, contractive),
+//! Rand-K (random, unbiased) and the lazy Bernoulli compressor of App. A.8.
+
+use super::{BitCost, CompressorClass, MatCompressor, VecCompressor};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Identity "compressor": sends everything, loses nothing.
+///
+/// Contractive with `δ = 1` and simultaneously unbiased with `ω = 0`;
+/// we report it as unbiased (`ω = 0`), which yields stepsize 1 under both
+/// stepsize rules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl MatCompressor for Identity {
+    fn compress(&self, a: &Mat, _rng: &mut Rng) -> (Mat, BitCost) {
+        (a.clone(), BitCost::floats(a.rows() * a.cols()))
+    }
+
+    fn class(&self, _numel: usize, _dim: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: 0.0 }
+    }
+
+    fn name(&self) -> String {
+        "identity".into()
+    }
+}
+
+impl VecCompressor for Identity {
+    fn compress_vec(&self, x: &[f64], _rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        (x.to_vec(), BitCost::floats(x.len()))
+    }
+
+    fn class_vec(&self, _n: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: 0.0 }
+    }
+
+    fn name(&self) -> String {
+        "identity".into()
+    }
+}
+
+/// Greedy sparsifier Top-K (eq. 21): keep the `K` largest-magnitude entries.
+///
+/// Contractive with `δ = K/N` where `N` is the number of entries
+/// (the paper's App. A.2 states `δ = d²/K` with the fraction inverted — an
+/// obvious typo; the standard parameter is `K/d²`).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "TopK requires k ≥ 1");
+        TopK { k }
+    }
+
+    fn top_indices(&self, data: &[f64]) -> Vec<usize> {
+        let k = self.k.min(data.len());
+        let mut idx: Vec<usize> = (0..data.len()).collect();
+        // Partial selection: O(N) average via select_nth_unstable.
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            data[b].abs().partial_cmp(&data[a].abs()).unwrap()
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    fn apply(&self, data: &[f64]) -> (Vec<f64>, BitCost) {
+        let k = self.k.min(data.len());
+        let idx = self.top_indices(data);
+        let mut out = vec![0.0; data.len()];
+        for &i in &idx {
+            out[i] = data[i];
+        }
+        (out, BitCost::floats(k) + BitCost::indices(k, data.len()))
+    }
+}
+
+impl MatCompressor for TopK {
+    fn compress(&self, a: &Mat, _rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.apply(a.data());
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
+        CompressorClass::Contractive { delta: (self.k as f64 / numel as f64).min(1.0) }
+    }
+
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+}
+
+impl VecCompressor for TopK {
+    fn compress_vec(&self, x: &[f64], _rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        self.apply(x)
+    }
+
+    fn class_vec(&self, n: usize) -> CompressorClass {
+        CompressorClass::Contractive { delta: (self.k as f64 / n as f64).min(1.0) }
+    }
+
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+}
+
+/// Random sparsifier Rand-K (eq. 22): keep `K` uniformly random entries,
+/// scaled by `N/K`. Unbiased with `ω = N/K − 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct RandK {
+    pub k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "RandK requires k ≥ 1");
+        RandK { k }
+    }
+
+    fn apply(&self, data: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        let n = data.len();
+        let k = self.k.min(n);
+        let scale = n as f64 / k as f64;
+        let idx = rng.sample_without_replacement(n, k);
+        let mut out = vec![0.0; n];
+        for &i in &idx {
+            out[i] = data[i] * scale;
+        }
+        // With shared randomness the indices are derivable from a seed, but we
+        // charge them explicitly (conservative, matches the paper's plots where
+        // Rand-K costs K floats + indices).
+        (out, BitCost::floats(k) + BitCost::indices(k, n))
+    }
+}
+
+impl MatCompressor for RandK {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.apply(a.data(), rng);
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: (numel as f64 / self.k as f64 - 1.0).max(0.0) }
+    }
+
+    fn name(&self) -> String {
+        format!("rand{}", self.k)
+    }
+}
+
+impl VecCompressor for RandK {
+    fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        self.apply(x, rng)
+    }
+
+    fn class_vec(&self, n: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: (n as f64 / self.k as f64 - 1.0).max(0.0) }
+    }
+
+    fn name(&self) -> String {
+        format!("rand{}", self.k)
+    }
+}
+
+/// Lazy Bernoulli compressor (App. A.8): transmit `x/p` with probability `p`,
+/// nothing otherwise. Unbiased with `ω = 1/p − 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct LazyBernoulli {
+    pub p: f64,
+}
+
+impl LazyBernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "LazyBernoulli requires p ∈ (0, 1]");
+        LazyBernoulli { p }
+    }
+}
+
+impl VecCompressor for LazyBernoulli {
+    fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        if rng.bernoulli(self.p) {
+            (
+                x.iter().map(|v| v / self.p).collect(),
+                BitCost::floats(x.len()) + BitCost::bits(1.0),
+            )
+        } else {
+            (vec![0.0; x.len()], BitCost::bits(1.0))
+        }
+    }
+
+    fn class_vec(&self, _n: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: 1.0 / self.p - 1.0 }
+    }
+
+    fn name(&self) -> String {
+        format!("bern{:.2}", self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::testing::{verify_class_mat, verify_class_vec};
+
+    #[test]
+    fn identity_roundtrip_and_cost() {
+        let mut rng = Rng::new(1);
+        let a = Mat::from_fn(3, 4, |i, j| (i + j) as f64);
+        let (b, cost) = MatCompressor::compress(&Identity, &a, &mut rng);
+        assert_eq!(a, b);
+        assert_eq!(cost, BitCost::floats(12));
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let mut rng = Rng::new(2);
+        let x = vec![0.1, -5.0, 2.0, 0.0, 3.0];
+        let (y, cost) = TopK::new(2).compress_vec(&x, &mut rng);
+        assert_eq!(y, vec![0.0, -5.0, 0.0, 0.0, 3.0]);
+        assert_eq!(cost.floats, 2.0);
+        assert!(cost.aux_bits > 0.0);
+    }
+
+    #[test]
+    fn topk_k_larger_than_input() {
+        let mut rng = Rng::new(3);
+        let x = vec![1.0, 2.0];
+        let (y, _) = TopK::new(10).compress_vec(&x, &mut rng);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn topk_contraction_is_exact_for_deterministic() {
+        // For Top-K the error equals the squared norm of the dropped tail,
+        // which is ≤ (1−K/N)‖x‖² with equality iff all |entries| equal.
+        let mut rng = Rng::new(4);
+        let x = vec![1.0; 8];
+        let (y, _) = TopK::new(2).compress_vec(&x, &mut rng);
+        let err: f64 = x.iter().zip(&y).map(|(a, b)| (a - b).powi(2)).sum();
+        let bound = (1.0 - 2.0 / 8.0) * 8.0;
+        assert!((err - bound).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_class_verified_empirically() {
+        verify_class_mat(&TopK::new(5), 6, 3, 11);
+        verify_class_vec(&TopK::new(3), 20, 12);
+    }
+
+    #[test]
+    fn randk_unbiased_and_cost() {
+        verify_class_mat(&RandK::new(8), 5, 3, 13);
+        verify_class_vec(&RandK::new(4), 16, 14);
+        let mut rng = Rng::new(5);
+        let x = vec![1.0; 10];
+        let (y, cost) = RandK::new(3).compress_vec(&x, &mut rng);
+        assert_eq!(y.iter().filter(|&&v| v != 0.0).count(), 3);
+        assert!(y.iter().all(|&v| v == 0.0 || (v - 10.0 / 3.0).abs() < 1e-12));
+        assert_eq!(cost.floats, 3.0);
+    }
+
+    #[test]
+    fn lazy_bernoulli_class() {
+        verify_class_vec(&LazyBernoulli::new(0.5), 12, 15);
+        verify_class_vec(&LazyBernoulli::new(1.0), 12, 16);
+    }
+
+    #[test]
+    fn lazy_bernoulli_all_or_nothing() {
+        let mut rng = Rng::new(6);
+        let x = vec![2.0, 4.0];
+        let c = LazyBernoulli::new(0.5);
+        for _ in 0..50 {
+            let (y, _) = c.compress_vec(&x, &mut rng);
+            assert!(y == vec![0.0, 0.0] || y == vec![4.0, 8.0], "y={y:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn topk_zero_k_panics() {
+        TopK::new(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bernoulli_zero_p_panics() {
+        LazyBernoulli::new(0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Composed compressors (paper §3 and Qian et al. 2021):
+//!
+//! * [`ComposeRank`] — the paper's `C₁`: Rank-R decomposition with the
+//!   retained singular-vector pairs passed through unbiased compressors
+//!   (`RRank-R` = Rank-R ∘ random dithering, `NRank-R` = Rank-R ∘ natural
+//!   compression). Contractive with `δ = R / (d(ω₁+1)(ω₂+1))`
+//!   (Proposition 3.2).
+//! * [`Compose`] — greedy-sparsifier composition: Top-K selects the support,
+//!   an unbiased compressor quantizes the retained values, and the result is
+//!   scaled by `1/(ω+1)` (`RTop-K`, `NTop-K` of App. A.5). Contractive with
+//!   `δ = (K/N) / (ω+1)`.
+
+use super::{BitCost, CompressorClass, MatCompressor, TopK, VecCompressor};
+use crate::linalg::{svd, Mat};
+use crate::rng::Rng;
+
+/// `C₁` of §3: Rank-R with unbiased compression of the factor vectors.
+pub struct ComposeRank<Q1, Q2> {
+    pub r: usize,
+    pub q_left: Q1,
+    pub q_right: Q2,
+}
+
+impl<Q1: VecCompressor, Q2: VecCompressor> ComposeRank<Q1, Q2> {
+    pub fn new(r: usize, q_left: Q1, q_right: Q2) -> Self {
+        assert!(r > 0, "ComposeRank requires r ≥ 1");
+        ComposeRank { r, q_left, q_right }
+    }
+}
+
+impl<Q1: VecCompressor, Q2: VecCompressor> MatCompressor for ComposeRank<Q1, Q2> {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (m, n) = (a.rows(), a.cols());
+        let d = m.min(n);
+        let r = self.r.min(d);
+        let dec = svd(a);
+
+        let omega1 = match self.q_left.class_vec(m) {
+            CompressorClass::Unbiased { omega } => omega,
+            _ => panic!("ComposeRank requires unbiased left compressor"),
+        };
+        let omega2 = match self.q_right.class_vec(n) {
+            CompressorClass::Unbiased { omega } => omega,
+            _ => panic!("ComposeRank requires unbiased right compressor"),
+        };
+        let scale = 1.0 / ((omega1 + 1.0) * (omega2 + 1.0));
+
+        let mut out = Mat::zeros(m, n);
+        let mut cost = BitCost::floats(r); // the σ_i
+        for i in 0..r {
+            let sigma = dec.s[i];
+            if sigma == 0.0 {
+                continue;
+            }
+            let (qu, cu) = self.q_left.compress_vec(&dec.u.col(i), rng);
+            let (qv, cv) = self.q_right.compress_vec(&dec.v.col(i), rng);
+            cost += cu;
+            cost += cv;
+            let f = sigma * scale;
+            for row in 0..m {
+                let urf = qu[row] * f;
+                if urf == 0.0 {
+                    continue;
+                }
+                for colj in 0..n {
+                    out[(row, colj)] += urf * qv[colj];
+                }
+            }
+        }
+        (out, cost)
+    }
+
+    fn class(&self, _numel: usize, dim: usize) -> CompressorClass {
+        let omega1 = match self.q_left.class_vec(dim) {
+            CompressorClass::Unbiased { omega } => omega,
+            _ => unreachable!(),
+        };
+        let omega2 = match self.q_right.class_vec(dim) {
+            CompressorClass::Unbiased { omega } => omega,
+            _ => unreachable!(),
+        };
+        CompressorClass::Contractive {
+            delta: (self.r as f64 / (dim as f64 * (omega1 + 1.0) * (omega2 + 1.0))).min(1.0),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("rank{}∘{}", self.r, self.q_left.name())
+    }
+}
+
+/// Top-K support selection + unbiased quantization of the retained values,
+/// output scaled by `1/(ω+1)` so the composition stays contractive
+/// (App. A.5; Qian et al. 2021).
+pub struct Compose<Q> {
+    pub top: TopK,
+    pub q: Q,
+}
+
+impl<Q: VecCompressor> Compose<Q> {
+    pub fn new(k: usize, q: Q) -> Self {
+        Compose { top: TopK::new(k), q }
+    }
+
+    fn apply(&self, data: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        let n = data.len();
+        let k = self.top.k.min(n);
+        // Select support.
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            data[b].abs().partial_cmp(&data[a].abs()).unwrap()
+        });
+        idx.truncate(k);
+        let values: Vec<f64> = idx.iter().map(|&i| data[i]).collect();
+        // Quantize the retained values.
+        let omega = match self.q.class_vec(k) {
+            CompressorClass::Unbiased { omega } => omega,
+            _ => panic!("Compose requires an unbiased value compressor"),
+        };
+        let (qv, qcost) = self.q.compress_vec(&values, rng);
+        let scale = 1.0 / (omega + 1.0);
+        let mut out = vec![0.0; n];
+        for (&i, &v) in idx.iter().zip(&qv) {
+            out[i] = v * scale;
+        }
+        (out, BitCost::indices(k, n) + qcost)
+    }
+}
+
+impl<Q: VecCompressor> MatCompressor for Compose<Q> {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.apply(a.data(), rng);
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
+        let omega = match self.q.class_vec(self.top.k.min(numel)) {
+            CompressorClass::Unbiased { omega } => omega,
+            _ => unreachable!(),
+        };
+        CompressorClass::Contractive {
+            delta: ((self.top.k as f64 / numel as f64) / (omega + 1.0)).min(1.0),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("top{}∘{}", self.top.k, self.q.name())
+    }
+}
+
+impl<Q: VecCompressor> VecCompressor for Compose<Q> {
+    fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        self.apply(x, rng)
+    }
+
+    fn class_vec(&self, n: usize) -> CompressorClass {
+        MatCompressor::class(self, n, n)
+    }
+
+    fn name(&self) -> String {
+        MatCompressor::name(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::testing::{verify_class_mat, verify_class_vec};
+    use crate::compressors::{NaturalCompression, RandDithering};
+
+    #[test]
+    fn compose_rank_contraction_prop_3_2() {
+        // RRank-1 and NRank-1 on small matrices.
+        let c = ComposeRank::new(1, RandDithering::new(3), RandDithering::new(3));
+        verify_class_mat(&c, 5, 2, 51);
+        let n = ComposeRank::new(2, NaturalCompression, NaturalCompression);
+        verify_class_mat(&n, 6, 2, 52);
+    }
+
+    #[test]
+    fn compose_rank_identityish_with_weak_quantizer() {
+        // With many dithering levels the composition approaches plain Rank-R.
+        let mut rng = Rng::new(16);
+        let a = Mat::outer(&[1.0, 2.0, 0.5], &[1.0, -1.0, 2.0]);
+        let c = ComposeRank::new(1, RandDithering::new(1 << 14), RandDithering::new(1 << 14));
+        let (b, _) = c.compress(&a, &mut rng);
+        // Rank-1 input: expect near-exact recovery up to the 1/(ω+1)² scale ≈ 1.
+        let rel = (&b - &a).fro_norm() / a.fro_norm();
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn compose_topk_class() {
+        let c = Compose::new(4, RandDithering::new(2));
+        verify_class_mat(&c, 5, 2, 53);
+        verify_class_vec(&c, 18, 54);
+        let n = Compose::new(3, NaturalCompression);
+        verify_class_vec(&n, 12, 55);
+    }
+
+    #[test]
+    fn compose_topk_support_is_topk() {
+        let mut rng = Rng::new(17);
+        let x = vec![10.0, 0.1, -9.0, 0.2, 8.0];
+        let c = Compose::new(3, NaturalCompression);
+        let (y, _) = c.compress_vec(&x, &mut rng);
+        assert!(y[1] == 0.0 && y[3] == 0.0);
+        assert!(y[0] != 0.0 && y[2] != 0.0 && y[4] != 0.0);
+    }
+
+    #[test]
+    fn compose_cost_cheaper_than_plain_floats() {
+        // NTop-K sends 9 bits/value instead of 64 — the whole point of A.5.
+        let mut rng = Rng::new(18);
+        let x: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let k = 20;
+        let (_, c_plain) = TopK::new(k).compress_vec(&x, &mut rng);
+        let nc = Compose::new(k, NaturalCompression);
+        let (_, c_nat) = nc.compress_vec(&x, &mut rng);
+        assert!(c_nat.total_bits(64) < c_plain.total_bits(64));
+    }
+}

@@ -1,0 +1,329 @@
+//! Communication-compression operators (paper §3 and Appendix A.2–A.3).
+//!
+//! Two classes, exactly as in the paper:
+//!
+//! * **contractive** — `E‖A − C(A)‖²_F ≤ (1−δ)‖A‖²_F` (eq. 6): Top-K, Rank-R,
+//!   and compositions of a contractive with an unbiased compressor;
+//! * **unbiased** — `E C(A) = A`, `E‖C(A)‖²_F ≤ (ω+1)‖A‖²_F` (eq. 7): Rand-K,
+//!   random dithering, natural compression, lazy Bernoulli.
+//!
+//! Every compressor reports an exact [`BitCost`] for its wire encoding, which
+//! is what the paper's x-axes ("communicated bits per node") plot.
+//!
+//! Compressors implement [`MatCompressor`] and/or [`VecCompressor`]. A matrix
+//! compressor can always be used on vectors (a vector is a `d×1` matrix) and
+//! vice-versa via [`MatFromVec`]; symmetry is preserved through the
+//! [`Symmetrized`] wrapper (Lemma 3.1).
+
+mod basic;
+mod compose;
+mod lowrank;
+mod quantize;
+mod spec;
+
+pub use basic::{Identity, LazyBernoulli, RandK, TopK};
+pub use compose::{Compose, ComposeRank};
+pub use lowrank::RankR;
+pub use quantize::{NaturalCompression, RandDithering};
+pub use spec::CompressorSpec;
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Exact wire-size accounting for one compressed message.
+///
+/// `floats` are full-precision values (counted at the configured float width,
+/// 32 or 64 bits — the paper plots use 64-bit doubles via NumPy, and we default
+/// to the same); `aux_bits` are exact bit counts for indices, signs, exponents
+/// and quantization levels.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BitCost {
+    /// Number of full-precision floats on the wire.
+    pub floats: f64,
+    /// Exact auxiliary bits (indices, signs, levels, exponents).
+    pub aux_bits: f64,
+}
+
+impl BitCost {
+    /// Cost of `n` raw floats.
+    pub fn floats(n: usize) -> Self {
+        BitCost { floats: n as f64, aux_bits: 0.0 }
+    }
+
+    /// Cost of `n` indices drawn from a universe of size `range`.
+    pub fn indices(n: usize, range: usize) -> Self {
+        let bits_per = (range.max(2) as f64).log2().ceil();
+        BitCost { floats: 0.0, aux_bits: n as f64 * bits_per }
+    }
+
+    /// Raw auxiliary bits.
+    pub fn bits(b: f64) -> Self {
+        BitCost { floats: 0.0, aux_bits: b }
+    }
+
+    /// Zero cost (nothing sent).
+    pub fn zero() -> Self {
+        BitCost::default()
+    }
+
+    /// Total bits at a given float width.
+    pub fn total_bits(&self, float_bits: u32) -> f64 {
+        self.floats * float_bits as f64 + self.aux_bits
+    }
+}
+
+impl std::ops::Add for BitCost {
+    type Output = BitCost;
+    fn add(self, other: BitCost) -> BitCost {
+        BitCost {
+            floats: self.floats + other.floats,
+            aux_bits: self.aux_bits + other.aux_bits,
+        }
+    }
+}
+
+impl std::ops::AddAssign for BitCost {
+    fn add_assign(&mut self, other: BitCost) {
+        self.floats += other.floats;
+        self.aux_bits += other.aux_bits;
+    }
+}
+
+/// Compressor class with its theoretical parameter, at a given input size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressorClass {
+    /// `E‖A − C(A)‖² ≤ (1−δ)‖A‖²`.
+    Contractive { delta: f64 },
+    /// `E C(A) = A`, `E‖C(A)‖² ≤ (ω+1)‖A‖²`.
+    Unbiased { omega: f64 },
+}
+
+impl CompressorClass {
+    /// The paper's default learning rate for Hessian learning:
+    /// `α = 1` for contractive, `α = 1/(ω+1)` for unbiased (Asm. 4.5/4.6).
+    pub fn default_stepsize(&self) -> f64 {
+        match self {
+            CompressorClass::Contractive { .. } => 1.0,
+            CompressorClass::Unbiased { omega } => 1.0 / (omega + 1.0),
+        }
+    }
+}
+
+/// Compressor acting on matrices.
+pub trait MatCompressor: Send + Sync {
+    /// Compress `a`, returning the decompressed-at-receiver matrix and its
+    /// wire cost.
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost);
+
+    /// Theoretical class/parameter for an input with `numel` entries
+    /// (`d²` for `d×d` matrices) and leading dimension `dim`.
+    fn class(&self, numel: usize, dim: usize) -> CompressorClass;
+
+    /// Human-readable name (used in experiment CSV headers).
+    fn name(&self) -> String;
+}
+
+/// Compressor acting on vectors.
+pub trait VecCompressor: Send + Sync {
+    /// Compress `x`, returning the decompressed vector and its wire cost.
+    fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost);
+
+    /// Theoretical class/parameter for a length-`n` input.
+    fn class_vec(&self, n: usize) -> CompressorClass;
+
+    /// Human-readable name.
+    fn name(&self) -> String;
+}
+
+/// Symmetrization wrapper (paper Lemma 3.1): `C̃(A) = (C(A) + C(A)ᵀ)/2` for
+/// symmetric inputs. Preserves the contraction parameter δ; the wire cost is
+/// unchanged (the receiver symmetrizes locally).
+pub struct Symmetrized<C>(pub C);
+
+impl<C: MatCompressor> MatCompressor for Symmetrized<C> {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (mut c, cost) = self.0.compress(a, rng);
+        if a.is_symmetric(0.0) {
+            c.symmetrize();
+        }
+        (c, cost)
+    }
+
+    fn class(&self, numel: usize, dim: usize) -> CompressorClass {
+        self.0.class(numel, dim)
+    }
+
+    fn name(&self) -> String {
+        format!("sym({})", self.0.name())
+    }
+}
+
+/// Adapter: use any [`MatCompressor`] on a vector (treated as `n×1`).
+pub struct MatFromVec<C>(pub C);
+
+impl<C: VecCompressor> MatCompressor for MatFromVec<C> {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.0.compress_vec(a.data(), rng);
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
+        self.0.class_vec(numel)
+    }
+
+    fn name(&self) -> String {
+        self.0.name()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testing {
+    //! Shared empirical-verification helpers used by every compressor's
+    //! tests: Monte-Carlo checks of the contraction inequality (6) and the
+    //! unbiasedness/variance inequality (7).
+
+    use super::*;
+
+    /// Empirically verify a compressor's advertised class on random inputs.
+    pub fn verify_class_mat(c: &dyn MatCompressor, dim: usize, trials: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let cls = c.class(dim * dim, dim);
+        for t in 0..trials {
+            let a = Mat::from_fn(dim, dim, |_, _| rng.normal());
+            verify_one_mat(c, &a, cls, 400, seed ^ (t as u64 + 1));
+        }
+        // Also on a symmetric input (the algorithms compress Hessian diffs).
+        let mut s = Mat::from_fn(dim, dim, |_, _| rng.normal());
+        s.symmetrize();
+        verify_one_mat(c, &s, cls, 400, seed ^ 0xABCD);
+    }
+
+    fn verify_one_mat(c: &dyn MatCompressor, a: &Mat, cls: CompressorClass, reps: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let norm_sq = a.fro_norm_sq().max(1e-30);
+        let mut err_sq = 0.0;
+        let mut out_sq = 0.0;
+        let mut mean = Mat::zeros(a.rows(), a.cols());
+        for _ in 0..reps {
+            let (ca, _) = c.compress(a, &mut rng);
+            err_sq += (&ca - a).fro_norm_sq();
+            out_sq += ca.fro_norm_sq();
+            mean.add_scaled(1.0 / reps as f64, &ca);
+        }
+        err_sq /= reps as f64;
+        out_sq /= reps as f64;
+        match cls {
+            CompressorClass::Contractive { delta } => {
+                // Allow Monte-Carlo slack.
+                assert!(
+                    err_sq <= (1.0 - delta) * norm_sq * 1.12 + 1e-12,
+                    "{}: contraction violated: E err² {err_sq:.4} > (1-δ)‖A‖² {:.4}",
+                    c.name(),
+                    (1.0 - delta) * norm_sq
+                );
+            }
+            CompressorClass::Unbiased { omega } => {
+                let bias = (&mean - a).fro_norm() / norm_sq.sqrt();
+                assert!(
+                    bias < 0.35,
+                    "{}: bias too large: {bias:.4} (reps={reps})",
+                    c.name()
+                );
+                assert!(
+                    out_sq <= (omega + 1.0) * norm_sq * 1.15 + 1e-12,
+                    "{}: second moment violated: E‖C‖² {out_sq:.4} > (ω+1)‖A‖² {:.4}",
+                    c.name(),
+                    (omega + 1.0) * norm_sq
+                );
+            }
+        }
+    }
+
+    pub fn verify_class_vec(c: &dyn VecCompressor, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let cls = c.class_vec(n);
+        let norm_sq = crate::linalg::norm2_sq(&x).max(1e-30);
+        let reps = 600;
+        let mut err_sq = 0.0;
+        let mut out_sq = 0.0;
+        let mut mean = vec![0.0; n];
+        for _ in 0..reps {
+            let (cx, _) = c.compress_vec(&x, &mut rng);
+            err_sq += crate::linalg::norm2_sq(&crate::linalg::sub(&cx, &x));
+            out_sq += crate::linalg::norm2_sq(&cx);
+            crate::linalg::axpy(1.0 / reps as f64, &cx, &mut mean);
+        }
+        err_sq /= reps as f64;
+        out_sq /= reps as f64;
+        match cls {
+            CompressorClass::Contractive { delta } => {
+                assert!(
+                    err_sq <= (1.0 - delta) * norm_sq * 1.12 + 1e-12,
+                    "{}: vec contraction violated",
+                    c.name()
+                );
+            }
+            CompressorClass::Unbiased { omega } => {
+                let bias = crate::linalg::norm2(&crate::linalg::sub(&mean, &x)) / norm_sq.sqrt();
+                assert!(bias < 0.35, "{}: vec bias {bias:.4}", c.name());
+                assert!(
+                    out_sq <= (omega + 1.0) * norm_sq * 1.15 + 1e-12,
+                    "{}: vec second moment violated ({out_sq:.4} vs {:.4})",
+                    c.name(),
+                    (omega + 1.0) * norm_sq
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitcost_arithmetic() {
+        let a = BitCost::floats(3) + BitCost::indices(4, 256);
+        assert_eq!(a.floats, 3.0);
+        assert_eq!(a.aux_bits, 32.0);
+        assert_eq!(a.total_bits(64), 3.0 * 64.0 + 32.0);
+        assert_eq!(a.total_bits(32), 3.0 * 32.0 + 32.0);
+        let mut b = BitCost::zero();
+        b += a;
+        assert_eq!(b, a);
+    }
+
+    #[test]
+    fn index_cost_rounds_up() {
+        assert_eq!(BitCost::indices(1, 2).aux_bits, 1.0);
+        assert_eq!(BitCost::indices(1, 3).aux_bits, 2.0);
+        assert_eq!(BitCost::indices(1, 1024).aux_bits, 10.0);
+        assert_eq!(BitCost::indices(1, 1025).aux_bits, 11.0);
+    }
+
+    #[test]
+    fn default_stepsize_rules() {
+        let c = CompressorClass::Contractive { delta: 0.25 };
+        assert_eq!(c.default_stepsize(), 1.0);
+        let u = CompressorClass::Unbiased { omega: 3.0 };
+        assert!((u.default_stepsize() - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn symmetrized_preserves_symmetry() {
+        let mut rng = Rng::new(21);
+        let mut a = Mat::from_fn(6, 6, |_, _| rng.normal());
+        a.symmetrize();
+        let c = Symmetrized(RandK::new(7));
+        let (out, _) = c.compress(&a, &mut rng);
+        assert!(out.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn symmetrized_contraction_lemma_3_1() {
+        // Lemma 3.1(ii): symmetrization keeps the contraction parameter.
+        let c = Symmetrized(TopK::new(6));
+        testing::verify_class_mat(&c, 5, 3, 99);
+    }
+}

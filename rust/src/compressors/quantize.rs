@@ -1,0 +1,227 @@
+//! Quantization compressors: random dithering (QSGD-style, App. A.2 eq. 17–18)
+//! and natural compression (power-of-two rounding).
+
+use super::{BitCost, CompressorClass, MatCompressor, VecCompressor};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Random dithering with `s` levels and the Euclidean norm (`q = 2`),
+/// eq. (17)–(18):
+///
+/// `C(x) = sign(x) · ‖x‖₂ · ξ_s / s`, where `ξ_s[i] ∈ {l, l+1}` randomly
+/// rounds `s·|x_i|/‖x‖` to a neighbouring level.
+///
+/// Unbiased with `ω ≤ min(d/s², √d/s)` (Alistarh et al. 2017). Wire cost:
+/// one float for the norm plus `(1 + ⌈log₂(s+1)⌉)` bits per entry
+/// (sign + level).
+#[derive(Clone, Copy, Debug)]
+pub struct RandDithering {
+    /// Number of quantization levels `s ≥ 1`.
+    pub levels: u32,
+}
+
+impl RandDithering {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1, "dithering needs at least one level");
+        RandDithering { levels }
+    }
+
+    /// The paper's default: `s = √d` levels for dimension-`d` inputs.
+    pub fn sqrt_dim(d: usize) -> Self {
+        RandDithering::new((d as f64).sqrt().round().max(1.0) as u32)
+    }
+
+    fn apply(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        let norm = crate::linalg::norm2(x);
+        if norm == 0.0 {
+            // Still costs the norm float (the receiver must learn it is 0).
+            return (vec![0.0; x.len()], BitCost::floats(1));
+        }
+        let s = self.levels as f64;
+        let out = x
+            .iter()
+            .map(|&xi| {
+                let y = xi.abs() / norm * s; // in [0, s]
+                let l = y.floor();
+                let level = if rng.uniform() < y - l { l + 1.0 } else { l };
+                xi.signum() * norm * level / s
+            })
+            .collect();
+        let bits_per_entry = 1.0 + ((self.levels + 1) as f64).log2().ceil();
+        (out, BitCost::floats(1) + BitCost::bits(bits_per_entry * x.len() as f64))
+    }
+
+    fn omega(&self, n: usize) -> f64 {
+        let s = self.levels as f64;
+        let d = n as f64;
+        (d / (s * s)).min(d.sqrt() / s)
+    }
+}
+
+impl VecCompressor for RandDithering {
+    fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        self.apply(x, rng)
+    }
+
+    fn class_vec(&self, n: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: self.omega(n) }
+    }
+
+    fn name(&self) -> String {
+        format!("dith{}", self.levels)
+    }
+}
+
+impl MatCompressor for RandDithering {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.apply(a.data(), rng);
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: self.omega(numel) }
+    }
+
+    fn name(&self) -> String {
+        format!("dith{}", self.levels)
+    }
+}
+
+/// Natural compression: randomized rounding of each entry to one of the two
+/// nearest powers of two. Unbiased with `ω = 1/8`; wire cost 9 bits per entry
+/// (sign + 8-bit exponent), 0-entries included.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NaturalCompression;
+
+impl NaturalCompression {
+    fn round_one(&self, x: f64, rng: &mut Rng) -> f64 {
+        if x == 0.0 || !x.is_finite() {
+            return x;
+        }
+        let a = x.abs();
+        let lo_exp = a.log2().floor();
+        let lo = lo_exp.exp2();
+        let hi = 2.0 * lo;
+        // P(round up) = (a − lo)/(hi − lo): unbiased.
+        let p_up = (a - lo) / (hi - lo);
+        let mag = if rng.uniform() < p_up { hi } else { lo };
+        x.signum() * mag
+    }
+
+    fn apply(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        let out = x.iter().map(|&v| self.round_one(v, rng)).collect();
+        (out, BitCost::bits(9.0 * x.len() as f64))
+    }
+}
+
+impl VecCompressor for NaturalCompression {
+    fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
+        self.apply(x, rng)
+    }
+
+    fn class_vec(&self, _n: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: 0.125 }
+    }
+
+    fn name(&self) -> String {
+        "nat".into()
+    }
+}
+
+impl MatCompressor for NaturalCompression {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.apply(a.data(), rng);
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, _numel: usize, _dim: usize) -> CompressorClass {
+        CompressorClass::Unbiased { omega: 0.125 }
+    }
+
+    fn name(&self) -> String {
+        "nat".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::testing::{verify_class_mat, verify_class_vec};
+
+    #[test]
+    fn dithering_class_empirical() {
+        verify_class_vec(&RandDithering::new(4), 16, 31);
+        verify_class_vec(&RandDithering::new(1), 9, 32);
+        verify_class_mat(&RandDithering::new(3), 5, 2, 33);
+    }
+
+    #[test]
+    fn dithering_output_on_grid() {
+        let mut rng = Rng::new(7);
+        let x = vec![0.3, -1.2, 0.7, 2.0];
+        let norm = crate::linalg::norm2(&x);
+        let c = RandDithering::new(4);
+        for _ in 0..20 {
+            let (y, _) = c.compress_vec(&x, &mut rng);
+            for (&yi, &xi) in y.iter().zip(&x) {
+                // Each output is sign(x)·norm·level/4 for an integer level.
+                let level = yi.abs() * 4.0 / norm;
+                assert!((level - level.round()).abs() < 1e-10, "level={level}");
+                assert!(yi == 0.0 || yi.signum() == xi.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn dithering_zero_vector() {
+        let mut rng = Rng::new(8);
+        let (y, cost) = RandDithering::new(4).compress_vec(&[0.0, 0.0], &mut rng);
+        assert_eq!(y, vec![0.0, 0.0]);
+        assert_eq!(cost.floats, 1.0);
+    }
+
+    #[test]
+    fn sqrt_dim_constructor() {
+        assert_eq!(RandDithering::sqrt_dim(100).levels, 10);
+        assert_eq!(RandDithering::sqrt_dim(1).levels, 1);
+    }
+
+    #[test]
+    fn natural_rounds_to_power_of_two() {
+        let mut rng = Rng::new(9);
+        let c = NaturalCompression;
+        for &x in &[0.3, -1.7, 5.0, 1e-8, -3e6] {
+            for _ in 0..10 {
+                let y = c.round_one(x, &mut rng);
+                let frac = y.abs().log2();
+                assert!((frac - frac.round()).abs() < 1e-12, "y={y} not a power of two");
+                assert_eq!(y.signum(), x.signum());
+                // Within a factor of two of the input.
+                assert!(y.abs() >= x.abs() / 2.0 - 1e-300 && y.abs() <= x.abs() * 2.0 + 1e-300);
+            }
+        }
+    }
+
+    #[test]
+    fn natural_exact_on_powers_of_two() {
+        let mut rng = Rng::new(10);
+        let c = NaturalCompression;
+        for &x in &[1.0, 2.0, 0.5, -4.0, 1024.0] {
+            assert_eq!(c.round_one(x, &mut rng), x);
+        }
+    }
+
+    #[test]
+    fn natural_class_empirical() {
+        verify_class_vec(&NaturalCompression, 16, 34);
+        verify_class_mat(&NaturalCompression, 5, 2, 35);
+    }
+
+    #[test]
+    fn natural_cost_is_9_bits_per_entry() {
+        let mut rng = Rng::new(11);
+        let (_, cost) = NaturalCompression.compress_vec(&[1.0; 10], &mut rng);
+        assert_eq!(cost.aux_bits, 90.0);
+        assert_eq!(cost.floats, 0.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Textual compressor specifications for the CLI / config system.
+//!
+//! Grammar (case-insensitive):
+//!
+//! ```text
+//! identity            full-precision
+//! topk:<K>            greedy sparsification
+//! randk:<K>           random sparsification
+//! rank:<R>            low-rank (Rank-R)
+//! dith:<S>            random dithering with S levels
+//! dith:sqrtd          random dithering with √d levels (resolved per input)
+//! nat                 natural compression
+//! bern:<P>            lazy Bernoulli (vectors only)
+//! rrank:<R>[:<S>]     Rank-R ∘ random dithering (default S = √d)
+//! nrank:<R>           Rank-R ∘ natural compression
+//! rtopk:<K>[:<S>]     Top-K ∘ random dithering (default S = √K)
+//! ntopk:<K>           Top-K ∘ natural compression
+//! ```
+
+use super::{
+    BitCost, Compose, ComposeRank, CompressorClass, Identity, LazyBernoulli, MatCompressor,
+    NaturalCompression, RandDithering, RandK, RankR, Symmetrized, TopK, VecCompressor,
+};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Parsed compressor description; call [`CompressorSpec::build_mat`] /
+/// [`CompressorSpec::build_vec`] with the ambient dimension to instantiate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressorSpec {
+    Identity,
+    TopK(usize),
+    RandK(usize),
+    RankR(usize),
+    Dithering(Option<u32>),
+    Natural,
+    Bernoulli(f64),
+    /// Rank-R ∘ dithering; `None` level means √d.
+    RRank(usize, Option<u32>),
+    NRank(usize),
+    /// Top-K ∘ dithering; `None` level means √K.
+    RTopK(usize, Option<u32>),
+    NTopK(usize),
+}
+
+impl CompressorSpec {
+    /// Parse the textual grammar above.
+    pub fn parse(s: &str) -> Result<Self> {
+        let lower = s.trim().to_ascii_lowercase();
+        let parts: Vec<&str> = lower.split(':').collect();
+        let arg = |i: usize| -> Result<usize> {
+            parts
+                .get(i)
+                .with_context(|| format!("compressor '{s}' missing argument {i}"))?
+                .parse::<usize>()
+                .with_context(|| format!("compressor '{s}': bad integer argument"))
+        };
+        Ok(match parts[0] {
+            "identity" | "id" | "none" => CompressorSpec::Identity,
+            "topk" | "top" => CompressorSpec::TopK(arg(1)?),
+            "randk" | "rand" => CompressorSpec::RandK(arg(1)?),
+            "rank" | "rankr" => CompressorSpec::RankR(arg(1)?),
+            "dith" | "dithering" => {
+                if parts.get(1).map(|p| *p == "sqrtd").unwrap_or(false) {
+                    CompressorSpec::Dithering(None)
+                } else {
+                    CompressorSpec::Dithering(Some(arg(1)? as u32))
+                }
+            }
+            "nat" | "natural" => CompressorSpec::Natural,
+            "bern" | "bernoulli" => {
+                let p: f64 = parts
+                    .get(1)
+                    .context("bern:<p> missing probability")?
+                    .parse()
+                    .context("bern:<p>: bad float")?;
+                CompressorSpec::Bernoulli(p)
+            }
+            "rrank" => CompressorSpec::RRank(arg(1)?, parts.get(2).map(|_| arg(2)).transpose()?.map(|v| v as u32)),
+            "nrank" => CompressorSpec::NRank(arg(1)?),
+            "rtopk" | "rtop" => CompressorSpec::RTopK(arg(1)?, parts.get(2).map(|_| arg(2)).transpose()?.map(|v| v as u32)),
+            "ntopk" | "ntop" => CompressorSpec::NTopK(arg(1)?),
+            other => bail!("unknown compressor '{other}' (from '{s}')"),
+        })
+    }
+
+    /// Instantiate a matrix compressor for `dim × dim` inputs, symmetrized
+    /// per Lemma 3.1 so Hessian estimates stay symmetric.
+    pub fn build_mat(&self, dim: usize) -> Box<dyn MatCompressor> {
+        let numel = dim * dim;
+        match *self {
+            CompressorSpec::Identity => Box::new(Identity),
+            CompressorSpec::TopK(k) => Box::new(Symmetrized(TopK::new(k.min(numel).max(1)))),
+            CompressorSpec::RandK(k) => Box::new(Symmetrized(RandK::new(k.min(numel).max(1)))),
+            CompressorSpec::RankR(r) => Box::new(RankR::new(r.max(1))),
+            CompressorSpec::Dithering(s) => {
+                let levels = s.unwrap_or_else(|| (numel as f64).sqrt().round().max(1.0) as u32);
+                Box::new(Symmetrized(RandDithering::new(levels)))
+            }
+            CompressorSpec::Natural => Box::new(Symmetrized(NaturalCompression)),
+            CompressorSpec::Bernoulli(p) => Box::new(MatBernoulli(LazyBernoulli::new(p))),
+            CompressorSpec::RRank(r, s) => {
+                let levels = s.unwrap_or_else(|| (dim as f64).sqrt().round().max(1.0) as u32);
+                Box::new(Symmetrized(ComposeRank::new(
+                    r.max(1),
+                    RandDithering::new(levels),
+                    RandDithering::new(levels),
+                )))
+            }
+            CompressorSpec::NRank(r) => Box::new(Symmetrized(ComposeRank::new(
+                r.max(1),
+                NaturalCompression,
+                NaturalCompression,
+            ))),
+            CompressorSpec::RTopK(k, s) => {
+                let k = k.min(numel).max(1);
+                let levels = s.unwrap_or_else(|| (k as f64).sqrt().round().max(1.0) as u32);
+                Box::new(Symmetrized(Compose::new(k, RandDithering::new(levels))))
+            }
+            CompressorSpec::NTopK(k) => {
+                Box::new(Symmetrized(Compose::new(k.min(numel).max(1), NaturalCompression)))
+            }
+        }
+    }
+
+    /// Instantiate a vector compressor for length-`dim` inputs.
+    pub fn build_vec(&self, dim: usize) -> Box<dyn VecCompressor> {
+        match *self {
+            CompressorSpec::Identity => Box::new(Identity),
+            CompressorSpec::TopK(k) => Box::new(TopK::new(k.min(dim).max(1))),
+            CompressorSpec::RandK(k) => Box::new(RandK::new(k.min(dim).max(1))),
+            CompressorSpec::Dithering(s) => {
+                let levels = s.unwrap_or_else(|| (dim as f64).sqrt().round().max(1.0) as u32);
+                Box::new(RandDithering::new(levels))
+            }
+            CompressorSpec::Natural => Box::new(NaturalCompression),
+            CompressorSpec::Bernoulli(p) => Box::new(LazyBernoulli::new(p)),
+            CompressorSpec::RTopK(k, s) => {
+                let k = k.min(dim).max(1);
+                let levels = s.unwrap_or_else(|| (k as f64).sqrt().round().max(1.0) as u32);
+                Box::new(Compose::new(k, RandDithering::new(levels)))
+            }
+            CompressorSpec::NTopK(k) => Box::new(Compose::new(k.min(dim).max(1), NaturalCompression)),
+            CompressorSpec::RankR(_) | CompressorSpec::RRank(_, _) | CompressorSpec::NRank(_) => {
+                panic!("rank-based compressors are matrix-only; got {self:?} for a vector")
+            }
+        }
+    }
+}
+
+/// Lazy Bernoulli lifted to matrices (all-or-nothing transmission).
+struct MatBernoulli(LazyBernoulli);
+
+impl MatCompressor for MatBernoulli {
+    fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
+        let (v, cost) = self.0.compress_vec(a.data(), rng);
+        (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
+        self.0.class_vec(numel)
+    }
+
+    fn name(&self) -> String {
+        VecCompressor::name(&self.0)
+    }
+}
+
+impl std::str::FromStr for CompressorSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        CompressorSpec::parse(s)
+    }
+}
+
+impl std::fmt::Display for CompressorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompressorSpec::Identity => write!(f, "identity"),
+            CompressorSpec::TopK(k) => write!(f, "topk:{k}"),
+            CompressorSpec::RandK(k) => write!(f, "randk:{k}"),
+            CompressorSpec::RankR(r) => write!(f, "rank:{r}"),
+            CompressorSpec::Dithering(Some(s)) => write!(f, "dith:{s}"),
+            CompressorSpec::Dithering(None) => write!(f, "dith:sqrtd"),
+            CompressorSpec::Natural => write!(f, "nat"),
+            CompressorSpec::Bernoulli(p) => write!(f, "bern:{p}"),
+            CompressorSpec::RRank(r, Some(s)) => write!(f, "rrank:{r}:{s}"),
+            CompressorSpec::RRank(r, None) => write!(f, "rrank:{r}"),
+            CompressorSpec::NRank(r) => write!(f, "nrank:{r}"),
+            CompressorSpec::RTopK(k, Some(s)) => write!(f, "rtopk:{k}:{s}"),
+            CompressorSpec::RTopK(k, None) => write!(f, "rtopk:{k}"),
+            CompressorSpec::NTopK(k) => write!(f, "ntopk:{k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(CompressorSpec::parse("identity").unwrap(), CompressorSpec::Identity);
+        assert_eq!(CompressorSpec::parse("TopK:5").unwrap(), CompressorSpec::TopK(5));
+        assert_eq!(CompressorSpec::parse("randk:3").unwrap(), CompressorSpec::RandK(3));
+        assert_eq!(CompressorSpec::parse("rank:1").unwrap(), CompressorSpec::RankR(1));
+        assert_eq!(CompressorSpec::parse("dith:8").unwrap(), CompressorSpec::Dithering(Some(8)));
+        assert_eq!(CompressorSpec::parse("dith:sqrtd").unwrap(), CompressorSpec::Dithering(None));
+        assert_eq!(CompressorSpec::parse("nat").unwrap(), CompressorSpec::Natural);
+        assert_eq!(CompressorSpec::parse("bern:0.5").unwrap(), CompressorSpec::Bernoulli(0.5));
+        assert_eq!(CompressorSpec::parse("rrank:1").unwrap(), CompressorSpec::RRank(1, None));
+        assert_eq!(CompressorSpec::parse("rrank:2:16").unwrap(), CompressorSpec::RRank(2, Some(16)));
+        assert_eq!(CompressorSpec::parse("nrank:1").unwrap(), CompressorSpec::NRank(1));
+        assert_eq!(CompressorSpec::parse("rtopk:7").unwrap(), CompressorSpec::RTopK(7, None));
+        assert_eq!(CompressorSpec::parse("ntopk:7").unwrap(), CompressorSpec::NTopK(7));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(CompressorSpec::parse("frobnicate").is_err());
+        assert!(CompressorSpec::parse("topk").is_err());
+        assert!(CompressorSpec::parse("topk:xyz").is_err());
+        assert!(CompressorSpec::parse("bern").is_err());
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for s in [
+            "identity", "topk:5", "randk:3", "rank:1", "dith:8", "dith:sqrtd", "nat",
+            "bern:0.5", "rrank:1", "rrank:2:16", "nrank:1", "rtopk:7", "ntopk:7",
+        ] {
+            let spec = CompressorSpec::parse(s).unwrap();
+            let round = CompressorSpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(spec, round, "roundtrip failed for {s}");
+        }
+    }
+
+    #[test]
+    fn build_and_run_every_mat_spec() {
+        let mut rng = Rng::new(60);
+        let mut a = Mat::from_fn(6, 6, |_, _| rng.normal());
+        a.symmetrize();
+        for s in [
+            "identity", "topk:5", "randk:3", "rank:1", "dith:4", "nat", "bern:0.5",
+            "rrank:1", "nrank:1", "rtopk:7", "ntopk:7",
+        ] {
+            let c = CompressorSpec::parse(s).unwrap().build_mat(6);
+            let (out, cost) = c.compress(&a, &mut rng);
+            assert_eq!(out.rows(), 6);
+            assert!(cost.total_bits(64) >= 0.0);
+            // Symmetric input → symmetric output for all built mats.
+            assert!(out.is_symmetric(1e-9), "{s} broke symmetry");
+        }
+    }
+
+    #[test]
+    fn build_and_run_every_vec_spec() {
+        let mut rng = Rng::new(61);
+        let x: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        for s in ["identity", "topk:4", "randk:4", "dith:3", "nat", "bern:0.3", "rtopk:4", "ntopk:4"] {
+            let c = CompressorSpec::parse(s).unwrap().build_vec(10);
+            let (out, _) = c.compress_vec(&x, &mut rng);
+            assert_eq!(out.len(), 10);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_as_vector_panics() {
+        CompressorSpec::RankR(1).build_vec(10);
+    }
+}

@@ -1,0 +1,264 @@
+//! Run configuration: which algorithm, which compressors, which basis,
+//! stepsizes, participation and stopping rules.
+//!
+//! Configuration is plain data + `FromStr` parsers so it can be driven from
+//! the CLI, from experiment harness code, and from library users alike.
+
+use crate::compressors::CompressorSpec;
+use anyhow::{bail, Result};
+
+/// Every optimization method in the paper's experimental sections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    // ── second order ────────────────────────────────────────────────
+    /// Classical Newton, naive communication (§2.1); with a custom basis it
+    /// becomes the §2.3 implementation (Figure 2).
+    Newton,
+    /// BL1 — basis learn + bidirectional compression (Algorithm 1).
+    Bl1,
+    /// BL2 — + partial participation, PD via compression-error shift (Alg. 2).
+    Bl2,
+    /// BL3 — partial participation with the PSD basis (Algorithm 3).
+    Bl3,
+    /// FedNL family [Safaryan et al. 2021] = BL1/BL2 with the standard basis.
+    FedNl,
+    /// FedNL with partial participation.
+    FedNlPp,
+    /// FedNL with bidirectional compression.
+    FedNlBc,
+    /// NL1 / NewtonLearn [Islamov et al. 2021].
+    Nl1,
+    /// DINGO [Crane & Roosta 2019].
+    Dingo,
+    // ── first order ─────────────────────────────────────────────────
+    /// Vanilla distributed gradient descent.
+    Gd,
+    /// DIANA [Mishchenko et al. 2019].
+    Diana,
+    /// ADIANA [Li et al. 2020] (accelerated DIANA).
+    Adiana,
+    /// Shifted local gradient descent [Gorbunov et al. 2021].
+    SLocalGd,
+    /// Artemis [Philippenko & Dieuleveut 2021] (bidirectional + PP).
+    Artemis,
+    /// DORE [Liu et al. 2020] (double residual compression).
+    Dore,
+}
+
+impl Algorithm {
+    pub fn all() -> &'static [Algorithm] {
+        use Algorithm::*;
+        &[
+            Newton, Bl1, Bl2, Bl3, FedNl, FedNlPp, FedNlBc, Nl1, Dingo, Gd, Diana, Adiana,
+            SLocalGd, Artemis, Dore,
+        ]
+    }
+
+    pub fn is_second_order(&self) -> bool {
+        use Algorithm::*;
+        matches!(self, Newton | Bl1 | Bl2 | Bl3 | FedNl | FedNlPp | FedNlBc | Nl1 | Dingo)
+    }
+
+    pub fn name(&self) -> &'static str {
+        use Algorithm::*;
+        match self {
+            Newton => "newton",
+            Bl1 => "bl1",
+            Bl2 => "bl2",
+            Bl3 => "bl3",
+            FedNl => "fednl",
+            FedNlPp => "fednl-pp",
+            FedNlBc => "fednl-bc",
+            Nl1 => "nl1",
+            Dingo => "dingo",
+            Gd => "gd",
+            Diana => "diana",
+            Adiana => "adiana",
+            SLocalGd => "s-local-gd",
+            Artemis => "artemis",
+            Dore => "dore",
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let norm = s.trim().to_ascii_lowercase().replace('_', "-");
+        for a in Algorithm::all() {
+            if a.name() == norm {
+                return Ok(*a);
+            }
+        }
+        bail!(
+            "unknown algorithm '{s}'; expected one of: {}",
+            Algorithm::all().iter().map(|a| a.name()).collect::<Vec<_>>().join(", ")
+        )
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Which Hessian basis a Basis-Learn method uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BasisKind {
+    /// Canonical `E_{jl}` basis (BL → FedNL).
+    Standard,
+    /// Symmetric lower-triangular basis (Example 4.2).
+    SymTri,
+    /// Data-driven subspace basis of §2.3 (the paper's default for BL1/BL2).
+    Subspace,
+    /// PSD basis of Example 5.1 (BL3's default).
+    Psd,
+}
+
+impl std::str::FromStr for BasisKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "standard" | "std" => BasisKind::Standard,
+            "symtri" | "tri" => BasisKind::SymTri,
+            "subspace" | "data" => BasisKind::Subspace,
+            "psd" => BasisKind::Psd,
+            other => bail!("unknown basis '{other}' (standard|symtri|subspace|psd)"),
+        })
+    }
+}
+
+/// BL3's β update options (Algorithm 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bl3Option {
+    /// β from the previous iterate's coefficients.
+    One,
+    /// β from the current iterate's coefficients (the paper's experiments).
+    Two,
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algorithm: Algorithm,
+    /// Maximum communication rounds.
+    pub rounds: usize,
+    /// Ridge parameter λ of eq. (16).
+    pub lambda: f64,
+    /// Hessian/matrix compressor `C_i^k`.
+    pub hess_comp: CompressorSpec,
+    /// Model compressor `Q^k` (bidirectional compression; identity = off).
+    pub model_comp: CompressorSpec,
+    /// Gradient compressor for first-order methods.
+    pub grad_comp: CompressorSpec,
+    /// Gradient-send probability `p` (the ξ^k Bernoulli schedule).
+    pub p: f64,
+    /// Expected participating clients per round `τ` (`None` ⇒ all).
+    pub tau: Option<usize>,
+    /// Model learning rate η (`None` ⇒ rule from Asm. 4.3/4.4).
+    pub eta: Option<f64>,
+    /// Hessian learning rate α (`None` ⇒ rule from Asm. 4.5/4.6).
+    pub alpha: Option<f64>,
+    /// First-order stepsize (`None` ⇒ theoretical 1/L etc.).
+    pub gamma: Option<f64>,
+    /// Basis for BL methods (`None` ⇒ each algorithm's paper default).
+    pub basis: Option<BasisKind>,
+    /// Relative tolerance for subspace extraction from data.
+    pub subspace_tol: f64,
+    /// BL3: positive constant `c`.
+    pub bl3_c: f64,
+    /// BL3: β option.
+    pub bl3_option: Bl3Option,
+    /// Float width for bit accounting (the paper plots 64-bit doubles).
+    pub float_bits: u32,
+    /// Stop once `f(x^k) − f(x*) ≤ target_gap` (0 ⇒ run all rounds).
+    pub target_gap: f64,
+    /// Stop once bits/node exceeds this budget (`None` ⇒ unlimited).
+    pub max_bits_per_node: Option<f64>,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algorithm: Algorithm::Bl1,
+            rounds: 200,
+            lambda: 1e-3,
+            hess_comp: CompressorSpec::TopK(1),
+            model_comp: CompressorSpec::Identity,
+            grad_comp: CompressorSpec::Identity,
+            p: 1.0,
+            tau: None,
+            eta: None,
+            alpha: None,
+            gamma: None,
+            basis: None,
+            subspace_tol: 1e-9,
+            bl3_c: 0.1,
+            bl3_option: Bl3Option::Two,
+            float_bits: 64,
+            target_gap: 1e-12,
+            max_bits_per_node: None,
+            seed: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The basis each algorithm uses when none is specified.
+    pub fn effective_basis(&self) -> BasisKind {
+        if let Some(b) = self.basis {
+            return b;
+        }
+        match self.algorithm {
+            Algorithm::Bl1 | Algorithm::Bl2 => BasisKind::Subspace,
+            Algorithm::Bl3 => BasisKind::Psd,
+            _ => BasisKind::Standard,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in Algorithm::all() {
+            let parsed: Algorithm = a.name().parse().unwrap();
+            assert_eq!(*a, parsed);
+        }
+        assert!("warp-drive".parse::<Algorithm>().is_err());
+        assert_eq!("FEDNL_PP".parse::<Algorithm>().unwrap(), Algorithm::FedNlPp);
+    }
+
+    #[test]
+    fn second_order_classification() {
+        assert!(Algorithm::Bl1.is_second_order());
+        assert!(Algorithm::Dingo.is_second_order());
+        assert!(!Algorithm::Gd.is_second_order());
+        assert!(!Algorithm::Dore.is_second_order());
+    }
+
+    #[test]
+    fn basis_parse() {
+        assert_eq!("subspace".parse::<BasisKind>().unwrap(), BasisKind::Subspace);
+        assert_eq!("STD".parse::<BasisKind>().unwrap(), BasisKind::Standard);
+        assert!("fourier".parse::<BasisKind>().is_err());
+    }
+
+    #[test]
+    fn effective_basis_defaults() {
+        let mut cfg = RunConfig::default();
+        cfg.algorithm = Algorithm::Bl1;
+        assert_eq!(cfg.effective_basis(), BasisKind::Subspace);
+        cfg.algorithm = Algorithm::Bl3;
+        assert_eq!(cfg.effective_basis(), BasisKind::Psd);
+        cfg.algorithm = Algorithm::FedNl;
+        assert_eq!(cfg.effective_basis(), BasisKind::Standard);
+        cfg.basis = Some(BasisKind::SymTri);
+        assert_eq!(cfg.effective_basis(), BasisKind::SymTri);
+    }
+}

@@ -1,0 +1,229 @@
+//! ADIANA [Li, Kovalev, Qian, Richtárik 2020]: Nesterov-accelerated DIANA.
+//!
+//! Three sequences `y, z, w` plus shift memories. Per round:
+//!
+//! `x^k = θ₁ z^k + θ₂ w^k + (1−θ₁−θ₂) y^k`
+//! `g^k = (1/n) Σ [h_i + Q(∇f_i(x^k) − h_i)]`
+//! `y^{k+1} = x^k − η g^k`
+//! `z^{k+1} = β z^k + (1−β) x^k + (γ/η)(y^{k+1} − x^k)`
+//! `w^{k+1} = y^k` with probability `q`, else unchanged (shift anchor), and
+//! on anchor renewal the shifts absorb a compressed correction toward
+//! `∇f_i(w)`.
+//!
+//! Parameters follow the strongly convex setting of the ADIANA paper:
+//! `α = 1/(ω+1)`, `q = α/2`,
+//! `η = min{ 1/(2L(1+2ω/n)), n/(64ω L) }` (second term only when ω>0),
+//! `θ₂ = ½`, `θ₁ = min{¼, √(ημ/q)/2}…` capped below ½,
+//! `γ = η/(2(θ₁+ημ))`, `β = 1 − γμ`.
+
+use crate::compressors::{BitCost, CompressorClass, VecCompressor};
+use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::linalg::Vector;
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// ADIANA state.
+pub struct Adiana {
+    y: Vector,
+    z: Vector,
+    w: Vector,
+    x: Vector,
+    shifts: Vec<Vector>,
+    comp: Box<dyn VecCompressor>,
+    eta: f64,
+    theta1: f64,
+    theta2: f64,
+    gamma: f64,
+    beta: f64,
+    alpha: f64,
+    q: f64,
+    mu: f64,
+}
+
+impl Adiana {
+    pub fn new(env: &Env) -> Self {
+        let d = env.d;
+        let n = env.n as f64;
+        let comp = env.cfg.grad_comp.build_vec(d);
+        let omega = match comp.class_vec(d) {
+            CompressorClass::Unbiased { omega } => omega,
+            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+        };
+        let ell = env.smoothness;
+        let mu = env.cfg.lambda.max(1e-12);
+        let alpha = 1.0 / (omega + 1.0);
+        let q = alpha / 2.0;
+        let mut eta = 1.0 / (2.0 * ell * (1.0 + 2.0 * omega / n));
+        if omega > 0.0 {
+            eta = eta.min(n / (64.0 * omega * ell));
+        }
+        if let Some(g) = env.cfg.gamma {
+            eta = g;
+        }
+        let theta2 = 0.5;
+        let theta1 = (eta * mu / q).sqrt().min(0.25).max(1e-6);
+        let gamma = eta / (2.0 * (theta1 + eta * mu));
+        let beta = (1.0 - gamma * mu).max(0.0);
+        let x0 = vec![0.0; d];
+        Adiana {
+            y: x0.clone(),
+            z: x0.clone(),
+            w: x0.clone(),
+            x: x0.clone(),
+            shifts: vec![vec![0.0; d]; env.n],
+            comp,
+            eta,
+            theta1,
+            theta2,
+            gamma,
+            beta,
+            alpha,
+            q,
+            mu,
+        }
+    }
+}
+
+impl Method for Adiana {
+    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
+        let _ = self.mu;
+        let mut tally = CommTally::default();
+        let n = env.n as f64;
+        let d = env.d;
+
+        // Extrapolated point.
+        for k in 0..d {
+            self.x[k] = self.theta1 * self.z[k]
+                + self.theta2 * self.w[k]
+                + (1.0 - self.theta1 - self.theta2) * self.y[k];
+        }
+
+        // Compressed gradient estimate at x.
+        let mut g_est = vec![0.0; d];
+        for i in 0..env.n {
+            let gi = env.grad_reg(i, &self.x);
+            let diff = crate::linalg::sub(&gi, &self.shifts[i]);
+            let (delta, cost) = self.comp.compress_vec(&diff, rng);
+            tally.up(cost, env.cfg.float_bits);
+            tally.down(BitCost::floats(d), env.cfg.float_bits);
+            crate::linalg::axpy(1.0 / n, &self.shifts[i], &mut g_est);
+            crate::linalg::axpy(1.0 / n, &delta, &mut g_est);
+        }
+
+        // y, z updates.
+        let y_next: Vector = self
+            .x
+            .iter()
+            .zip(&g_est)
+            .map(|(xi, gi)| xi - self.eta * gi)
+            .collect();
+        for k in 0..d {
+            self.z[k] = self.beta * self.z[k]
+                + (1.0 - self.beta) * self.x[k]
+                + (self.gamma / self.eta) * (y_next[k] - self.x[k]);
+        }
+
+        // Anchor renewal with probability q; shifts absorb a compressed
+        // correction toward ∇f_i(w^{k+1}).
+        if rng.bernoulli(self.q) {
+            self.w = self.y.clone();
+            for i in 0..env.n {
+                let gw = env.grad_reg(i, &self.w);
+                let diff = crate::linalg::sub(&gw, &self.shifts[i]);
+                let (delta, cost) = self.comp.compress_vec(&diff, rng);
+                tally.up(cost, env.cfg.float_bits);
+                crate::linalg::axpy(self.alpha, &delta, &mut self.shifts[i]);
+            }
+        }
+        self.y = y_next;
+
+        Ok(tally.into_step())
+    }
+
+    /// ADIANA's deployable iterate is `y^k`.
+    fn x(&self) -> &[f64] {
+        &self.y
+    }
+
+    fn label(&self) -> String {
+        format!("adiana[{}]", VecCompressor::name(self.comp.as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::compressors::CompressorSpec;
+    use crate::config::{Algorithm, RunConfig};
+    use crate::coordinator::run_federated;
+    use crate::data::{FederatedDataset, SyntheticSpec};
+
+    fn fed() -> FederatedDataset {
+        FederatedDataset::synthetic(&SyntheticSpec {
+            n_clients: 4,
+            m_per_client: 30,
+            dim: 8,
+            intrinsic_dim: 4,
+            noise: 0.0,
+            seed: 63,
+        })
+    }
+
+    #[test]
+    fn adiana_converges() {
+        let cfg = RunConfig {
+            algorithm: Algorithm::Adiana,
+            rounds: 40_000,
+            lambda: 1e-2,
+            grad_comp: CompressorSpec::Dithering(None),
+            target_gap: 1e-8,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&fed(), &cfg).unwrap();
+        assert!(out.final_gap() <= 1e-8, "gap={}", out.final_gap());
+    }
+
+    #[test]
+    fn adiana_acceleration_beats_plain_gd_on_ill_conditioned_quadratic() {
+        // Acceleration check at ω = 0 (identity compressor), where ADIANA
+        // reduces to accelerated compressed GD: on a κ = 10³ quadratic it
+        // must need far fewer rounds than plain GD (√κ vs κ). Logistic
+        // instances won't do — their *local* conditioning near x* is mild,
+        // so constants dominate. (Against DIANA with both methods on
+        // theoretical stepsizes the ordering is instance-dependent; the
+        // paper's Fig. 1 row 2 likewise shows them close together and both
+        // far behind BL1.)
+        use crate::coordinator::run_federated_with;
+        use crate::problem::{LocalProblem, QuadraticProblem};
+        let d = 20;
+        let mut rng = crate::rng::Rng::new(90);
+        // Shared planted spectrum: log-spaced eigenvalues in [1e-3, 1].
+        let q = crate::linalg::Mat::diag(
+            &(0..d)
+                .map(|i| 1e-3_f64 * (1e3_f64).powf(i as f64 / (d - 1) as f64))
+                .collect::<Vec<_>>(),
+        );
+        let locals: Vec<Box<dyn LocalProblem>> = (0..4)
+            .map(|_| {
+                let c: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                Box::new(QuadraticProblem::new(q.clone(), c)) as Box<dyn LocalProblem>
+            })
+            .collect();
+        let features = vec![None; 4];
+        let mk = |algorithm| RunConfig {
+            algorithm,
+            rounds: 2_000_000,
+            lambda: 1e-3, // = μ of the planted spectrum (λ is folded via grad_reg)
+            grad_comp: CompressorSpec::Identity,
+            target_gap: 1e-8,
+            ..RunConfig::default()
+        };
+        let gd = run_federated_with(&locals, features.clone(), &mk(Algorithm::Gd)).unwrap();
+        let ad = run_federated_with(&locals, features, &mk(Algorithm::Adiana)).unwrap();
+        assert!(
+            (ad.history.records.len() as f64) < 0.35 * gd.history.records.len() as f64,
+            "adiana {} rounds vs gd {}",
+            ad.history.records.len(),
+            gd.history.records.len()
+        );
+    }
+}

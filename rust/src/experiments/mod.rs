@@ -1,0 +1,52 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//! See DESIGN.md §4 for the experiment index. Implemented in `tables.rs`
+//! (Table 1, Table 2) and `figures.rs` (Figures 1–6).
+
+mod figures;
+mod tables;
+
+pub use figures::{run_figure, FigureSpec, Series};
+pub use tables::{table1, table2};
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Where experiment CSVs land.
+pub fn runs_dir() -> PathBuf {
+    PathBuf::from("runs")
+}
+
+/// Every experiment id the CLI accepts.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1",
+    "table2",
+    "fig1-second-order",
+    "fig1-first-order",
+    "fig1-compose-rank",
+    "fig2",
+    "fig3",
+    "fig4",
+    "fig5",
+    "fig6",
+    "ablation-basis",
+    "ablation-alpha",
+    "ablation-budget",
+    "all",
+];
+
+/// Run an experiment by id, printing the paper-style rows/series and writing
+/// CSVs under `runs/`.
+pub fn run_experiment(id: &str, full_scale: bool, seed: u64) -> Result<()> {
+    match id {
+        "table1" => table1(seed),
+        "table2" => table2(full_scale, seed),
+        "all" => {
+            for e in EXPERIMENTS.iter().filter(|e| **e != "all") {
+                println!("\n════════ {e} ════════");
+                run_experiment(e, full_scale, seed)?;
+            }
+            Ok(())
+        }
+        fig => run_figure(fig, full_scale, seed),
+    }
+}

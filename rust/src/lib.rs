@@ -1,0 +1,68 @@
+//! # basis-learn
+//!
+//! A production-quality reproduction of
+//! *"Basis Matters: Better Communication-Efficient Second Order Methods for
+//! Federated Learning"* (Qian, Islamov, Safaryan, Richtárik, 2021).
+//!
+//! The library implements the paper's three Basis-Learn algorithms (BL1, BL2,
+//! BL3), the entire FedNL family they extend, the NL1 / DINGO / Newton
+//! second-order baselines, and the first-order baselines the paper compares
+//! against (GD, DIANA, ADIANA, S-Local-GD, Artemis, DORE), together with the
+//! full matrix-compression calculus of the paper's §3 and the basis machinery
+//! of §2.3/§4/§5.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the federated coordinator: per-algorithm server and
+//!   client state machines, compressed message passing with exact bit
+//!   accounting, participation sampling, metrics, experiment harness and CLI.
+//! * **L2 (python/compile/model.py)** — the local GLM loss/gradient/Hessian as
+//!   a JAX program, AOT-lowered per data shape to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — the Pallas hot-spot kernels (scaled
+//!   Gram Hessian, fused logistic gradient) called by L2.
+//!
+//! At run time the Rust binary is self-contained: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and serves local
+//! loss/grad/Hessian evaluations on the coordinator's hot path. Python never
+//! runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use basis_learn::prelude::*;
+//!
+//! // Synthesize an `a1a`-shaped federated dataset with intrinsic dimension 8.
+//! let spec = SyntheticSpec { n_clients: 4, m_per_client: 100, dim: 30, intrinsic_dim: 8, noise: 0.0, seed: 7 };
+//! let fed = FederatedDataset::synthetic(&spec);
+//! let cfg = RunConfig { algorithm: Algorithm::Bl1, rounds: 50, lambda: 1e-3, ..RunConfig::default() };
+//! let out = run_federated(&fed, &cfg).unwrap();
+//! println!("final gap {:.3e} after {} bits/node", out.final_gap(), out.bits_per_node());
+//! ```
+
+pub mod bench_util;
+pub mod basis;
+pub mod compressors;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod problem;
+pub mod rng;
+pub mod runtime;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::basis::{HessianBasis, PsdBasis, StandardBasis, SubspaceBasis, SymTriBasis};
+    pub use crate::compressors::{
+        BitCost, Compose, Identity, MatCompressor, NaturalCompression, RandDithering, RandK,
+        RankR, TopK, VecCompressor,
+    };
+    pub use crate::config::{Algorithm, RunConfig};
+    pub use crate::coordinator::{run_federated, RunOutput};
+    pub use crate::data::{FederatedDataset, SyntheticSpec};
+    pub use crate::linalg::{Mat, Vector};
+    pub use crate::problem::{LocalProblem, LogisticProblem};
+    pub use crate::rng::Rng;
+}

@@ -1,0 +1,424 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used by:
+//! * the `[·]_μ` projection of BL1 (project onto `{A = Aᵀ, A ⪰ μI}` by
+//!   clamping eigenvalues),
+//! * the Rank-R compressor on symmetric matrices (top-|λ| truncation equals
+//!   the best rank-R approximation in Frobenius norm),
+//! * spectral diagnostics (condition numbers for EXPERIMENTS.md).
+//!
+//! Jacobi is `O(d³)` per sweep with typically 6–10 sweeps; at the paper's
+//! dimensions (`d ≤ 500`) this is comfortably fast, and it is backward-stable
+//! and embarrassingly simple to verify.
+
+use super::Mat;
+
+/// Result of a symmetric eigendecomposition `A = V diag(λ) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct EigenDecomposition {
+    /// Eigenvalues, sorted descending.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors as *columns* of `vectors`
+    /// (`vectors.col(k)` pairs with `values[k]`).
+    pub vectors: Mat,
+}
+
+impl EigenDecomposition {
+    /// Reconstruct `V diag(f(λ)) Vᵀ` for an eigenvalue transform `f`.
+    pub fn reconstruct(&self, mut f: impl FnMut(f64) -> f64) -> Mat {
+        let n = self.values.len();
+        let mut out = Mat::zeros(n, n);
+        for (k, &lam) in self.values.iter().enumerate() {
+            let fl = f(lam);
+            if fl == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                let vik = self.vectors[(i, k)] * fl;
+                if vik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += vik * self.vectors[(j, k)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Best rank-`r` approximation by |λ| (equals Rank-R truncated SVD for
+    /// symmetric matrices).
+    pub fn rank_r(&self, r: usize) -> Mat {
+        let n = self.values.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            self.values[b]
+                .abs()
+                .partial_cmp(&self.values[a].abs())
+                .unwrap()
+        });
+        let keep: std::collections::HashSet<usize> = order.into_iter().take(r).collect();
+        let mut out = Mat::zeros(n, n);
+        for (k, &lam) in self.values.iter().enumerate() {
+            if !keep.contains(&k) || lam == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                let vik = self.vectors[(i, k)] * lam;
+                for j in 0..n {
+                    out[(i, j)] += vik * self.vectors[(j, k)];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+///
+/// The input is symmetrized defensively (`(A + Aᵀ)/2`) so tiny asymmetries
+/// from accumulation order cannot derail the rotation count.
+pub fn sym_eigen(a: &Mat) -> EigenDecomposition {
+    assert!(a.is_square(), "sym_eigen requires a square matrix");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+
+    if n <= 1 {
+        return EigenDecomposition {
+            values: (0..n).map(|i| m[(i, i)]).collect(),
+            vectors: v,
+        };
+    }
+
+    const MAX_SWEEPS: usize = 50;
+    for _sweep in 0..MAX_SWEEPS {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // tan of the rotation angle, the stable formula.
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Apply the rotation J(p,q,θ)ᵀ M J(p,q,θ) in place.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort descending by eigenvalue.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(lam, _)| lam).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_k, &(_, old_k)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, new_k)] = v[(i, old_k)];
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+/// Top-`r` eigenpairs of a symmetric matrix by largest |λ|, via orthogonal
+/// (subspace) iteration with Rayleigh–Ritz extraction.
+///
+/// The workhorse of the Rank-R compressor's fast path
+/// (EXPERIMENTS.md §Perf L3-2): `O(r·d²)` per iteration instead of Jacobi's
+/// `O(d³)` per sweep. Returns `None` when the iteration has not met the
+/// residual tolerance within `max_iters` (e.g. |λ_r| ≈ |λ_{r+1}| clusters) —
+/// callers fall back to the full decomposition.
+pub fn top_eigenpairs(a: &Mat, r: usize, max_iters: usize, tol: f64) -> Option<(Vec<f64>, Mat)> {
+    let d = a.rows();
+    assert!(a.is_square() && r >= 1);
+    if r >= d || d <= 8 {
+        return None; // full Jacobi is cheap/needed here
+    }
+    let scale = a.fro_norm();
+    if scale == 0.0 {
+        return Some((vec![0.0; r], Mat::zeros(d, r)));
+    }
+    // Oversampled subspace (s = r + 4): symmetric Gaussians routinely have
+    // near-tied ±λ magnitudes at the cut, which stalls an exactly-r-dim
+    // iteration; the buffer columns absorb the tie and restore the fast
+    // (|λ_{s+1}|/|λ_r|)^k rate.
+    let s = (r + 4).min(d - 1).max(r);
+    // Deterministic pseudo-random start (decoupled from caller RNGs so the
+    // compressor stays a pure function of its input).
+    let mut v = Mat::from_fn(d, s, |i, k| {
+        let h = (i.wrapping_mul(2654435761).wrapping_add(k * 40503 + 12345)) & 0xFFFF;
+        h as f64 / 65536.0 - 0.5
+    });
+    orthonormalize(&mut v);
+    for it in 0..max_iters {
+        let mut w = a.matmul(&v);
+        orthonormalize(&mut w);
+        // Rayleigh–Ritz on the s-dim subspace.
+        let aw = a.matmul(&w);
+        let t = w.transpose().matmul(&aw);
+        let small = sym_eigen(&t);
+        // Rotate basis to Ritz vectors, sorted by |λ| descending.
+        let mut order: Vec<usize> = (0..s).collect();
+        order.sort_by(|&x, &y| {
+            small.values[y].abs().partial_cmp(&small.values[x].abs()).unwrap()
+        });
+        let mut rot = Mat::zeros(s, s);
+        let mut vals = vec![0.0; s];
+        for (new_k, &old_k) in order.iter().enumerate() {
+            vals[new_k] = small.values[old_k];
+            for i in 0..s {
+                rot[(i, new_k)] = small.vectors[(i, old_k)];
+            }
+        }
+        v = w.matmul(&rot);
+        // Check residuals of the *top r* Ritz pairs only (every few
+        // iterations — the check costs a matmul).
+        if it % 3 == 2 || it + 1 == max_iters {
+            let av = a.matmul(&v);
+            let mut ok = true;
+            for k in 0..r {
+                let mut res = 0.0;
+                for i in 0..d {
+                    let e = av[(i, k)] - vals[k] * v[(i, k)];
+                    res += e * e;
+                }
+                if res.sqrt() > tol * scale {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                let mut top = Mat::zeros(d, r);
+                for k in 0..r {
+                    for i in 0..d {
+                        top[(i, k)] = v[(i, k)];
+                    }
+                }
+                vals.truncate(r);
+                return Some((vals, top));
+            }
+        }
+    }
+    None
+}
+
+/// In-place Gram–Schmidt orthonormalization of the columns (twice for
+/// stability). Degenerate columns are replaced with fresh deterministic
+/// directions.
+fn orthonormalize(v: &mut Mat) {
+    let (d, r) = (v.rows(), v.cols());
+    for k in 0..r {
+        for _pass in 0..2 {
+            for prev in 0..k {
+                let mut proj = 0.0;
+                for i in 0..d {
+                    proj += v[(i, k)] * v[(i, prev)];
+                }
+                for i in 0..d {
+                    let vp = v[(i, prev)];
+                    v[(i, k)] -= proj * vp;
+                }
+            }
+        }
+        let mut nrm = 0.0;
+        for i in 0..d {
+            nrm += v[(i, k)] * v[(i, k)];
+        }
+        let mut nrm = nrm.sqrt();
+        if nrm < 1e-14 {
+            for i in 0..d {
+                v[(i, k)] = ((i * 48271 + k * 16807 + 7) % 101) as f64 / 101.0 - 0.5;
+            }
+            nrm = {
+                let mut s = 0.0;
+                for i in 0..d {
+                    s += v[(i, k)] * v[(i, k)];
+                }
+                s.sqrt()
+            };
+        }
+        for i in 0..d {
+            v[(i, k)] /= nrm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn top_eigenpairs_match_jacobi() {
+        let mut rng = Rng::new(44);
+        for d in [12, 30, 60] {
+            let mut a = Mat::from_fn(d, d, |_, _| rng.normal());
+            a.symmetrize();
+            let full = sym_eigen(&a);
+            let mut abs_sorted: Vec<f64> = full.values.clone();
+            abs_sorted.sort_by(|x, y| y.abs().partial_cmp(&x.abs()).unwrap());
+            for r in [1, 2, 4] {
+                let (vals, vecs) = top_eigenpairs(&a, r, 600, 1e-9)
+                    .unwrap_or_else(|| panic!("d={d} r={r} did not converge"));
+                for k in 0..r {
+                    assert!(
+                        (vals[k].abs() - abs_sorted[k].abs()).abs() < 1e-6,
+                        "d={d} r={r} k={k}: {} vs {}",
+                        vals[k],
+                        abs_sorted[k]
+                    );
+                    // Eigenpair residual.
+                    let av = a.matvec(&vecs.col(k));
+                    let mut res = 0.0;
+                    for i in 0..d {
+                        res += (av[i] - vals[k] * vecs[(i, k)]).powi(2);
+                    }
+                    assert!(res.sqrt() < 1e-6, "residual {res}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_eigenpairs_declines_small_or_full() {
+        let a = Mat::eye(5);
+        assert!(top_eigenpairs(&a, 1, 100, 1e-10).is_none()); // d ≤ 8
+        let b = Mat::eye(20);
+        assert!(top_eigenpairs(&b, 20, 100, 1e-10).is_none()); // r = d
+    }
+
+    #[test]
+    fn top_eigenpairs_zero_matrix() {
+        let a = Mat::zeros(16, 16);
+        let (vals, _) = top_eigenpairs(&a, 2, 100, 1e-10).unwrap();
+        assert_eq!(vals, vec![0.0, 0.0]);
+    }
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        a
+    }
+
+    fn reconstruct(e: &EigenDecomposition) -> Mat {
+        e.reconstruct(|x| x)
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::diag(&[3.0, 1.0, 2.0]);
+        let e = sym_eigen(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eigen(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(4);
+        for n in [1, 2, 3, 8, 25, 60] {
+            let a = random_sym(n, &mut rng);
+            let e = sym_eigen(&a);
+            let rec = reconstruct(&e);
+            let err = (&rec - &a).fro_norm() / (1.0 + a.fro_norm());
+            assert!(err < 1e-10, "n={n} reconstruction err={err}");
+            // VᵀV = I
+            let vtv = e.vectors.transpose().matmul(&e.vectors);
+            let id_err = (&vtv - &Mat::eye(n)).fro_norm();
+            assert!(id_err < 1e-10, "n={n} orthogonality err={id_err}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let mut rng = Rng::new(5);
+        let a = random_sym(20, &mut rng);
+        let e = sym_eigen(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_and_frobenius_invariants() {
+        let mut rng = Rng::new(6);
+        let a = random_sym(15, &mut rng);
+        let e = sym_eigen(&a);
+        let tr: f64 = e.values.iter().sum();
+        assert!((tr - a.trace()).abs() < 1e-9);
+        let fro_sq: f64 = e.values.iter().map(|l| l * l).sum();
+        assert!((fro_sq - a.fro_norm_sq()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rank_r_is_best_approximation() {
+        let mut rng = Rng::new(7);
+        let a = random_sym(12, &mut rng);
+        let e = sym_eigen(&a);
+        // Error of rank-r truncation equals sqrt of the sum of discarded λ².
+        for r in [0, 1, 3, 6, 12] {
+            let approx = e.rank_r(r);
+            let mut lams: Vec<f64> = e.values.iter().map(|l| l * l).collect();
+            lams.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            let tail: f64 = lams.iter().skip(r).sum();
+            let err = (&a - &approx).fro_norm();
+            assert!((err - tail.sqrt()).abs() < 1e-8, "r={r} err={err} tail={}", tail.sqrt());
+        }
+    }
+
+    #[test]
+    fn psd_projection_via_reconstruct() {
+        // Clamp eigenvalues at μ: the [·]_μ operator of BL1.
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // λ = 3, −1
+        let e = sym_eigen(&a);
+        let mu = 0.1;
+        let proj = e.reconstruct(|l| l.max(mu));
+        let pe = sym_eigen(&proj);
+        assert!(pe.values.iter().all(|&l| l >= mu - 1e-12));
+        assert!((pe.values[0] - 3.0).abs() < 1e-10);
+    }
+}

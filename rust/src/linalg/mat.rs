@@ -1,0 +1,495 @@
+//! Dense row-major matrix type.
+
+use super::{dot, Vector};
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Sub, SubAssign};
+
+/// Dense `rows × cols` matrix, row-major `f64` storage.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Build a diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    /// Rank-one outer product `u vᵀ`.
+    pub fn outer(u: &[f64], v: &[f64]) -> Self {
+        Mat::from_fn(u.len(), v.len(), |i, j| u[i] * v[j])
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the raw data vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` as a fresh vector.
+    pub fn col(&self, j: usize) -> Vector {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on larger matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Matrix–vector product `A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vector {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// Transposed matrix–vector product `Aᵀ x` without forming `Aᵀ`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vector {
+        assert_eq!(self.rows, x.len(), "matvec_t shape mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                y[j] += xi * row[j];
+            }
+        }
+        y
+    }
+
+    /// Matrix product `A · B` (ikj loop order, blocked over k).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            for (p, &a_ip) in a_row.iter().enumerate().take(k) {
+                if a_ip == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    c_row[j] += a_ip * b_row[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// `AᵀA`-style scaled Gram product: `Aᵀ diag(s) A` without forming the
+    /// transpose or the diagonal. This is the native-Rust mirror of the L1
+    /// Pallas kernel (used for oracle checks and CPU baselines).
+    pub fn gram_scaled(&self, s: &[f64]) -> Mat {
+        assert_eq!(self.rows, s.len(), "gram_scaled shape mismatch");
+        let (m, d) = (self.rows, self.cols);
+        let mut g = Mat::zeros(d, d);
+        for r in 0..m {
+            let w = s[r];
+            if w == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            // Accumulate the upper triangle of w · rowᵀ row.
+            for i in 0..d {
+                let wi = w * row[i];
+                if wi == 0.0 {
+                    continue;
+                }
+                let g_row = &mut g.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    g_row[j] += wi * row[j];
+                }
+            }
+        }
+        // Mirror to the lower triangle.
+        for i in 0..d {
+            for j in (i + 1)..d {
+                g.data[j * d + i] = g.data[i * d + j];
+            }
+        }
+        g
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>()
+    }
+
+    /// Frobenius inner product `⟨A, B⟩`.
+    pub fn fro_dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        dot(&self.data, &other.data)
+    }
+
+    /// Spectral norm estimate via power iteration on `AᵀA` (tight enough for
+    /// diagnostics; exact eigen-based norms are available through
+    /// [`super::sym_eigen`]).
+    pub fn spectral_norm_est(&self, iters: usize) -> f64 {
+        let n = self.cols;
+        if n == 0 || self.rows == 0 {
+            return 0.0;
+        }
+        let mut v: Vector = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 + 0.1).collect();
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let atav = self.matvec_t(&av);
+            let nrm = super::norm2(&atav);
+            if nrm == 0.0 {
+                return 0.0;
+            }
+            for (vi, ai) in v.iter_mut().zip(&atav) {
+                *vi = ai / nrm;
+            }
+            sigma = super::norm2(&self.matvec(&v));
+        }
+        sigma
+    }
+
+    /// Symmetrize in place: `A ← (A + Aᵀ)/2` (the `[·]_s` operator of BL2).
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = v;
+                self.data[j * n + i] = v;
+            }
+        }
+    }
+
+    /// Is the matrix exactly symmetric?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (self.data[i * n + j] - self.data[j * n + i]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m: f64, &x| m.max(x.abs()))
+    }
+
+    /// `A ← A + αB`.
+    pub fn add_scaled(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Add `α` to the diagonal (`A + αI`).
+    pub fn add_diag(&mut self, alpha: f64) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            self.data[i * n + i] += alpha;
+        }
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl AddAssign<&Mat> for Mat {
+    fn add_assign(&mut self, other: &Mat) {
+        self.add_scaled(1.0, other);
+    }
+}
+
+impl SubAssign<&Mat> for Mat {
+    fn sub_assign(&mut self, other: &Mat) {
+        self.add_scaled(-1.0, other);
+    }
+}
+
+impl Mul<f64> for &Mat {
+    type Output = Mat;
+    fn mul(self, alpha: f64) -> Mat {
+        let data = self.data.iter().map(|a| a * alpha).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_and_index() {
+        let m = Mat::eye(3);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 1)], 0.0);
+        assert_eq!(m.trace(), 3.0);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let c = a.matmul(&Mat::eye(4));
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Mat::from_fn(3, 5, |i, j| (i + j) as f64);
+        let b = Mat::from_fn(5, 2, |i, j| (i as f64) - (j as f64));
+        let c = a.matmul(&b);
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.cols(), 2);
+        // Check one entry by hand: c[1][0] = Σ_p a[1][p]·b[p][0] = Σ_p (1+p)p
+        let expect: f64 = (0..5).map(|p| ((1 + p) * p) as f64).sum();
+        assert!((c[(1, 0)] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_transpose_consistent() {
+        let a = Mat::from_fn(4, 3, |i, j| ((i * 3 + j) as f64).sin());
+        let x = vec![1.0, -2.0, 0.5];
+        let y1 = a.matvec(&x);
+        let at = a.transpose();
+        let y2: Vec<f64> = (0..4).map(|i| dot(&at.col(i), &x)).collect();
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        // matvec_t vs explicit transpose
+        let z = vec![1.0, 2.0, 3.0, 4.0];
+        let t1 = a.matvec_t(&z);
+        let t2 = at.matvec(&z);
+        for (u, v) in t1.iter().zip(&t2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_scaled_matches_explicit() {
+        let a = Mat::from_fn(7, 4, |i, j| ((i + 2 * j) as f64).cos());
+        let s: Vec<f64> = (0..7).map(|i| 0.1 + i as f64 * 0.3).collect();
+        let g = a.gram_scaled(&s);
+        // Explicit: Aᵀ diag(s) A
+        let at = a.transpose();
+        let sa = Mat::from_fn(7, 4, |i, j| s[i] * a[(i, j)]);
+        let g2 = at.matmul(&sa);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((g[(i, j)] - g2[(i, j)]).abs() < 1e-12);
+            }
+        }
+        assert!(g.is_symmetric(1e-14));
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut a = Mat::from_vec(2, 2, vec![1.0, 3.0, 5.0, 2.0]);
+        a.symmetrize();
+        assert_eq!(a[(0, 1)], 4.0);
+        assert_eq!(a[(1, 0)], 4.0);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn outer_product() {
+        let m = Mat::outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m[(1, 2)], 10.0);
+    }
+
+    #[test]
+    fn fro_norms() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!((a.fro_norm_sq() - 10.0).abs() < 1e-14);
+        assert!((a.fro_norm() - 10f64.sqrt()).abs() < 1e-14);
+        assert!((a.fro_dot(&a) - 10.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let a = Mat::diag(&[3.0, -7.0, 2.0]);
+        let s = a.spectral_norm_est(100);
+        assert!((s - 7.0).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn add_sub_scale_ops() {
+        let a = Mat::eye(2);
+        let b = &a + &a;
+        assert_eq!(b[(0, 0)], 2.0);
+        let c = &b - &a;
+        assert_eq!(c, a);
+        let d = &a * 5.0;
+        assert_eq!(d[(1, 1)], 5.0);
+        let mut e = a.clone();
+        e.add_diag(2.5);
+        assert_eq!(e[(0, 0)], 3.5);
+    }
+}

@@ -1,0 +1,127 @@
+//! Dense linear algebra kit, built from scratch (no BLAS/LAPACK deps).
+//!
+//! Everything the coordinator needs for the paper's algorithms:
+//! matrix/vector arithmetic, Cholesky and LU solves (the Newton step),
+//! symmetric Jacobi eigendecomposition (the `[·]_μ` PSD projection of BL1 and
+//! the Rank-R compressor on symmetric matrices), and a general SVD (Rank-R on
+//! arbitrary matrices, subspace extraction for the data-driven basis).
+//!
+//! Dimensions in the paper's experiments are small-to-moderate
+//! (`d ≤ 500`), so `O(d³)` dense routines with good constants are the right
+//! tool; the hot ones ([`Mat::matmul`], [`sym_eigen`]) are blocked/optimized
+//! and covered by the bench harness.
+
+mod eigen;
+mod mat;
+mod solve;
+mod svd;
+
+pub use eigen::{sym_eigen, top_eigenpairs, EigenDecomposition};
+pub use mat::Mat;
+pub use solve::{cholesky_solve, lu_solve, CholeskyFactor};
+pub use svd::{svd, Svd};
+
+/// Dense column vector.
+pub type Vector = Vec<f64>;
+
+/// Euclidean dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than a naive fold and
+    // more accurate than a single running sum.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm `‖a‖₂`.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Infinity norm `max |a_i|`.
+#[inline]
+pub fn norm_inf(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, &x| m.max(x.abs()))
+}
+
+/// `y ← y + αx`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Elementwise `a - b` as a new vector.
+#[inline]
+pub fn sub(a: &[f64], b: &[f64]) -> Vector {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Elementwise `a + b` as a new vector.
+#[inline]
+pub fn add(a: &[f64], b: &[f64]) -> Vector {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// `αa` as a new vector.
+#[inline]
+pub fn scale(alpha: f64, a: &[f64]) -> Vector {
+    a.iter().map(|x| alpha * x).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..37).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-10);
+    }
+
+    #[test]
+    fn norms() {
+        let a = vec![3.0, -4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-15);
+        assert!((norm2_sq(&a) - 25.0).abs() < 1e-15);
+        assert!((norm_inf(&a) - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpy_and_elementwise() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0]);
+        assert_eq!(sub(&y, &x), vec![11.0, 22.0]);
+        assert_eq!(add(&x, &x), vec![2.0, 4.0]);
+        assert_eq!(scale(3.0, &x), vec![3.0, 6.0]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Linear solves: Cholesky (SPD — the Newton step with `[H]_μ ⪰ μI`) and
+//! partially-pivoted LU (general square fallback, used by DINGO's
+//! least-squares pieces and by tests).
+
+use super::Mat;
+use anyhow::{bail, Result};
+
+/// Cholesky factor `L` with `A = L Lᵀ` (lower triangular).
+#[derive(Clone, Debug)]
+pub struct CholeskyFactor {
+    l: Mat,
+}
+
+impl CholeskyFactor {
+    /// Factor a symmetric positive-definite matrix.
+    ///
+    /// Fails with a descriptive error if a non-positive pivot is found
+    /// (i.e. the input was not numerically PD).
+    pub fn new(a: &Mat) -> Result<Self> {
+        if !a.is_square() {
+            bail!("cholesky: matrix is {}x{}, not square", a.rows(), a.cols());
+        }
+        let n = a.rows();
+        // Flat buffer + slice dot products: the inner reduction vectorizes
+        // (EXPERIMENTS.md §Perf L3-3).
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            let ri = i * n;
+            for j in 0..=i {
+                let rj = j * n;
+                let s = a[(i, j)] - super::dot(&l[ri..ri + j], &l[rj..rj + j]);
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("cholesky: non-positive pivot {s:.3e} at index {i} (matrix not PD)");
+                    }
+                    l[ri + j] = s.sqrt();
+                } else {
+                    l[ri + j] = s / l[rj + j];
+                }
+            }
+        }
+        Ok(CholeskyFactor { l: Mat::from_vec(n, n, l) })
+    }
+
+    /// Solve `A x = b` given the factorization.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        // Backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// log-determinant of `A` (2·Σ log L_ii); handy for diagnostics.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// One-shot SPD solve `A x = b` via Cholesky.
+pub fn cholesky_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    Ok(CholeskyFactor::new(a)?.solve(b))
+}
+
+/// General square solve `A x = b` via LU with partial pivoting.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    if !a.is_square() {
+        bail!("lu_solve: matrix is {}x{}, not square", a.rows(), a.cols());
+    }
+    let n = a.rows();
+    assert_eq!(b.len(), n);
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+
+    for k in 0..n {
+        // Partial pivot.
+        let mut p = k;
+        let mut max = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > max {
+                max = v;
+                p = i;
+            }
+        }
+        if max < 1e-300 {
+            bail!("lu_solve: matrix is singular to working precision (pivot {max:.3e} at col {k})");
+        }
+        if p != k {
+            piv.swap(p, k);
+            for j in 0..n {
+                let tmp = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = tmp;
+            }
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let f = lu[(i, k)] / pivot;
+            lu[(i, k)] = f;
+            if f != 0.0 {
+                for j in (k + 1)..n {
+                    let v = lu[(k, j)];
+                    lu[(i, j)] -= f * v;
+                }
+            }
+        }
+    }
+
+    // Apply permutation to b, then forward/backward substitution.
+    let mut x: Vec<f64> = piv.iter().map(|&i| b[i]).collect();
+    for i in 1..n {
+        let mut s = x[i];
+        for k in 0..i {
+            s -= lu[(i, k)] * x[k];
+        }
+        x[i] = s;
+    }
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in (i + 1)..n {
+            s -= lu[(i, k)] * x[k];
+        }
+        x[i] = s / lu[(i, i)];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm2;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.transpose().matmul(&b);
+        a.add_diag(0.5 * n as f64);
+        a
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 20, 60] {
+            let a = random_spd(n, &mut rng);
+            let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&xstar);
+            let x = cholesky_solve(&a, &b).unwrap();
+            let err = norm2(&crate::linalg::sub(&x, &xstar));
+            assert!(err < 1e-8 * (1.0 + norm2(&xstar)), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(CholeskyFactor::new(&a).is_err());
+    }
+
+    #[test]
+    fn cholesky_rejects_nonsquare() {
+        let a = Mat::zeros(2, 3);
+        assert!(CholeskyFactor::new(&a).is_err());
+    }
+
+    #[test]
+    fn cholesky_logdet() {
+        let a = Mat::diag(&[2.0, 3.0, 4.0]);
+        let f = CholeskyFactor::new(&a).unwrap();
+        assert!((f.logdet() - 24f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_solves_general() {
+        let mut rng = Rng::new(2);
+        for n in [1, 3, 10, 40] {
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&xstar);
+            let x = lu_solve(&a, &b).unwrap();
+            let err = norm2(&crate::linalg::sub(&x, &xstar));
+            assert!(err < 1e-7 * (1.0 + norm2(&xstar)), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn lu_needs_pivoting() {
+        // Zero on the (0,0) pivot — requires row exchange.
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = lu_solve(&a, &[3.0, 5.0]).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-14);
+        assert!((x[1] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(lu_solve(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn cholesky_and_lu_agree() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(15, &mut rng);
+        let b: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let x1 = cholesky_solve(&a, &b).unwrap();
+        let x2 = lu_solve(&a, &b).unwrap();
+        for (u, v) in x1.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Singular value decomposition via one-sided Jacobi (Hestenes).
+//!
+//! Used by the Rank-R compressor on general matrices, by the data-driven
+//! basis extraction (orthonormal range of a client's data matrix, the paper's
+//! `scipy.linalg.orth` step in §6.1), and by the composed compressors `C₁/C₂`
+//! of §3 which act on singular-vector pairs.
+//!
+//! One-sided Jacobi orthogonalizes the columns of `A` by plane rotations:
+//! on convergence `A V = U Σ` with `V` orthogonal; singular values are the
+//! column norms. It is slow-ish but extremely robust and simple — ideal for
+//! `d ≤ 500`.
+
+use super::{dot, Mat};
+
+/// Thin SVD `A = U Σ Vᵀ` with `U: m×k`, `Σ: k`, `V: n×k`, `k = min(m, n)`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// Left singular vectors (columns).
+    pub u: Mat,
+    /// Singular values, descending, non-negative.
+    pub s: Vec<f64>,
+    /// Right singular vectors (columns).
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct the rank-`r` truncation `Σ_{i<r} σ_i u_i v_iᵀ`.
+    pub fn truncate(&self, r: usize) -> Mat {
+        let m = self.u.rows();
+        let n = self.v.rows();
+        let r = r.min(self.s.len());
+        let mut out = Mat::zeros(m, n);
+        for k in 0..r {
+            let sk = self.s[k];
+            if sk == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                let uik = self.u[(i, k)] * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += uik * self.v[(j, k)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Numerical rank at tolerance `tol · σ_max`.
+    pub fn rank(&self, rel_tol: f64) -> usize {
+        let smax = self.s.first().copied().unwrap_or(0.0);
+        if smax == 0.0 {
+            return 0;
+        }
+        self.s.iter().filter(|&&s| s > rel_tol * smax).count()
+    }
+}
+
+/// One-sided Jacobi SVD.
+///
+/// Works on the matrix with `m ≥ n` internally (transposing if needed) so the
+/// rotation loop is over the smaller dimension.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows() < a.cols() {
+        // svd(Aᵀ) = (V, Σ, U)
+        let t = svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let m = a.rows();
+    let n = a.cols();
+    // Work on column-major copies of A's columns for cache-friendly rotation.
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut v = Mat::eye(n);
+
+    const MAX_SWEEPS: usize = 60;
+    let eps = 1e-15;
+    for _ in 0..MAX_SWEEPS {
+        let mut converged = true;
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                // 2×2 Gram block of columns p, q.
+                let (alpha, beta, gamma);
+                {
+                    let (cp, cq) = (&cols[p], &cols[q]);
+                    alpha = dot(cp, cp);
+                    beta = dot(cq, cq);
+                    gamma = dot(cp, cq);
+                }
+                if gamma.abs() <= eps * (alpha * beta).sqrt() + 1e-300 {
+                    continue;
+                }
+                converged = false;
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Rotate the column pair.
+                let (left, right) = cols.split_at_mut(q);
+                let cp = &mut left[p];
+                let cq = &mut right[0];
+                for i in 0..m {
+                    let xp = cp[i];
+                    let xq = cq[i];
+                    cp[i] = c * xp - s * xq;
+                    cq[i] = s * xp + c * xq;
+                }
+                // Accumulate V.
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if converged {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut triples: Vec<(f64, usize)> = cols
+        .iter()
+        .enumerate()
+        .map(|(j, cj)| (dot(cj, cj).sqrt(), j))
+        .collect();
+    triples.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let k = n;
+    let mut u = Mat::zeros(m, k);
+    let mut s = Vec::with_capacity(k);
+    let mut vperm = Mat::zeros(n, k);
+    for (new_j, &(sig, old_j)) in triples.iter().enumerate() {
+        s.push(sig);
+        if sig > 1e-300 {
+            for i in 0..m {
+                u[(i, new_j)] = cols[old_j][i] / sig;
+            }
+        }
+        for i in 0..n {
+            vperm[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    Svd { u, s, v: vperm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let d = svd(a);
+        // Reconstruction.
+        let rec = d.truncate(d.s.len());
+        let err = (&rec - a).fro_norm() / (1.0 + a.fro_norm());
+        assert!(err < tol, "reconstruction err={err}");
+        // Orthonormal columns of U and V (up to numerical rank).
+        let k = d.rank(1e-12);
+        for p in 0..k {
+            for q in 0..k {
+                let up = d.u.col(p);
+                let uq = d.u.col(q);
+                let expect = if p == q { 1.0 } else { 0.0 };
+                assert!((crate::linalg::dot(&up, &uq) - expect).abs() < 1e-8, "UᵀU");
+            }
+        }
+        let vtv = d.v.transpose().matmul(&d.v);
+        let id_err = (&vtv - &Mat::eye(d.v.cols())).fro_norm();
+        assert!(id_err < 1e-8, "VᵀV err={id_err}");
+        // Descending non-negative.
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn square_random() {
+        let mut rng = Rng::new(8);
+        for n in [1, 2, 3, 10, 30] {
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            check_svd(&a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn tall_and_wide() {
+        let mut rng = Rng::new(9);
+        let tall = Mat::from_fn(20, 5, |_, _| rng.normal());
+        check_svd(&tall, 1e-9);
+        let wide = Mat::from_fn(4, 17, |_, _| rng.normal());
+        check_svd(&wide, 1e-9);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) — singular values are |entries| sorted.
+        let a = Mat::diag(&[-3.0, 1.0, 2.0]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-10);
+        assert!((d.s[1] - 2.0).abs() < 1e-10);
+        assert!((d.s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // Rank-1 matrix.
+        let a = Mat::outer(&[1.0, 2.0, 3.0], &[4.0, 5.0]);
+        let d = svd(&a);
+        assert_eq!(d.rank(1e-10), 1);
+        let err = (&d.truncate(1) - &a).fro_norm();
+        assert!(err < 1e-10);
+    }
+
+    #[test]
+    fn truncation_error_is_tail_norm() {
+        let mut rng = Rng::new(10);
+        let a = Mat::from_fn(12, 9, |_, _| rng.normal());
+        let d = svd(&a);
+        for r in [1, 3, 6, 9] {
+            let tail: f64 = d.s.iter().skip(r).map(|s| s * s).sum();
+            let err = (&d.truncate(r) - &a).fro_norm();
+            assert!((err - tail.sqrt()).abs() < 1e-8, "r={r}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(5, 3);
+        let d = svd(&a);
+        assert!(d.s.iter().all(|&s| s == 0.0));
+        assert_eq!(d.rank(1e-12), 0);
+    }
+
+    #[test]
+    fn symmetric_matches_eigen_magnitudes() {
+        let mut rng = Rng::new(11);
+        let mut a = Mat::from_fn(10, 10, |_, _| rng.normal());
+        a.symmetrize();
+        let d = svd(&a);
+        let e = crate::linalg::sym_eigen(&a);
+        let mut abs_l: Vec<f64> = e.values.iter().map(|l| l.abs()).collect();
+        abs_l.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        for (s, l) in d.s.iter().zip(&abs_l) {
+            assert!((s - l).abs() < 1e-8, "σ={s} |λ|={l}");
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! `repro` — the launcher for the Basis-Learn reproduction.
+//!
+//! ```text
+//! repro experiment <id> [--full-scale] [--seed N]      regenerate a paper table/figure
+//! repro run [options]                                  one federated run
+//! repro data <name> [--full-scale]                     inspect a registry dataset
+//! repro list                                           algorithms / experiments / datasets
+//! ```
+//!
+//! `repro run` options:
+//! ```text
+//! --algo <name>            bl1|bl2|bl3|fednl|fednl-pp|fednl-bc|nl1|dingo|newton|
+//!                          gd|diana|adiana|s-local-gd|artemis|dore       [bl1]
+//! --dataset <name>         registry name (a1a, w2a, ...) or synth         [a1a]
+//! --rounds N               communication rounds                           [500]
+//! --lambda X               ridge λ                                        [1e-3]
+//! --hess-comp SPEC         matrix compressor (topk:K, rank:R, rrank:R...) [topk:r]
+//! --model-comp SPEC        model compressor Q                             [identity]
+//! --grad-comp SPEC         gradient compressor (first-order methods)      [identity]
+//! --basis KIND             standard|symtri|subspace|psd                   [per-algo]
+//! --p X                    gradient-send probability ξ                    [1.0]
+//! --tau N                  expected participants per round                [all]
+//! --eta X --alpha X        stepsizes (defaults: compressor-class rules)
+//! --target-gap X           stop at f(x)−f* ≤ X                            [1e-12]
+//! --seed N                 RNG seed                                       [1]
+//! --pjrt                   evaluate loss/grad/Hessian via PJRT artifacts
+//! --artifacts DIR          artifact directory for --pjrt                  [artifacts]
+//! --csv PATH               write the run history CSV
+//! ```
+
+use anyhow::{bail, Context, Result};
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, BasisKind, RunConfig};
+use basis_learn::coordinator::{run_federated, run_federated_with};
+use basis_learn::data::{registry, FederatedDataset, SyntheticSpec};
+use basis_learn::experiments::{run_experiment, EXPERIMENTS};
+use basis_learn::problem::LocalProblem;
+use basis_learn::runtime::{PjrtProblem, Runtime};
+use std::rc::Rc;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny argv parser: positionals + `--flag [value]` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => Some(it.next().unwrap().clone()),
+                    _ => None,
+                };
+                flags.push((name.to_string(), value));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+}
+
+fn real_main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.positional.first().map(String::as_str) {
+        Some("experiment") | Some("exp") => cmd_experiment(&args),
+        Some("run") => cmd_run(&args),
+        Some("data") => cmd_data(&args),
+        Some("list") => cmd_list(),
+        Some(other) => bail!("unknown command '{other}' (experiment|run|data|list)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("repro — Basis Matters (Qian et al., 2021) reproduction");
+    println!("usage: repro <experiment|run|data|list> [options]   (see README.md)");
+}
+
+fn cmd_list() -> Result<()> {
+    println!("algorithms:");
+    for a in Algorithm::all() {
+        println!("  {a}");
+    }
+    println!("experiments:");
+    for e in EXPERIMENTS {
+        println!("  {e}");
+    }
+    println!("datasets (Table 2 registry):");
+    for d in registry() {
+        println!(
+            "  {:<10} scaled: n={:<4} m={:<5} d={:<4} r={:<4} | paper: n={:<4} d={:<4} r={}",
+            d.name, d.workers, d.m_per_client, d.features, d.r, d.paper_workers,
+            d.paper_features, d.paper_r
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .context("usage: repro experiment <id> (see `repro list`)")?;
+    let seed: u64 = args.parsed("seed")?.unwrap_or(1);
+    run_experiment(id, args.has("full-scale"), seed)
+}
+
+fn load_dataset(args: &Args) -> Result<FederatedDataset> {
+    let name = args.flag("dataset").unwrap_or("a1a");
+    let seed: u64 = args.parsed("seed")?.unwrap_or(1);
+    if name == "synth" {
+        let spec = SyntheticSpec {
+            n_clients: args.parsed("clients")?.unwrap_or(8),
+            m_per_client: args.parsed("points")?.unwrap_or(50),
+            dim: args.parsed("dim")?.unwrap_or(40),
+            intrinsic_dim: args.parsed("intrinsic")?.unwrap_or(10),
+            noise: args.parsed("noise")?.unwrap_or(0.0),
+            seed,
+        };
+        return Ok(FederatedDataset::synthetic(&spec));
+    }
+    if let Some(path) = name.strip_prefix("file:") {
+        let n = args.parsed("clients")?.unwrap_or(8);
+        return FederatedDataset::from_libsvm_file(std::path::Path::new(path), n, None);
+    }
+    let entry = registry()
+        .into_iter()
+        .find(|e| e.name.eq_ignore_ascii_case(name))
+        .with_context(|| format!("unknown dataset '{name}' (see `repro list`)"))?;
+    Ok(entry.build(seed, args.has("full-scale")))
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let fed = load_dataset(args)?;
+    println!(
+        "{}: n={} clients, {} points total, d={}, avg intrinsic r={:.1}",
+        fed.name,
+        fed.n_clients(),
+        fed.total_points(),
+        fed.dim(),
+        fed.avg_intrinsic_dim(1e-9)
+    );
+    for (i, c) in fed.clients.iter().enumerate().take(8) {
+        println!("  client {i}: m={} r={}", c.m(), c.intrinsic_dim(1e-9));
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let fed = load_dataset(args)?;
+    let r = fed.avg_intrinsic_dim(1e-9).round() as usize;
+
+    let mut cfg = RunConfig::default();
+    cfg.algorithm = args.parsed::<Algorithm>("algo")?.unwrap_or(Algorithm::Bl1);
+    cfg.rounds = args.parsed("rounds")?.unwrap_or(500);
+    cfg.lambda = args.parsed("lambda")?.unwrap_or(1e-3);
+    cfg.hess_comp = args
+        .parsed::<CompressorSpec>("hess-comp")?
+        .unwrap_or(CompressorSpec::TopK(r.max(1)));
+    if let Some(c) = args.parsed::<CompressorSpec>("model-comp")? {
+        cfg.model_comp = c;
+    }
+    if let Some(c) = args.parsed::<CompressorSpec>("grad-comp")? {
+        cfg.grad_comp = c;
+    }
+    cfg.basis = args.parsed::<BasisKind>("basis")?;
+    cfg.p = args.parsed("p")?.unwrap_or(1.0);
+    cfg.tau = args.parsed("tau")?;
+    cfg.eta = args.parsed("eta")?;
+    cfg.alpha = args.parsed("alpha")?;
+    cfg.gamma = args.parsed("gamma")?;
+    cfg.target_gap = args.parsed("target-gap")?.unwrap_or(1e-12);
+    cfg.seed = args.parsed("seed")?.unwrap_or(1);
+
+    let out = if args.has("pjrt") {
+        let dir = args.flag("artifacts").unwrap_or("artifacts");
+        let rt = Rc::new(Runtime::load(std::path::Path::new(dir))?);
+        println!("PJRT runtime up: platform={}", rt.platform());
+        let locals: Vec<Box<dyn LocalProblem>> = fed
+            .clients
+            .iter()
+            .map(|c| {
+                PjrtProblem::new(rt.clone(), c.a.clone(), c.b.clone())
+                    .map(|p| Box::new(p) as Box<dyn LocalProblem>)
+            })
+            .collect::<Result<_>>()?;
+        let features = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+        run_federated_with(&locals, features, &cfg)?
+    } else {
+        run_federated(&fed, &cfg)?
+    };
+
+    println!(
+        "{} on {} — {} rounds, final gap {:.3e}, {:.3e} bits/node (up+down)",
+        out.history.label,
+        fed.name,
+        out.history.records.len(),
+        out.final_gap(),
+        out.bits_per_node()
+    );
+    println!("{}", out.history.summary_table(16));
+    if let Some(path) = args.flag("csv") {
+        std::fs::write(path, out.history.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! Run metrics: per-round records of communication and convergence, the
+//! quantities every figure in the paper plots (`f(x^k) − f(x*)` vs bits per
+//! node), plus CSV serialization for the experiment harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One communication round's measurements.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Cumulative uplink bits per node (client → server), averaged over nodes.
+    pub bits_up_per_node: f64,
+    /// Cumulative downlink bits per node (server → client).
+    pub bits_down_per_node: f64,
+    /// Optimality gap `f(x^k) − f(x*)`.
+    pub gap: f64,
+    /// `‖∇f(x^k)‖`.
+    pub grad_norm: f64,
+    /// `‖x^k − x*‖`.
+    pub dist_to_opt: f64,
+}
+
+impl RoundRecord {
+    /// Total bits per node (up + down), the paper's x-axis.
+    pub fn bits_per_node(&self) -> f64 {
+        self.bits_up_per_node + self.bits_down_per_node
+    }
+}
+
+/// Full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<RoundRecord>,
+    /// Label used for CSV column headers / plot legends.
+    pub label: String,
+    /// One-time setup communication (floats → bits), e.g. the basis transfer
+    /// of Table 1's "initial communication cost".
+    pub setup_bits_per_node: f64,
+}
+
+impl History {
+    pub fn new(label: impl Into<String>) -> Self {
+        History { records: Vec::new(), label: label.into(), setup_bits_per_node: 0.0 }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_gap(&self) -> f64 {
+        self.records.last().map(|r| r.gap).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn final_bits_per_node(&self) -> f64 {
+        self.records.last().map(|r| r.bits_per_node()).unwrap_or(0.0) + self.setup_bits_per_node
+    }
+
+    /// Bits per node needed to first reach a gap ≤ `target`
+    /// (`None` if never reached). The headline comparison metric.
+    pub fn bits_to_reach(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.gap <= target)
+            .map(|r| r.bits_per_node() + self.setup_bits_per_node)
+    }
+
+    /// CSV text: `round,bits_up,bits_down,bits_total,gap,grad_norm,dist`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,bits_up_per_node,bits_down_per_node,bits_per_node,gap,grad_norm,dist_to_opt\n");
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.1},{:.1},{:.1},{:.6e},{:.6e},{:.6e}",
+                r.round,
+                r.bits_up_per_node,
+                r.bits_down_per_node,
+                r.bits_per_node() + self.setup_bits_per_node,
+                r.gap,
+                r.grad_norm,
+                r.dist_to_opt
+            );
+        }
+        s
+    }
+
+    /// Write the CSV next to other runs of an experiment.
+    pub fn write_csv(&self, dir: &Path, experiment: &str) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let safe: String = self
+            .label
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("{experiment}__{safe}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// Down-sampled pretty table for terminal output (≤ `max_rows` rows).
+    pub fn summary_table(&self, max_rows: usize) -> String {
+        let mut s = format!(
+            "{:<8} {:>16} {:>14} {:>12}\n",
+            "round", "bits/node", "gap", "‖∇f‖"
+        );
+        let n = self.records.len();
+        let stride = (n / max_rows.max(1)).max(1);
+        for (i, r) in self.records.iter().enumerate() {
+            if i % stride == 0 || i + 1 == n {
+                let _ = writeln!(
+                    s,
+                    "{:<8} {:>16.0} {:>14.3e} {:>12.3e}",
+                    r.round,
+                    r.bits_per_node() + self.setup_bits_per_node,
+                    r.gap,
+                    r.grad_norm
+                );
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, bits: f64, gap: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            bits_up_per_node: bits,
+            bits_down_per_node: bits / 2.0,
+            gap,
+            grad_norm: gap.sqrt(),
+            dist_to_opt: gap.sqrt(),
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let r = rec(0, 100.0, 1.0);
+        assert_eq!(r.bits_per_node(), 150.0);
+    }
+
+    #[test]
+    fn bits_to_reach_with_setup() {
+        let mut h = History::new("test");
+        h.setup_bits_per_node = 10.0;
+        h.push(rec(0, 100.0, 1.0));
+        h.push(rec(1, 200.0, 1e-3));
+        h.push(rec(2, 300.0, 1e-9));
+        assert_eq!(h.bits_to_reach(1e-2), Some(310.0));
+        assert_eq!(h.bits_to_reach(1e-12), None);
+        assert_eq!(h.final_gap(), 1e-9);
+        assert_eq!(h.final_bits_per_node(), 460.0);
+    }
+
+    #[test]
+    fn empty_history() {
+        let h = History::new("empty");
+        assert!(h.final_gap().is_infinite());
+        assert_eq!(h.final_bits_per_node(), 0.0);
+        assert_eq!(h.bits_to_reach(1.0), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut h = History::new("csv");
+        h.push(rec(0, 64.0, 0.5));
+        let csv = h.to_csv();
+        let mut lines = csv.lines();
+        assert!(lines.next().unwrap().starts_with("round,"));
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("0,64.0,32.0,96.0,"), "{row}");
+    }
+
+    #[test]
+    fn csv_write_sanitizes_label() {
+        let dir = std::env::temp_dir().join("bl_metrics_test");
+        let mut h = History::new("weird/label:1");
+        h.push(rec(0, 1.0, 1.0));
+        let path = h.write_csv(&dir, "exp").unwrap();
+        assert!(path.to_string_lossy().contains("weird_label_1"));
+        assert!(path.exists());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn summary_table_downsamples() {
+        let mut h = History::new("big");
+        for i in 0..1000 {
+            h.push(rec(i, i as f64, 1.0 / (i + 1) as f64));
+        }
+        let table = h.summary_table(10);
+        let rows = table.lines().count();
+        assert!(rows <= 13, "rows={rows}");
+        assert!(table.contains("999"));
+    }
+}

@@ -1,0 +1,251 @@
+//! Native logistic-regression local objective (the paper's experimental
+//! problem, eq. 16 data term):
+//!
+//! `f_i(x) = (1/m) Σ_j log(1 + exp(−b_{ij} a_{ij}ᵀ x))`
+//!
+//! with gradient `(1/m) Aᵀ u`, `u_j = −b_j σ(−b_j z_j)`, and Hessian
+//! `(1/m) Aᵀ diag(σ(z_j)σ(−z_j)) A` (`z = A x`). This Rust implementation is
+//! the correctness oracle for the PJRT-backed path and the engine for the
+//! CPU baselines; the hot Hessian assembly shares [`Mat::gram_scaled`] with
+//! the benchmarks.
+
+use super::LocalProblem;
+use crate::linalg::{Mat, Vector};
+
+/// Numerically-stable `log(1 + e^t)`.
+#[inline]
+pub fn log1p_exp(t: f64) -> f64 {
+    if t > 0.0 {
+        t + (-t).exp().ln_1p()
+    } else {
+        t.exp().ln_1p()
+    }
+}
+
+/// Numerically-stable sigmoid `σ(t) = 1/(1+e^{−t})`.
+#[inline]
+pub fn sigmoid(t: f64) -> f64 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// One client's logistic-regression objective.
+#[derive(Clone, Debug)]
+pub struct LogisticProblem {
+    a: Mat,
+    b: Vec<f64>,
+}
+
+impl LogisticProblem {
+    pub fn new(a: Mat, b: Vec<f64>) -> Self {
+        assert_eq!(a.rows(), b.len(), "feature/label count mismatch");
+        assert!(b.iter().all(|&x| x == 1.0 || x == -1.0), "labels must be ±1");
+        LogisticProblem { a, b }
+    }
+
+    /// Borrow the feature matrix (used by basis extraction).
+    pub fn features(&self) -> &Mat {
+        &self.a
+    }
+
+    /// Borrow the labels.
+    pub fn labels(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// Margins `z = A x`.
+    fn margins(&self, x: &[f64]) -> Vector {
+        self.a.matvec(x)
+    }
+
+    /// The Hessian's diagonal weights `σ(z)σ(−z) / m` at margins `z`
+    /// (label-independent: `φ″(t) = σ(t)σ(−t)`).
+    pub fn hess_weights(&self, x: &[f64]) -> Vector {
+        let m = self.a.rows() as f64;
+        self.margins(x)
+            .into_iter()
+            .map(|z| sigmoid(z) * sigmoid(-z) / m)
+            .collect()
+    }
+}
+
+impl LocalProblem for LogisticProblem {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn n_points(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn loss(&self, x: &[f64]) -> f64 {
+        let z = self.margins(x);
+        let m = self.a.rows() as f64;
+        z.iter()
+            .zip(&self.b)
+            .map(|(&zi, &bi)| log1p_exp(-bi * zi))
+            .sum::<f64>()
+            / m
+    }
+
+    fn grad(&self, x: &[f64]) -> Vector {
+        let z = self.margins(x);
+        let m = self.a.rows() as f64;
+        let u: Vector = z
+            .iter()
+            .zip(&self.b)
+            .map(|(&zi, &bi)| -bi * sigmoid(-bi * zi) / m)
+            .collect();
+        self.a.matvec_t(&u)
+    }
+
+    fn hess(&self, x: &[f64]) -> Mat {
+        let w = self.hess_weights(x);
+        self.a.gram_scaled(&w)
+    }
+
+    fn hess_vec(&self, x: &[f64], v: &[f64]) -> Vector {
+        // O(md): Aᵀ (w ⊙ (A v)) without materializing the Hessian.
+        let w = self.hess_weights(x);
+        let av = self.a.matvec(v);
+        let wav: Vector = w.iter().zip(&av).map(|(wi, ai)| wi * ai).collect();
+        self.a.matvec_t(&wav)
+    }
+
+    fn loss_grad(&self, x: &[f64]) -> (f64, Vector) {
+        let z = self.margins(x);
+        let m = self.a.rows() as f64;
+        let mut loss = 0.0;
+        let mut u = vec![0.0; z.len()];
+        for (j, (&zj, &bj)) in z.iter().zip(&self.b).enumerate() {
+            loss += log1p_exp(-bj * zj);
+            u[j] = -bj * sigmoid(-bj * zj) / m;
+        }
+        (loss / m, self.a.matvec_t(&u))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::finite_diff_grad;
+    use crate::rng::Rng;
+
+    fn random_problem(m: usize, d: usize, seed: u64) -> LogisticProblem {
+        let mut rng = Rng::new(seed);
+        let a = Mat::from_fn(m, d, |_, _| rng.normal() / (d as f64).sqrt());
+        let b: Vec<f64> = (0..m).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        LogisticProblem::new(a, b)
+    }
+
+    #[test]
+    fn stable_helpers() {
+        assert!((log1p_exp(0.0) - 2f64.ln()).abs() < 1e-15);
+        assert!((log1p_exp(800.0) - 800.0).abs() < 1e-9); // no overflow
+        assert!(log1p_exp(-800.0).abs() < 1e-300);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!((sigmoid(800.0) - 1.0).abs() < 1e-15);
+        assert!(sigmoid(-800.0) >= 0.0);
+        assert!((sigmoid(3.0) + sigmoid(-3.0) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn loss_at_zero_is_log2() {
+        let p = random_problem(30, 5, 1);
+        assert!((p.loss(&vec![0.0; 5]) - 2f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_diff() {
+        let p = random_problem(25, 6, 2);
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let g = p.grad(&x);
+        let fd = finite_diff_grad(&|y| p.loss(y), &x, 1e-6);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn hessian_matches_finite_diff_of_grad() {
+        let p = random_problem(20, 5, 4);
+        let x = vec![0.2, -0.1, 0.3, 0.0, -0.4];
+        let h = p.hess(&x);
+        assert!(h.is_symmetric(1e-12));
+        let eps = 1e-6;
+        for j in 0..5 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let gp = p.grad(&xp);
+            xp[j] -= 2.0 * eps;
+            let gm = p.grad(&xp);
+            for i in 0..5 {
+                let fd = (gp[i] - gm[i]) / (2.0 * eps);
+                assert!((h[(i, j)] - fd).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_is_psd() {
+        let p = random_problem(40, 7, 5);
+        let x = vec![0.1; 7];
+        let e = crate::linalg::sym_eigen(&p.hess(&x));
+        assert!(e.values.iter().all(|&l| l >= -1e-12));
+    }
+
+    #[test]
+    fn hess_vec_matches_dense() {
+        let p = random_problem(15, 6, 6);
+        let mut rng = Rng::new(7);
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let hv1 = p.hess_vec(&x, &v);
+        let hv2 = p.hess(&x).matvec(&v);
+        for (a, b) in hv1.iter().zip(&hv2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn loss_grad_fused_matches_separate() {
+        let p = random_problem(18, 4, 8);
+        let x = vec![0.3, -0.2, 0.5, 0.1];
+        let (l, g) = p.loss_grad(&x);
+        assert!((l - p.loss(&x)).abs() < 1e-14);
+        for (a, b) in g.iter().zip(&p.grad(&x)) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn hessian_in_data_span() {
+        // The data Hessian must lie in span{a_j a_jᵀ} — the §2.3 basis test.
+        let mut rng = Rng::new(9);
+        let d = 10;
+        let v = crate::basis::subspace::orthonormal_cols(d, 3, &mut rng);
+        let mut a = Mat::zeros(12, d);
+        for i in 0..12 {
+            let c: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            a.row_mut(i).copy_from_slice(&v.matvec(&c));
+        }
+        let b: Vec<f64> = (0..12).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let p = LogisticProblem::new(a, b);
+        let h = p.hess(&vec![0.05; d]);
+        let basis = crate::basis::SubspaceBasis::new(v);
+        use crate::basis::HessianBasis;
+        let rec = basis.decode(&basis.encode(&h));
+        assert!((&rec - &h).fro_norm() < 1e-10 * (1.0 + h.fro_norm()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_labels() {
+        LogisticProblem::new(Mat::zeros(2, 2), vec![1.0, 0.5]);
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text,
+//! emitted once at build time by `python/compile/aot.py`) and serves local
+//! loss/gradient/Hessian evaluations on the coordinator's hot path.
+//!
+//! Python never runs here — the interchange is HLO *text* (see
+//! DESIGN.md and `python/compile/aot.py`: serialized `HloModuleProto`s from
+//! jax ≥ 0.5 carry 64-bit instruction ids that this XLA build rejects; the
+//! text parser reassigns ids and round-trips cleanly).
+//!
+//! Artifact contract (produced by `make artifacts`):
+//! * `artifacts/manifest.txt` — lines `entry m d filename`, `#` comments;
+//! * `logreg_lossgrad_{m}x{d}.hlo.txt` — `(A[m,d], b[m], x[d]) → (loss, ∇f)`
+//!   (fused single data pass, f64);
+//! * `logreg_hess_{m}x{d}.hlo.txt` — `(A[m,d], x[d]) → (∇²f,)` whose inner
+//!   scaled-Gram product is the L1 Pallas kernel.
+
+mod pjrt_problem;
+
+pub use pjrt_problem::PjrtProblem;
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed manifest row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub entry: String,
+    pub m: usize,
+    pub d: usize,
+    pub file: String,
+}
+
+/// Parse `manifest.txt` content.
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("manifest line {}: expected 'entry m d file', got '{line}'", lineno + 1);
+        }
+        out.push(ManifestEntry {
+            entry: parts[0].to_string(),
+            m: parts[1].parse().with_context(|| format!("manifest line {}: bad m", lineno + 1))?,
+            d: parts[2].parse().with_context(|| format!("manifest line {}: bad d", lineno + 1))?,
+            file: parts[3].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// The PJRT executor: one CPU client, one compiled executable per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `dir/manifest.txt` and compile it on
+    /// the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for e in &entries {
+            let path = dir.join(&e.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", e.file))?;
+            exes.insert((e.entry.clone(), e.m, e.d), exe);
+        }
+        Ok(Runtime { client, exes, dir: dir.to_path_buf() })
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Which `(m, d)` shapes are available for an entry point.
+    pub fn shapes(&self, entry: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .exes
+            .keys()
+            .filter(|(e, _, _)| e == entry)
+            .map(|&(_, m, d)| (m, d))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Does an executable exist for this entry/shape?
+    pub fn has(&self, entry: &str, m: usize, d: usize) -> bool {
+        self.exes.contains_key(&(entry.to_string(), m, d))
+    }
+
+    /// Execute an entry point. `inputs` are f64 literals; the result tuple
+    /// is decomposed into its elements.
+    pub fn execute(
+        &self,
+        entry: &str,
+        m: usize,
+        d: usize,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(&(entry.to_string(), m, d))
+            .with_context(|| {
+                format!(
+                    "no artifact for entry '{entry}' at shape ({m}, {d}); available: {:?}",
+                    self.shapes(entry)
+                )
+            })?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // Multi-output entries lower to a tuple ROOT; single-output entries
+        // (e.g. the Hessian) lower to a bare array.
+        if result.shape()?.is_tuple() {
+            Ok(result.to_tuple()?)
+        } else {
+            Ok(vec![result])
+        }
+    }
+}
+
+/// Build an f64 literal from a flat slice with a shape.
+pub fn literal_f64(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        Ok(lit.reshape(dims)?)
+    }
+}
+
+/// Read an f64 literal back into a Vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "# artifacts\nlogreg_lossgrad 30 10 logreg_lossgrad_30x10.hlo.txt\nlogreg_hess 30 10 h.hlo.txt\n\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].entry, "logreg_lossgrad");
+        assert_eq!(m[0].m, 30);
+        assert_eq!(m[0].d, 10);
+        assert_eq!(m[1].file, "h.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("just three fields\n").is_err());
+        assert!(parse_manifest("e x 10 f.txt\n").is_err());
+    }
+
+    #[test]
+    fn runtime_load_missing_dir_errors_helpfully() {
+        let err = match Runtime::load(Path::new("/nonexistent/artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("load of a nonexistent dir must fail"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,100 @@
+//! [`PjrtProblem`] — a [`LocalProblem`] whose loss/gradient/Hessian are
+//! evaluated by the AOT-compiled JAX/Pallas artifacts through PJRT.
+//!
+//! This is the production three-layer path: the L3 coordinator calls into
+//! this type on its hot loop; the computation was authored in JAX (L2)
+//! calling Pallas kernels (L1) and lowered once at build time. The feature
+//! matrix and labels are uploaded as literals once per client and reused
+//! across every round.
+
+use super::{literal_f64, literal_to_vec, Runtime};
+use crate::linalg::{Mat, Vector};
+use crate::problem::LocalProblem;
+use std::rc::Rc;
+
+/// PJRT-backed logistic-regression local objective.
+pub struct PjrtProblem {
+    rt: Rc<Runtime>,
+    /// Pre-built input literals for the data (uploaded once).
+    a_lit: xla::Literal,
+    b_lit: xla::Literal,
+    /// Kept for basis extraction and fallbacks.
+    a: Mat,
+    m: usize,
+    d: usize,
+}
+
+impl PjrtProblem {
+    /// Wrap one client's shard. Fails if no artifact matches the shard's
+    /// `(m, d)` shape.
+    pub fn new(rt: Rc<Runtime>, a: Mat, b: Vec<f64>) -> anyhow::Result<Self> {
+        let (m, d) = (a.rows(), a.cols());
+        anyhow::ensure!(b.len() == m, "label count mismatch");
+        anyhow::ensure!(
+            rt.has("logreg_lossgrad", m, d) && rt.has("logreg_hess", m, d),
+            "no artifacts for shape ({m}, {d}); available lossgrad shapes: {:?} — \
+             add the shape to python/compile/aot.py SHAPES and re-run `make artifacts`",
+            rt.shapes("logreg_lossgrad")
+        );
+        let a_lit = literal_f64(a.data(), &[m as i64, d as i64])?;
+        let b_lit = literal_f64(&b, &[m as i64])?;
+        Ok(PjrtProblem { rt, a_lit, b_lit, a, m, d })
+    }
+
+    /// The raw feature matrix (for subspace-basis extraction).
+    pub fn features(&self) -> &Mat {
+        &self.a
+    }
+
+    fn x_lit(&self, x: &[f64]) -> xla::Literal {
+        literal_f64(x, &[self.d as i64]).expect("1-D literal cannot fail")
+    }
+}
+
+impl LocalProblem for PjrtProblem {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_points(&self) -> usize {
+        self.m
+    }
+
+    fn loss(&self, x: &[f64]) -> f64 {
+        self.loss_grad(x).0
+    }
+
+    fn grad(&self, x: &[f64]) -> Vector {
+        self.loss_grad(x).1
+    }
+
+    fn loss_grad(&self, x: &[f64]) -> (f64, Vector) {
+        let out = self
+            .rt
+            .execute(
+                "logreg_lossgrad",
+                self.m,
+                self.d,
+                &[self.a_lit.clone(), self.b_lit.clone(), self.x_lit(x)],
+            )
+            .expect("PJRT lossgrad execution failed");
+        let loss = literal_to_vec(&out[0]).expect("loss readback")[0];
+        let grad = literal_to_vec(&out[1]).expect("grad readback");
+        (loss, grad)
+    }
+
+    fn hess(&self, x: &[f64]) -> Mat {
+        let out = self
+            .rt
+            .execute("logreg_hess", self.m, self.d, &[self.a_lit.clone(), self.x_lit(x)])
+            .expect("PJRT hess execution failed");
+        let data = literal_to_vec(&out[0]).expect("hess readback");
+        let mut h = Mat::from_vec(self.d, self.d, data);
+        // Enforce exact symmetry (XLA accumulation order can differ by ulps).
+        h.symmetrize();
+        h
+    }
+}
+
+// PJRT execution tests live in `rust/tests/pjrt_integration.rs` (they need
+// `make artifacts` to have run; the Makefile orders them correctly).

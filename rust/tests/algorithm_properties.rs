@@ -1,0 +1,383 @@
+//! Cross-cutting algorithm invariants, proptest-style: randomized
+//! configuration sweeps (our own generator — the crates registry in this
+//! environment has no `proptest`) plus edge-case and failure-injection
+//! coverage for the whole coordinator stack.
+
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, BasisKind, Bl3Option, RunConfig};
+use basis_learn::coordinator::run_federated;
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::rng::Rng;
+
+fn fed(n: usize, m: usize, d: usize, r: usize, seed: u64) -> FederatedDataset {
+    FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: n,
+        m_per_client: m,
+        dim: d,
+        intrinsic_dim: r,
+        noise: 0.0,
+        seed,
+    })
+}
+
+fn default_fed() -> FederatedDataset {
+    fed(5, 30, 12, 5, 1234)
+}
+
+#[test]
+fn every_second_order_method_converges() {
+    let f = default_fed();
+    for (algo, comp, rounds) in [
+        (Algorithm::Newton, CompressorSpec::Identity, 30),
+        (Algorithm::Bl1, CompressorSpec::TopK(5), 400),
+        (Algorithm::Bl2, CompressorSpec::TopK(5), 600),
+        (Algorithm::Bl3, CompressorSpec::TopK(12), 1200),
+        (Algorithm::FedNl, CompressorSpec::RankR(1), 400),
+        (Algorithm::FedNlPp, CompressorSpec::RankR(1), 600),
+        (Algorithm::FedNlBc, CompressorSpec::TopK(72), 600),
+        (Algorithm::Nl1, CompressorSpec::RandK(1), 2500),
+        (Algorithm::Dingo, CompressorSpec::Identity, 80),
+    ] {
+        let cfg = RunConfig {
+            algorithm: algo,
+            hess_comp: comp,
+            rounds,
+            lambda: 1e-3,
+            target_gap: 1e-10,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&f, &cfg).unwrap_or_else(|e| panic!("{algo} failed: {e:#}"));
+        assert!(
+            out.final_gap() <= 1e-10,
+            "{algo}: gap {} after {} rounds",
+            out.final_gap(),
+            out.history.records.len()
+        );
+    }
+}
+
+#[test]
+fn every_first_order_method_converges() {
+    let f = default_fed();
+    for (algo, grad, model) in [
+        (Algorithm::Gd, CompressorSpec::Identity, CompressorSpec::Identity),
+        (Algorithm::Diana, CompressorSpec::Dithering(None), CompressorSpec::Identity),
+        (Algorithm::Adiana, CompressorSpec::Dithering(None), CompressorSpec::Identity),
+        (Algorithm::SLocalGd, CompressorSpec::Identity, CompressorSpec::Identity),
+        (Algorithm::Artemis, CompressorSpec::Dithering(None), CompressorSpec::Identity),
+        (Algorithm::Dore, CompressorSpec::Dithering(None), CompressorSpec::Dithering(None)),
+    ] {
+        let cfg = RunConfig {
+            algorithm: algo,
+            grad_comp: grad,
+            model_comp: model,
+            rounds: 300_000,
+            lambda: 1e-2,
+            target_gap: 1e-6,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&f, &cfg).unwrap_or_else(|e| panic!("{algo} failed: {e:#}"));
+        assert!(out.final_gap() <= 1e-6, "{algo}: gap {}", out.final_gap());
+    }
+}
+
+#[test]
+fn determinism_across_all_algorithms() {
+    let f = default_fed();
+    for algo in Algorithm::all() {
+        let cfg = RunConfig {
+            algorithm: *algo,
+            hess_comp: CompressorSpec::TopK(8),
+            grad_comp: CompressorSpec::Dithering(Some(4)),
+            rounds: 12,
+            lambda: 1e-3,
+            target_gap: 0.0,
+            seed: 777,
+            ..RunConfig::default()
+        };
+        let a = run_federated(&f, &cfg).unwrap();
+        let b = run_federated(&f, &cfg).unwrap();
+        assert_eq!(a.x_final, b.x_final, "{algo} not deterministic");
+        let ra = a.history.records.last().unwrap();
+        let rb = b.history.records.last().unwrap();
+        assert_eq!(ra.bits_up_per_node, rb.bits_up_per_node, "{algo} bit accounting drifts");
+    }
+}
+
+#[test]
+fn bits_are_monotone_nondecreasing() {
+    let f = default_fed();
+    for algo in [Algorithm::Bl1, Algorithm::Bl2, Algorithm::Bl3, Algorithm::SLocalGd] {
+        let cfg = RunConfig {
+            algorithm: algo,
+            hess_comp: CompressorSpec::TopK(6),
+            rounds: 40,
+            target_gap: 0.0,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&f, &cfg).unwrap();
+        for w in out.history.records.windows(2) {
+            assert!(w[1].bits_up_per_node >= w[0].bits_up_per_node, "{algo}");
+            assert!(w[1].bits_down_per_node >= w[0].bits_down_per_node, "{algo}");
+        }
+    }
+}
+
+/// Proptest-style randomized sweep: BL1/BL2/BL3 under randomly drawn
+/// compressors, bases, participation and gradient schedules must never
+/// diverge, and must make real progress.
+#[test]
+fn randomized_bl_configurations_never_diverge() {
+    let mut gen = Rng::new(0xB17);
+    let comp_pool = ["topk:4", "topk:12", "randk:6", "rank:1", "rank:2", "dith:6", "nat",
+                     "rrank:1", "nrank:1", "rtopk:6", "ntopk:6"];
+    // Model compressors stay contractive (identity/Top-K), like every BL
+    // experiment in the paper: unbiased model compression violates
+    // Assumption 4.3(ii) (iterates must remain convex combinations of past
+    // x's) and is outside the theory's envelope — see the BL1 module docs.
+    let model_pool = ["identity", "topk:6"];
+    for case in 0..30 {
+        let algo = [Algorithm::Bl1, Algorithm::Bl2, Algorithm::Bl3][gen.below(3)];
+        let basis = match algo {
+            Algorithm::Bl3 => None, // BL3 requires its PSD basis
+            _ => Some([BasisKind::Standard, BasisKind::SymTri, BasisKind::Subspace][gen.below(3)]),
+        };
+        // ≥ 75 total points for d ≤ 13 keeps the logistic problem
+        // non-separable, i.e. inside the local basin the paper's theory
+        // covers from x⁰ = 0 (near-separable draws push ‖x*‖ ≫ 1 where the
+        // lazy-gradient estimator legitimately wanders — demonstrated by
+        // bl1_far_from_basin_can_wander below).
+        let f = fed(
+            3 + gen.below(3),
+            25 + gen.below(20),
+            6 + gen.below(8),
+            3 + gen.below(3),
+            1000 + case as u64,
+        );
+        let cfg = RunConfig {
+            algorithm: algo,
+            basis,
+            hess_comp: CompressorSpec::parse(comp_pool[gen.below(comp_pool.len())]).unwrap(),
+            model_comp: CompressorSpec::parse(model_pool[gen.below(model_pool.len())]).unwrap(),
+            p: [1.0, 0.5, 0.2][gen.below(3)],
+            tau: if gen.bernoulli(0.5) { None } else { Some(1 + gen.below(f.n_clients())) },
+            bl3_option: if gen.bernoulli(0.5) { Bl3Option::One } else { Bl3Option::Two },
+            rounds: 150,
+            // λ = 1e-2 keeps every random draw inside the local basin from
+            // x⁰ = 0 even with lazy gradients (p < 1) — the boundary case is
+            // pinned separately by bl1_far_from_basin_can_wander.
+            lambda: 1e-2,
+            target_gap: 0.0,
+            seed: 42 + case as u64,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&f, &cfg).unwrap_or_else(|e| {
+            panic!("case {case} ({algo}, {:?}, {:?}) errored: {e:#}", cfg.basis, cfg.hess_comp)
+        });
+        let first = out.history.records.first().unwrap().gap;
+        let last = out.final_gap();
+        let best = out.history.records.iter().map(|r| r.gap).fold(f64::INFINITY, f64::min);
+        // Never blow up (the paper's theory is *local*: with lazy gradients
+        // (p < 1) and aggressive unbiased compression the transient can
+        // wander, so we assert boundedness always and progress via the best
+        // gap seen).
+        assert!(last.is_finite() && last < 1e3, "case {case} diverged: {last:.3e}");
+        assert!(
+            best < first * 0.9 || best < 1e-10,
+            "case {case} ({algo}, basis {:?}, comp {}, p {}, tau {:?}) made no progress: {first:.3e} → best {best:.3e}",
+            cfg.basis,
+            cfg.hess_comp,
+            cfg.p,
+            cfg.tau,
+        );
+    }
+}
+
+/// Documents the boundary of BL1's *local* theory: on a near-separable shard
+/// (few points, ‖x*‖ ≫ 1) with lazy gradients (p < 1), the estimator
+/// `g = [H]_μ(z−w) + ∇f(w)` extrapolates a nearly-flat logistic and the
+/// iterates wander — exactly why Theorems 4.9–4.11 assume a starting point
+/// inside the basin. With p = 1 the same instance converges.
+#[test]
+fn bl1_far_from_basin_can_wander() {
+    let f = fed(2, 12, 10, 3, 1025);
+    let run = |p: f64| {
+        let cfg = RunConfig {
+            algorithm: Algorithm::Bl1,
+            basis: Some(BasisKind::Standard),
+            hess_comp: CompressorSpec::TopK(12),
+            p,
+            rounds: 300,
+            lambda: 1e-3,
+            target_gap: 1e-10,
+            seed: 67,
+            ..RunConfig::default()
+        };
+        run_federated(&f, &cfg).unwrap().final_gap()
+    };
+    assert!(run(1.0) <= 1e-10, "p=1 must converge even here");
+    assert!(run(0.5) > 1e-6, "if lazy gradients converge here too, tighten the sweep above");
+}
+
+#[test]
+fn edge_case_single_client() {
+    let f = fed(1, 20, 8, 4, 55);
+    for algo in [Algorithm::Bl1, Algorithm::Bl2, Algorithm::Bl3, Algorithm::Gd] {
+        let cfg = RunConfig {
+            algorithm: algo,
+            hess_comp: CompressorSpec::TopK(8),
+            rounds: if algo == Algorithm::Gd { 50_000 } else { 500 },
+            target_gap: 1e-8,
+            ..RunConfig::default()
+        };
+        let out = run_federated(&f, &cfg).unwrap();
+        assert!(out.final_gap() <= 1e-8, "{algo} single-client gap {}", out.final_gap());
+    }
+}
+
+#[test]
+fn edge_case_single_point_per_client() {
+    let f = fed(4, 1, 6, 1, 56);
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        hess_comp: CompressorSpec::TopK(1),
+        rounds: 600,
+        target_gap: 1e-8,
+        ..RunConfig::default()
+    };
+    let out = run_federated(&f, &cfg).unwrap();
+    assert!(out.final_gap() <= 1e-8, "gap {}", out.final_gap());
+}
+
+#[test]
+fn edge_case_tau_one() {
+    let f = default_fed();
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl2,
+        hess_comp: CompressorSpec::TopK(5),
+        tau: Some(1),
+        rounds: 4000,
+        target_gap: 1e-8,
+        ..RunConfig::default()
+    };
+    let out = run_federated(&f, &cfg).unwrap();
+    assert!(out.final_gap() <= 1e-8, "gap {}", out.final_gap());
+}
+
+#[test]
+fn noisy_data_breaks_exact_low_rank_but_methods_still_converge() {
+    // Failure injection: data only approximately low-dimensional — the
+    // subspace basis becomes lossy, the Hessian learner must absorb it.
+    let f = FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 4,
+        m_per_client: 30,
+        dim: 12,
+        intrinsic_dim: 4,
+        noise: 0.05,
+        seed: 57,
+    });
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        basis: Some(BasisKind::Subspace),
+        // Generous tolerance ⇒ the extracted basis keeps only dominant
+        // directions and truly discards signal (the learner's decode is a
+        // strict projection; convergence degrades to inexact-Newton linear).
+        subspace_tol: 0.02,
+        hess_comp: CompressorSpec::TopK(6),
+        rounds: 6000,
+        target_gap: 1e-6,
+        ..RunConfig::default()
+    };
+    let out = run_federated(&f, &cfg).unwrap();
+    assert!(out.final_gap() <= 1e-6, "gap {}", out.final_gap());
+}
+
+#[test]
+fn lambda_sweep_second_order_insensitive_to_conditioning() {
+    // The paper's motivation: Newton-type rates don't degrade as λ ↓ while
+    // GD's do. Compare round counts to gap 1e-8 at λ = 1e-2 vs 1e-4.
+    let f = default_fed();
+    let run = |algo, lambda, rounds| {
+        let cfg = RunConfig {
+            algorithm: algo,
+            hess_comp: CompressorSpec::TopK(5),
+            lambda,
+            rounds,
+            target_gap: 1e-8,
+            ..RunConfig::default()
+        };
+        run_federated(&f, &cfg).unwrap().history.records.len() as f64
+    };
+    let bl1_ratio = run(Algorithm::Bl1, 1e-4, 4000) / run(Algorithm::Bl1, 1e-2, 4000);
+    let gd_ratio = run(Algorithm::Gd, 1e-4, 2_000_000) / run(Algorithm::Gd, 1e-2, 2_000_000);
+    assert!(
+        gd_ratio > 2.5 * bl1_ratio,
+        "conditioning hurt GD {gd_ratio:.1}× vs BL1 {bl1_ratio:.1}× — expected a large gap"
+    );
+}
+
+#[test]
+fn libsvm_file_roundtrip_end_to_end() {
+    // Real-data ingestion path: write a LibSVM file, load it, train on it.
+    use basis_learn::data::{write_libsvm, LibsvmRecord};
+    let fed_src = fed(3, 20, 8, 4, 321);
+    let mut records = Vec::new();
+    for c in &fed_src.clients {
+        for i in 0..c.m() {
+            let features = c
+                .a
+                .row(i)
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(j, &v)| (j + 1, v))
+                .collect();
+            records.push(LibsvmRecord { label: c.b[i], features });
+        }
+    }
+    let path = std::env::temp_dir().join("bl_libsvm_e2e.libsvm");
+    std::fs::write(&path, write_libsvm(&records)).unwrap();
+    let fed = FederatedDataset::from_libsvm_file(&path, 3, None).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(fed.n_clients(), 3);
+    assert_eq!(fed.dim(), 8);
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        hess_comp: CompressorSpec::TopK(4),
+        rounds: 300,
+        lambda: 1e-3,
+        target_gap: 1e-9,
+        ..RunConfig::default()
+    };
+    let out = run_federated(&fed, &cfg).unwrap();
+    assert!(out.final_gap() <= 1e-9, "gap {}", out.final_gap());
+}
+
+#[test]
+fn csv_outputs_are_written_and_well_formed() {
+    let f = default_fed();
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        hess_comp: CompressorSpec::TopK(5),
+        rounds: 20,
+        target_gap: 0.0,
+        ..RunConfig::default()
+    };
+    let out = run_federated(&f, &cfg).unwrap();
+    let dir = std::env::temp_dir().join("bl_csv_test");
+    let path = out.history.write_csv(&dir, "proptest").unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().unwrap();
+    assert_eq!(header.split(',').count(), 7);
+    let rows: Vec<&str> = lines.collect();
+    assert_eq!(rows.len(), 20);
+    for row in rows {
+        assert_eq!(row.split(',').count(), 7, "bad row: {row}");
+        // Every numeric field parses.
+        for field in row.split(',') {
+            field.parse::<f64>().unwrap();
+        }
+    }
+}

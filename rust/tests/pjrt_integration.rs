@@ -1,0 +1,116 @@
+//! Integration tests for the full three-layer path: JAX/Pallas artifacts
+//! (built by `make artifacts`) loaded and executed through PJRT, compared
+//! against the native Rust oracle, and driven end-to-end by the coordinator.
+//!
+//! These tests require `artifacts/` to exist; `make test` orders that. When
+//! artifacts are missing they **fail** with a pointer to `make artifacts`
+//! (skipping silently would hide a broken build pipeline).
+
+use basis_learn::config::{Algorithm, RunConfig};
+use basis_learn::coordinator::{run_federated_with, run_federated};
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::linalg::Mat;
+use basis_learn::problem::{LocalProblem, LogisticProblem};
+use basis_learn::runtime::{PjrtProblem, Runtime};
+use std::path::Path;
+use std::rc::Rc;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+fn load_runtime() -> Rc<Runtime> {
+    Rc::new(
+        Runtime::load(artifacts_dir())
+            .expect("artifacts missing — run `make artifacts` before `cargo test`"),
+    )
+}
+
+fn test_fed() -> FederatedDataset {
+    // (m, d) = (30, 10) is in aot.py's DEFAULT_SHAPES.
+    FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 3,
+        m_per_client: 30,
+        dim: 10,
+        intrinsic_dim: 4,
+        noise: 0.0,
+        seed: 99,
+    })
+}
+
+#[test]
+fn pjrt_matches_native_oracle() {
+    let rt = load_runtime();
+    let fed = test_fed();
+    let c = &fed.clients[0];
+    let native = LogisticProblem::new(c.a.clone(), c.b.clone());
+    let pjrt = PjrtProblem::new(rt, c.a.clone(), c.b.clone()).unwrap();
+
+    let mut x = vec![0.0; 10];
+    for (i, xi) in x.iter_mut().enumerate() {
+        *xi = 0.1 * (i as f64) - 0.4;
+    }
+
+    // Loss.
+    let (l_native, g_native) = native.loss_grad(&x);
+    let (l_pjrt, g_pjrt) = pjrt.loss_grad(&x);
+    assert!(
+        (l_native - l_pjrt).abs() < 1e-12,
+        "loss mismatch: native {l_native} vs pjrt {l_pjrt}"
+    );
+    for (a, b) in g_native.iter().zip(&g_pjrt) {
+        assert!((a - b).abs() < 1e-12, "grad mismatch: {a} vs {b}");
+    }
+
+    // Hessian.
+    let h_native = native.hess(&x);
+    let h_pjrt = pjrt.hess(&x);
+    let err = (&h_native - &h_pjrt).fro_norm();
+    assert!(err < 1e-12, "hessian mismatch ‖Δ‖={err}");
+    assert!(h_pjrt.is_symmetric(0.0));
+}
+
+#[test]
+fn pjrt_rejects_unknown_shape() {
+    let rt = load_runtime();
+    let a = Mat::zeros(13, 7); // not in the shape grid
+    let b = vec![1.0; 13];
+    let err = PjrtProblem::new(rt, a, b).err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("aot.py"), "{msg}");
+}
+
+#[test]
+fn bl1_end_to_end_over_pjrt() {
+    // The full production stack: BL1 coordinator (L3) with every local
+    // loss/grad/Hessian served by the AOT JAX+Pallas artifacts (L2+L1).
+    let rt = load_runtime();
+    let fed = test_fed();
+    let locals: Vec<Box<dyn LocalProblem>> = fed
+        .clients
+        .iter()
+        .map(|c| {
+            Box::new(PjrtProblem::new(rt.clone(), c.a.clone(), c.b.clone()).unwrap())
+                as Box<dyn LocalProblem>
+        })
+        .collect();
+    let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        rounds: 200,
+        lambda: 1e-3,
+        target_gap: 1e-10,
+        ..RunConfig::default()
+    };
+    let out = run_federated_with(&locals, features, &cfg).unwrap();
+    assert!(out.final_gap() <= 1e-10, "gap={}", out.final_gap());
+
+    // And the PJRT trajectory must match the native one bit-for-bit in
+    // round count and near-exactly in iterates (same seeds, same math).
+    let native = run_federated(&fed, &cfg).unwrap();
+    assert_eq!(out.history.records.len(), native.history.records.len());
+    for (a, b) in out.x_final.iter().zip(&native.x_final) {
+        assert!((a - b).abs() < 1e-9, "pjrt {a} vs native {b}");
+    }
+}
+
