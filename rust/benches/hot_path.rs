@@ -101,33 +101,43 @@ fn main() {
         }
     }
 
-    // ── PJRT dispatch vs native (needs artifacts) ──
+    // ── PJRT dispatch vs native (needs artifacts + the `pjrt` feature) ──
     if filter_match("pjrt") {
-        b.group("PJRT dispatch vs native oracle (m=100, d=30)");
-        match basis_learn::runtime::Runtime::load(std::path::Path::new("artifacts")) {
-            Ok(rt) => {
-                let rt = std::rc::Rc::new(rt);
-                let fed = FederatedDataset::synthetic(&SyntheticSpec {
-                    n_clients: 1,
-                    m_per_client: 100,
-                    dim: 30,
-                    intrinsic_dim: 6,
-                    noise: 0.0,
-                    seed: 6,
-                });
-                let c = &fed.clients[0];
-                let native = LogisticProblem::new(c.a.clone(), c.b.clone());
-                let pjrt =
-                    basis_learn::runtime::PjrtProblem::new(rt, c.a.clone(), c.b.clone()).unwrap();
-                let x: Vec<f64> = (0..30).map(|_| rng.normal() * 0.1).collect();
-                b.bench("pjrt/loss_grad native", || native.loss_grad(&x));
-                b.bench("pjrt/loss_grad pjrt", || pjrt.loss_grad(&x));
-                b.bench("pjrt/hess native", || native.hess(&x));
-                b.bench("pjrt/hess pjrt", || pjrt.hess(&x));
-            }
-            Err(e) => println!("  (skipping PJRT group: {e:#})"),
-        }
+        bench_pjrt(&mut b, &mut rng);
     }
 
     println!("\n{} cases measured.", b.results().len());
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(b: &mut Bench, rng: &mut Rng) {
+    b.group("PJRT dispatch vs native oracle (m=100, d=30)");
+    match basis_learn::runtime::Runtime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            let rt = std::rc::Rc::new(rt);
+            let fed = FederatedDataset::synthetic(&SyntheticSpec {
+                n_clients: 1,
+                m_per_client: 100,
+                dim: 30,
+                intrinsic_dim: 6,
+                noise: 0.0,
+                seed: 6,
+            });
+            let c = &fed.clients[0];
+            let native = LogisticProblem::new(c.a.clone(), c.b.clone());
+            let pjrt =
+                basis_learn::runtime::PjrtProblem::new(rt, c.a.clone(), c.b.clone()).unwrap();
+            let x: Vec<f64> = (0..30).map(|_| rng.normal() * 0.1).collect();
+            b.bench("pjrt/loss_grad native", || native.loss_grad(&x));
+            b.bench("pjrt/loss_grad pjrt", || pjrt.loss_grad(&x));
+            b.bench("pjrt/hess native", || native.hess(&x));
+            b.bench("pjrt/hess pjrt", || pjrt.hess(&x));
+        }
+        Err(e) => println!("  (skipping PJRT group: {e:#})"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt(_b: &mut Bench, _rng: &mut Rng) {
+    println!("  (skipping PJRT group: built without the `pjrt` feature)");
 }

@@ -116,6 +116,23 @@ pub enum BasisKind {
     Psd,
 }
 
+impl BasisKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BasisKind::Standard => "standard",
+            BasisKind::SymTri => "symtri",
+            BasisKind::Subspace => "subspace",
+            BasisKind::Psd => "psd",
+        }
+    }
+}
+
+impl std::fmt::Display for BasisKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 impl std::str::FromStr for BasisKind {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self> {
@@ -247,6 +264,9 @@ mod tests {
         assert_eq!("subspace".parse::<BasisKind>().unwrap(), BasisKind::Subspace);
         assert_eq!("STD".parse::<BasisKind>().unwrap(), BasisKind::Standard);
         assert!("fourier".parse::<BasisKind>().is_err());
+        for b in [BasisKind::Standard, BasisKind::SymTri, BasisKind::Subspace, BasisKind::Psd] {
+            assert_eq!(b.to_string().parse::<BasisKind>().unwrap(), b);
+        }
     }
 
     #[test]

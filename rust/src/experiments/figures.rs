@@ -11,8 +11,8 @@
 use super::runs_dir;
 use crate::compressors::CompressorSpec;
 use crate::config::{Algorithm, BasisKind, RunConfig};
-use crate::coordinator::run_federated;
 use crate::data::{registry, DatasetEntry, FederatedDataset};
+use crate::sweep::{run_cells, CellStatus, DatasetRef, SweepCell};
 use anyhow::{bail, Result};
 
 /// One labelled run in a figure.
@@ -304,59 +304,87 @@ fn figure_datasets(id: &str, full: bool) -> Vec<DatasetEntry> {
     }
 }
 
-/// Run one figure end to end.
-pub fn run_figure(id: &str, full_scale: bool, seed: u64) -> Result<()> {
+/// Run one figure end to end: declare every (dataset × series) run as a
+/// sweep cell, execute the whole list through the sweep engine's thread
+/// pool, then print the paper-style tables in declaration order.
+pub fn run_figure(id: &str, full_scale: bool, seed: u64, jobs: usize) -> Result<()> {
     let count_downlink = matches!(id, "fig5" | "fig6");
-    for entry in figure_datasets(id, false) {
+
+    // ── declare the run list ──
+    let mut cells: Vec<SweepCell> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
+    // (first cell id of a dataset block, its table header).
+    let mut headers: Vec<(usize, String)> = Vec::new();
+    for entry in figure_datasets(id, full_scale) {
         let fed = entry.build(seed, full_scale);
-        println!(
-            "\n{id} on {} (n={}, d={}, r≈{:.0}) — bits/node ({}) to reach gap ≤ target",
-            fed.name,
-            fed.n_clients(),
-            fed.dim(),
-            fed.avg_intrinsic_dim(1e-9),
-            if count_downlink { "up+down" } else { "uplink" },
-        );
-        println!(
-            "{:<16}{:>14}{:>14}{:>14}{:>12}",
-            "method", "1e-4", "1e-7", "1e-10", "final gap"
-        );
-        let series = spec(id, &fed, seed)?;
-        for sr in series {
-            let out = match run_federated(&fed, &sr.cfg) {
-                Ok(o) => o,
-                Err(e) => {
-                    println!("{:<16}  FAILED: {e:#}", sr.label);
-                    continue;
-                }
-            };
-            let bits_at = |target: f64| -> String {
-                out.history
-                    .records
-                    .iter()
-                    .find(|rec| rec.gap <= target)
-                    .map(|rec| {
-                        let b = if count_downlink {
-                            rec.bits_per_node() + out.history.setup_bits_per_node
-                        } else {
-                            rec.bits_up_per_node + out.history.setup_bits_per_node
-                        };
-                        format!("{:.3e}", b)
-                    })
-                    .unwrap_or_else(|| "—".into())
-            };
-            println!(
-                "{:<16}{:>14}{:>14}{:>14}{:>12.2e}",
-                sr.label,
-                bits_at(TARGETS[0]),
-                bits_at(TARGETS[1]),
-                bits_at(TARGETS[2]),
-                out.final_gap()
-            );
-            let mut hist = out.history;
-            hist.label = format!("{}__{}", fed.name, sr.label);
-            hist.write_csv(&runs_dir(), id)?;
+        headers.push((
+            cells.len(),
+            format!(
+                "\n{id} on {} (n={}, d={}, r≈{:.0}) — bits/node ({}) to reach gap ≤ target",
+                fed.name,
+                fed.n_clients(),
+                fed.dim(),
+                fed.avg_intrinsic_dim(1e-9),
+                if count_downlink { "up+down" } else { "uplink" },
+            ),
+        ));
+        for sr in spec(id, &fed, seed)? {
+            labels.push(sr.label.clone());
+            cells.push(SweepCell {
+                id: cells.len(),
+                group: format!("{}::{}", fed.name, sr.label),
+                data_seed: seed,
+                dataset: DatasetRef::Registry { entry, full_scale },
+                cfg: sr.cfg,
+            });
         }
+    }
+
+    // ── execute across the thread pool (progress in completion order) ──
+    let total = cells.len();
+    let mut done = 0usize;
+    let results = run_cells(&cells, jobs, |r| {
+        done += 1;
+        eprintln!("  [{done}/{total}] {} ({:.1}s)", r.group, r.wall_ms / 1e3);
+    });
+
+    // ── report in declaration order ──
+    for (i, res) in results.iter().enumerate() {
+        if let Some((_, header)) = headers.iter().find(|(first, _)| *first == i) {
+            println!("{header}");
+            println!(
+                "{:<16}{:>14}{:>14}{:>14}{:>12}",
+                "method", "1e-4", "1e-7", "1e-10", "final gap"
+            );
+        }
+        let label = &labels[i];
+        let hist = match (&res.status, &res.history) {
+            (CellStatus::Ok, Some(h)) => h,
+            (CellStatus::Failed(e), _) => {
+                println!("{label:<16}  FAILED: {e}");
+                continue;
+            }
+            _ => continue,
+        };
+        let bits_at = |target: f64| -> String {
+            let bits = if count_downlink {
+                hist.bits_to_reach(target)
+            } else {
+                hist.bits_to_reach_uplink(target)
+            };
+            bits.map(|b| format!("{b:.3e}")).unwrap_or_else(|| "—".into())
+        };
+        println!(
+            "{:<16}{:>14}{:>14}{:>14}{:>12.2e}",
+            label,
+            bits_at(TARGETS[0]),
+            bits_at(TARGETS[1]),
+            bits_at(TARGETS[2]),
+            hist.final_gap()
+        );
+        let mut hist = hist.clone();
+        hist.label = format!("{}__{}", res.dataset, label);
+        hist.write_csv(&runs_dir(), id)?;
     }
     Ok(())
 }

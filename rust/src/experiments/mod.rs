@@ -35,18 +35,20 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Run an experiment by id, printing the paper-style rows/series and writing
-/// CSVs under `runs/`.
-pub fn run_experiment(id: &str, full_scale: bool, seed: u64) -> Result<()> {
+/// CSVs under `runs/`. Run lists are declared as sweep cells and executed
+/// through the [`crate::sweep`] engine across `jobs` worker threads, so
+/// `repro experiment all --jobs N` parallelizes every figure for free.
+pub fn run_experiment(id: &str, full_scale: bool, seed: u64, jobs: usize) -> Result<()> {
     match id {
-        "table1" => table1(seed),
+        "table1" => table1(seed, jobs),
         "table2" => table2(full_scale, seed),
         "all" => {
             for e in EXPERIMENTS.iter().filter(|e| **e != "all") {
                 println!("\n════════ {e} ════════");
-                run_experiment(e, full_scale, seed)?;
+                run_experiment(e, full_scale, seed, jobs)?;
             }
             Ok(())
         }
-        fig => run_figure(fig, full_scale, seed),
+        fig => run_figure(fig, full_scale, seed, jobs),
     }
 }

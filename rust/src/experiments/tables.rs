@@ -2,16 +2,16 @@
 
 use crate::compressors::CompressorSpec;
 use crate::config::{Algorithm, BasisKind, RunConfig};
-use crate::coordinator::run_federated;
 use crate::data::{registry, FederatedDataset};
-use anyhow::Result;
+use crate::sweep::{run_cells, CellResult, CellStatus, DatasetRef, SweepCell};
+use anyhow::{Context, Result};
 
 /// Table 1: per-iteration communication (floats) of the three Newton
 /// implementations — naive (§2.1), NL1-style problem-structure (§2.2,
 /// [Islamov et al. 2021]) and ours (§2.3). The theory columns are printed
 /// next to *measured* per-round floats from actual runs on an a1a-shaped
 /// dataset, validating the accounting end to end.
-pub fn table1(seed: u64) -> Result<()> {
+pub fn table1(seed: u64, jobs: usize) -> Result<()> {
     let entry = registry().into_iter().find(|e| e.name == "a1a").unwrap();
     let fed = entry.build(seed, false);
     let d = fed.dim();
@@ -21,23 +21,17 @@ pub fn table1(seed: u64) -> Result<()> {
     println!("Table 1 — Newton implementations (dataset {}: n={n}, m={m}, d={d}, r={r})", fed.name);
 
     let float_bits = 64.0;
-    // Measured per-round uplink floats per node for each implementation.
-    let measure = |basis: BasisKind| -> Result<f64> {
-        let cfg = RunConfig {
-            algorithm: Algorithm::Newton,
-            basis: Some(basis),
-            rounds: 3,
-            lambda: 1e-3,
-            target_gap: 0.0,
-            seed,
-            ..RunConfig::default()
-        };
-        let out = run_federated(&fed, &cfg)?;
-        let recs = &out.history.records;
-        Ok((recs[1].bits_up_per_node - recs[0].bits_up_per_node) / float_bits)
+    // The three measurement runs, declared as sweep cells and executed
+    // through the engine (table rows are independent runs like any others).
+    let newton = |basis: BasisKind| RunConfig {
+        algorithm: Algorithm::Newton,
+        basis: Some(basis),
+        rounds: 3,
+        lambda: 1e-3,
+        target_gap: 0.0,
+        seed,
+        ..RunConfig::default()
     };
-    let naive = measure(BasisKind::Standard)?;
-    let ours = measure(BasisKind::Subspace)?;
     // NL1 measured: m-coefficients + d gradient (no compression → identity
     // gives the §2.2 exact implementation cost m + d).
     let nl1_cfg = RunConfig {
@@ -49,10 +43,32 @@ pub fn table1(seed: u64) -> Result<()> {
         seed,
         ..RunConfig::default()
     };
-    let out = run_federated(&fed, &nl1_cfg)?;
-    let recs = &out.history.records;
-    let nl1 = (recs[1].bits_up_per_node - recs[0].bits_up_per_node) / float_bits;
-    let nl1_setup = out.history.setup_bits_per_node / float_bits;
+    let cell = |id: usize, group: &str, cfg: RunConfig| SweepCell {
+        id,
+        group: group.into(),
+        data_seed: seed,
+        dataset: DatasetRef::Registry { entry, full_scale: false },
+        cfg,
+    };
+    let cells = vec![
+        cell(0, "newton-naive", newton(BasisKind::Standard)),
+        cell(1, "newton-ours", newton(BasisKind::Subspace)),
+        cell(2, "nl1-exact", nl1_cfg),
+    ];
+    let results = run_cells(&cells, jobs, |_| {});
+    // Measured per-round uplink floats per node for each implementation.
+    let per_round_floats = |res: &CellResult| -> Result<f64> {
+        let h = res.history.as_ref().with_context(|| match &res.status {
+            CellStatus::Failed(e) => format!("{} failed: {e}", res.group),
+            CellStatus::Ok => format!("{} produced no history", res.group),
+        })?;
+        Ok((h.records[1].bits_up_per_node - h.records[0].bits_up_per_node) / float_bits)
+    };
+    let naive = per_round_floats(&results[0])?;
+    let ours = per_round_floats(&results[1])?;
+    let nl1 = per_round_floats(&results[2])?;
+    let nl1_setup =
+        results[2].history.as_ref().expect("checked above").setup_bits_per_node / float_bits;
 
     println!("{:<42}{:>14}{:>14}{:>14}", "", "Naive", "NL1 [Isl+21]", "Ours (§2.3)");
     println!(
@@ -133,7 +149,8 @@ mod tests {
 
     #[test]
     fn table1_runs_and_validates() {
-        table1(3).unwrap();
+        // jobs = 2 exercises the parallel path end to end.
+        table1(3, 2).unwrap();
     }
 
     #[test]

@@ -21,10 +21,25 @@
 //! * **L1 (python/compile/kernels/)** — the Pallas hot-spot kernels (scaled
 //!   Gram Hessian, fused logistic gradient) called by L2.
 //!
-//! At run time the Rust binary is self-contained: [`runtime`] loads the HLO
-//! artifacts through the PJRT C API (`xla` crate) and serves local
-//! loss/grad/Hessian evaluations on the coordinator's hot path. Python never
-//! runs on the request path.
+//! With the off-by-default `pjrt` cargo feature enabled, the Rust binary is
+//! self-contained at run time: `runtime` loads the HLO artifacts through the
+//! PJRT C API (`xla` crate) and serves local loss/grad/Hessian evaluations on
+//! the coordinator's hot path. Python never runs on the request path. The
+//! default build evaluates local objectives with the native Rust oracle.
+//!
+//! ## The sweep engine
+//!
+//! Every run in the paper is one point of a comparative grid — algorithm ×
+//! dataset × compressor × basis × participation × seed. [`sweep`] makes those
+//! grids first-class: a declarative [`sweep::SweepSpec`] expands into concrete
+//! [`sweep::SweepCell`]s with deterministic per-cell seed derivation, a
+//! thread-pool executor ([`sweep::run_cells`]) fans independent federated runs
+//! out across cores with panic isolation, results stream to JSONL under
+//! `runs/`, and an aggregation layer reduces seeds to mean/std
+//! bits-to-target-gap with best-cell ranking. The experiment harness
+//! ([`experiments`]) declares its figure/table run lists as sweep cells, so
+//! `repro experiment <id> --jobs N` parallelizes across the same engine as
+//! ad-hoc `repro sweep` grids.
 //!
 //! ## Quick start
 //!
@@ -50,7 +65,9 @@ pub mod linalg;
 pub mod metrics;
 pub mod problem;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sweep;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -63,6 +80,8 @@ pub mod prelude {
     pub use crate::coordinator::{run_federated, RunOutput};
     pub use crate::data::{FederatedDataset, SyntheticSpec};
     pub use crate::linalg::{Mat, Vector};
+    pub use crate::metrics::History;
     pub use crate::problem::{LocalProblem, LogisticProblem};
     pub use crate::rng::Rng;
+    pub use crate::sweep::{run_cells, DatasetRef, SweepCell, SweepSpec};
 }

@@ -1,11 +1,35 @@
 //! `repro` — the launcher for the Basis-Learn reproduction.
 //!
 //! ```text
-//! repro experiment <id> [--full-scale] [--seed N]      regenerate a paper table/figure
-//! repro run [options]                                  one federated run
-//! repro data <name> [--full-scale]                     inspect a registry dataset
-//! repro list                                           algorithms / experiments / datasets
+//! repro experiment <id> [--full-scale] [--seed N] [--jobs N]   regenerate a paper table/figure
+//! repro sweep [grid axes] [--jobs N]                           ad-hoc parallel run grid
+//! repro run [options]                                          one federated run
+//! repro data <name> [--full-scale]                             inspect a registry dataset
+//! repro list                                                   algorithms / experiments / datasets
 //! ```
+//!
+//! `repro sweep` grid axes (comma-separated values; the grid is the cartesian
+//! product of all axes):
+//! ```text
+//! --algo a,b,...           algorithms (see `repro list`)                 [bl1]
+//! --dataset d1,d2,...      registry names or synth                      [a1a]
+//! --hess-comp s1,s2,...    matrix compressors (topk:K, rank:R, ...)     [topk:1]
+//! --model-comp s1,...      model compressors Q                          [identity]
+//! --grad-comp s1,...       gradient compressors                         [identity]
+//! --basis b1,...           default|standard|symtri|subspace|psd         [default]
+//! --p x1,x2,...            gradient-send probabilities ξ                [1.0]
+//! --tau t1,...             participation levels (`all` or counts)       [all]
+//! --seeds SPEC             `1..5` (inclusive) or `1,2,7`                [1]
+//! --rounds N --lambda X --target-gap X --max-bits X    shared run template
+//! --jobs N                 worker threads                  [all hardware cores]
+//! --name NAME              sweep name (output dir under runs/)         [sweep]
+//! --out DIR                explicit output directory       [runs/<name>]
+//! --master-seed N          re-randomize all derived cell seeds            [0]
+//! --full-scale             paper-sized datasets
+//! ```
+//! Results land in `<out>/runs.jsonl` (one row per run, streamed in
+//! completion order) and `<out>/summary.jsonl` (cross-seed aggregates,
+//! ranked best-first; byte-identical at any `--jobs` level).
 //!
 //! `repro run` options:
 //! ```text
@@ -24,6 +48,7 @@
 //! --target-gap X           stop at f(x)−f* ≤ X                            [1e-12]
 //! --seed N                 RNG seed                                       [1]
 //! --pjrt                   evaluate loss/grad/Hessian via PJRT artifacts
+//!                          (needs a build with `--features pjrt`)
 //! --artifacts DIR          artifact directory for --pjrt                  [artifacts]
 //! --csv PATH               write the run history CSV
 //! ```
@@ -31,12 +56,15 @@
 use anyhow::{bail, Context, Result};
 use basis_learn::compressors::CompressorSpec;
 use basis_learn::config::{Algorithm, BasisKind, RunConfig};
-use basis_learn::coordinator::{run_federated, run_federated_with};
+use basis_learn::coordinator::{run_federated, RunOutput};
 use basis_learn::data::{registry, FederatedDataset, SyntheticSpec};
-use basis_learn::experiments::{run_experiment, EXPERIMENTS};
-use basis_learn::problem::LocalProblem;
-use basis_learn::runtime::{PjrtProblem, Runtime};
-use std::rc::Rc;
+use basis_learn::experiments::{run_experiment, runs_dir, EXPERIMENTS};
+use basis_learn::sweep::{
+    aggregate, default_jobs, parse_axis, parse_bases, parse_datasets, parse_seeds, parse_taus,
+    ranked, run_cells, run_row, summary_table, CellStatus, Json, SweepSpec, SWEEP_TARGETS,
+};
+use std::io::Write as _;
+use std::path::PathBuf;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -101,10 +129,11 @@ fn real_main() -> Result<()> {
     let args = Args::parse(&argv);
     match args.positional.first().map(String::as_str) {
         Some("experiment") | Some("exp") => cmd_experiment(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("run") => cmd_run(&args),
         Some("data") => cmd_data(&args),
         Some("list") => cmd_list(),
-        Some(other) => bail!("unknown command '{other}' (experiment|run|data|list)"),
+        Some(other) => bail!("unknown command '{other}' (experiment|sweep|run|data|list)"),
         None => {
             print_usage();
             Ok(())
@@ -114,7 +143,7 @@ fn real_main() -> Result<()> {
 
 fn print_usage() {
     println!("repro — Basis Matters (Qian et al., 2021) reproduction");
-    println!("usage: repro <experiment|run|data|list> [options]   (see README.md)");
+    println!("usage: repro <experiment|sweep|run|data|list> [options]   (see README.md)");
 }
 
 fn cmd_list() -> Result<()> {
@@ -143,7 +172,153 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .get(1)
         .context("usage: repro experiment <id> (see `repro list`)")?;
     let seed: u64 = args.parsed("seed")?.unwrap_or(1);
-    run_experiment(id, args.has("full-scale"), seed)
+    let jobs: usize = args.parsed("jobs")?.unwrap_or_else(default_jobs);
+    run_experiment(id, args.has("full-scale"), seed, jobs)
+}
+
+/// Every flag `repro sweep` understands; anything else is rejected so a
+/// typo'd axis (e.g. `--seed` for `--seeds`) can't silently run the wrong
+/// grid.
+const SWEEP_FLAGS: &[&str] = &[
+    "algo", "dataset", "hess-comp", "model-comp", "grad-comp", "basis", "p", "tau", "seeds",
+    "rounds", "lambda", "target-gap", "max-bits", "jobs", "name", "out", "master-seed",
+    "full-scale",
+];
+
+/// `repro sweep` — expand the grid axes into cells, execute them across the
+/// thread pool, stream per-run JSONL, and write ranked cross-seed aggregates.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    for (flag, _) in &args.flags {
+        if !SWEEP_FLAGS.contains(&flag.as_str()) {
+            let hint = if flag == "seed" { " (did you mean --seeds?)" } else { "" };
+            bail!(
+                "unknown sweep flag '--{flag}'{hint}; valid flags: --{}",
+                SWEEP_FLAGS.join(", --")
+            );
+        }
+    }
+    let full_scale = args.has("full-scale");
+    let defaults = SweepSpec::default();
+    let spec = SweepSpec {
+        algos: match args.flag("algo") {
+            Some(v) => parse_axis(v)?,
+            None => defaults.algos,
+        },
+        datasets: match args.flag("dataset") {
+            Some(v) => parse_datasets(v, full_scale)?,
+            None => parse_datasets("a1a", full_scale)?,
+        },
+        hess_comps: match args.flag("hess-comp") {
+            Some(v) => parse_axis(v)?,
+            None => defaults.hess_comps,
+        },
+        model_comps: match args.flag("model-comp") {
+            Some(v) => parse_axis(v)?,
+            None => defaults.model_comps,
+        },
+        grad_comps: match args.flag("grad-comp") {
+            Some(v) => parse_axis(v)?,
+            None => defaults.grad_comps,
+        },
+        bases: match args.flag("basis") {
+            Some(v) => parse_bases(v)?,
+            None => defaults.bases,
+        },
+        ps: match args.flag("p") {
+            Some(v) => parse_axis(v)?,
+            None => defaults.ps,
+        },
+        taus: match args.flag("tau") {
+            Some(v) => parse_taus(v)?,
+            None => defaults.taus,
+        },
+        seeds: match args.flag("seeds") {
+            Some(v) => parse_seeds(v)?,
+            None => defaults.seeds,
+        },
+        base: RunConfig {
+            rounds: args.parsed("rounds")?.unwrap_or(2000),
+            lambda: args.parsed("lambda")?.unwrap_or(1e-3),
+            target_gap: args.parsed("target-gap")?.unwrap_or(1e-12),
+            max_bits_per_node: Some(args.parsed("max-bits")?.unwrap_or(3e8)),
+            ..RunConfig::default()
+        },
+        master_seed: args.parsed("master-seed")?.unwrap_or(0),
+    };
+
+    let cells = spec.expand();
+    let jobs: usize = args.parsed("jobs")?.unwrap_or_else(default_jobs);
+    let name = args.flag("name").unwrap_or("sweep");
+    let out_dir = args
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| runs_dir().join(name));
+    std::fs::create_dir_all(&out_dir)?;
+    println!(
+        "sweep '{name}': {} cells ({} groups × {} seeds), jobs={jobs} → {}",
+        cells.len(),
+        cells.len() / spec.seeds.len().max(1),
+        spec.seeds.len(),
+        out_dir.display()
+    );
+
+    // Streaming per-run sink (completion order).
+    let runs_path = out_dir.join("runs.jsonl");
+    let mut sink = std::io::BufWriter::new(std::fs::File::create(&runs_path)?);
+    let total = cells.len();
+    let mut done = 0usize;
+    let mut sink_err: Option<std::io::Error> = None;
+    let results = run_cells(&cells, jobs, |r| {
+        done += 1;
+        if let Err(e) = writeln!(sink, "{}", run_row(r, &SWEEP_TARGETS).render()) {
+            if sink_err.is_none() {
+                sink_err = Some(e);
+            }
+        }
+        match (&r.status, &r.history) {
+            (CellStatus::Ok, Some(h)) => println!(
+                "  [{done:>4}/{total}] {} seed={} gap={:.2e} bits={:.3e} ({:.1}s)",
+                r.group,
+                r.data_seed,
+                h.final_gap(),
+                h.final_bits_per_node(),
+                r.wall_ms / 1e3
+            ),
+            (CellStatus::Failed(e), _) => {
+                println!("  [{done:>4}/{total}] {} seed={} FAILED: {e}", r.group, r.data_seed)
+            }
+            _ => {}
+        }
+    });
+    sink.flush()?;
+    if let Some(e) = sink_err {
+        return Err(e).context("writing runs.jsonl");
+    }
+
+    // Cross-seed aggregation, ranked best-first (deterministic bytes).
+    let summaries = aggregate(&results, &SWEEP_TARGETS);
+    let order = ranked(&summaries);
+    let mut text = String::new();
+    for (pos, &i) in order.iter().enumerate() {
+        let mut row = summaries[i].to_json();
+        if let Json::Obj(kvs) = &mut row {
+            kvs.insert(0, ("rank".into(), Json::num((pos + 1) as f64)));
+        }
+        text.push_str(&row.render());
+        text.push('\n');
+    }
+    let summary_path = out_dir.join("summary.jsonl");
+    std::fs::write(&summary_path, &text)?;
+
+    let failed = results.iter().filter(|r| !r.status.is_ok()).count();
+    println!("\n{}", summary_table(&summaries, &order));
+    println!(
+        "{} runs ({failed} failed) → {} and {}",
+        results.len(),
+        runs_path.display(),
+        summary_path.display()
+    );
+    Ok(())
 }
 
 fn load_dataset(args: &Args) -> Result<FederatedDataset> {
@@ -187,46 +362,65 @@ fn cmd_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--pjrt` execution path: local objectives served by the AOT-compiled
+/// JAX/Pallas artifacts through the PJRT C API.
+#[cfg(feature = "pjrt")]
+fn run_pjrt(args: &Args, fed: &FederatedDataset, cfg: &RunConfig) -> Result<RunOutput> {
+    use basis_learn::coordinator::run_federated_with;
+    use basis_learn::problem::LocalProblem;
+    use basis_learn::runtime::{PjrtProblem, Runtime};
+    use std::rc::Rc;
+
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let rt = Rc::new(Runtime::load(std::path::Path::new(dir))?);
+    println!("PJRT runtime up: platform={}", rt.platform());
+    let locals: Vec<Box<dyn LocalProblem>> = fed
+        .clients
+        .iter()
+        .map(|c| {
+            PjrtProblem::new(rt.clone(), c.a.clone(), c.b.clone())
+                .map(|p| Box::new(p) as Box<dyn LocalProblem>)
+        })
+        .collect::<Result<_>>()?;
+    let features = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+    run_federated_with(&locals, features, cfg)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_pjrt(_args: &Args, _fed: &FederatedDataset, _cfg: &RunConfig) -> Result<RunOutput> {
+    bail!(
+        "this binary was built without PJRT support; rebuild with \
+         `cargo build --features pjrt` (after enabling the `xla` dependency \
+         in rust/Cargo.toml)"
+    )
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let fed = load_dataset(args)?;
     let r = fed.avg_intrinsic_dim(1e-9).round() as usize;
 
-    let mut cfg = RunConfig::default();
-    cfg.algorithm = args.parsed::<Algorithm>("algo")?.unwrap_or(Algorithm::Bl1);
-    cfg.rounds = args.parsed("rounds")?.unwrap_or(500);
-    cfg.lambda = args.parsed("lambda")?.unwrap_or(1e-3);
-    cfg.hess_comp = args
-        .parsed::<CompressorSpec>("hess-comp")?
-        .unwrap_or(CompressorSpec::TopK(r.max(1)));
-    if let Some(c) = args.parsed::<CompressorSpec>("model-comp")? {
-        cfg.model_comp = c;
-    }
-    if let Some(c) = args.parsed::<CompressorSpec>("grad-comp")? {
-        cfg.grad_comp = c;
-    }
-    cfg.basis = args.parsed::<BasisKind>("basis")?;
-    cfg.p = args.parsed("p")?.unwrap_or(1.0);
-    cfg.tau = args.parsed("tau")?;
-    cfg.eta = args.parsed("eta")?;
-    cfg.alpha = args.parsed("alpha")?;
-    cfg.gamma = args.parsed("gamma")?;
-    cfg.target_gap = args.parsed("target-gap")?.unwrap_or(1e-12);
-    cfg.seed = args.parsed("seed")?.unwrap_or(1);
+    let cfg = RunConfig {
+        algorithm: args.parsed::<Algorithm>("algo")?.unwrap_or(Algorithm::Bl1),
+        rounds: args.parsed("rounds")?.unwrap_or(500),
+        lambda: args.parsed("lambda")?.unwrap_or(1e-3),
+        hess_comp: args
+            .parsed::<CompressorSpec>("hess-comp")?
+            .unwrap_or(CompressorSpec::TopK(r.max(1))),
+        model_comp: args.parsed("model-comp")?.unwrap_or(CompressorSpec::Identity),
+        grad_comp: args.parsed("grad-comp")?.unwrap_or(CompressorSpec::Identity),
+        basis: args.parsed::<BasisKind>("basis")?,
+        p: args.parsed("p")?.unwrap_or(1.0),
+        tau: args.parsed("tau")?,
+        eta: args.parsed("eta")?,
+        alpha: args.parsed("alpha")?,
+        gamma: args.parsed("gamma")?,
+        target_gap: args.parsed("target-gap")?.unwrap_or(1e-12),
+        seed: args.parsed("seed")?.unwrap_or(1),
+        ..RunConfig::default()
+    };
 
     let out = if args.has("pjrt") {
-        let dir = args.flag("artifacts").unwrap_or("artifacts");
-        let rt = Rc::new(Runtime::load(std::path::Path::new(dir))?);
-        println!("PJRT runtime up: platform={}", rt.platform());
-        let locals: Vec<Box<dyn LocalProblem>> = fed
-            .clients
-            .iter()
-            .map(|c| {
-                PjrtProblem::new(rt.clone(), c.a.clone(), c.b.clone())
-                    .map(|p| Box::new(p) as Box<dyn LocalProblem>)
-            })
-            .collect::<Result<_>>()?;
-        let features = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
-        run_federated_with(&locals, features, &cfg)?
+        run_pjrt(args, &fed, &cfg)?
     } else {
         run_federated(&fed, &cfg)?
     };

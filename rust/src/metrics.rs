@@ -65,6 +65,40 @@ impl History {
             .map(|r| r.bits_per_node() + self.setup_bits_per_node)
     }
 
+    /// Uplink-only bits per node to first reach a gap ≤ `target` (the
+    /// accounting convention of the paper's unidirectional figures 1–4).
+    pub fn bits_to_reach_uplink(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.gap <= target)
+            .map(|r| r.bits_up_per_node + self.setup_bits_per_node)
+    }
+
+    /// Reduce the trace to the quantities the sweep engine serializes:
+    /// final state plus bits-to-reach for each requested gap target.
+    pub fn summarize(&self, targets: &[f64]) -> RunSummary {
+        RunSummary {
+            label: self.label.clone(),
+            rounds: self.records.len(),
+            final_gap: self.final_gap(),
+            bits_per_node: self.final_bits_per_node(),
+            bits_up_per_node: self
+                .records
+                .last()
+                .map(|r| r.bits_up_per_node)
+                .unwrap_or(0.0)
+                + self.setup_bits_per_node,
+            bits_to_targets: targets
+                .iter()
+                .map(|&t| TargetBits {
+                    target: t,
+                    total: self.bits_to_reach(t),
+                    uplink: self.bits_to_reach_uplink(t),
+                })
+                .collect(),
+        }
+    }
+
     /// CSV text: `round,bits_up,bits_down,bits_total,gap,grad_norm,dist`.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("round,bits_up_per_node,bits_down_per_node,bits_per_node,gap,grad_norm,dist_to_opt\n");
@@ -121,6 +155,31 @@ impl History {
     }
 }
 
+/// One run condensed against a set of gap targets — the JSONL payload of the
+/// sweep result sink and the input to cross-seed aggregation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSummary {
+    pub label: String,
+    /// Rounds actually executed (stopping rules may cut `cfg.rounds` short).
+    pub rounds: usize,
+    pub final_gap: f64,
+    /// Total (up+down+setup) bits per node at the end of the run.
+    pub bits_per_node: f64,
+    /// Uplink+setup bits per node at the end of the run.
+    pub bits_up_per_node: f64,
+    pub bits_to_targets: Vec<TargetBits>,
+}
+
+/// Bits-to-reach one gap target, under both accounting conventions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TargetBits {
+    pub target: f64,
+    /// Up+down+setup bits per node (`None` ⇒ target never reached).
+    pub total: Option<f64>,
+    /// Uplink+setup bits per node.
+    pub uplink: Option<f64>,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +212,24 @@ mod tests {
         assert_eq!(h.bits_to_reach(1e-12), None);
         assert_eq!(h.final_gap(), 1e-9);
         assert_eq!(h.final_bits_per_node(), 460.0);
+    }
+
+    #[test]
+    fn summarize_condenses_targets() {
+        let mut h = History::new("sum");
+        h.setup_bits_per_node = 10.0;
+        h.push(rec(0, 100.0, 1.0));
+        h.push(rec(1, 200.0, 1e-3));
+        let s = h.summarize(&[1e-2, 1e-8]);
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.final_gap, 1e-3);
+        assert_eq!(s.bits_per_node, 310.0);
+        assert_eq!(s.bits_up_per_node, 210.0);
+        assert_eq!(s.bits_to_targets.len(), 2);
+        assert_eq!(s.bits_to_targets[0].total, Some(310.0));
+        assert_eq!(s.bits_to_targets[0].uplink, Some(210.0));
+        assert_eq!(s.bits_to_targets[1].total, None);
+        assert_eq!(s.bits_to_targets[1].uplink, None);
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //!   oracle and CPU baseline);
 //! * [`QuadraticProblem`] — quadratics for tests (Newton converges in one
 //!   step, closed-form optima);
-//! * [`crate::runtime::PjrtProblem`] — the production path: loss/grad/Hess
-//!   evaluated by the AOT-compiled JAX/Pallas artifacts through PJRT.
+//! * `crate::runtime::PjrtProblem` (behind the `pjrt` cargo feature) — the
+//!   production path: loss/grad/Hess evaluated by the AOT-compiled
+//!   JAX/Pallas artifacts through PJRT.
 
 mod logistic;
 mod quadratic;

@@ -1,0 +1,398 @@
+//! Cross-seed aggregation and ranking of sweep results, plus the JSONL row
+//! builders for the result sink.
+//!
+//! Cells that differ only in the seed axis share a `group` key; aggregation
+//! reduces each group to mean/std of bits-to-target-gap (over the seeds that
+//! reached each target), reach counts, and a mean final gap. Everything is
+//! computed in declaration order from per-run quantities that are themselves
+//! deterministic, so rendered summaries are byte-identical across `--jobs`
+//! levels.
+
+use super::exec::{CellResult, CellStatus};
+use super::jsonl::Json;
+use anyhow::{Context, Result};
+use std::cmp::Ordering;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Aggregate of one sweep group (same coordinates, all seeds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupSummary {
+    pub group: String,
+    /// Seed-axis size (runs attempted).
+    pub n_runs: usize,
+    /// Runs that completed without error/panic.
+    pub n_ok: usize,
+    /// Mean final gap over ok runs (`None` if none succeeded).
+    pub final_gap_mean: Option<f64>,
+    /// One aggregate per requested gap target, in target order.
+    pub per_target: Vec<TargetAgg>,
+}
+
+/// Bits-to-reach aggregate for one gap target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TargetAgg {
+    pub target: f64,
+    /// How many of the group's runs reached the target.
+    pub reached: usize,
+    /// Mean total (up+down+setup) bits/node over the runs that reached it.
+    pub bits_mean: Option<f64>,
+    /// Population standard deviation over the same runs.
+    pub bits_std: Option<f64>,
+}
+
+fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+}
+
+fn pop_std(xs: &[f64]) -> Option<f64> {
+    let m = mean(xs)?;
+    let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    Some(var.sqrt())
+}
+
+/// Reduce per-run results (in declaration order) to per-group summaries.
+/// Groups appear in first-declaration order.
+pub fn aggregate(results: &[CellResult], targets: &[f64]) -> Vec<GroupSummary> {
+    let mut order: Vec<&str> = Vec::new();
+    let mut buckets: HashMap<&str, Vec<&CellResult>> = HashMap::new();
+    for r in results {
+        let entry = buckets.entry(r.group.as_str()).or_default();
+        if entry.is_empty() {
+            order.push(r.group.as_str());
+        }
+        entry.push(r);
+    }
+    order
+        .iter()
+        .map(|g| {
+            let runs = &buckets[g];
+            let ok: Vec<&&CellResult> = runs.iter().filter(|r| r.status.is_ok()).collect();
+            let gaps: Vec<f64> = ok
+                .iter()
+                .filter_map(|r| r.history.as_ref().map(|h| h.final_gap()))
+                .collect();
+            let per_target = targets
+                .iter()
+                .map(|&t| {
+                    let bits: Vec<f64> = ok
+                        .iter()
+                        .filter_map(|r| r.history.as_ref().and_then(|h| h.bits_to_reach(t)))
+                        .collect();
+                    TargetAgg {
+                        target: t,
+                        reached: bits.len(),
+                        bits_mean: mean(&bits),
+                        bits_std: pop_std(&bits),
+                    }
+                })
+                .collect();
+            GroupSummary {
+                group: g.to_string(),
+                n_runs: runs.len(),
+                n_ok: ok.len(),
+                final_gap_mean: mean(&gaps),
+                per_target,
+            }
+        })
+        .collect()
+}
+
+fn cmp_opt(a: Option<f64>, b: Option<f64>) -> Ordering {
+    match (a, b) {
+        (Some(x), Some(y)) => x.partial_cmp(&y).unwrap_or(Ordering::Equal),
+        (Some(_), None) => Ordering::Less, // reaching at all beats not reaching
+        (None, Some(_)) => Ordering::Greater,
+        (None, None) => Ordering::Equal,
+    }
+}
+
+/// Best-cell ranking: indices into `summaries`, best first. A group is
+/// better if it gets more seeds to the *strictest* target, then needs fewer
+/// mean bits to get there; ties fall through to looser targets and finally
+/// to the group name (total order ⇒ deterministic output).
+pub fn ranked(summaries: &[GroupSummary]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..summaries.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let (ga, gb) = (&summaries[a], &summaries[b]);
+        let n = ga.per_target.len().min(gb.per_target.len());
+        // Strictest target is last in SWEEP_TARGETS order.
+        for t in (0..n).rev() {
+            let (ta, tb) = (&ga.per_target[t], &gb.per_target[t]);
+            let by_reached = tb.reached.cmp(&ta.reached);
+            if by_reached != Ordering::Equal {
+                return by_reached;
+            }
+            let by_bits = cmp_opt(ta.bits_mean, tb.bits_mean);
+            if by_bits != Ordering::Equal {
+                return by_bits;
+            }
+        }
+        ga.group.cmp(&gb.group)
+    });
+    idx
+}
+
+/// JSONL row for one executed run (the streaming `runs.jsonl` sink).
+pub fn run_row(res: &CellResult, targets: &[f64]) -> Json {
+    let mut kvs: Vec<(String, Json)> = vec![
+        ("cell".into(), Json::num(res.id as f64)),
+        ("group".into(), Json::str(res.group.clone())),
+        ("dataset".into(), Json::str(res.dataset.clone())),
+        ("seed".into(), Json::num(res.data_seed as f64)),
+        ("rng_seed".into(), Json::str(format!("{:#018x}", res.rng_seed))),
+        (
+            "status".into(),
+            Json::str(match &res.status {
+                CellStatus::Ok => "ok",
+                CellStatus::Failed(_) => "failed",
+            }),
+        ),
+    ];
+    if let CellStatus::Failed(msg) = &res.status {
+        kvs.push(("error".into(), Json::str(msg.clone())));
+    }
+    if let Some(s) = res.summary(targets) {
+        kvs.push(("label".into(), Json::str(s.label)));
+        kvs.push(("rounds".into(), Json::num(s.rounds as f64)));
+        kvs.push(("final_gap".into(), Json::num(s.final_gap)));
+        kvs.push(("bits_per_node".into(), Json::num(s.bits_per_node)));
+        kvs.push(("bits_up_per_node".into(), Json::num(s.bits_up_per_node)));
+        kvs.push((
+            "bits_to".into(),
+            Json::Arr(
+                s.bits_to_targets
+                    .iter()
+                    .map(|t| {
+                        Json::Obj(vec![
+                            ("target".into(), Json::num(t.target)),
+                            ("total".into(), Json::opt_num(t.total)),
+                            ("uplink".into(), Json::opt_num(t.uplink)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    kvs.push(("wall_ms".into(), Json::num(res.wall_ms)));
+    Json::Obj(kvs)
+}
+
+impl GroupSummary {
+    /// Serialize one summary row (the `summary.jsonl` sink).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("group".into(), Json::str(self.group.clone())),
+            ("n_runs".into(), Json::num(self.n_runs as f64)),
+            ("n_ok".into(), Json::num(self.n_ok as f64)),
+            ("final_gap_mean".into(), Json::opt_num(self.final_gap_mean)),
+            (
+                "targets".into(),
+                Json::Arr(
+                    self.per_target
+                        .iter()
+                        .map(|t| {
+                            Json::Obj(vec![
+                                ("target".into(), Json::num(t.target)),
+                                ("reached".into(), Json::num(t.reached as f64)),
+                                ("bits_mean".into(), Json::opt_num(t.bits_mean)),
+                                ("bits_std".into(), Json::opt_num(t.bits_std)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a summary row back (ignores unknown fields such as `rank`).
+    pub fn from_json(j: &Json) -> Result<GroupSummary> {
+        let field = |k: &str| j.get(k).with_context(|| format!("summary row missing '{k}'"));
+        let group = field("group")?.as_str().context("'group' not a string")?.to_string();
+        let n_runs = field("n_runs")?.as_usize().context("'n_runs' not a count")?;
+        let n_ok = field("n_ok")?.as_usize().context("'n_ok' not a count")?;
+        let final_gap_mean = field("final_gap_mean")?.as_f64();
+        let per_target = field("targets")?
+            .as_arr()
+            .context("'targets' not an array")?
+            .iter()
+            .map(|t| {
+                let tf = |k: &str| {
+                    t.get(k).with_context(|| format!("target aggregate missing '{k}'"))
+                };
+                Ok(TargetAgg {
+                    target: tf("target")?.as_f64().context("'target' not a number")?,
+                    reached: tf("reached")?.as_usize().context("'reached' not a count")?,
+                    bits_mean: tf("bits_mean")?.as_f64(),
+                    bits_std: tf("bits_std")?.as_f64(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(GroupSummary { group, n_runs, n_ok, final_gap_mean, per_target })
+    }
+}
+
+/// Terminal leaderboard for the end of a sweep.
+pub fn summary_table(summaries: &[GroupSummary], order: &[usize]) -> String {
+    let mut s = format!(
+        "{:<4} {:<58} {:>6} {:>22} {:>14}\n",
+        "rank", "cell", "ok", "bits@strictest (mean)", "final gap"
+    );
+    for (pos, &i) in order.iter().enumerate() {
+        let g = &summaries[i];
+        let strictest = g.per_target.last();
+        let bits = strictest
+            .and_then(|t| t.bits_mean.map(|m| format!("{m:.3e} (n={})", t.reached)))
+            .unwrap_or_else(|| "—".into());
+        let gap = g
+            .final_gap_mean
+            .map(|x| format!("{x:.2e}"))
+            .unwrap_or_else(|| "—".into());
+        let _ = writeln!(
+            s,
+            "{:<4} {:<58} {:>3}/{:<2} {:>22} {:>14}",
+            pos + 1,
+            g.group,
+            g.n_ok,
+            g.n_runs,
+            bits,
+            gap
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{History, RoundRecord};
+
+    fn fake_result(id: usize, group: &str, seed: u64, gaps: &[f64]) -> CellResult {
+        let mut h = History::new(group);
+        for (i, &gap) in gaps.iter().enumerate() {
+            h.push(RoundRecord {
+                round: i,
+                bits_up_per_node: 100.0 * (i + 1) as f64,
+                bits_down_per_node: 0.0,
+                gap,
+                grad_norm: gap,
+                dist_to_opt: gap,
+            });
+        }
+        CellResult {
+            id,
+            group: group.into(),
+            data_seed: seed,
+            rng_seed: seed.wrapping_mul(0x9E37),
+            dataset: "t".into(),
+            status: CellStatus::Ok,
+            history: Some(h),
+            wall_ms: 1.0,
+        }
+    }
+
+    fn failed_result(id: usize, group: &str, seed: u64) -> CellResult {
+        CellResult {
+            id,
+            group: group.into(),
+            data_seed: seed,
+            rng_seed: 0,
+            dataset: "t".into(),
+            status: CellStatus::Failed("boom".into()),
+            history: None,
+            wall_ms: 1.0,
+        }
+    }
+
+    const T: [f64; 2] = [1e-2, 1e-6];
+
+    #[test]
+    fn aggregate_means_and_stds() {
+        let results = vec![
+            fake_result(0, "a", 1, &[1.0, 1e-3, 1e-7]), // reaches both at 200/300 bits
+            fake_result(1, "a", 2, &[1.0, 1e-3, 1e-3]), // reaches 1e-2 at 200, never 1e-6
+            failed_result(2, "a", 3),
+            fake_result(3, "b", 1, &[1e-7]), // both targets at 100 bits
+        ];
+        let s = aggregate(&results, &T);
+        assert_eq!(s.len(), 2);
+        let a = &s[0];
+        assert_eq!(a.group, "a");
+        assert_eq!(a.n_runs, 3);
+        assert_eq!(a.n_ok, 2);
+        assert_eq!(a.per_target[0].reached, 2);
+        assert_eq!(a.per_target[0].bits_mean, Some(200.0));
+        assert_eq!(a.per_target[0].bits_std, Some(0.0));
+        assert_eq!(a.per_target[1].reached, 1);
+        assert_eq!(a.per_target[1].bits_mean, Some(300.0));
+        let gap_mean = (1e-7 + 1e-3) / 2.0;
+        assert!((a.final_gap_mean.unwrap() - gap_mean).abs() < 1e-15);
+        let b = &s[1];
+        assert_eq!(b.n_runs, 1);
+        assert_eq!(b.per_target[1].bits_mean, Some(100.0));
+    }
+
+    #[test]
+    fn ranking_prefers_reach_then_bits() {
+        let results = vec![
+            fake_result(0, "slow-but-reaches", 1, &[1.0, 1e-3, 1e-3, 1e-3, 1e-7]), // 500 bits
+            fake_result(1, "fast", 1, &[1e-7]),                                    // 100 bits
+            fake_result(2, "never", 1, &[1.0, 1e-3]),
+        ];
+        let s = aggregate(&results, &T);
+        let order = ranked(&s);
+        assert_eq!(s[order[0]].group, "fast");
+        assert_eq!(s[order[1]].group, "slow-but-reaches");
+        assert_eq!(s[order[2]].group, "never");
+        let table = summary_table(&s, &order);
+        assert!(table.contains("fast"));
+        assert_eq!(table.lines().count(), 4);
+    }
+
+    #[test]
+    fn summary_rows_roundtrip_through_jsonl() {
+        let results = vec![
+            fake_result(0, "a", 1, &[1.0, 1e-3, 1e-7]),
+            fake_result(1, "a", 2, &[1.0, 1e-4, 1e-8]),
+            failed_result(2, "b", 1),
+        ];
+        let summaries = aggregate(&results, &T);
+        for s in &summaries {
+            let line = s.to_json().render();
+            let parsed = GroupSummary::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(&parsed, s);
+            // Render → parse → render is byte-stable.
+            assert_eq!(parsed.to_json().render(), line);
+        }
+        // Unknown fields (e.g. an injected rank) are tolerated.
+        let mut j = summaries[0].to_json();
+        if let Json::Obj(kvs) = &mut j {
+            kvs.insert(0, ("rank".into(), Json::Num(1.0)));
+        }
+        let parsed = GroupSummary::from_json(&j).unwrap();
+        assert_eq!(parsed, summaries[0]);
+        // Missing fields are errors.
+        assert!(GroupSummary::from_json(&Json::parse("{\"group\":\"x\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_row_shapes() {
+        let ok = run_row(&fake_result(0, "a", 1, &[1e-7]), &T);
+        assert_eq!(ok.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(ok.get("rounds").unwrap().as_usize(), Some(1));
+        let bits_to = ok.get("bits_to").unwrap().as_arr().unwrap();
+        assert_eq!(bits_to.len(), 2);
+        assert_eq!(bits_to[0].get("total").unwrap().as_f64(), Some(100.0));
+        let text = ok.render();
+        assert_eq!(Json::parse(&text).unwrap(), ok);
+
+        let bad = run_row(&failed_result(1, "b", 2), &T);
+        assert_eq!(bad.get("status").unwrap().as_str(), Some("failed"));
+        assert_eq!(bad.get("error").unwrap().as_str(), Some("boom"));
+        assert!(bad.get("final_gap").is_none());
+    }
+}

@@ -1,0 +1,235 @@
+//! Thread-pool executor for sweep cells.
+//!
+//! Federated runs are mutually independent, so the engine fans them out over
+//! `jobs` OS threads (`std::thread::scope` + an atomic work cursor + an mpsc
+//! results channel — no external dependencies). Each worker builds its *own*
+//! dataset and problem instances from the cell's [`DatasetRef`] recipe,
+//! because [`crate::problem::LocalProblem`] is intentionally non-`Sync`.
+//!
+//! Guarantees:
+//! * **Determinism.** A cell's result is a pure function of the cell (its
+//!   dataset recipe + `RunConfig`, including the derived seed); scheduling
+//!   order cannot leak in. Results are returned in declaration order, so any
+//!   downstream aggregation is byte-identical at `--jobs 1` and `--jobs N`.
+//! * **Panic isolation.** A cell that panics (or returns an error, e.g. a
+//!   diverging configuration) is recorded as `CellStatus::Failed` and the
+//!   rest of the sweep proceeds.
+
+use super::spec::SweepCell;
+use crate::coordinator::run_federated;
+use crate::metrics::{History, RunSummary};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Gap targets every sweep reports bits-to-reach for (the paper's summary
+/// thresholds).
+pub const SWEEP_TARGETS: [f64; 3] = [1e-4, 1e-7, 1e-10];
+
+/// Terminal state of one cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellStatus {
+    Ok,
+    /// Run error or panic, with the message. The sweep continues.
+    Failed(String),
+}
+
+impl CellStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CellStatus::Ok)
+    }
+}
+
+/// Outcome of one executed cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub id: usize,
+    pub group: String,
+    pub data_seed: u64,
+    /// Derived RNG seed the run actually used (`cfg.seed`).
+    pub rng_seed: u64,
+    /// Name of the dataset as built (e.g. `a1a-s`).
+    pub dataset: String,
+    pub status: CellStatus,
+    /// Full run trace (`None` on failure).
+    pub history: Option<History>,
+    /// Wall-clock of this cell, for progress reporting only — never fed into
+    /// aggregates (it would break cross-`--jobs` determinism).
+    pub wall_ms: f64,
+}
+
+impl CellResult {
+    /// Condensed metrics against `targets` (`None` on failure).
+    pub fn summary(&self, targets: &[f64]) -> Option<RunSummary> {
+        self.history.as_ref().map(|h| h.summarize(targets))
+    }
+}
+
+/// Worker count to use when the user didn't specify `--jobs`.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Execute every cell across `jobs` worker threads.
+///
+/// `on_done` fires on the calling thread in *completion* order as runs
+/// finish — use it for progress lines and streaming JSONL sinks. The
+/// returned vector is in *declaration* order (`cells[i]` ↦ `results[i]`),
+/// independent of scheduling.
+pub fn run_cells(
+    cells: &[SweepCell],
+    jobs: usize,
+    mut on_done: impl FnMut(&CellResult),
+) -> Vec<CellResult> {
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let jobs = jobs.clamp(1, cells.len());
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
+    let mut slots: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let res = run_cell(&cells[i]);
+                if tx.send((i, res)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, res) in rx {
+            on_done(&res);
+            slots[i] = Some(res);
+        }
+    });
+    slots.into_iter().flatten().collect()
+}
+
+/// Run one cell with panic isolation.
+fn run_cell(cell: &SweepCell) -> CellResult {
+    let start = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let fed = cell.dataset.build(cell.data_seed);
+        let name = fed.name.clone();
+        run_federated(&fed, &cell.cfg).map(|out| (name, out))
+    }));
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let (dataset, status, history) = match outcome {
+        Ok(Ok((name, out))) => (name, CellStatus::Ok, Some(out.history)),
+        Ok(Err(e)) => (cell.dataset.name(), CellStatus::Failed(format!("{e:#}")), None),
+        Err(payload) => (cell.dataset.name(), CellStatus::Failed(panic_message(payload)), None),
+    };
+    CellResult {
+        id: cell.id,
+        group: cell.group.clone(),
+        data_seed: cell.data_seed,
+        rng_seed: cell.cfg.seed,
+        dataset,
+        status,
+        history,
+        wall_ms,
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::CompressorSpec;
+    use crate::config::{Algorithm, RunConfig};
+    use crate::data::SyntheticSpec;
+    use crate::sweep::spec::{DatasetRef, SweepSpec};
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            algos: vec![Algorithm::Bl1, Algorithm::FedNl],
+            datasets: vec![DatasetRef::Synthetic(SyntheticSpec {
+                n_clients: 3,
+                m_per_client: 20,
+                dim: 8,
+                intrinsic_dim: 3,
+                noise: 0.0,
+                seed: 0,
+            })],
+            hess_comps: vec![CompressorSpec::TopK(3)],
+            seeds: vec![1, 2],
+            base: RunConfig { rounds: 40, target_gap: 1e-10, ..RunConfig::default() },
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn executor_matches_across_job_counts() {
+        let cells = tiny_spec().expand();
+        assert_eq!(cells.len(), 4);
+        let serial = run_cells(&cells, 1, |_| {});
+        let parallel = run_cells(&cells, 8, |_| {});
+        assert_eq!(serial.len(), 4);
+        assert_eq!(parallel.len(), 4);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.group, b.group);
+            assert_eq!(a.status, b.status);
+            assert!(a.status.is_ok(), "{:?}", a.status);
+            // Bit-for-bit identical traces regardless of scheduling.
+            let (ha, hb) = (a.history.as_ref().unwrap(), b.history.as_ref().unwrap());
+            assert_eq!(ha.records, hb.records);
+            assert_eq!(ha.setup_bits_per_node, hb.setup_bits_per_node);
+        }
+    }
+
+    #[test]
+    fn on_done_streams_every_cell_and_order_is_declaration_order() {
+        let cells = tiny_spec().expand();
+        let mut seen = Vec::new();
+        let results = run_cells(&cells, 2, |r| seen.push(r.id));
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i);
+        }
+    }
+
+    #[test]
+    fn failed_cell_does_not_kill_the_sweep() {
+        // A RankR *gradient* compressor panics in build_vec — a worst-case
+        // in-cell failure (panic, not Err). The sweep must survive it.
+        let mut cells = tiny_spec().expand();
+        cells[1].cfg.algorithm = Algorithm::Diana;
+        cells[1].cfg.grad_comp = CompressorSpec::RankR(1);
+        let results = run_cells(&cells, 4, |_| {});
+        assert_eq!(results.len(), 4);
+        assert!(results[0].status.is_ok());
+        assert!(!results[1].status.is_ok());
+        assert!(results[1].history.is_none());
+        match &results[1].status {
+            CellStatus::Failed(msg) => assert!(msg.contains("panic"), "{msg}"),
+            CellStatus::Ok => unreachable!(),
+        }
+        assert!(results[2].status.is_ok());
+        assert!(results[3].status.is_ok());
+    }
+
+    #[test]
+    fn empty_cell_list_is_a_noop() {
+        let results = run_cells(&[], 4, |_| panic!("no cells, no callbacks"));
+        assert!(results.is_empty());
+    }
+}

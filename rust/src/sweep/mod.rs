@@ -1,0 +1,43 @@
+//! The parallel sweep engine — declarative run grids, multi-threaded
+//! execution, a streaming JSONL result sink, and cross-seed aggregation.
+//!
+//! The paper's claims are comparative: BL1/BL2/BL3 against the FedNL family
+//! and first-order baselines, across datasets, compressors, bases,
+//! participation levels and seeds. This module makes such comparisons a
+//! first-class, parallel primitive instead of hand-written sequential loops:
+//!
+//! 1. **Declare** a grid: [`SweepSpec`] is a cartesian product over the
+//!    comparison axes, expanded by [`SweepSpec::expand`] into concrete
+//!    [`SweepCell`]s with deterministic per-cell seed derivation
+//!    ([`derive_cell_seed`]).
+//! 2. **Execute**: [`run_cells`] fans the cells out over a `std::thread`
+//!    pool. Workers build their own dataset/problem handles (local problems
+//!    are deliberately non-`Sync`), and a panicking or diverging cell is
+//!    isolated as a [`CellStatus::Failed`] result instead of killing the
+//!    sweep.
+//! 3. **Sink**: each finished run can stream a [`Json`] row
+//!    ([`run_row`]) to `runs/<sweep>/runs.jsonl` from the `on_done`
+//!    callback.
+//! 4. **Aggregate**: [`aggregate`] reduces seeds to per-group mean/std
+//!    bits-to-target-gap, [`ranked`] orders the groups best-first, and
+//!    [`GroupSummary::to_json`] rows form `summary.jsonl`. Aggregates are
+//!    byte-identical at any `--jobs` level because every per-run quantity is
+//!    a pure function of its cell.
+//!
+//! Driven from the CLI as `repro sweep --algo bl1,fednl --hess-comp
+//! topk:1,topk:8 --seeds 1..3 --jobs 8`, and used by
+//! [`crate::experiments`] to run every figure/table through the same
+//! engine.
+
+mod agg;
+mod exec;
+mod jsonl;
+mod spec;
+
+pub use agg::{aggregate, ranked, run_row, summary_table, GroupSummary, TargetAgg};
+pub use exec::{default_jobs, run_cells, CellResult, CellStatus, SWEEP_TARGETS};
+pub use jsonl::Json;
+pub use spec::{
+    derive_cell_seed, parse_axis, parse_bases, parse_datasets, parse_seeds, parse_taus,
+    DatasetRef, SweepCell, SweepSpec,
+};

@@ -1,0 +1,455 @@
+//! Declarative sweep grids: a [`SweepSpec`] is a cartesian product over the
+//! paper's comparison axes (algorithm × dataset × compressors × basis × ξ ×
+//! τ × seed) that expands into concrete [`SweepCell`]s, each a fully resolved
+//! `(dataset recipe, RunConfig)` pair with a deterministically derived RNG
+//! seed.
+//!
+//! Two seeds matter per cell:
+//! * the **seed axis** value (`SweepCell::data_seed`) drives the dataset
+//!   generator, so every cell at the same seed-axis value sees *identical
+//!   data* — method comparisons stay apples-to-apples;
+//! * the **derived cell seed** (`RunConfig::seed`, from
+//!   [`derive_cell_seed`]) drives the run's internal randomness (compressor
+//!   sampling, participation draws) and is disjoint across cells, so no two
+//!   cells share a random stream. Same spec ⇒ same derived seeds, always.
+
+use crate::compressors::CompressorSpec;
+use crate::config::{Algorithm, BasisKind, RunConfig};
+use crate::data;
+use crate::data::{DatasetEntry, FederatedDataset, SyntheticSpec};
+use crate::rng::splitmix64;
+use anyhow::{bail, Context, Result};
+
+/// Where a sweep cell's dataset comes from. Cells carry a *recipe*, not
+/// materialized data: every worker thread builds its own dataset and problem
+/// instances because [`crate::problem::LocalProblem`] is deliberately
+/// non-`Sync` (the PJRT implementation holds single-threaded client handles).
+#[derive(Clone, Debug)]
+pub enum DatasetRef {
+    /// A Table-2 registry row, at laptop or paper scale.
+    Registry { entry: DatasetEntry, full_scale: bool },
+    /// An explicit synthetic shape (the `seed` field is overridden per cell).
+    Synthetic(SyntheticSpec),
+}
+
+impl DatasetRef {
+    /// Stable display name (matches the name the built dataset carries).
+    pub fn name(&self) -> String {
+        match self {
+            DatasetRef::Registry { entry, full_scale } => {
+                if *full_scale {
+                    entry.name.to_string()
+                } else {
+                    format!("{}-s", entry.name)
+                }
+            }
+            DatasetRef::Synthetic(_) => "synth".into(),
+        }
+    }
+
+    /// Build the dataset with `data_seed` driving the generator.
+    pub fn build(&self, data_seed: u64) -> FederatedDataset {
+        match self {
+            DatasetRef::Registry { entry, full_scale } => entry.build(data_seed, *full_scale),
+            DatasetRef::Synthetic(spec) => {
+                let mut s = *spec;
+                s.seed = data_seed;
+                FederatedDataset::synthetic(&s)
+            }
+        }
+    }
+}
+
+/// One concrete run of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in expansion/declaration order (stable aggregation order).
+    pub id: usize,
+    /// Cell coordinates *minus* the seed axis — the cross-seed aggregation
+    /// group key.
+    pub group: String,
+    /// Seed-axis value; also the dataset generator seed.
+    pub data_seed: u64,
+    pub dataset: DatasetRef,
+    /// Fully resolved configuration; `cfg.seed` is the derived cell seed.
+    pub cfg: RunConfig,
+}
+
+impl SweepCell {
+    /// Full cell key (group + seed axis), unique within a sweep.
+    pub fn key(&self) -> String {
+        format!("{} seed={}", self.group, self.data_seed)
+    }
+}
+
+/// Derive the RNG seed for one cell — a pure function of (master seed, cell
+/// group key, seed-axis value). FNV-1a over the group string, mixed with the
+/// other inputs and finalized through SplitMix64.
+pub fn derive_cell_seed(master: u64, group: &str, seed_axis: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in group.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut s = master
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ h
+        ^ seed_axis.rotate_left(32);
+    let a = splitmix64(&mut s);
+    let b = splitmix64(&mut s);
+    a ^ b.rotate_left(1)
+}
+
+/// A declarative run grid. Every `Vec` is one cartesian axis; `base` supplies
+/// everything the axes don't cover (rounds, λ, stopping rules, ...).
+///
+/// Expansion order is fixed and documented: algorithm (outermost), dataset,
+/// hessian compressor, model compressor, gradient compressor, basis, ξ (p),
+/// τ, seed (innermost) — so consecutive cells are the same configuration at
+/// different seeds.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub algos: Vec<Algorithm>,
+    pub datasets: Vec<DatasetRef>,
+    pub hess_comps: Vec<CompressorSpec>,
+    pub model_comps: Vec<CompressorSpec>,
+    pub grad_comps: Vec<CompressorSpec>,
+    /// `None` ⇒ the algorithm's paper-default basis.
+    pub bases: Vec<Option<BasisKind>>,
+    /// Gradient-send probabilities ξ.
+    pub ps: Vec<f64>,
+    /// Participation levels τ (`None` ⇒ all clients).
+    pub taus: Vec<Option<usize>>,
+    /// Seed axis (dataset seeds; cell RNG seeds are derived from these).
+    pub seeds: Vec<u64>,
+    /// Template for non-axis configuration.
+    pub base: RunConfig,
+    /// Mixed into every derived cell seed; vary it to re-randomize a whole
+    /// sweep without touching the seed axis.
+    pub master_seed: u64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        let base = RunConfig::default();
+        SweepSpec {
+            algos: vec![base.algorithm],
+            datasets: vec![DatasetRef::Registry {
+                entry: data::find("a1a").expect("a1a in registry"),
+                full_scale: false,
+            }],
+            hess_comps: vec![base.hess_comp.clone()],
+            model_comps: vec![base.model_comp.clone()],
+            grad_comps: vec![base.grad_comp.clone()],
+            bases: vec![base.basis],
+            ps: vec![base.p],
+            taus: vec![base.tau],
+            seeds: vec![1],
+            base,
+            master_seed: 0,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// Number of cells the spec expands to.
+    pub fn n_cells(&self) -> usize {
+        self.algos.len()
+            * self.datasets.len()
+            * self.hess_comps.len()
+            * self.model_comps.len()
+            * self.grad_comps.len()
+            * self.bases.len()
+            * self.ps.len()
+            * self.taus.len()
+            * self.seeds.len()
+    }
+
+    /// Expand the grid into concrete cells, in the documented axis order.
+    pub fn expand(&self) -> Vec<SweepCell> {
+        let mut cells = Vec::with_capacity(self.n_cells());
+        for algo in &self.algos {
+            for ds in &self.datasets {
+                for hc in &self.hess_comps {
+                    for mc in &self.model_comps {
+                        for gc in &self.grad_comps {
+                            for basis in &self.bases {
+                                for &p in &self.ps {
+                                    for &tau in &self.taus {
+                                        let group = format!(
+                                            "algo={algo} ds={} hess={hc} model={mc} grad={gc} basis={} p={p} tau={}",
+                                            ds.name(),
+                                            basis.map(|b| b.name()).unwrap_or("default"),
+                                            tau.map(|t| t.to_string())
+                                                .unwrap_or_else(|| "all".into()),
+                                        );
+                                        for &seed in &self.seeds {
+                                            let cfg = RunConfig {
+                                                algorithm: *algo,
+                                                hess_comp: hc.clone(),
+                                                model_comp: mc.clone(),
+                                                grad_comp: gc.clone(),
+                                                basis: *basis,
+                                                p,
+                                                tau,
+                                                seed: derive_cell_seed(
+                                                    self.master_seed,
+                                                    &group,
+                                                    seed,
+                                                ),
+                                                ..self.base.clone()
+                                            };
+                                            cells.push(SweepCell {
+                                                id: cells.len(),
+                                                group: group.clone(),
+                                                data_seed: seed,
+                                                dataset: ds.clone(),
+                                                cfg,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+// ── CLI grid-syntax parsers ─────────────────────────────────────────────
+
+/// Parse a comma-separated axis (`bl1,fednl`, `topk:1,rank:1`, `0.2,1.0`).
+pub fn parse_axis<T>(s: &str) -> Result<Vec<T>>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(part.parse::<T>().map_err(|e| anyhow::anyhow!("'{part}': {e}"))?);
+    }
+    if out.is_empty() {
+        bail!("empty axis '{s}'");
+    }
+    Ok(out)
+}
+
+/// Seed axis: either an inclusive range `1..5` (⇒ 1,2,3,4,5) or a comma
+/// list `1,2,7`.
+pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    let t = s.trim();
+    if let Some((a, b)) = t.split_once("..") {
+        let lo: u64 = a.trim().parse().with_context(|| format!("bad seed range '{s}'"))?;
+        let hi: u64 = b.trim().parse().with_context(|| format!("bad seed range '{s}'"))?;
+        if hi < lo {
+            bail!("seed range '{s}' is empty (use lo..hi, inclusive)");
+        }
+        if hi - lo >= 100_000 {
+            bail!("seed range '{s}' has {} seeds; that is surely a typo", hi - lo + 1);
+        }
+        return Ok((lo..=hi).collect());
+    }
+    parse_axis::<u64>(t)
+}
+
+/// τ axis: `all` (full participation) or client counts, comma-separated.
+pub fn parse_taus(s: &str) -> Result<Vec<Option<usize>>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if part.eq_ignore_ascii_case("all") {
+            out.push(None);
+        } else {
+            out.push(Some(
+                part.parse::<usize>().with_context(|| format!("bad tau '{part}'"))?,
+            ));
+        }
+    }
+    if out.is_empty() {
+        bail!("empty tau axis '{s}'");
+    }
+    Ok(out)
+}
+
+/// Basis axis: `default` (per-algorithm paper default) or basis kinds.
+pub fn parse_bases(s: &str) -> Result<Vec<Option<BasisKind>>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if part.eq_ignore_ascii_case("default") {
+            out.push(None);
+        } else {
+            out.push(Some(part.parse::<BasisKind>()?));
+        }
+    }
+    if out.is_empty() {
+        bail!("empty basis axis '{s}'");
+    }
+    Ok(out)
+}
+
+/// Dataset axis: registry names (`a1a,w2a`) or `synth`, comma-separated.
+pub fn parse_datasets(s: &str, full_scale: bool) -> Result<Vec<DatasetRef>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if part.eq_ignore_ascii_case("synth") {
+            out.push(DatasetRef::Synthetic(SyntheticSpec::default()));
+        } else {
+            let entry = data::find(part)
+                .with_context(|| format!("unknown dataset '{part}' (see `repro list`)"))?;
+            out.push(DatasetRef::Registry { entry, full_scale });
+        }
+    }
+    if out.is_empty() {
+        bail!("empty dataset axis '{s}'");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_by_two() -> SweepSpec {
+        SweepSpec {
+            algos: vec![Algorithm::Bl1, Algorithm::FedNl],
+            hess_comps: vec![CompressorSpec::TopK(1), CompressorSpec::TopK(8)],
+            seeds: vec![1, 2, 3],
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn expansion_count_and_order() {
+        let spec = two_by_two();
+        assert_eq!(spec.n_cells(), 12);
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 12);
+        // ids are positions.
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        // Seed is the innermost axis: cells 0..3 share a group.
+        assert_eq!(cells[0].group, cells[1].group);
+        assert_eq!(cells[0].group, cells[2].group);
+        assert_ne!(cells[2].group, cells[3].group);
+        assert_eq!(cells[0].data_seed, 1);
+        assert_eq!(cells[1].data_seed, 2);
+        assert_eq!(cells[2].data_seed, 3);
+        // Algorithm is the outermost axis.
+        assert_eq!(cells[0].cfg.algorithm, Algorithm::Bl1);
+        assert_eq!(cells[11].cfg.algorithm, Algorithm::FedNl);
+        // Axis overrides land in the config.
+        assert_eq!(cells[0].cfg.hess_comp, CompressorSpec::TopK(1));
+        assert_eq!(cells[3].cfg.hess_comp, CompressorSpec::TopK(8));
+        // Non-axis template fields come from base.
+        assert_eq!(cells[7].cfg.rounds, spec.base.rounds);
+        // Keys are unique.
+        let keys: std::collections::HashSet<String> =
+            cells.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), 12);
+    }
+
+    #[test]
+    fn seed_derivation_is_deterministic_and_disjoint() {
+        let spec = two_by_two();
+        let a = spec.expand();
+        let b = spec.expand();
+        // Same spec ⇒ identical derived seeds.
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cfg.seed, y.cfg.seed);
+        }
+        // Disjoint across cells.
+        let seeds: std::collections::HashSet<u64> = a.iter().map(|c| c.cfg.seed).collect();
+        assert_eq!(seeds.len(), a.len(), "derived cell seeds must not collide");
+        // Master seed re-randomizes everything.
+        let spec2 = SweepSpec { master_seed: 99, ..two_by_two() };
+        let c = spec2.expand();
+        let changed = a.iter().zip(&c).filter(|(x, y)| x.cfg.seed != y.cfg.seed).count();
+        assert_eq!(changed, a.len());
+        // Pure-function sanity for the primitive itself.
+        assert_eq!(derive_cell_seed(0, "g", 1), derive_cell_seed(0, "g", 1));
+        assert_ne!(derive_cell_seed(0, "g", 1), derive_cell_seed(0, "g", 2));
+        assert_ne!(derive_cell_seed(0, "g", 1), derive_cell_seed(0, "h", 1));
+        assert_ne!(derive_cell_seed(0, "g", 1), derive_cell_seed(1, "g", 1));
+    }
+
+    #[test]
+    fn dataset_ref_names_and_builds() {
+        let reg = DatasetRef::Registry { entry: data::find("a1a").unwrap(), full_scale: false };
+        assert_eq!(reg.name(), "a1a-s");
+        let fed = reg.build(7);
+        assert_eq!(fed.name, "a1a-s");
+        assert_eq!(fed.n_clients(), 8);
+        // Same data_seed ⇒ identical data; different ⇒ different.
+        let fed2 = reg.build(7);
+        assert_eq!(fed.clients[0].a, fed2.clients[0].a);
+        let fed3 = reg.build(8);
+        assert_ne!(fed.clients[0].a, fed3.clients[0].a);
+
+        let synth = DatasetRef::Synthetic(SyntheticSpec { seed: 0, ..SyntheticSpec::default() });
+        assert_eq!(synth.name(), "synth");
+        assert_eq!(synth.build(3).n_clients(), SyntheticSpec::default().n_clients);
+    }
+
+    #[test]
+    fn parse_axis_forms() {
+        let algos: Vec<Algorithm> = parse_axis("bl1, fednl,diana").unwrap();
+        assert_eq!(algos, vec![Algorithm::Bl1, Algorithm::FedNl, Algorithm::Diana]);
+        let comps: Vec<CompressorSpec> = parse_axis("topk:1,rank:2,rrank:1:16").unwrap();
+        assert_eq!(
+            comps,
+            vec![
+                CompressorSpec::TopK(1),
+                CompressorSpec::RankR(2),
+                CompressorSpec::RRank(1, Some(16))
+            ]
+        );
+        let ps: Vec<f64> = parse_axis("1.0,0.5").unwrap();
+        assert_eq!(ps, vec![1.0, 0.5]);
+        assert!(parse_axis::<Algorithm>("bl1,warp").is_err());
+        assert!(parse_axis::<f64>(" , ").is_err());
+    }
+
+    #[test]
+    fn parse_seed_ranges() {
+        assert_eq!(parse_seeds("1..5").unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(parse_seeds("7..7").unwrap(), vec![7]);
+        assert_eq!(parse_seeds("3,1,4").unwrap(), vec![3, 1, 4]);
+        assert!(parse_seeds("5..1").is_err());
+        assert!(parse_seeds("a..b").is_err());
+    }
+
+    #[test]
+    fn parse_tau_basis_dataset_axes() {
+        assert_eq!(parse_taus("all,4").unwrap(), vec![None, Some(4)]);
+        assert!(parse_taus("x").is_err());
+        assert_eq!(
+            parse_bases("default,psd").unwrap(),
+            vec![None, Some(BasisKind::Psd)]
+        );
+        let ds = parse_datasets("a1a,w2a,synth", false).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds[0].name(), "a1a-s");
+        assert_eq!(ds[2].name(), "synth");
+        assert!(parse_datasets("atlantis", false).is_err());
+        assert_eq!(parse_datasets("a1a", true).unwrap()[0].name(), "a1a");
+    }
+}

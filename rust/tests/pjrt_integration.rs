@@ -5,6 +5,12 @@
 //! These tests require `artifacts/` to exist; `make test` orders that. When
 //! artifacts are missing they **fail** with a pointer to `make artifacts`
 //! (skipping silently would hide a broken build pipeline).
+//!
+//! The whole target is gated behind the `pjrt` cargo feature
+//! (`required-features` in Cargo.toml); the default test suite stays
+//! dependency-light and artifact-free.
+
+#![cfg(feature = "pjrt")]
 
 use basis_learn::config::{Algorithm, RunConfig};
 use basis_learn::coordinator::{run_federated_with, run_federated};
