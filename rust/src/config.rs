@@ -224,6 +224,16 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Stable fingerprint of the *entire* configuration (FNV-1a over the
+    /// `Debug` rendering, which is stable for every field type used here).
+    /// Two runs with equal fingerprints execute identically on the same
+    /// data; the sweep resume path uses this to refuse rows recorded under
+    /// different parameters (rounds, λ, stopping rules, master seed, ...)
+    /// that the group string doesn't encode.
+    pub fn fingerprint(&self) -> u64 {
+        crate::rng::fnv1a(format!("{self:?}").as_bytes())
+    }
+
     /// The basis each algorithm uses when none is specified.
     pub fn effective_basis(&self) -> BasisKind {
         if let Some(b) = self.basis {
@@ -266,6 +276,23 @@ mod tests {
         assert!("fourier".parse::<BasisKind>().is_err());
         for b in [BasisKind::Standard, BasisKind::SymTri, BasisKind::Subspace, BasisKind::Psd] {
             assert_eq!(b.to_string().parse::<BasisKind>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let base = RunConfig::default();
+        assert_eq!(base.fingerprint(), RunConfig::default().fingerprint());
+        for cfg in [
+            RunConfig { rounds: 201, ..RunConfig::default() },
+            RunConfig { lambda: 2e-3, ..RunConfig::default() },
+            RunConfig { target_gap: 1e-10, ..RunConfig::default() },
+            RunConfig { max_bits_per_node: Some(1e6), ..RunConfig::default() },
+            RunConfig { seed: 2, ..RunConfig::default() },
+            RunConfig { float_bits: 32, ..RunConfig::default() },
+            RunConfig { eta: Some(0.1), ..RunConfig::default() },
+        ] {
+            assert_ne!(cfg.fingerprint(), base.fingerprint(), "{cfg:?}");
         }
     }
 

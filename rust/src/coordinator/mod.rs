@@ -207,7 +207,11 @@ pub fn run_federated_with(
             break;
         }
         if let Some(budget) = cfg.max_bits_per_node {
-            if up_cum + down_cum >= budget {
+            // Setup bits (basis transfer etc.) count against the budget —
+            // the same accounting `final_bits_per_node`/`bits_to_reach`
+            // report, so methods with an initial communication cost can't
+            // overshoot what the figures charge them for.
+            if history.setup_bits_per_node + up_cum + down_cum >= budget {
                 break;
             }
         }
@@ -387,5 +391,38 @@ mod tests {
         let last = out.history.records.last().unwrap();
         assert!(last.bits_per_node() >= 50_000.0);
         assert!(out.history.records.len() < 10_000);
+    }
+
+    #[test]
+    fn bits_budget_includes_setup_cost() {
+        // BL1's default subspace basis has a one-time r·d-float transfer
+        // (Table 1's initial communication cost). The budget check must
+        // charge it, like final_bits_per_node/bits_to_reach do — the old
+        // comparison of up+down alone let nonzero-setup methods overshoot.
+        let fed = tiny_fed(44);
+        let budget = 60_000.0;
+        let cfg = RunConfig {
+            algorithm: Algorithm::Bl1,
+            rounds: 10_000,
+            target_gap: 0.0,
+            max_bits_per_node: Some(budget),
+            ..RunConfig::default()
+        };
+        let out = run_federated(&fed, &cfg).unwrap();
+        let h = &out.history;
+        assert!(h.setup_bits_per_node > 0.0, "need a nonzero-setup method");
+        assert!(h.records.len() < 10_000, "budget never triggered");
+        // Stops at the *first* round where setup+up+down crosses the
+        // budget: every earlier round is still under it, setup included.
+        assert!(h.final_bits_per_node() >= budget);
+        for r in &h.records[..h.records.len() - 1] {
+            assert!(
+                r.bits_per_node() + h.setup_bits_per_node < budget,
+                "round {} already over budget: {} + {} setup",
+                r.round,
+                r.bits_per_node(),
+                h.setup_bits_per_node
+            );
+        }
     }
 }

@@ -58,6 +58,13 @@ impl DatasetEntry {
         fed.name = format!("{}{}", self.name, if full_scale { "" } else { "-s" });
         fed
     }
+
+    /// Stable identity of `build(seed, full_scale)`'s recipe minus the seed
+    /// — registry names are unique, and scale selects between the two shape
+    /// signatures. Keys the sweep workers' per-thread dataset memo.
+    pub fn cache_key(&self, full_scale: bool) -> String {
+        format!("registry:{}:{}", self.name, if full_scale { "paper" } else { "scaled" })
+    }
 }
 
 /// All Table-2 rows.

@@ -46,6 +46,35 @@ impl Default for SyntheticSpec {
     }
 }
 
+impl SyntheticSpec {
+    /// Stable identity of the generated data's *shape* — every field except
+    /// `seed`, which sweeps override per cell. Two specs with equal shape
+    /// keys and equal seeds generate identical datasets, which is what the
+    /// sweep workers' per-thread dataset memo keys on.
+    pub fn shape_key(&self) -> String {
+        format!(
+            "synth:n{}:m{}:d{}:r{}:noise{:?}",
+            self.n_clients, self.m_per_client, self.dim, self.intrinsic_dim, self.noise
+        )
+    }
+
+    /// The name the generated dataset carries — the single source both
+    /// [`generate`] and the sweep engine's dataset references use, so sweep
+    /// group strings (hence resume keys) always match built dataset names.
+    /// Noise shows up because it changes the data; every field that does
+    /// must split the name.
+    pub fn name(&self) -> String {
+        let mut name = format!(
+            "synth-n{}-m{}-d{}-r{}",
+            self.n_clients, self.m_per_client, self.dim, self.intrinsic_dim
+        );
+        if self.noise > 0.0 {
+            name.push_str(&format!("-noise{:?}", self.noise));
+        }
+        name
+    }
+}
+
 /// Generate the dataset described by `spec`.
 pub fn generate(spec: &SyntheticSpec) -> FederatedDataset {
     assert!(spec.intrinsic_dim >= 1 && spec.intrinsic_dim <= spec.dim,
@@ -96,11 +125,7 @@ pub fn generate(spec: &SyntheticSpec) -> FederatedDataset {
     // Round-trip through the LibSVM text format (see module docs).
     let text = write_libsvm(&records);
     let parsed = parse_libsvm(&text, Some(spec.dim)).expect("internal LibSVM roundtrip failed");
-    let name = format!(
-        "synth-n{}-m{}-d{}-r{}",
-        spec.n_clients, spec.m_per_client, spec.dim, spec.intrinsic_dim
-    );
-    let mut fed = FederatedDataset::from_records(parsed, spec.n_clients, &name);
+    let mut fed = FederatedDataset::from_records(parsed, spec.n_clients, &spec.name());
     // Sparse parse infers d from the max seen index; pad if the last features
     // happened to be zero everywhere.
     if fed.dim() < spec.dim {

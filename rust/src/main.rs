@@ -26,10 +26,18 @@
 //! --out DIR                explicit output directory       [runs/<name>]
 //! --master-seed N          re-randomize all derived cell seeds            [0]
 //! --full-scale             paper-sized datasets
+//! --resume                 skip cells already completed in <out>/runs.jsonl
 //! ```
-//! Results land in `<out>/runs.jsonl` (one row per run, streamed in
+//! Results land in `<out>/runs.jsonl` (one row per run, durably appended in
 //! completion order) and `<out>/summary.jsonl` (cross-seed aggregates,
 //! ranked best-first; byte-identical at any `--jobs` level).
+//!
+//! `--resume` recovers an interrupted sweep: the grid is re-expanded, rows
+//! already in `runs.jsonl` are matched by their stable cell key plus the
+//! full run-config fingerprint (a torn final line from a crash is dropped;
+//! rows recorded under different `--rounds`/`--lambda`/... re-run), and
+//! only missing or previously failed cells execute. The merged
+//! `summary.jsonl` is byte-identical to an uninterrupted run's.
 //!
 //! `repro run` options:
 //! ```text
@@ -60,10 +68,10 @@ use basis_learn::coordinator::{run_federated, RunOutput};
 use basis_learn::data::{registry, FederatedDataset, SyntheticSpec};
 use basis_learn::experiments::{run_experiment, runs_dir, EXPERIMENTS};
 use basis_learn::sweep::{
-    aggregate, default_jobs, parse_axis, parse_bases, parse_datasets, parse_seeds, parse_taus,
-    ranked, run_cells, run_row, summary_table, CellStatus, Json, SweepSpec, SWEEP_TARGETS,
+    aggregate, default_jobs, load_jsonl, parse_axis, parse_bases, parse_datasets, parse_seeds,
+    parse_taus, plan_resume, ranked, rows_from_results, run_cells, run_row, summary_jsonl,
+    summary_table, CellStatus, Json, JsonlSink, RunRow, SweepSpec, SWEEP_TARGETS,
 };
-use std::io::Write as _;
 use std::path::PathBuf;
 
 fn main() {
@@ -182,7 +190,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 const SWEEP_FLAGS: &[&str] = &[
     "algo", "dataset", "hess-comp", "model-comp", "grad-comp", "basis", "p", "tau", "seeds",
     "rounds", "lambda", "target-gap", "max-bits", "jobs", "name", "out", "master-seed",
-    "full-scale",
+    "full-scale", "resume",
 ];
 
 /// `repro sweep` — expand the grid axes into cells, execute them across the
@@ -262,15 +270,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         out_dir.display()
     );
 
-    // Streaming per-run sink (completion order).
+    // Crash-safe per-run sink: one durable append per completed run, so an
+    // interrupted sweep leaves at most a torn final line for --resume.
     let runs_path = out_dir.join("runs.jsonl");
-    let mut sink = std::io::BufWriter::new(std::fs::File::create(&runs_path)?);
-    let total = cells.len();
+    let (mut sink, done_rows, todo) = if args.has("resume") {
+        let (sink, plan_done, plan_todo) = resume_sweep(&cells, &runs_path)?;
+        println!(
+            "resume: {} of {} cells already complete; running {}",
+            plan_done.len(),
+            cells.len(),
+            plan_todo.len()
+        );
+        (sink, plan_done, plan_todo)
+    } else {
+        (JsonlSink::create(&runs_path)?, Vec::new(), cells.clone())
+    };
+
+    let total = todo.len();
     let mut done = 0usize;
-    let mut sink_err: Option<std::io::Error> = None;
-    let results = run_cells(&cells, jobs, |r| {
+    let mut sink_err: Option<anyhow::Error> = None;
+    let results = run_cells(&todo, jobs, |r| {
         done += 1;
-        if let Err(e) = writeln!(sink, "{}", run_row(r, &SWEEP_TARGETS).render()) {
+        if let Err(e) = sink.push(&run_row(r, &SWEEP_TARGETS)) {
             if sink_err.is_none() {
                 sink_err = Some(e);
             }
@@ -290,25 +311,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             _ => {}
         }
     });
-    sink.flush()?;
     if let Some(e) = sink_err {
         return Err(e).context("writing runs.jsonl");
     }
 
-    // Cross-seed aggregation, ranked best-first (deterministic bytes).
-    let summaries = aggregate(&results, &SWEEP_TARGETS);
+    // Cross-seed aggregation, ranked best-first (deterministic bytes): kept
+    // rows + fresh results, merged back into declaration order, aggregate
+    // byte-identically to an uninterrupted run at any --jobs level.
+    let mut rows = done_rows;
+    rows.extend(rows_from_results(&results, &SWEEP_TARGETS));
+    rows.sort_by_key(|r| r.id);
+    let summaries = aggregate(&rows, &SWEEP_TARGETS);
     let order = ranked(&summaries);
-    let mut text = String::new();
-    for (pos, &i) in order.iter().enumerate() {
-        let mut row = summaries[i].to_json();
-        if let Json::Obj(kvs) = &mut row {
-            kvs.insert(0, ("rank".into(), Json::num((pos + 1) as f64)));
-        }
-        text.push_str(&row.render());
-        text.push('\n');
-    }
     let summary_path = out_dir.join("summary.jsonl");
-    std::fs::write(&summary_path, &text)?;
+    std::fs::write(&summary_path, summary_jsonl(&summaries, &order))?;
 
     let failed = results.iter().filter(|r| !r.status.is_ok()).count();
     println!("\n{}", summary_table(&summaries, &order));
@@ -319,6 +335,78 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         summary_path.display()
     );
     Ok(())
+}
+
+/// The `--resume` path: recover completed rows from `runs.jsonl`, compact
+/// the file (dropping the torn tail, stale duplicates, and rows for cells
+/// being re-run) so appends never follow garbage, and return the sink plus
+/// the done/todo split.
+fn resume_sweep(
+    cells: &[basis_learn::sweep::SweepCell],
+    runs_path: &std::path::Path,
+) -> Result<(JsonlSink, Vec<RunRow>, Vec<basis_learn::sweep::SweepCell>)> {
+    if !runs_path.exists() {
+        // Nothing to resume from — behave like a fresh sweep.
+        return Ok((JsonlSink::create(runs_path)?, Vec::new(), cells.to_vec()));
+    }
+    let load = load_jsonl(runs_path)
+        .with_context(|| format!("recovering {}", runs_path.display()))?;
+    if load.torn_tail {
+        println!("resume: dropped a torn final line in {}", runs_path.display());
+    }
+    // Rows that don't parse as run rows (foreign schemas) can't be resumed
+    // — their cells re-run — but they are preserved through compaction.
+    let parsed: Vec<(Json, Option<RunRow>)> = load
+        .rows
+        .into_iter()
+        .map(|j| {
+            let r = RunRow::from_json(&j).ok();
+            (j, r)
+        })
+        .collect();
+    let prior_rows: Vec<RunRow> = parsed.iter().filter_map(|(_, r)| r.clone()).collect();
+    // Index into `parsed` for each entry of `prior_rows`.
+    let orig_idx: Vec<usize> = parsed
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, r))| r.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    let plan = plan_resume(cells, &prior_rows, &SWEEP_TARGETS);
+
+    // Compact to exactly what the plan selected: the rows backing
+    // `plan.done`, plus rows outside the current grid (foreign schemas or
+    // other specs' cells), which are preserved untouched. Rows for cells
+    // being re-run — failed, stale duplicates, other parameters — drop.
+    let kept: std::collections::HashSet<usize> =
+        plan.kept_prior.iter().map(|&k| orig_idx[k]).collect();
+    let grid_keys: std::collections::HashSet<String> =
+        cells.iter().map(|c| c.key()).collect();
+    let mut text = String::new();
+    for (i, (j, r)) in parsed.iter().enumerate() {
+        let keep = match r {
+            _ if kept.contains(&i) => true,
+            Some(r) => !grid_keys.contains(&r.key()),
+            None => true, // not ours to judge — preserve
+        };
+        if keep {
+            text.push_str(&j.render());
+            text.push('\n');
+        }
+    }
+    // Durable tmp-then-rename: sync the compacted bytes before the rename
+    // lands, so a crash right after a resume starts can't replace the
+    // fsync-per-row file with an empty or half-written one.
+    let tmp = runs_path.with_extension("jsonl.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        std::io::Write::write_all(&mut f, text.as_bytes())?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, runs_path)
+        .with_context(|| format!("compacting {}", runs_path.display()))?;
+
+    Ok((JsonlSink::append(runs_path)?, plan.done, plan.todo))
 }
 
 fn load_dataset(args: &Args) -> Result<FederatedDataset> {

@@ -100,6 +100,13 @@ impl History {
     }
 
     /// CSV text: `round,bits_up,bits_down,bits_total,gap,grad_norm,dist`.
+    ///
+    /// One-time setup bits (basis transfer) are folded into the *uplink*
+    /// column — the same convention [`History::summarize`] and
+    /// [`History::bits_to_reach_uplink`] use, and how the paper accounts
+    /// Table 1's initial communication cost — so on every row
+    /// `bits_per_node = bits_up_per_node + bits_down_per_node` holds
+    /// exactly.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("round,bits_up_per_node,bits_down_per_node,bits_per_node,gap,grad_norm,dist_to_opt\n");
         for r in &self.records {
@@ -107,7 +114,7 @@ impl History {
                 s,
                 "{},{:.1},{:.1},{:.1},{:.6e},{:.6e},{:.6e}",
                 r.round,
-                r.bits_up_per_node,
+                r.bits_up_per_node + self.setup_bits_per_node,
                 r.bits_down_per_node,
                 r.bits_per_node() + self.setup_bits_per_node,
                 r.gap,
@@ -131,16 +138,24 @@ impl History {
         Ok(path)
     }
 
-    /// Down-sampled pretty table for terminal output (≤ `max_rows` rows).
+    /// Down-sampled pretty table for terminal output: at most `max_rows`
+    /// data rows — the final round always prints, and interior rounds fill
+    /// the remaining `max_rows − 1` slots at a fixed stride.
     pub fn summary_table(&self, max_rows: usize) -> String {
         let mut s = format!(
             "{:<8} {:>16} {:>14} {:>12}\n",
             "round", "bits/node", "gap", "‖∇f‖"
         );
         let n = self.records.len();
-        let stride = (n / max_rows.max(1)).max(1);
+        if n == 0 {
+            return s;
+        }
+        // ⌈(n−1)/(max_rows−1)⌉ strides the n−1 interior rounds into at most
+        // max_rows−1 printed rows (the old n/max_rows floor let one extra
+        // row slip through, e.g. 11 rows at n=1000, max_rows=10).
+        let stride = if max_rows <= 1 { n } else { (n - 1).div_ceil(max_rows - 1).max(1) };
         for (i, r) in self.records.iter().enumerate() {
-            if i % stride == 0 || i + 1 == n {
+            if (max_rows > 1 && i % stride == 0 && i + 1 != n) || i + 1 == n {
                 let _ = writeln!(
                     s,
                     "{:<8} {:>16.0} {:>14.3e} {:>12.3e}",
@@ -252,6 +267,26 @@ mod tests {
     }
 
     #[test]
+    fn csv_folds_setup_into_uplink_and_columns_stay_consistent() {
+        let mut h = History::new("csv-setup");
+        h.setup_bits_per_node = 10.0;
+        h.push(rec(0, 64.0, 0.5));
+        h.push(rec(1, 128.0, 0.25));
+        let csv = h.to_csv();
+        let mut lines = csv.lines();
+        lines.next(); // header
+        // Setup rides the uplink column (the paper's accounting), so the
+        // total column equals up + down on every row.
+        assert!(lines.next().unwrap().starts_with("0,74.0,32.0,106.0,"), "{csv}");
+        assert!(lines.next().unwrap().starts_with("1,138.0,64.0,202.0,"), "{csv}");
+        for row in h.to_csv().lines().skip(1) {
+            let cols: Vec<f64> =
+                row.split(',').skip(1).take(3).map(|x| x.parse().unwrap()).collect();
+            assert_eq!(cols[0] + cols[1], cols[2], "{row}");
+        }
+    }
+
+    #[test]
     fn csv_write_sanitizes_label() {
         let dir = std::env::temp_dir().join("bl_metrics_test");
         let mut h = History::new("weird/label:1");
@@ -268,9 +303,33 @@ mod tests {
         for i in 0..1000 {
             h.push(rec(i, i as f64, 1.0 / (i + 1) as f64));
         }
+        // ≤ max_rows data rows (+1 header), final round always present.
         let table = h.summary_table(10);
         let rows = table.lines().count();
-        assert!(rows <= 13, "rows={rows}");
+        assert!(rows <= 11, "rows={rows}");
         assert!(table.contains("999"));
+    }
+
+    #[test]
+    fn summary_table_respects_max_rows_exactly() {
+        for (n, max_rows) in [(1000usize, 10usize), (1001, 10), (999, 10), (7, 3), (100, 7)] {
+            let mut h = History::new("bound");
+            for i in 0..n {
+                h.push(rec(i, i as f64, 1.0));
+            }
+            let table = h.summary_table(max_rows);
+            let data_rows = table.lines().count() - 1;
+            assert!(data_rows <= max_rows, "n={n} max={max_rows} rows={data_rows}");
+            assert!(table.contains(&format!("{}", n - 1)), "final round missing (n={n})");
+        }
+        // Degenerate sizes: tiny histories print whole, max_rows=1 prints
+        // only the final round, empty history prints only the header.
+        let mut h = History::new("tiny");
+        for i in 0..4 {
+            h.push(rec(i, i as f64, 1.0));
+        }
+        assert_eq!(h.summary_table(10).lines().count(), 5);
+        assert_eq!(h.summary_table(1).lines().count(), 2);
+        assert_eq!(History::new("empty").summary_table(5).lines().count(), 1);
     }
 }

@@ -9,6 +9,19 @@
 //! The generator is xoshiro256**, seeded through SplitMix64 (the construction
 //! recommended by the xoshiro authors).
 
+/// FNV-1a over a byte string — the crate's one string-hash primitive, used
+/// for sweep cell-seed derivation and run-config fingerprints. Not a PRNG,
+/// but it lives here with the other deterministic mixing primitives.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 /// SplitMix64 step — used for seeding and for deriving per-client streams.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {

@@ -1,5 +1,5 @@
 //! Cross-seed aggregation and ranking of sweep results, plus the JSONL row
-//! builders for the result sink.
+//! builders for the result sink and the resume planner.
 //!
 //! Cells that differ only in the seed axis share a `group` key; aggregation
 //! reduces each group to mean/std of bits-to-target-gap (over the seeds that
@@ -7,9 +7,18 @@
 //! computed in declaration order from per-run quantities that are themselves
 //! deterministic, so rendered summaries are byte-identical across `--jobs`
 //! levels.
+//!
+//! Aggregation consumes [`RunRow`]s — the per-run slice of a `runs.jsonl`
+//! row that feeds the statistics. A `RunRow` comes either fresh from an
+//! executed [`CellResult`] or parsed back from disk ([`RunRow::from_json`]);
+//! because the JSONL number format round-trips `f64`s exactly, both sources
+//! aggregate to identical bytes. [`plan_resume`] diffs the current grid
+//! expansion against loaded rows by [`SweepCell::key`] and schedules only
+//! the missing or previously failed cells.
 
 use super::exec::{CellResult, CellStatus};
 use super::jsonl::Json;
+use super::spec::SweepCell;
 use anyhow::{Context, Result};
 use std::cmp::Ordering;
 use std::collections::HashMap;
@@ -55,12 +64,119 @@ fn pop_std(xs: &[f64]) -> Option<f64> {
     Some(var.sqrt())
 }
 
-/// Reduce per-run results (in declaration order) to per-group summaries.
-/// Groups appear in first-declaration order.
-pub fn aggregate(results: &[CellResult], targets: &[f64]) -> Vec<GroupSummary> {
+/// One run's aggregation-relevant slice: what `runs.jsonl` stores per cell.
+/// Built fresh from an executed [`CellResult`] ([`RunRow::from_result`]) or
+/// recovered from disk ([`RunRow::from_json`]) when a sweep resumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRow {
+    /// Declaration-order cell id. [`plan_resume`] remaps ids loaded from
+    /// disk onto the *current* expansion, so merged row sets sort back into
+    /// declaration order regardless of completion order.
+    pub id: usize,
+    pub group: String,
+    /// Seed-axis value (together with `group`: the stable cell key).
+    pub data_seed: u64,
+    /// Whether the run completed without error/panic.
+    pub ok: bool,
+    /// Fingerprint of the `RunConfig` the row was recorded under (0 when
+    /// the row predates the field — such rows are never resumed).
+    pub cfg_hash: u64,
+    /// Final optimality gap (`None` for failed runs).
+    pub final_gap: Option<f64>,
+    /// `(gap target, total bits/node to first reach it)` in sweep-target
+    /// order; `None` bits ⇒ target never reached.
+    pub bits_to: Vec<(f64, Option<f64>)>,
+}
+
+impl RunRow {
+    /// The stable cell key — matches [`SweepCell::key`].
+    pub fn key(&self) -> String {
+        format!("{} seed={}", self.group, self.data_seed)
+    }
+
+    /// Condense an executed result. Non-finite gaps are normalized to
+    /// `None` so fresh rows and disk-parsed rows (where non-finite numbers
+    /// serialize as `null`) aggregate identically.
+    pub fn from_result(res: &CellResult, targets: &[f64]) -> RunRow {
+        // Failed runs record no bits at all — matching their serialized
+        // form, which omits the `bits_to` field entirely.
+        let (final_gap, bits_to) = match res.history.as_ref() {
+            Some(h) => (
+                Some(h.final_gap()).filter(|g| g.is_finite()),
+                targets.iter().map(|&t| (t, h.bits_to_reach(t))).collect(),
+            ),
+            None => (None, Vec::new()),
+        };
+        RunRow {
+            id: res.id,
+            group: res.group.clone(),
+            data_seed: res.data_seed,
+            ok: res.status.is_ok(),
+            cfg_hash: res.cfg_hash,
+            final_gap,
+            bits_to,
+        }
+    }
+
+    /// Parse a `runs.jsonl` row back (the inverse of [`run_row`] for the
+    /// aggregation-relevant fields; extra fields are ignored).
+    pub fn from_json(j: &Json) -> Result<RunRow> {
+        let field = |k: &str| j.get(k).with_context(|| format!("run row missing '{k}'"));
+        let group = field("group")?.as_str().context("'group' not a string")?.to_string();
+        let data_seed = field("seed")?.as_usize().context("'seed' not a count")? as u64;
+        let ok = field("status")?.as_str().context("'status' not a string")? == "ok";
+        let id = field("cell")?.as_usize().context("'cell' not a count")?;
+        // Absent/malformed fingerprints parse as 0: the row still aggregates
+        // but can never match a real cell fingerprint, so it re-runs.
+        let cfg_hash = j
+            .get("cfg")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s.trim_start_matches("0x"), 16).ok())
+            .unwrap_or(0);
+        let final_gap = j.get("final_gap").and_then(Json::as_f64);
+        let bits_to = match j.get("bits_to") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .context("'bits_to' not an array")?
+                .iter()
+                .map(|t| {
+                    let target = t
+                        .get("target")
+                        .and_then(Json::as_f64)
+                        .context("bits_to entry missing 'target'")?;
+                    Ok((target, t.get("total").and_then(Json::as_f64)))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(RunRow { id, group, data_seed, ok, cfg_hash, final_gap, bits_to })
+    }
+
+    /// Total bits to the given target (`None` if unreached or unrecorded).
+    pub fn bits_for(&self, target: f64) -> Option<f64> {
+        self.bits_to.iter().find(|(t, _)| *t == target).and_then(|(_, b)| *b)
+    }
+
+    /// Whether the row records every target in `targets` — guards resume
+    /// against rows written under a different target set (exact `f64`
+    /// comparison is sound because rendering round-trips exactly).
+    pub fn covers(&self, targets: &[f64]) -> bool {
+        targets.iter().all(|t| self.bits_to.iter().any(|(tt, _)| tt == t))
+    }
+}
+
+/// Condense executed results (already in declaration order) to rows.
+pub fn rows_from_results(results: &[CellResult], targets: &[f64]) -> Vec<RunRow> {
+    results.iter().map(|r| RunRow::from_result(r, targets)).collect()
+}
+
+/// Reduce per-run rows (in declaration order — sort merged sets by
+/// [`RunRow::id`] first) to per-group summaries. Groups appear in
+/// first-declaration order.
+pub fn aggregate(rows: &[RunRow], targets: &[f64]) -> Vec<GroupSummary> {
     let mut order: Vec<&str> = Vec::new();
-    let mut buckets: HashMap<&str, Vec<&CellResult>> = HashMap::new();
-    for r in results {
+    let mut buckets: HashMap<&str, Vec<&RunRow>> = HashMap::new();
+    for r in rows {
         let entry = buckets.entry(r.group.as_str()).or_default();
         if entry.is_empty() {
             order.push(r.group.as_str());
@@ -71,18 +187,12 @@ pub fn aggregate(results: &[CellResult], targets: &[f64]) -> Vec<GroupSummary> {
         .iter()
         .map(|g| {
             let runs = &buckets[g];
-            let ok: Vec<&&CellResult> = runs.iter().filter(|r| r.status.is_ok()).collect();
-            let gaps: Vec<f64> = ok
-                .iter()
-                .filter_map(|r| r.history.as_ref().map(|h| h.final_gap()))
-                .collect();
+            let ok: Vec<&&RunRow> = runs.iter().filter(|r| r.ok).collect();
+            let gaps: Vec<f64> = ok.iter().filter_map(|r| r.final_gap).collect();
             let per_target = targets
                 .iter()
                 .map(|&t| {
-                    let bits: Vec<f64> = ok
-                        .iter()
-                        .filter_map(|r| r.history.as_ref().and_then(|h| h.bits_to_reach(t)))
-                        .collect();
+                    let bits: Vec<f64> = ok.iter().filter_map(|r| r.bits_for(t)).collect();
                     TargetAgg {
                         target: t,
                         reached: bits.len(),
@@ -100,6 +210,58 @@ pub fn aggregate(results: &[CellResult], targets: &[f64]) -> Vec<GroupSummary> {
             }
         })
         .collect()
+}
+
+/// What a resumed sweep keeps versus re-runs.
+#[derive(Clone, Debug)]
+pub struct ResumePlan {
+    /// Prior successful rows matching a current cell, ids remapped onto the
+    /// current expansion, in declaration order. Merge these with fresh
+    /// results before aggregating.
+    pub done: Vec<RunRow>,
+    /// For each entry of `done`, the index into the `prior` slice of the
+    /// row that backs it — so callers compacting the on-disk file keep
+    /// exactly the rows this plan selected, not merely the latest row per
+    /// key (which could differ when an ok row is shadowed by a later
+    /// failed one).
+    pub kept_prior: Vec<usize>,
+    /// Cells still to execute: never ran, previously failed, recorded
+    /// under a different target set, or recorded under a different
+    /// run configuration.
+    pub todo: Vec<SweepCell>,
+}
+
+/// Diff the current expansion against rows recovered from `runs.jsonl`.
+/// Matching is by the stable cell key *plus* the cell's full `RunConfig`
+/// fingerprint — the group string only encodes the axis coordinates, so
+/// without the fingerprint a resume with changed shared parameters
+/// (`--rounds`, `--lambda`, `--target-gap`, `--max-bits`, `--master-seed`,
+/// ...) would silently reuse rows computed under the old ones. When a key
+/// appears more than once (an earlier resume re-ran a failed cell), the
+/// last occurrence wins.
+pub fn plan_resume(cells: &[SweepCell], prior: &[RunRow], targets: &[f64]) -> ResumePlan {
+    let by_key: HashMap<String, (usize, u64)> =
+        cells.iter().map(|c| (c.key(), (c.id, c.cfg.fingerprint()))).collect();
+    let mut done: HashMap<usize, (usize, RunRow)> = HashMap::new();
+    for (i, r) in prior.iter().enumerate() {
+        if !r.ok || !r.covers(targets) {
+            continue;
+        }
+        if let Some(&(id, fingerprint)) = by_key.get(&r.key()) {
+            if r.cfg_hash != fingerprint {
+                continue; // same coordinates, different run parameters
+            }
+            let mut row = r.clone();
+            row.id = id;
+            done.insert(id, (i, row));
+        }
+    }
+    let todo: Vec<SweepCell> =
+        cells.iter().filter(|c| !done.contains_key(&c.id)).cloned().collect();
+    let mut pairs: Vec<(usize, RunRow)> = done.into_values().collect();
+    pairs.sort_by_key(|(_, r)| r.id);
+    let (kept_prior, done): (Vec<usize>, Vec<RunRow>) = pairs.into_iter().unzip();
+    ResumePlan { done, kept_prior, todo }
 }
 
 fn cmp_opt(a: Option<f64>, b: Option<f64>) -> Ordering {
@@ -145,6 +307,7 @@ pub fn run_row(res: &CellResult, targets: &[f64]) -> Json {
         ("dataset".into(), Json::str(res.dataset.clone())),
         ("seed".into(), Json::num(res.data_seed as f64)),
         ("rng_seed".into(), Json::str(format!("{:#018x}", res.rng_seed))),
+        ("cfg".into(), Json::str(format!("{:#018x}", res.cfg_hash))),
         (
             "status".into(),
             Json::str(match &res.status {
@@ -236,6 +399,23 @@ impl GroupSummary {
     }
 }
 
+/// Render the ranked `summary.jsonl` text: one [`GroupSummary`] row per
+/// line, best-first, with its 1-based `rank` injected. Both the fresh and
+/// the resume path go through this, which is what the byte-identity
+/// guarantee of resumed sweeps rests on.
+pub fn summary_jsonl(summaries: &[GroupSummary], order: &[usize]) -> String {
+    let mut text = String::new();
+    for (pos, &i) in order.iter().enumerate() {
+        let mut row = summaries[i].to_json();
+        if let Json::Obj(kvs) = &mut row {
+            kvs.insert(0, ("rank".into(), Json::num((pos + 1) as f64)));
+        }
+        text.push_str(&row.render());
+        text.push('\n');
+    }
+    text
+}
+
 /// Terminal leaderboard for the end of a sweep.
 pub fn summary_table(summaries: &[GroupSummary], order: &[usize]) -> String {
     let mut s = format!(
@@ -290,8 +470,11 @@ mod tests {
             rng_seed: seed.wrapping_mul(0x9E37),
             dataset: "t".into(),
             status: CellStatus::Ok,
+            // Matches the `cell()` helper below, which runs default configs.
+            cfg_hash: crate::config::RunConfig::default().fingerprint(),
             history: Some(h),
             wall_ms: 1.0,
+            dataset_cache_hit: false,
         }
     }
 
@@ -303,8 +486,10 @@ mod tests {
             rng_seed: 0,
             dataset: "t".into(),
             status: CellStatus::Failed("boom".into()),
+            cfg_hash: crate::config::RunConfig::default().fingerprint(),
             history: None,
             wall_ms: 1.0,
+            dataset_cache_hit: false,
         }
     }
 
@@ -318,7 +503,7 @@ mod tests {
             failed_result(2, "a", 3),
             fake_result(3, "b", 1, &[1e-7]), // both targets at 100 bits
         ];
-        let s = aggregate(&results, &T);
+        let s = aggregate(&rows_from_results(&results, &T), &T);
         assert_eq!(s.len(), 2);
         let a = &s[0];
         assert_eq!(a.group, "a");
@@ -343,7 +528,7 @@ mod tests {
             fake_result(1, "fast", 1, &[1e-7]),                                    // 100 bits
             fake_result(2, "never", 1, &[1.0, 1e-3]),
         ];
-        let s = aggregate(&results, &T);
+        let s = aggregate(&rows_from_results(&results, &T), &T);
         let order = ranked(&s);
         assert_eq!(s[order[0]].group, "fast");
         assert_eq!(s[order[1]].group, "slow-but-reaches");
@@ -360,7 +545,7 @@ mod tests {
             fake_result(1, "a", 2, &[1.0, 1e-4, 1e-8]),
             failed_result(2, "b", 1),
         ];
-        let summaries = aggregate(&results, &T);
+        let summaries = aggregate(&rows_from_results(&results, &T), &T);
         for s in &summaries {
             let line = s.to_json().render();
             let parsed = GroupSummary::from_json(&Json::parse(&line).unwrap()).unwrap();
@@ -394,5 +579,150 @@ mod tests {
         assert_eq!(bad.get("status").unwrap().as_str(), Some("failed"));
         assert_eq!(bad.get("error").unwrap().as_str(), Some("boom"));
         assert!(bad.get("final_gap").is_none());
+    }
+
+    #[test]
+    fn run_rows_roundtrip_through_jsonl() {
+        for res in [
+            fake_result(3, "a", 7, &[1.0, 1e-3, 1e-7]),
+            fake_result(4, "a", 8, &[1.0]), // reaches neither target
+            failed_result(5, "b", 9),
+        ] {
+            let fresh = RunRow::from_result(&res, &T);
+            let parsed = RunRow::from_json(&run_row(&res, &T)).unwrap();
+            assert_eq!(parsed, fresh);
+            assert_eq!(parsed.key(), format!("{} seed={}", res.group, res.data_seed));
+        }
+        let ok = RunRow::from_result(&fake_result(0, "a", 1, &[1e-7]), &T);
+        assert!(ok.covers(&T));
+        assert!(!ok.covers(&[1e-2, 1e-9]));
+        assert_eq!(ok.bits_for(1e-2), Some(100.0));
+        assert_eq!(ok.bits_for(5e-5), None);
+        let failed = RunRow::from_result(&failed_result(1, "b", 2), &T);
+        assert!(!failed.ok);
+        assert!(failed.final_gap.is_none());
+        assert!(!failed.covers(&T)); // no bits recorded at all
+    }
+
+    #[test]
+    fn aggregate_matches_from_fresh_and_parsed_rows() {
+        let results = vec![
+            fake_result(0, "a", 1, &[1.0, 1e-3, 1e-7]),
+            fake_result(1, "a", 2, &[1.0, 1e-4, 1e-8]),
+            failed_result(2, "b", 1),
+        ];
+        let fresh = aggregate(&rows_from_results(&results, &T), &T);
+        let parsed_rows: Vec<RunRow> = results
+            .iter()
+            .map(|r| RunRow::from_json(&run_row(r, &T)).unwrap())
+            .collect();
+        let parsed = aggregate(&parsed_rows, &T);
+        assert_eq!(fresh, parsed);
+        // And the rendered summary bytes agree too.
+        let order = ranked(&fresh);
+        assert_eq!(summary_jsonl(&fresh, &order), summary_jsonl(&parsed, &ranked(&parsed)));
+    }
+
+    fn cell(id: usize, group: &str, seed: u64) -> SweepCell {
+        use crate::sweep::spec::DatasetRef;
+        use crate::data::SyntheticSpec;
+        SweepCell {
+            id,
+            group: group.into(),
+            data_seed: seed,
+            dataset: DatasetRef::Synthetic(SyntheticSpec::default()),
+            cfg: crate::config::RunConfig::default(),
+        }
+    }
+
+    #[test]
+    fn plan_resume_partitions_done_failed_and_stale() {
+        let cells = vec![
+            cell(0, "a", 1),
+            cell(1, "a", 2),
+            cell(2, "b", 1),
+            cell(3, "b", 2),
+        ];
+        let prior = vec![
+            // cell 0: completed.
+            RunRow::from_result(&fake_result(99, "a", 1, &[1e-7]), &T),
+            // cell 2: failed last time → re-run.
+            RunRow::from_result(&failed_result(98, "b", 1), &T),
+            // not in the current grid → ignored.
+            RunRow::from_result(&fake_result(97, "zzz", 1, &[1e-7]), &T),
+        ];
+        let plan = plan_resume(&cells, &prior, &T);
+        assert_eq!(plan.done.len(), 1);
+        // Id remapped from the stale 99 onto the current expansion.
+        assert_eq!(plan.done[0].id, 0);
+        assert_eq!(plan.done[0].key(), "a seed=1");
+        // The plan records which prior row backs the kept result.
+        assert_eq!(plan.kept_prior, vec![0]);
+        let todo_ids: Vec<usize> = plan.todo.iter().map(|c| c.id).collect();
+        assert_eq!(todo_ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn plan_resume_last_occurrence_wins_and_target_mismatch_reruns() {
+        let cells = vec![cell(0, "a", 1), cell(1, "a", 2)];
+        // Same key twice (a re-run after an earlier resume): last wins.
+        let mut early = RunRow::from_result(&fake_result(0, "a", 1, &[1.0, 1e-7]), &T);
+        early.final_gap = Some(0.5);
+        let late = RunRow::from_result(&fake_result(0, "a", 1, &[1.0, 1e-7]), &T);
+        let plan = plan_resume(&cells, &[early, late.clone()], &T);
+        assert_eq!(plan.done, vec![late]);
+        assert_eq!(plan.kept_prior, vec![1], "must point at the winning occurrence");
+        assert_eq!(plan.todo.len(), 1);
+        // A row recorded under different targets is not resumable.
+        let other_targets = RunRow::from_result(&fake_result(1, "a", 2, &[1e-7]), &[1e-3]);
+        let plan = plan_resume(&cells, &[other_targets], &T);
+        assert!(plan.done.is_empty());
+        assert_eq!(plan.todo.len(), 2);
+    }
+
+    #[test]
+    fn plan_resume_ok_row_shadowed_by_later_failed_row_still_wins() {
+        // "Last occurrence wins" applies among *resumable* rows only: a
+        // failed row appended after an ok one (hand-merged files, odd
+        // histories) must not shadow the completed result — and
+        // kept_prior must point at the ok row so compaction keeps it.
+        let cells = vec![cell(0, "a", 1)];
+        let ok_row = RunRow::from_result(&fake_result(0, "a", 1, &[1e-7]), &T);
+        let failed_row = RunRow::from_result(&failed_result(0, "a", 1), &T);
+        let plan = plan_resume(&cells, &[ok_row.clone(), failed_row], &T);
+        assert_eq!(plan.done, vec![ok_row]);
+        assert_eq!(plan.kept_prior, vec![0]);
+        assert!(plan.todo.is_empty());
+    }
+
+    #[test]
+    fn plan_resume_empty_prior_runs_everything() {
+        let cells = vec![cell(0, "a", 1), cell(1, "a", 2)];
+        let plan = plan_resume(&cells, &[], &T);
+        assert!(plan.done.is_empty());
+        assert_eq!(plan.todo.len(), 2);
+    }
+
+    #[test]
+    fn plan_resume_refuses_rows_from_different_run_parameters() {
+        // Same group + seed, but the sweep's shared parameters changed
+        // (e.g. --rounds): the group string can't see it, the config
+        // fingerprint can.
+        let mut cells = vec![cell(0, "a", 1), cell(1, "a", 2)];
+        cells[0].cfg.rounds += 1;
+        cells[1].cfg.rounds += 1;
+        let prior = vec![
+            RunRow::from_result(&fake_result(0, "a", 1, &[1e-7]), &T),
+            RunRow::from_result(&fake_result(1, "a", 2, &[1e-7]), &T),
+        ];
+        let plan = plan_resume(&cells, &prior, &T);
+        assert!(plan.done.is_empty());
+        assert_eq!(plan.todo.len(), 2);
+        // A pre-fingerprint row (hash 0) is likewise never resumed.
+        let cells = vec![cell(0, "a", 1)];
+        let mut legacy = RunRow::from_result(&fake_result(0, "a", 1, &[1e-7]), &T);
+        legacy.cfg_hash = 0;
+        let plan = plan_resume(&cells, &[legacy], &T);
+        assert!(plan.done.is_empty());
     }
 }

@@ -4,21 +4,31 @@
 //! `jobs` OS threads (`std::thread::scope` + an atomic work cursor + an mpsc
 //! results channel — no external dependencies). Each worker builds its *own*
 //! dataset and problem instances from the cell's [`DatasetRef`] recipe,
-//! because [`crate::problem::LocalProblem`] is intentionally non-`Sync`.
+//! because [`crate::problem::LocalProblem`] is intentionally non-`Sync` —
+//! but memoizes built datasets in a *thread-local* cache keyed on
+//! `(recipe, data_seed)`, so a grid of G groups × S seeds builds each
+//! distinct dataset at most once per worker thread instead of once per cell.
+//! Nothing in the cache ever crosses a thread boundary.
 //!
 //! Guarantees:
 //! * **Determinism.** A cell's result is a pure function of the cell (its
 //!   dataset recipe + `RunConfig`, including the derived seed); scheduling
-//!   order cannot leak in. Results are returned in declaration order, so any
+//!   order cannot leak in. The cache preserves this: a dataset is itself a
+//!   pure function of its cache key, so a hit returns exactly what a fresh
+//!   build would. Results are returned in declaration order, so any
 //!   downstream aggregation is byte-identical at `--jobs 1` and `--jobs N`.
 //! * **Panic isolation.** A cell that panics (or returns an error, e.g. a
 //!   diverging configuration) is recorded as `CellStatus::Failed` and the
 //!   rest of the sweep proceeds.
 
-use super::spec::SweepCell;
+use super::spec::{DatasetRef, SweepCell};
 use crate::coordinator::run_federated;
+use crate::data::FederatedDataset;
 use crate::metrics::{History, RunSummary};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
@@ -52,11 +62,18 @@ pub struct CellResult {
     /// Name of the dataset as built (e.g. `a1a-s`).
     pub dataset: String,
     pub status: CellStatus,
+    /// Fingerprint of the cell's full `RunConfig` ([`crate::config::RunConfig::fingerprint`]).
+    /// Serialized with each row so `--resume` can refuse rows recorded
+    /// under parameters the group string doesn't encode.
+    pub cfg_hash: u64,
     /// Full run trace (`None` on failure).
     pub history: Option<History>,
     /// Wall-clock of this cell, for progress reporting only — never fed into
     /// aggregates (it would break cross-`--jobs` determinism).
     pub wall_ms: f64,
+    /// Whether this cell's dataset came out of the worker's thread-local
+    /// memo rather than being rebuilt (observability; never serialized).
+    pub dataset_cache_hit: bool,
 }
 
 impl CellResult {
@@ -113,19 +130,45 @@ pub fn run_cells(
     slots.into_iter().flatten().collect()
 }
 
+thread_local! {
+    /// Per-worker dataset memo (the ROADMAP's "dataset/problem cache for
+    /// sweeps"): `(recipe key, data_seed)` → built dataset. Thread-local by
+    /// design — `LocalProblem` (and anything downstream of a dataset) is
+    /// non-`Sync`, so sharing across workers is off the table; worker
+    /// threads die with the sweep, taking their memo with them.
+    static DATASET_CACHE: RefCell<HashMap<(String, u64), Rc<FederatedDataset>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Fetch (or build and memoize) the dataset for a recipe + seed on this
+/// worker thread. Returns the dataset and whether it was a cache hit.
+fn cached_dataset(ds: &DatasetRef, data_seed: u64) -> (Rc<FederatedDataset>, bool) {
+    let key = (ds.cache_key(), data_seed);
+    if let Some(fed) = DATASET_CACHE.with(|c| c.borrow().get(&key).cloned()) {
+        return (fed, true);
+    }
+    // Build outside the borrow: dataset generation can be slow and (in
+    // pathological configurations) can panic; the memo must stay usable.
+    let fed = Rc::new(ds.build(data_seed));
+    DATASET_CACHE.with(|c| c.borrow_mut().insert(key, Rc::clone(&fed)));
+    (fed, false)
+}
+
 /// Run one cell with panic isolation.
 fn run_cell(cell: &SweepCell) -> CellResult {
     let start = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(|| {
-        let fed = cell.dataset.build(cell.data_seed);
+        let (fed, cache_hit) = cached_dataset(&cell.dataset, cell.data_seed);
         let name = fed.name.clone();
-        run_federated(&fed, &cell.cfg).map(|out| (name, out))
+        run_federated(&fed, &cell.cfg).map(|out| (name, cache_hit, out))
     }));
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
-    let (dataset, status, history) = match outcome {
-        Ok(Ok((name, out))) => (name, CellStatus::Ok, Some(out.history)),
-        Ok(Err(e)) => (cell.dataset.name(), CellStatus::Failed(format!("{e:#}")), None),
-        Err(payload) => (cell.dataset.name(), CellStatus::Failed(panic_message(payload)), None),
+    let (dataset, status, history, dataset_cache_hit) = match outcome {
+        Ok(Ok((name, hit, out))) => (name, CellStatus::Ok, Some(out.history), hit),
+        Ok(Err(e)) => (cell.dataset.name(), CellStatus::Failed(format!("{e:#}")), None, false),
+        Err(payload) => {
+            (cell.dataset.name(), CellStatus::Failed(panic_message(payload)), None, false)
+        }
     };
     CellResult {
         id: cell.id,
@@ -134,8 +177,10 @@ fn run_cell(cell: &SweepCell) -> CellResult {
         rng_seed: cell.cfg.seed,
         dataset,
         status,
+        cfg_hash: cell.cfg.fingerprint(),
         history,
         wall_ms,
+        dataset_cache_hit,
     }
 }
 
@@ -231,5 +276,60 @@ mod tests {
     fn empty_cell_list_is_a_noop() {
         let results = run_cells(&[], 4, |_| panic!("no cells, no callbacks"));
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn dataset_cache_builds_each_distinct_dataset_once_per_worker() {
+        // 2 algorithms × 2 seeds over one dataset recipe = 4 cells but only
+        // 2 distinct (recipe, seed) datasets. A single worker gets a fresh
+        // thread-local memo, so exactly 2 misses and 2 hits.
+        let cells = tiny_spec().expand();
+        assert_eq!(cells.len(), 4);
+        let results = run_cells(&cells, 1, |_| {});
+        let misses = results.iter().filter(|r| !r.dataset_cache_hit).count();
+        let hits = results.iter().filter(|r| r.dataset_cache_hit).count();
+        assert_eq!(misses, 2, "one build per distinct (recipe, data_seed)");
+        assert_eq!(hits, 2);
+        // More workers can only rebuild per thread, never per cell: misses
+        // stay bounded by distinct-datasets × workers.
+        let results = run_cells(&cells, 2, |_| {});
+        let misses = results.iter().filter(|r| !r.dataset_cache_hit).count();
+        assert!(misses <= 4, "misses={misses}");
+    }
+
+    #[test]
+    fn dataset_cache_does_not_leak_across_recipes() {
+        // Same seed axis, two different synthetic shapes → no key collision,
+        // every cell still sees its own dataset (names differ by shape).
+        let mut spec = tiny_spec();
+        spec.datasets.push(DatasetRef::Synthetic(SyntheticSpec {
+            n_clients: 3,
+            m_per_client: 20,
+            dim: 6,
+            intrinsic_dim: 2,
+            noise: 0.0,
+            seed: 0,
+        }));
+        let cells = spec.expand();
+        let results = run_cells(&cells, 1, |_| {});
+        for (c, r) in cells.iter().zip(&results) {
+            assert!(r.status.is_ok(), "{:?}", r.status);
+            assert_eq!(r.dataset, c.dataset.build(c.data_seed).name);
+        }
+        let misses = results.iter().filter(|r| !r.dataset_cache_hit).count();
+        assert_eq!(misses, 4, "2 shapes × 2 seeds");
+    }
+
+    #[test]
+    fn cached_and_fresh_datasets_give_identical_results() {
+        // Within one worker the 2nd seed-1 cell reuses the memoized dataset;
+        // its trace must match the first worker's fresh build bit-for-bit.
+        let cells = tiny_spec().expand();
+        let serial = run_cells(&cells, 1, |_| {}); // hits within the worker
+        let spread = run_cells(&cells, 4, |_| {}); // mostly fresh builds
+        for (a, b) in serial.iter().zip(&spread) {
+            let (ha, hb) = (a.history.as_ref().unwrap(), b.history.as_ref().unwrap());
+            assert_eq!(ha.records, hb.records);
+        }
     }
 }

@@ -1,15 +1,22 @@
 //! Minimal JSON value model with rendering and parsing — the wire format of
-//! the sweep result sink (`runs/<sweep>/runs.jsonl`, `summary.jsonl`).
+//! the sweep result sink (`runs/<sweep>/runs.jsonl`, `summary.jsonl`) — plus
+//! the crash-safe JSONL file primitives built on it: [`JsonlSink`] (durable
+//! line-at-a-time appends) and [`load_jsonl`] (recovery that tolerates a torn
+//! final line).
 //!
 //! `serde` is not part of this environment's crate registry, so the engine
 //! ships its own small, deterministic implementation. Rendering is
 //! byte-stable: object keys keep insertion order, numbers use Rust's shortest
 //! round-trip `f64` formatting, and non-finite numbers serialize as `null`
 //! (JSON has no encoding for them). That stability is what makes sweep
-//! aggregates byte-identical across `--jobs` levels.
+//! aggregates byte-identical across `--jobs` levels, and — because shortest
+//! round-trip formatting parses back to the identical `f64` — what lets a
+//! resumed sweep re-aggregate loaded rows bit-for-bit.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
 
 /// A JSON value. Objects preserve insertion order (deterministic output).
 #[derive(Clone, Debug, PartialEq)]
@@ -360,6 +367,91 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ── Crash-safe JSONL files ──────────────────────────────────────────────
+
+/// Durable line-at-a-time JSONL writer.
+///
+/// Each [`JsonlSink::push`] renders the row, issues a *single* `write` of
+/// `line + '\n'`, and fsyncs (`sync_data`) before returning — so after a
+/// crash or SIGKILL, at most the final line of the file is torn, which is
+/// exactly the failure mode [`load_jsonl`] recovers from. One fsync per row
+/// is noise next to the cost of the federated run that produced it.
+pub struct JsonlSink {
+    file: std::fs::File,
+}
+
+impl JsonlSink {
+    /// Open `path` truncated (a fresh sweep).
+    pub fn create(path: &Path) -> Result<JsonlSink> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlSink { file })
+    }
+
+    /// Open `path` for appending (a resumed sweep; the file must already be
+    /// compacted so no torn line precedes the new rows).
+    pub fn append(path: &Path) -> Result<JsonlSink> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        Ok(JsonlSink { file })
+    }
+
+    /// Durably append one row.
+    pub fn push(&mut self, row: &Json) -> Result<()> {
+        let mut line = row.render();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Outcome of loading a JSONL file that may have been interrupted mid-write.
+#[derive(Debug)]
+pub struct JsonlLoad {
+    /// Every successfully parsed row, in file order.
+    pub rows: Vec<Json>,
+    /// Whether a torn (unparseable or non-UTF-8) final line was dropped.
+    pub torn_tail: bool,
+}
+
+/// Load a JSONL file, tolerating a torn *final* line — the signature a crash
+/// leaves behind with [`JsonlSink`]'s single-write appends. Empty lines are
+/// skipped; an unparseable line anywhere *before* the last one is real
+/// corruption and an error.
+pub fn load_jsonl(path: &Path) -> Result<JsonlLoad> {
+    // Bytes, not a String: a torn write can split a multi-byte UTF-8
+    // character, which must count as a torn tail rather than a read error.
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let lines: Vec<&[u8]> = bytes
+        .split(|&b| b == b'\n')
+        .filter(|l| !l.iter().all(|b| b.is_ascii_whitespace()))
+        .collect();
+    let mut rows = Vec::with_capacity(lines.len());
+    let mut torn_tail = false;
+    for (i, line) in lines.iter().enumerate() {
+        let parsed = std::str::from_utf8(line)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| Json::parse(text));
+        match parsed {
+            Ok(row) => rows.push(row),
+            // A torn tail is the expected signature of a crash mid-append.
+            Err(_) if i + 1 == lines.len() => torn_tail = true,
+            Err(e) => {
+                return Err(e.context(format!(
+                    "corrupt JSONL line {} of {} (only the final line may be torn)",
+                    i + 1,
+                    path.display()
+                )));
+            }
+        }
+    }
+    Ok(JsonlLoad { rows, torn_tail })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -433,5 +525,125 @@ mod tests {
         assert_eq!(Json::Num(3.5).as_usize(), None);
         assert_eq!(Json::Num(-1.0).as_usize(), None);
         assert_eq!(Json::str("3").as_usize(), None);
+    }
+
+    #[test]
+    fn lone_surrogate_halves_are_rejected() {
+        // High half with no low half following.
+        assert!(Json::parse("\"\\ud835\"").is_err());
+        assert!(Json::parse("\"\\ud835x\"").is_err());
+        assert!(Json::parse("\"\\ud835\\n\"").is_err());
+        // Low half on its own is not a valid scalar either.
+        assert!(Json::parse("\"\\udc00\"").is_err());
+        // High half followed by a non-low-surrogate escape.
+        assert!(Json::parse("\"\\ud835\\u0041\"").is_err());
+        // Two high halves in a row.
+        assert!(Json::parse("\"\\ud835\\ud835\"").is_err());
+    }
+
+    #[test]
+    fn truncated_unicode_escapes_are_rejected() {
+        assert!(Json::parse("\"\\u\"").is_err());
+        assert!(Json::parse("\"\\u00\"").is_err());
+        assert!(Json::parse("\"\\u00g0\"").is_err());
+        // Input ends mid-escape (the torn-line shape).
+        assert!(Json::parse("\"\\u00").is_err());
+        assert!(Json::parse("\"\\ud835\\u").is_err());
+        assert!(Json::parse("\"\\ud835\\udc").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::num(f64::NAN), Json::Null);
+        assert_eq!(Json::num(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num(f64::NEG_INFINITY), Json::Null);
+        assert_eq!(Json::opt_num(Some(f64::NAN)), Json::Null);
+        assert_eq!(Json::opt_num(Some(f64::NEG_INFINITY)), Json::Null);
+        assert_eq!(Json::opt_num(None), Json::Null);
+        assert_eq!(Json::opt_num(Some(2.5)), Json::Num(2.5));
+        // A Num smuggled in non-finite still renders as null.
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(
+            Json::Arr(vec![Json::opt_num(Some(f64::NAN)), Json::num(1.0)]).render(),
+            "[null,1]"
+        );
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bl_jsonl_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn sink_then_load_roundtrips() {
+        let path = tmp_path("roundtrip");
+        let rows = vec![
+            Json::Obj(vec![("a".into(), Json::num(1.5))]),
+            Json::Obj(vec![("b".into(), Json::str("π ≈ 3.14"))]),
+        ];
+        let mut sink = JsonlSink::create(&path).unwrap();
+        for r in &rows {
+            sink.push(r).unwrap();
+        }
+        drop(sink);
+        let load = load_jsonl(&path).unwrap();
+        assert!(!load.torn_tail);
+        assert_eq!(load.rows, rows);
+        // Appending after reopening keeps earlier rows intact.
+        let mut sink = JsonlSink::append(&path).unwrap();
+        sink.push(&Json::Null).unwrap();
+        drop(sink);
+        let load = load_jsonl(&path).unwrap();
+        assert_eq!(load.rows.len(), 3);
+        assert_eq!(load.rows[2], Json::Null);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_drops_torn_final_line() {
+        let path = tmp_path("torn");
+        // Two good rows, then a crash mid-write of the third.
+        std::fs::write(&path, "{\"a\":1}\n{\"a\":2}\n{\"a\":3,\"bits\":12").unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert!(load.torn_tail);
+        assert_eq!(load.rows.len(), 2);
+        assert_eq!(load.rows[1].get("a").unwrap().as_f64(), Some(2.0));
+
+        // Torn inside a multi-byte UTF-8 character (π is 0xCF 0x80).
+        std::fs::write(&path, b"{\"a\":1}\n{\"s\":\"\xcf".as_slice()).unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert!(load.torn_tail);
+        assert_eq!(load.rows.len(), 1);
+
+        // Torn mid-escape.
+        std::fs::write(&path, "{\"a\":1}\n{\"s\":\"\\u00").unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert!(load.torn_tail);
+        assert_eq!(load.rows.len(), 1);
+
+        // A file that is nothing but a torn line recovers to zero rows.
+        std::fs::write(&path, "{\"a\"").unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert!(load.torn_tail);
+        assert!(load.rows.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_tolerates_trailing_newline_and_blank_lines() {
+        let path = tmp_path("blank");
+        std::fs::write(&path, "{\"a\":1}\n\n{\"a\":2}\n").unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert!(!load.torn_tail);
+        assert_eq!(load.rows.len(), 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_mid_file_corruption() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{\"a\":1}\ngarbage!\n{\"a\":2}\n").unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -12,15 +12,17 @@
 //!    ([`derive_cell_seed`]).
 //! 2. **Execute**: [`run_cells`] fans the cells out over a `std::thread`
 //!    pool. Workers build their own dataset/problem handles (local problems
-//!    are deliberately non-`Sync`), and a panicking or diverging cell is
-//!    isolated as a [`CellStatus::Failed`] result instead of killing the
-//!    sweep.
-//! 3. **Sink**: each finished run can stream a [`Json`] row
-//!    ([`run_row`]) to `runs/<sweep>/runs.jsonl` from the `on_done`
-//!    callback.
+//!    are deliberately non-`Sync`) but memoize built datasets in a
+//!    thread-local cache keyed on `(recipe, data_seed)`, so a grid of G
+//!    groups × S seeds builds each distinct dataset at most once per worker
+//!    thread. A panicking or diverging cell is isolated as a
+//!    [`CellStatus::Failed`] result instead of killing the sweep.
+//! 3. **Sink**: each finished run can stream a [`Json`] row ([`run_row`])
+//!    to `runs/<sweep>/runs.jsonl` from the `on_done` callback, through the
+//!    durable [`JsonlSink`].
 //! 4. **Aggregate**: [`aggregate`] reduces seeds to per-group mean/std
 //!    bits-to-target-gap, [`ranked`] orders the groups best-first, and
-//!    [`GroupSummary::to_json`] rows form `summary.jsonl`. Aggregates are
+//!    [`summary_jsonl`] renders them as `summary.jsonl`. Aggregates are
 //!    byte-identical at any `--jobs` level because every per-run quantity is
 //!    a pure function of its cell.
 //!
@@ -28,15 +30,42 @@
 //! topk:1,topk:8 --seeds 1..3 --jobs 8`, and used by
 //! [`crate::experiments`] to run every figure/table through the same
 //! engine.
+//!
+//! ## On-disk layout and resume
+//!
+//! Each sweep owns one directory, `runs/<name>/` (or `--out DIR`):
+//!
+//! * `runs.jsonl` — one row per executed run, in *completion* order. Rows
+//!   are appended durably (a single `write` of the whole line, then fsync),
+//!   so a crash or SIGKILL leaves at most a torn final line.
+//! * `summary.jsonl` — one row per group (cross-seed aggregate plus its
+//!   rank), best-first, rewritten whole when the sweep finishes.
+//!
+//! `repro sweep --resume` makes that layout restartable: it re-expands the
+//! spec, recovers rows with [`load_jsonl`] (dropping a torn tail), matches
+//! them to cells by the stable [`SweepCell::key`] *and* the cell's full
+//! `RunConfig` fingerprint via [`plan_resume`], and executes only missing
+//! or previously failed cells — completed cells are never re-run, and the
+//! merged row set (sorted back into declaration order) re-aggregates to a
+//! `summary.jsonl` byte-identical to an uninterrupted run's at any
+//! `--jobs` level. Resuming with changed shared parameters (`--rounds`,
+//! `--lambda`, `--target-gap`, `--max-bits`, `--master-seed`, ...) is safe:
+//! the fingerprint refuses rows recorded under the old values and those
+//! cells simply re-run. Before appending, the file is compacted to the
+//! latest successful row per key so a torn tail or stale failed row never
+//! precedes fresh appends.
 
 mod agg;
 mod exec;
 mod jsonl;
 mod spec;
 
-pub use agg::{aggregate, ranked, run_row, summary_table, GroupSummary, TargetAgg};
+pub use agg::{
+    aggregate, plan_resume, ranked, rows_from_results, run_row, summary_jsonl, summary_table,
+    GroupSummary, ResumePlan, RunRow, TargetAgg,
+};
 pub use exec::{default_jobs, run_cells, CellResult, CellStatus, SWEEP_TARGETS};
-pub use jsonl::Json;
+pub use jsonl::{load_jsonl, Json, JsonlLoad, JsonlSink};
 pub use spec::{
     derive_cell_seed, parse_axis, parse_bases, parse_datasets, parse_seeds, parse_taus,
     DatasetRef, SweepCell, SweepSpec,

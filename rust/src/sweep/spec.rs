@@ -34,6 +34,9 @@ pub enum DatasetRef {
 
 impl DatasetRef {
     /// Stable display name (matches the name the built dataset carries).
+    /// Synthetic names carry their shape so that two different synthetic
+    /// datasets in one sweep never collide in group strings — the cell key
+    /// built from them is what `--resume` diffs against.
     pub fn name(&self) -> String {
         match self {
             DatasetRef::Registry { entry, full_scale } => {
@@ -43,7 +46,18 @@ impl DatasetRef {
                     format!("{}-s", entry.name)
                 }
             }
-            DatasetRef::Synthetic(_) => "synth".into(),
+            DatasetRef::Synthetic(s) => s.name(),
+        }
+    }
+
+    /// Key under which sweep workers memoize the built dataset: the full
+    /// recipe identity *minus* the per-cell seed (which keys the memo
+    /// alongside it). Delegates to the data layer so the key stays in sync
+    /// with what [`DatasetRef::build`] actually varies over.
+    pub fn cache_key(&self) -> String {
+        match self {
+            DatasetRef::Registry { entry, full_scale } => entry.cache_key(*full_scale),
+            DatasetRef::Synthetic(spec) => spec.shape_key(),
         }
     }
 
@@ -86,11 +100,7 @@ impl SweepCell {
 /// group key, seed-axis value). FNV-1a over the group string, mixed with the
 /// other inputs and finalized through SplitMix64.
 pub fn derive_cell_seed(master: u64, group: &str, seed_axis: u64) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in group.as_bytes() {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
+    let h = crate::rng::fnv1a(group.as_bytes());
     let mut s = master
         .wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ h
@@ -405,8 +415,35 @@ mod tests {
         assert_ne!(fed.clients[0].a, fed3.clients[0].a);
 
         let synth = DatasetRef::Synthetic(SyntheticSpec { seed: 0, ..SyntheticSpec::default() });
-        assert_eq!(synth.name(), "synth");
+        assert_eq!(synth.name(), "synth-n10-m100-d50-r10");
+        assert_eq!(synth.name(), synth.build(3).name);
         assert_eq!(synth.build(3).n_clients(), SyntheticSpec::default().n_clients);
+        // Noise is part of the name (it changes the data, so it must split
+        // group strings and resume keys) and still matches the built name.
+        let noisy = DatasetRef::Synthetic(SyntheticSpec { noise: 0.1, ..SyntheticSpec::default() });
+        assert_eq!(noisy.name(), "synth-n10-m100-d50-r10-noise0.1");
+        assert_eq!(noisy.name(), noisy.build(3).name);
+    }
+
+    #[test]
+    fn cache_keys_separate_recipes_but_not_seeds() {
+        let scaled = DatasetRef::Registry { entry: data::find("a1a").unwrap(), full_scale: false };
+        let paper = DatasetRef::Registry { entry: data::find("a1a").unwrap(), full_scale: true };
+        let other = DatasetRef::Registry { entry: data::find("w2a").unwrap(), full_scale: false };
+        assert_ne!(scaled.cache_key(), paper.cache_key());
+        assert_ne!(scaled.cache_key(), other.cache_key());
+
+        let s1 = DatasetRef::Synthetic(SyntheticSpec { seed: 1, ..SyntheticSpec::default() });
+        let s2 = DatasetRef::Synthetic(SyntheticSpec { seed: 2, ..SyntheticSpec::default() });
+        // The spec's own seed is overridden per cell, so it must not split
+        // the cache...
+        assert_eq!(s1.cache_key(), s2.cache_key());
+        // ...but every shape field must.
+        let wider = DatasetRef::Synthetic(SyntheticSpec { dim: 51, ..SyntheticSpec::default() });
+        let noisy = DatasetRef::Synthetic(SyntheticSpec { noise: 0.1, ..SyntheticSpec::default() });
+        assert_ne!(s1.cache_key(), wider.cache_key());
+        assert_ne!(s1.cache_key(), noisy.cache_key());
+        assert_ne!(s1.cache_key(), scaled.cache_key());
     }
 
     #[test]
@@ -448,7 +485,7 @@ mod tests {
         let ds = parse_datasets("a1a,w2a,synth", false).unwrap();
         assert_eq!(ds.len(), 3);
         assert_eq!(ds[0].name(), "a1a-s");
-        assert_eq!(ds[2].name(), "synth");
+        assert_eq!(ds[2].name(), "synth-n10-m100-d50-r10");
         assert!(parse_datasets("atlantis", false).is_err());
         assert_eq!(parse_datasets("a1a", true).unwrap()[0].name(), "a1a");
     }

@@ -1,0 +1,185 @@
+//! End-to-end crash/resume drill for the sweep engine: run a grid, tear the
+//! `runs.jsonl` sink mid-line the way a SIGKILL would, recover with the
+//! resume planner, execute only what's missing, and check the re-aggregated
+//! summary is byte-identical to the uninterrupted run's — at a different
+//! `--jobs` level, which the determinism contract says must not matter.
+
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, RunConfig};
+use basis_learn::data::SyntheticSpec;
+use basis_learn::sweep::{
+    aggregate, load_jsonl, plan_resume, ranked, rows_from_results, run_cells, run_row,
+    summary_jsonl, DatasetRef, JsonlSink, RunRow, SweepCell, SweepSpec, SWEEP_TARGETS,
+};
+use std::path::PathBuf;
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        algos: vec![Algorithm::Bl1, Algorithm::FedNl],
+        datasets: vec![DatasetRef::Synthetic(SyntheticSpec {
+            n_clients: 3,
+            m_per_client: 20,
+            dim: 8,
+            intrinsic_dim: 3,
+            noise: 0.0,
+            seed: 0,
+        })],
+        hess_comps: vec![CompressorSpec::TopK(3)],
+        seeds: vec![1, 2, 3],
+        base: RunConfig { rounds: 40, target_gap: 1e-10, ..RunConfig::default() },
+        ..SweepSpec::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bl_sweep_resume_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn summary_bytes(rows: &[RunRow]) -> String {
+    let summaries = aggregate(rows, &SWEEP_TARGETS);
+    summary_jsonl(&summaries, &ranked(&summaries))
+}
+
+/// Cut `runs.jsonl` after `keep` whole rows plus a torn fragment of the
+/// next one — the on-disk shape an interrupted sweep leaves behind.
+fn tear_after(path: &PathBuf, keep: usize) {
+    let bytes = std::fs::read(path).unwrap();
+    let mut newlines = 0usize;
+    let mut cut_start = bytes.len();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            newlines += 1;
+            if newlines == keep {
+                cut_start = i + 1;
+                break;
+            }
+        }
+    }
+    assert!(cut_start < bytes.len(), "file has fewer than {keep} full rows to tear after");
+    // Leave half of the next row behind.
+    let next_end = bytes[cut_start..]
+        .iter()
+        .position(|&b| b == b'\n')
+        .map(|p| cut_start + p)
+        .unwrap_or(bytes.len());
+    let cut = cut_start + (next_end - cut_start) / 2;
+    std::fs::write(path, &bytes[..cut]).unwrap();
+}
+
+#[test]
+fn resume_after_torn_tail_matches_uninterrupted_run() {
+    let dir = tmp_dir("torn");
+    let cells = tiny_spec().expand();
+    assert_eq!(cells.len(), 6);
+
+    // Uninterrupted reference at --jobs 2.
+    let full = run_cells(&cells, 2, |_| {});
+    let full_summary = summary_bytes(&rows_from_results(&full, &SWEEP_TARGETS));
+
+    // Simulate the interrupted sweep: 3 complete rows + half of the 4th.
+    // (Write in declaration order — any completion order gives the same
+    // resume behaviour since matching is by key, not position.)
+    let path = dir.join("runs.jsonl");
+    let mut sink = JsonlSink::create(&path).unwrap();
+    for r in &full {
+        sink.push(&run_row(r, &SWEEP_TARGETS)).unwrap();
+    }
+    drop(sink);
+    tear_after(&path, 3);
+
+    // Recover and plan: the torn row is dropped, 3 survive, 3 re-run.
+    let load = load_jsonl(&path).unwrap();
+    assert!(load.torn_tail);
+    assert_eq!(load.rows.len(), 3);
+    let prior: Vec<RunRow> = load.rows.iter().map(|j| RunRow::from_json(j).unwrap()).collect();
+    let plan = plan_resume(&cells, &prior, &SWEEP_TARGETS);
+    assert_eq!(plan.done.len(), 3);
+    assert_eq!(plan.todo.len(), 3);
+    let done_keys: Vec<String> = plan.done.iter().map(|r| r.key()).collect();
+    for c in &plan.todo {
+        assert!(!done_keys.contains(&c.key()), "cell scheduled twice: {}", c.key());
+    }
+
+    // Execute exactly N − k cells, at a different jobs level, and merge.
+    let rest = run_cells(&plan.todo, 1, |_| {});
+    assert_eq!(rest.len(), 3);
+    let mut rows = plan.done.clone();
+    rows.extend(rows_from_results(&rest, &SWEEP_TARGETS));
+    rows.sort_by_key(|r| r.id);
+    assert_eq!(summary_bytes(&rows), full_summary);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_reruns_failed_cells_and_preserves_completed_ones() {
+    let dir = tmp_dir("failed");
+    let mut cells = tiny_spec().expand();
+    // Sabotage one cell so its first run fails (RankR gradient compressor
+    // panics in build_vec — the worst-case in-cell failure).
+    cells[1].cfg.algorithm = Algorithm::Diana;
+    cells[1].cfg.grad_comp = CompressorSpec::RankR(1);
+
+    let first = run_cells(&cells, 2, |_| {});
+    assert!(!first[1].status.is_ok());
+    let path = dir.join("runs.jsonl");
+    let mut sink = JsonlSink::create(&path).unwrap();
+    for r in &first {
+        sink.push(&run_row(r, &SWEEP_TARGETS)).unwrap();
+    }
+    drop(sink);
+
+    // Resume over an intact file: only the failed cell is scheduled.
+    let load = load_jsonl(&path).unwrap();
+    assert!(!load.torn_tail);
+    let prior: Vec<RunRow> = load.rows.iter().map(|j| RunRow::from_json(j).unwrap()).collect();
+    let plan = plan_resume(&cells, &prior, &SWEEP_TARGETS);
+    assert_eq!(plan.done.len(), cells.len() - 1);
+    assert_eq!(plan.todo.len(), 1);
+    assert_eq!(plan.todo[0].id, 1);
+
+    // Fix the cell and re-run it; the merged summary matches a from-scratch
+    // run of the fixed grid.
+    let fixed: Vec<SweepCell> = tiny_spec().expand();
+    let rerun = run_cells(&[fixed[1].clone()], 1, |_| {});
+    assert!(rerun[0].status.is_ok());
+    let mut rows = plan.done.clone();
+    rows.extend(rows_from_results(&rerun, &SWEEP_TARGETS));
+    rows.sort_by_key(|r| r.id);
+    let reference = run_cells(&fixed, 3, |_| {});
+    assert_eq!(
+        summary_bytes(&rows),
+        summary_bytes(&rows_from_results(&reference, &SWEEP_TARGETS))
+    );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_with_complete_file_schedules_nothing() {
+    let cells = tiny_spec().expand();
+    let results = run_cells(&cells, 2, |_| {});
+    let prior = rows_from_results(&results, &SWEEP_TARGETS);
+    let plan = plan_resume(&cells, &prior, &SWEEP_TARGETS);
+    assert!(plan.todo.is_empty());
+    assert_eq!(plan.done.len(), cells.len());
+    // Aggregating the recovered rows alone reproduces the full summary.
+    assert_eq!(summary_bytes(&plan.done), summary_bytes(&prior));
+}
+
+#[test]
+fn torn_single_row_file_reruns_everything() {
+    let dir = tmp_dir("all_torn");
+    let path = dir.join("runs.jsonl");
+    std::fs::write(&path, "{\"cell\":0,\"group\":\"g\",\"seed\":1,\"status\":\"o").unwrap();
+    let load = load_jsonl(&path).unwrap();
+    assert!(load.torn_tail);
+    assert!(load.rows.is_empty());
+    let cells = tiny_spec().expand();
+    let prior: Vec<RunRow> = load.rows.iter().filter_map(|j| RunRow::from_json(j).ok()).collect();
+    let plan = plan_resume(&cells, &prior, &SWEEP_TARGETS);
+    assert_eq!(plan.todo.len(), cells.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
