@@ -1,0 +1,18 @@
+"""Sweep-output analysis: dependency-light loaders for the Rust engine's
+``runs.jsonl`` / ``summary.jsonl`` sinks and per-run history CSVs, plus a
+gap-vs-bits plot script regenerating the paper's Figure-1-style curves.
+
+Only the plot script needs matplotlib; everything in :mod:`analysis.loader`
+is pure standard library so it can run anywhere the sweep output lands.
+"""
+
+from analysis.loader import (  # noqa: F401
+    GroupSummary,
+    RunRow,
+    TargetAgg,
+    TargetBits,
+    load_history_csv,
+    load_jsonl,
+    load_runs,
+    load_summary,
+)

@@ -1,0 +1,175 @@
+"""Loaders for the sweep engine's output files (standard library only).
+
+Three artifact kinds, all written by the Rust side:
+
+* ``runs.jsonl``    — one row per executed run (``repro sweep``), appended
+  durably in completion order; a crash can leave a torn final line, which
+  the loader drops exactly like the Rust ``load_jsonl`` recovery path.
+* ``summary.jsonl`` — ranked cross-seed aggregates, one row per group.
+* ``*.csv``         — full per-round histories (``repro run --csv`` and the
+  figure harness), columns ``round, bits_up_per_node, bits_down_per_node,
+  bits_per_node, gap, grad_norm, dist_to_opt``.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Union
+
+PathLike = Union[str, Path]
+
+
+def load_jsonl(path: PathLike, *, tolerate_torn_tail: bool = True) -> list[dict]:
+    """Parse a JSONL file into a list of dicts.
+
+    A final line that does not parse is treated as the torn tail of an
+    interrupted append and dropped (matching the Rust recovery loader); a
+    malformed line anywhere else is a real error.
+    """
+    rows: list[dict] = []
+    lines = Path(path).read_text(encoding="utf-8").splitlines()
+    # Trailing blank lines are not "torn" — ignore them.
+    while lines and not lines[-1].strip():
+        lines.pop()
+    for lineno, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rows.append(json.loads(line))
+        except json.JSONDecodeError:
+            if tolerate_torn_tail and lineno == len(lines) - 1:
+                break
+            raise ValueError(f"{path}:{lineno + 1}: malformed JSONL line") from None
+    return rows
+
+
+@dataclass
+class TargetBits:
+    """Bits-to-reach one gap target, both accounting conventions."""
+
+    target: float
+    total: float | None
+    uplink: float | None
+
+
+@dataclass
+class RunRow:
+    """One executed sweep cell (a row of ``runs.jsonl``)."""
+
+    cell: int
+    group: str
+    dataset: str
+    seed: int
+    ok: bool
+    label: str | None = None
+    rounds: int | None = None
+    final_gap: float | None = None
+    bits_per_node: float | None = None
+    bits_up_per_node: float | None = None
+    bits_to: list[TargetBits] = field(default_factory=list)
+    error: str | None = None
+
+    @classmethod
+    def from_dict(cls, row: dict) -> "RunRow":
+        return cls(
+            cell=int(row["cell"]),
+            group=row["group"],
+            dataset=row.get("dataset", ""),
+            seed=int(row["seed"]),
+            ok=row.get("status") == "ok",
+            label=row.get("label"),
+            rounds=None if row.get("rounds") is None else int(row["rounds"]),
+            final_gap=row.get("final_gap"),
+            bits_per_node=row.get("bits_per_node"),
+            bits_up_per_node=row.get("bits_up_per_node"),
+            bits_to=[
+                TargetBits(t["target"], t.get("total"), t.get("uplink"))
+                for t in row.get("bits_to", [])
+            ],
+            error=row.get("error"),
+        )
+
+    def bits_for(self, target: float, *, uplink: bool = False) -> float | None:
+        """Bits/node to first reach ``target`` (None if never reached)."""
+        for t in self.bits_to:
+            if t.target == target:
+                return t.uplink if uplink else t.total
+        return None
+
+
+def load_runs(path: PathLike) -> list[RunRow]:
+    """Load ``runs.jsonl`` rows, sorted back into declaration order."""
+    rows = [RunRow.from_dict(r) for r in load_jsonl(path)]
+    rows.sort(key=lambda r: r.cell)
+    return rows
+
+
+@dataclass
+class TargetAgg:
+    """Cross-seed aggregate for one gap target."""
+
+    target: float
+    reached: int
+    bits_mean: float | None
+    bits_std: float | None
+
+
+@dataclass
+class GroupSummary:
+    """One group of ``summary.jsonl`` (ranked best-first by the engine)."""
+
+    rank: int
+    group: str
+    n_runs: int
+    n_ok: int
+    final_gap_mean: float | None
+    targets: list[TargetAgg]
+
+    @classmethod
+    def from_dict(cls, row: dict) -> "GroupSummary":
+        return cls(
+            rank=int(row["rank"]),
+            group=row["group"],
+            n_runs=int(row["n_runs"]),
+            n_ok=int(row["n_ok"]),
+            final_gap_mean=row.get("final_gap_mean"),
+            targets=[
+                TargetAgg(
+                    t["target"], int(t["reached"]), t.get("bits_mean"), t.get("bits_std")
+                )
+                for t in row.get("targets", [])
+            ],
+        )
+
+
+def load_summary(path: PathLike) -> list[GroupSummary]:
+    """Load ``summary.jsonl`` rows in rank order."""
+    rows = [GroupSummary.from_dict(r) for r in load_jsonl(path)]
+    rows.sort(key=lambda r: r.rank)
+    return rows
+
+
+def load_history_csv(path: PathLike) -> dict[str, list[float]]:
+    """Load a per-round history CSV into column lists.
+
+    Returns a dict keyed by header name (``round``, ``bits_up_per_node``,
+    ``bits_down_per_node``, ``bits_per_node``, ``gap``, ``grad_norm``,
+    ``dist_to_opt``); every value parses as float (``round`` included, for
+    uniformity).
+    """
+    lines = [ln for ln in Path(path).read_text(encoding="utf-8").splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError(f"{path}: empty history CSV")
+    header = [h.strip() for h in lines[0].split(",")]
+    cols: dict[str, list[float]] = {h: [] for h in header}
+    for lineno, line in enumerate(lines[1:], start=2):
+        parts = line.split(",")
+        if len(parts) != len(header):
+            raise ValueError(
+                f"{path}:{lineno}: expected {len(header)} columns, got {len(parts)}"
+            )
+        for h, v in zip(header, parts):
+            cols[h].append(float(v))
+    return cols

@@ -1,0 +1,111 @@
+"""Regenerate the paper's Figure-1-style gap-vs-bits curves from sweep
+output.
+
+Input: one or more per-round history CSVs (written by ``repro run --csv``
+or the figure harness into ``runs/``), or a directory to glob them from.
+One curve per file, labelled from the filename
+(``<experiment>__<label>.csv`` → ``<label>``).
+
+Usage::
+
+    python -m analysis.plot_gap_vs_bits runs/fig1-second-order__*.csv \
+        --out fig1.png
+    python -m analysis.plot_gap_vs_bits runs/ --experiment fig1-second-order \
+        --uplink --out fig1.png
+
+Only this script needs matplotlib; the loaders are stdlib-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from analysis.loader import load_history_csv
+
+
+def series_label(path: Path) -> str:
+    """``fig1__a1a-s__bl1.csv`` → ``a1a-s__bl1`` (fall back to the stem)."""
+    stem = path.stem
+    if "__" in stem:
+        return stem.split("__", 1)[1]
+    return stem
+
+
+def collect_csvs(inputs: list[str], experiment: str | None) -> list[Path]:
+    """Expand file and directory arguments into a sorted CSV list."""
+    out: list[Path] = []
+    for raw in inputs:
+        p = Path(raw)
+        if p.is_dir():
+            pattern = f"{experiment}__*.csv" if experiment else "*.csv"
+            out.extend(sorted(p.glob(pattern)))
+        elif p.is_file():
+            out.append(p)
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    if not out:
+        raise FileNotFoundError("no history CSVs matched the inputs")
+    return out
+
+
+def plot(csvs: list[Path], *, uplink: bool, out: Path, title: str | None) -> None:
+    # Imported lazily so the loaders stay dependency-light.
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(6.0, 4.2))
+    x_col = "bits_up_per_node" if uplink else "bits_per_node"
+    for path in csvs:
+        cols = load_history_csv(path)
+        # Clamp to the resolution the run measured; log axes need positives.
+        xs, ys = [], []
+        for x, gap in zip(cols[x_col], cols["gap"]):
+            if x > 0.0 and gap > 0.0:
+                xs.append(x)
+                ys.append(gap)
+        if xs:
+            ax.plot(xs, ys, label=series_label(path), linewidth=1.6)
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel(
+        "communicated bits per node (uplink)" if uplink else "communicated bits per node"
+    )
+    ax.set_ylabel(r"$f(x^k) - f(x^*)$")
+    if title:
+        ax.set_title(title)
+    ax.grid(True, which="both", alpha=0.25, linewidth=0.5)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    out.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(out, dpi=160)
+    plt.close(fig)
+
+
+def main(argv: list[str] | None = None) -> Path:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("inputs", nargs="+", help="history CSVs or directories holding them")
+    ap.add_argument(
+        "--experiment",
+        help="when an input is a directory, only take `<experiment>__*.csv`",
+    )
+    ap.add_argument(
+        "--uplink",
+        action="store_true",
+        help="x-axis = uplink bits only (the paper's Figs. 1-4 convention)",
+    )
+    ap.add_argument("--out", default="gap_vs_bits.png", help="output image path")
+    ap.add_argument("--title", help="figure title")
+    args = ap.parse_args(argv)
+
+    csvs = collect_csvs(args.inputs, args.experiment)
+    out = Path(args.out)
+    plot(csvs, uplink=args.uplink, out=out, title=args.title)
+    print(f"wrote {out} ({len(csvs)} curves)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

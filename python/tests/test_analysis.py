@@ -1,0 +1,165 @@
+"""Loader round-trips for the sweep-output analysis module.
+
+Fixtures mirror the Rust sinks byte-conventions: `runs.jsonl` rows as
+written by `run_row`, `summary.jsonl` rows as written by `summary_jsonl`,
+and the 7-column per-round history CSV of `History::to_csv`.
+"""
+
+import json
+import textwrap
+
+import pytest
+
+from analysis import loader
+from analysis.plot_gap_vs_bits import collect_csvs, main as plot_main, series_label
+
+RUN_ROWS = [
+    {
+        "cell": 1,
+        "group": "algo=fednl ds=a1a-s",
+        "dataset": "a1a-s",
+        "seed": 2,
+        "rng_seed": "0x00000000deadbeef",
+        "cfg": "0x0000000000000001",
+        "status": "ok",
+        "label": "fednl",
+        "rounds": 40,
+        "final_gap": 3.2e-11,
+        "bits_per_node": 2.0e6,
+        "bits_up_per_node": 1.5e6,
+        "bits_to": [
+            {"target": 1e-4, "total": 1.0e5, "uplink": 8.0e4},
+            {"target": 1e-10, "total": None, "uplink": None},
+        ],
+    },
+    {
+        "cell": 0,
+        "group": "algo=bl1 ds=a1a-s",
+        "dataset": "a1a-s",
+        "seed": 1,
+        "rng_seed": "0x00000000cafef00d",
+        "cfg": "0x0000000000000001",
+        "status": "failed",
+        "error": "diverged at round 7",
+    },
+]
+
+SUMMARY_ROWS = [
+    {
+        "rank": 1,
+        "group": "algo=bl1 ds=a1a-s",
+        "n_runs": 3,
+        "n_ok": 3,
+        "final_gap_mean": 1e-12,
+        "targets": [{"target": 1e-4, "reached": 3, "bits_mean": 9.5e4, "bits_std": 1.2e3}],
+    },
+    {
+        "rank": 2,
+        "group": "algo=fednl ds=a1a-s",
+        "n_runs": 3,
+        "n_ok": 2,
+        "final_gap_mean": 4e-11,
+        "targets": [{"target": 1e-4, "reached": 2, "bits_mean": 2.1e5, "bits_std": None}],
+    },
+]
+
+HISTORY_CSV = textwrap.dedent(
+    """\
+    round,bits_up_per_node,bits_down_per_node,bits_per_node,gap,grad_norm,dist_to_opt
+    0,1024.0,640.0,1664.0,5.000000e-01,1.200000e-01,9.000000e-01
+    1,2048.0,1280.0,3328.0,2.500000e-02,6.000000e-02,4.000000e-01
+    2,3072.0,1920.0,4992.0,1.000000e-09,1.000000e-05,1.000000e-04
+    """
+)
+
+
+def write_jsonl(path, rows):
+    path.write_text("".join(json.dumps(r) + "\n" for r in rows), encoding="utf-8")
+
+
+def test_load_runs_roundtrip(tmp_path):
+    path = tmp_path / "runs.jsonl"
+    write_jsonl(path, RUN_ROWS)
+    rows = loader.load_runs(path)
+    # Sorted back into declaration (cell) order regardless of completion order.
+    assert [r.cell for r in rows] == [0, 1]
+    failed, ok = rows
+    assert not failed.ok
+    assert failed.error == "diverged at round 7"
+    assert failed.final_gap is None and failed.bits_to == []
+    assert ok.ok and ok.label == "fednl" and ok.rounds == 40
+    assert ok.final_gap == pytest.approx(3.2e-11)
+    assert ok.bits_for(1e-4) == pytest.approx(1.0e5)
+    assert ok.bits_for(1e-4, uplink=True) == pytest.approx(8.0e4)
+    assert ok.bits_for(1e-10) is None  # target present but never reached
+    assert ok.bits_for(1e-7) is None  # target absent entirely
+
+
+def test_load_jsonl_drops_torn_tail_only(tmp_path):
+    path = tmp_path / "runs.jsonl"
+    text = json.dumps(RUN_ROWS[0]) + "\n" + json.dumps(RUN_ROWS[1])
+    path.write_text(text[: len(text) - 9], encoding="utf-8")  # tear the last row
+    rows = loader.load_jsonl(path)
+    assert len(rows) == 1
+    # A malformed *interior* line is a real error, not a torn tail.
+    path.write_text('{"broken\n' + json.dumps(RUN_ROWS[0]) + "\n", encoding="utf-8")
+    with pytest.raises(ValueError, match="malformed"):
+        loader.load_jsonl(path)
+
+
+def test_load_summary_rank_order(tmp_path):
+    path = tmp_path / "summary.jsonl"
+    write_jsonl(path, list(reversed(SUMMARY_ROWS)))  # file order ≠ rank order
+    groups = loader.load_summary(path)
+    assert [g.rank for g in groups] == [1, 2]
+    best = groups[0]
+    assert best.group == "algo=bl1 ds=a1a-s"
+    assert best.n_ok == 3
+    assert best.targets[0].bits_mean == pytest.approx(9.5e4)
+    # Nullable aggregate fields survive the round trip as None.
+    assert groups[1].targets[0].bits_std is None
+
+
+def test_load_history_csv(tmp_path):
+    path = tmp_path / "fig1__a1a-s__bl1.csv"
+    path.write_text(HISTORY_CSV, encoding="utf-8")
+    cols = loader.load_history_csv(path)
+    assert cols["round"] == [0.0, 1.0, 2.0]
+    assert cols["gap"][-1] == pytest.approx(1e-9)
+    # The Rust invariant: total = up + down on every row.
+    for up, down, total in zip(
+        cols["bits_up_per_node"], cols["bits_down_per_node"], cols["bits_per_node"]
+    ):
+        assert total == pytest.approx(up + down)
+    # Column-count mismatches are loud.
+    path.write_text(HISTORY_CSV + "3,1,2\n", encoding="utf-8")
+    with pytest.raises(ValueError, match="columns"):
+        loader.load_history_csv(path)
+
+
+def test_series_label_and_collect(tmp_path):
+    a = tmp_path / "fig1__a1a-s__bl1.csv"
+    b = tmp_path / "fig1__a1a-s__fednl.csv"
+    other = tmp_path / "fig2__a1a-s__newton.csv"
+    for p in (a, b, other):
+        p.write_text(HISTORY_CSV, encoding="utf-8")
+    assert series_label(a) == "a1a-s__bl1"
+    assert series_label(tmp_path / "bare.csv") == "bare"
+    assert collect_csvs([str(tmp_path)], "fig1") == [a, b]
+    assert collect_csvs([str(a), str(b)], None) == [a, b]
+    with pytest.raises(FileNotFoundError):
+        collect_csvs([str(tmp_path / "missing.csv")], None)
+    with pytest.raises(FileNotFoundError):
+        collect_csvs([str(tmp_path)], "fig9")
+
+
+def test_plot_script_end_to_end(tmp_path):
+    pytest.importorskip("matplotlib")
+    for name in ("fig1__a1a-s__bl1.csv", "fig1__a1a-s__fednl.csv"):
+        (tmp_path / name).write_text(HISTORY_CSV, encoding="utf-8")
+    out = tmp_path / "fig1.png"
+    written = plot_main(
+        [str(tmp_path), "--experiment", "fig1", "--uplink", "--out", str(out)]
+    )
+    assert written == out
+    assert out.stat().st_size > 0

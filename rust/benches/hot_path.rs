@@ -101,12 +101,87 @@ fn main() {
         }
     }
 
+    // ── transport backends: per-round wall time, serial vs concurrent ──
+    if filter_match("transport") {
+        bench_transport(&mut b);
+    }
+
     // ── PJRT dispatch vs native (needs artifacts + the `pjrt` feature) ──
     if filter_match("pjrt") {
         bench_pjrt(&mut b, &mut rng);
     }
 
     println!("\n{} cases measured.", b.results().len());
+}
+
+/// Per-round wall time of one BL1 round (d = 200, n = 8 clients, Top-K on
+/// the 30×30 subspace coefficients) under `Lockstep` vs `Threaded:{2,4,8}`.
+/// The client phase — Hessian evaluation + basis projection + compression —
+/// dominates, which is exactly what the threaded backend parallelizes; the
+/// serial server solve bounds the achievable speedup (Amdahl).
+fn bench_transport(b: &mut Bench) {
+    use basis_learn::config::{Algorithm, RunConfig};
+    use basis_learn::coordinator::{
+        build_split, estimate_smoothness, native_local, native_locals, run_one_round, Env,
+    };
+    use basis_learn::transport::{client_rngs, Lockstep, Threaded};
+
+    b.group("transport backends (one BL1 round, d=200, n=8, m=60/client)");
+    let fed = FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 8,
+        m_per_client: 60,
+        dim: 200,
+        intrinsic_dim: 30,
+        noise: 0.0,
+        seed: 77,
+    });
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        hess_comp: CompressorSpec::TopK(30),
+        target_gap: 0.0,
+        ..RunConfig::default()
+    };
+    let locals = native_locals(&fed);
+    let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+    let smoothness = estimate_smoothness(&locals, cfg.lambda);
+    let env = Env {
+        locals: &locals,
+        cfg: &cfg,
+        d: fed.dim(),
+        n: fed.n_clients(),
+        smoothness,
+        features,
+    };
+
+    {
+        let (mut server, clients) = build_split(&env).unwrap();
+        let mut transport = Lockstep::new(&locals, clients, client_rngs(cfg.seed, env.n));
+        let mut srv_rng = Rng::new(cfg.seed);
+        let mut round = 0usize;
+        b.bench("transport/lockstep", || {
+            let tally =
+                run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng).unwrap();
+            round += 1;
+            tally.up_bits
+        });
+    }
+    let factory = |i: usize| native_local(&fed, i);
+    for k in [2usize, 4, 8] {
+        let (mut server, clients) = build_split(&env).unwrap();
+        std::thread::scope(|scope| {
+            let mut transport =
+                Threaded::spawn(scope, k, clients, client_rngs(cfg.seed, env.n), &factory);
+            let mut srv_rng = Rng::new(cfg.seed);
+            let mut round = 0usize;
+            b.bench(format!("transport/threaded:{k}"), || {
+                let tally =
+                    run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng)
+                        .unwrap();
+                round += 1;
+                tally.up_bits
+            });
+        });
+    }
 }
 
 #[cfg(feature = "pjrt")]

@@ -155,6 +155,71 @@ pub enum Bl3Option {
     Two,
 }
 
+/// Which [`crate::transport`] backend carries the round messages.
+///
+/// Both backends produce bit-identical [`crate::metrics::History`] traces
+/// (the determinism contract of the transport layer), so this is an
+/// execution knob, not a semantic one — it is deliberately excluded from
+/// [`RunConfig::fingerprint`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// In-process reference backend: clients run one after another on the
+    /// calling thread. Works with any [`crate::problem::LocalProblem`],
+    /// including non-thread-safe oracles (PJRT).
+    #[default]
+    Lockstep,
+    /// Concurrent in-round backend: a scoped worker pool executes each
+    /// client's per-round work in parallel. `0` ⇒ one worker per hardware
+    /// core (resolved at run time). Requires rebuildable local problems
+    /// (see `run_federated`); `run_federated_with` rejects it.
+    Threaded(usize),
+}
+
+impl TransportSpec {
+    /// Worker count to actually spawn for `n` clients (resolves the `0` =
+    /// auto sentinel and never exceeds the client count).
+    pub fn resolved_workers(&self, n_clients: usize) -> usize {
+        match self {
+            TransportSpec::Lockstep => 1,
+            TransportSpec::Threaded(0) => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(n_clients.max(1)),
+            TransportSpec::Threaded(k) => (*k).min(n_clients.max(1)),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportSpec::Lockstep => write!(f, "lockstep"),
+            TransportSpec::Threaded(0) => write!(f, "threaded"),
+            TransportSpec::Threaded(k) => write!(f, "threaded:{k}"),
+        }
+    }
+}
+
+impl std::str::FromStr for TransportSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "lockstep" {
+            return Ok(TransportSpec::Lockstep);
+        }
+        if t == "threaded" {
+            return Ok(TransportSpec::Threaded(0));
+        }
+        if let Some(k) = t.strip_prefix("threaded:") {
+            let k: usize = k
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad worker count in '{s}': {e}"))?;
+            return Ok(TransportSpec::Threaded(k));
+        }
+        bail!("unknown transport '{s}' (lockstep | threaded | threaded:<k>)")
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -195,6 +260,9 @@ pub struct RunConfig {
     pub max_bits_per_node: Option<f64>,
     /// RNG seed.
     pub seed: u64,
+    /// Message-passing backend for the round loop (results are identical
+    /// across backends; see [`TransportSpec`]).
+    pub transport: TransportSpec,
 }
 
 impl Default for RunConfig {
@@ -219,19 +287,27 @@ impl Default for RunConfig {
             target_gap: 1e-12,
             max_bits_per_node: None,
             seed: 1,
+            transport: TransportSpec::Lockstep,
         }
     }
 }
 
 impl RunConfig {
-    /// Stable fingerprint of the *entire* configuration (FNV-1a over the
-    /// `Debug` rendering, which is stable for every field type used here).
-    /// Two runs with equal fingerprints execute identically on the same
-    /// data; the sweep resume path uses this to refuse rows recorded under
-    /// different parameters (rounds, λ, stopping rules, master seed, ...)
-    /// that the group string doesn't encode.
+    /// Stable fingerprint of the *entire semantic* configuration (FNV-1a
+    /// over the `Debug` rendering, which is stable for every field type used
+    /// here). Two runs with equal fingerprints execute identically on the
+    /// same data; the sweep resume path uses this to refuse rows recorded
+    /// under different parameters (rounds, λ, stopping rules, master seed,
+    /// ...) that the group string doesn't encode.
+    ///
+    /// The `transport` backend is canonicalized away before hashing: both
+    /// backends produce bit-identical histories (the transport layer's
+    /// determinism contract, enforced by `tests/transport_equivalence.rs`),
+    /// so a sweep resumed under a different `--transport` must still accept
+    /// its previously recorded rows.
     pub fn fingerprint(&self) -> u64 {
-        crate::rng::fnv1a(format!("{self:?}").as_bytes())
+        let canon = RunConfig { transport: TransportSpec::Lockstep, ..self.clone() };
+        crate::rng::fnv1a(format!("{canon:?}").as_bytes())
     }
 
     /// The basis each algorithm uses when none is specified.
@@ -294,6 +370,38 @@ mod tests {
         ] {
             assert_ne!(cfg.fingerprint(), base.fingerprint(), "{cfg:?}");
         }
+    }
+
+    #[test]
+    fn transport_parse_and_display() {
+        assert_eq!("lockstep".parse::<TransportSpec>().unwrap(), TransportSpec::Lockstep);
+        assert_eq!("threaded".parse::<TransportSpec>().unwrap(), TransportSpec::Threaded(0));
+        assert_eq!("threaded:4".parse::<TransportSpec>().unwrap(), TransportSpec::Threaded(4));
+        assert_eq!("THREADED:2".parse::<TransportSpec>().unwrap(), TransportSpec::Threaded(2));
+        assert!("sockets".parse::<TransportSpec>().is_err());
+        assert!("threaded:x".parse::<TransportSpec>().is_err());
+        for t in [TransportSpec::Lockstep, TransportSpec::Threaded(0), TransportSpec::Threaded(8)] {
+            assert_eq!(t.to_string().parse::<TransportSpec>().unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn transport_worker_resolution() {
+        assert_eq!(TransportSpec::Lockstep.resolved_workers(16), 1);
+        assert_eq!(TransportSpec::Threaded(4).resolved_workers(16), 4);
+        // Never more workers than clients; auto resolves to ≥ 1.
+        assert_eq!(TransportSpec::Threaded(8).resolved_workers(3), 3);
+        assert!(TransportSpec::Threaded(0).resolved_workers(64) >= 1);
+        assert_eq!(TransportSpec::Threaded(4).resolved_workers(0), 1);
+    }
+
+    #[test]
+    fn fingerprint_ignores_transport_backend() {
+        // Backends are bit-identical by contract, so resume must treat rows
+        // recorded under either backend as the same run.
+        let lock = RunConfig { transport: TransportSpec::Lockstep, ..RunConfig::default() };
+        let thr = RunConfig { transport: TransportSpec::Threaded(4), ..RunConfig::default() };
+        assert_eq!(lock.fingerprint(), thr.fingerprint());
     }
 
     #[test]

@@ -15,21 +15,30 @@
 //! `η = min{ 1/(2L(1+2ω/n)), n/(64ω L) }` (second term only when ω>0),
 //! `θ₂ = ½`, `θ₁ = min{¼, √(ημ/q)/2}…` capped below ½,
 //! `γ = η/(2(θ₁+ημ))`, `β = 1 − γμ`.
+//!
+//! Exchanges: 0 broadcasts the extrapolated point (`d` floats down,
+//! compressed innovation up); on `q`-renewal rounds, exchange 1 sends the
+//! new anchor `w = y^k` (uncharged, as the reference accounting — clients
+//! could reconstruct it from accepted history) and takes the compressed
+//! shift correction up.
 
 use crate::compressors::{BitCost, CompressorClass, VecCompressor};
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::Vector;
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// ADIANA state.
-pub struct Adiana {
+/// ADIANA server.
+pub struct AdianaServer {
     y: Vector,
     z: Vector,
     w: Vector,
     x: Vector,
+    /// Server-side shift copies.
     shifts: Vec<Vector>,
-    comp: Box<dyn VecCompressor>,
+    comp_name: String,
     eta: f64,
     theta1: f64,
     theta2: f64,
@@ -37,107 +46,153 @@ pub struct Adiana {
     beta: f64,
     alpha: f64,
     q: f64,
-    mu: f64,
+    /// `y^{k+1}`, committed once the round's exchanges are done (the
+    /// renewal anchor is the *old* `y^k`).
+    pending_y: Option<Vector>,
 }
 
-impl Adiana {
-    pub fn new(env: &Env) -> Self {
-        let d = env.d;
-        let n = env.n as f64;
-        let comp = env.cfg.grad_comp.build_vec(d);
-        let omega = match comp.class_vec(d) {
-            CompressorClass::Unbiased { omega } => omega,
-            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
-        };
-        let ell = env.smoothness;
-        let mu = env.cfg.lambda.max(1e-12);
-        let alpha = 1.0 / (omega + 1.0);
-        let q = alpha / 2.0;
-        let mut eta = 1.0 / (2.0 * ell * (1.0 + 2.0 * omega / n));
-        if omega > 0.0 {
-            eta = eta.min(n / (64.0 * omega * ell));
-        }
-        if let Some(g) = env.cfg.gamma {
-            eta = g;
-        }
-        let theta2 = 0.5;
-        let theta1 = (eta * mu / q).sqrt().min(0.25).max(1e-6);
-        let gamma = eta / (2.0 * (theta1 + eta * mu));
-        let beta = (1.0 - gamma * mu).max(0.0);
-        let x0 = vec![0.0; d];
-        Adiana {
-            y: x0.clone(),
-            z: x0.clone(),
-            w: x0.clone(),
-            x: x0.clone(),
-            shifts: vec![vec![0.0; d]; env.n],
-            comp,
-            eta,
-            theta1,
-            theta2,
-            gamma,
-            beta,
-            alpha,
-            q,
-            mu,
-        }
+/// ADIANA client.
+pub struct AdianaClient {
+    shift: Vector,
+    comp: Box<dyn VecCompressor>,
+    lambda: f64,
+    alpha: f64,
+}
+
+/// Build the ADIANA split.
+pub fn split(env: &Env) -> (AdianaServer, Vec<AdianaClient>) {
+    let d = env.d;
+    let n = env.n as f64;
+    let probe = env.cfg.grad_comp.build_vec(d);
+    let omega = match probe.class_vec(d) {
+        CompressorClass::Unbiased { omega } => omega,
+        CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+    };
+    let ell = env.smoothness;
+    let mu = env.cfg.lambda.max(1e-12);
+    let alpha = 1.0 / (omega + 1.0);
+    let q = alpha / 2.0;
+    let mut eta = 1.0 / (2.0 * ell * (1.0 + 2.0 * omega / n));
+    if omega > 0.0 {
+        eta = eta.min(n / (64.0 * omega * ell));
     }
+    if let Some(g) = env.cfg.gamma {
+        eta = g;
+    }
+    let theta2 = 0.5;
+    let theta1 = (eta * mu / q).sqrt().min(0.25).max(1e-6);
+    let gamma = eta / (2.0 * (theta1 + eta * mu));
+    let beta = (1.0 - gamma * mu).max(0.0);
+    let x0 = vec![0.0; d];
+    let clients = (0..env.n)
+        .map(|_| AdianaClient {
+            shift: vec![0.0; d],
+            comp: env.cfg.grad_comp.build_vec(d),
+            lambda: env.cfg.lambda,
+            alpha,
+        })
+        .collect();
+    let server = AdianaServer {
+        y: x0.clone(),
+        z: x0.clone(),
+        w: x0.clone(),
+        x: x0,
+        shifts: vec![vec![0.0; d]; env.n],
+        comp_name: VecCompressor::name(probe.as_ref()),
+        eta,
+        theta1,
+        theta2,
+        gamma,
+        beta,
+        alpha,
+        q,
+        pending_y: None,
+    };
+    (server, clients)
 }
 
-impl Method for Adiana {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let _ = self.mu;
-        let mut tally = CommTally::default();
-        let n = env.n as f64;
+impl ServerState for AdianaServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
         let d = env.d;
-
-        // Extrapolated point.
-        for k in 0..d {
-            self.x[k] = self.theta1 * self.z[k]
-                + self.theta2 * self.w[k]
-                + (1.0 - self.theta1 - self.theta2) * self.y[k];
-        }
-
-        // Compressed gradient estimate at x.
-        let mut g_est = vec![0.0; d];
-        for i in 0..env.n {
-            let gi = env.grad_reg(i, &self.x);
-            let diff = crate::linalg::sub(&gi, &self.shifts[i]);
-            let (delta, cost) = self.comp.compress_vec(&diff, rng);
-            tally.up(cost, env.cfg.float_bits);
-            tally.down(BitCost::floats(d), env.cfg.float_bits);
-            crate::linalg::axpy(1.0 / n, &self.shifts[i], &mut g_est);
-            crate::linalg::axpy(1.0 / n, &delta, &mut g_est);
-        }
-
-        // y, z updates.
-        let y_next: Vector = self
-            .x
-            .iter()
-            .zip(&g_est)
-            .map(|(xi, gi)| xi - self.eta * gi)
-            .collect();
-        for k in 0..d {
-            self.z[k] = self.beta * self.z[k]
-                + (1.0 - self.beta) * self.x[k]
-                + (self.gamma / self.eta) * (y_next[k] - self.x[k]);
-        }
-
-        // Anchor renewal with probability q; shifts absorb a compressed
-        // correction toward ∇f_i(w^{k+1}).
-        if rng.bernoulli(self.q) {
-            self.w = self.y.clone();
-            for i in 0..env.n {
-                let gw = env.grad_reg(i, &self.w);
-                let diff = crate::linalg::sub(&gw, &self.shifts[i]);
-                let (delta, cost) = self.comp.compress_vec(&diff, rng);
-                tally.up(cost, env.cfg.float_bits);
-                crate::linalg::axpy(self.alpha, &delta, &mut self.shifts[i]);
+        match exchange {
+            0 => {
+                // Extrapolated point.
+                for k in 0..d {
+                    self.x[k] = self.theta1 * self.z[k]
+                        + self.theta2 * self.w[k]
+                        + (1.0 - self.theta1 - self.theta2) * self.y[k];
+                }
+                let mut down = Packet::empty();
+                down.push_vector("model", self.x.clone(), BitCost::floats(d));
+                Ok(Some(RoundPlan::broadcast(env.n, down)))
+            }
+            1 => {
+                // Anchor renewal with probability q.
+                if rng.bernoulli(self.q) {
+                    self.w = self.y.clone();
+                    let mut down = Packet::empty();
+                    down.push_vector("anchor", self.w.clone(), BitCost::zero());
+                    Ok(Some(RoundPlan::broadcast(env.n, down)))
+                } else {
+                    self.commit_y();
+                    Ok(None)
+                }
+            }
+            _ => {
+                self.commit_y();
+                Ok(None)
             }
         }
-        self.y = y_next;
+    }
 
-        Ok(tally.into_step())
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        let n = env.n as f64;
+        let d = env.d;
+        match exchange {
+            0 => {
+                // Compressed gradient estimate at x.
+                let mut g_est = vec![0.0; d];
+                for (i, up) in replies {
+                    let delta = up.vector("delta")?;
+                    crate::linalg::axpy(1.0 / n, &self.shifts[*i], &mut g_est);
+                    crate::linalg::axpy(1.0 / n, delta, &mut g_est);
+                }
+                // y, z updates (y commits at end of round).
+                let y_next: Vector = self
+                    .x
+                    .iter()
+                    .zip(&g_est)
+                    .map(|(xi, gi)| xi - self.eta * gi)
+                    .collect();
+                for k in 0..d {
+                    self.z[k] = self.beta * self.z[k]
+                        + (1.0 - self.beta) * self.x[k]
+                        + (self.gamma / self.eta) * (y_next[k] - self.x[k]);
+                }
+                self.pending_y = Some(y_next);
+            }
+            _ => {
+                // Shifts absorb the compressed correction toward ∇f_i(w).
+                for (i, up) in replies {
+                    let delta = up.vector("delta")?;
+                    crate::linalg::axpy(self.alpha, delta, &mut self.shifts[*i]);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// ADIANA's deployable iterate is `y^k`.
@@ -146,7 +201,47 @@ impl Method for Adiana {
     }
 
     fn label(&self) -> String {
-        format!("adiana[{}]", VecCompressor::name(self.comp.as_ref()))
+        format!("adiana[{}]", self.comp_name)
+    }
+}
+
+impl AdianaServer {
+    fn commit_y(&mut self) {
+        if let Some(y) = self.pending_y.take() {
+            self.y = y;
+        }
+    }
+}
+
+impl ClientStep for AdianaClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let mut up = Packet::empty();
+        if exchange == 0 {
+            // Innovation at the extrapolated point; shifts do NOT move here
+            // (only on anchor renewal — ADIANA's difference from DIANA).
+            let x = down.vector("model")?;
+            let mut gi = local.grad(x);
+            crate::linalg::axpy(self.lambda, x, &mut gi);
+            let diff = crate::linalg::sub(&gi, &self.shift);
+            let (delta, cost) = self.comp.compress_vec(&diff, rng);
+            up.push_vector("delta", delta, cost);
+        } else {
+            let w = down.vector("anchor")?;
+            let mut gw = local.grad(w);
+            crate::linalg::axpy(self.lambda, w, &mut gw);
+            let diff = crate::linalg::sub(&gw, &self.shift);
+            let (delta, cost) = self.comp.compress_vec(&diff, rng);
+            crate::linalg::axpy(self.alpha, &delta, &mut self.shift);
+            up.push_vector("delta", delta, cost);
+        }
+        Ok(up)
     }
 }
 
@@ -212,7 +307,7 @@ mod tests {
         let mk = |algorithm| RunConfig {
             algorithm,
             rounds: 2_000_000,
-            lambda: 1e-3, // = μ of the planted spectrum (λ is folded via grad_reg)
+            lambda: 1e-3, // = μ of the planted spectrum (clients fold λ into their gradients)
             grad_comp: CompressorSpec::Identity,
             target_gap: 1e-8,
             ..RunConfig::default()

@@ -6,94 +6,137 @@
 //! innovations at rate n/τ). Downlink: the server compresses the model
 //! *update* and every client (participating or not, per the preserved
 //! central-model variant) applies the same broadcast.
+//!
+//! Exchanges: 0 polls the sampled participants (compressed innovation +
+//! participation bit up); 1 broadcasts the compressed model update to
+//! every client.
 
 use crate::compressors::{BitCost, CompressorClass, VecCompressor};
-use crate::coordinator::{sample_clients, CommTally, Env, Method, StepInfo};
+use crate::coordinator::{sample_clients, Env, RoundPlan, ServerState};
 use crate::linalg::Vector;
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// Artemis state.
-pub struct Artemis {
+/// Artemis server.
+pub struct ArtemisServer {
     /// Server model.
     x: Vector,
-    /// Clients' view of the model (identical across clients: same broadcast).
+    /// Server copy of the clients' shared model view.
     x_client: Vector,
+    /// Server-side shift copies.
     shifts: Vec<Vector>,
-    up: Box<dyn VecCompressor>,
-    down: Box<dyn VecCompressor>,
+    down_comp: Box<dyn VecCompressor>,
     gamma: f64,
     alpha: f64,
 }
 
-impl Artemis {
-    pub fn new(env: &Env) -> Self {
-        let d = env.d;
-        let up = env.cfg.grad_comp.build_vec(d);
-        let down = env.cfg.model_comp.build_vec(d);
-        let omega = match up.class_vec(d) {
-            CompressorClass::Unbiased { omega } => omega,
-            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
-        };
-        let omega_down = match down.class_vec(d) {
-            CompressorClass::Unbiased { omega } => omega,
-            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
-        };
-        let tau = env.cfg.tau.unwrap_or(env.n) as f64;
-        let n = env.n as f64;
-        // Stepsize shaped by both compressions and participation
-        // (Artemis Thm. conditions, conservative form).
-        let gamma = env.cfg.gamma.unwrap_or(
-            1.0 / (env.smoothness
-                * (1.0 + omega_down)
-                * (1.0 + 8.0 * omega * (n / tau) / n)),
-        );
-        Artemis {
-            x: vec![0.0; d],
-            x_client: vec![0.0; d],
-            shifts: vec![vec![0.0; d]; env.n],
-            up,
-            down,
-            gamma,
-            alpha: 1.0 / (omega + 1.0),
-        }
-    }
+/// Artemis client.
+pub struct ArtemisClient {
+    /// This client's view of the model (identical across clients: same
+    /// broadcast).
+    x_view: Vector,
+    shift: Vector,
+    up_comp: Box<dyn VecCompressor>,
+    lambda: f64,
+    alpha: f64,
 }
 
-impl Method for Artemis {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
+/// Build the Artemis split.
+pub fn split(env: &Env) -> (ArtemisServer, Vec<ArtemisClient>) {
+    let d = env.d;
+    let probe_up = env.cfg.grad_comp.build_vec(d);
+    let down_comp = env.cfg.model_comp.build_vec(d);
+    let omega = match probe_up.class_vec(d) {
+        CompressorClass::Unbiased { omega } => omega,
+        CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+    };
+    let omega_down = match down_comp.class_vec(d) {
+        CompressorClass::Unbiased { omega } => omega,
+        CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+    };
+    let tau = env.cfg.tau.unwrap_or(env.n) as f64;
+    let n = env.n as f64;
+    // Stepsize shaped by both compressions and participation
+    // (Artemis Thm. conditions, conservative form).
+    let gamma = env.cfg.gamma.unwrap_or(
+        1.0 / (env.smoothness * (1.0 + omega_down) * (1.0 + 8.0 * omega * (n / tau) / n)),
+    );
+    let alpha = 1.0 / (omega + 1.0);
+    let clients = (0..env.n)
+        .map(|_| ArtemisClient {
+            x_view: vec![0.0; d],
+            shift: vec![0.0; d],
+            up_comp: env.cfg.grad_comp.build_vec(d),
+            lambda: env.cfg.lambda,
+            alpha,
+        })
+        .collect();
+    let server = ArtemisServer {
+        x: vec![0.0; d],
+        x_client: vec![0.0; d],
+        shifts: vec![vec![0.0; d]; env.n],
+        down_comp,
+        gamma,
+        alpha,
+    };
+    (server, clients)
+}
+
+impl ServerState for ArtemisServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        match exchange {
+            0 => {
+                let selected = sample_clients(env.n, env.cfg.tau, rng);
+                let sends = selected.into_iter().map(|i| (i, Packet::empty())).collect();
+                Ok(Some(RoundPlan::to_clients(sends)))
+            }
+            1 => {
+                // Server update + compressed model broadcast.
+                let upd = crate::linalg::sub(&self.x, &self.x_client);
+                let (cupd, dcost) = self.down_comp.compress_vec(&upd, rng);
+                crate::linalg::axpy(1.0, &cupd, &mut self.x_client);
+                let mut down = Packet::empty();
+                down.push_vector("model_update", cupd, dcost);
+                Ok(Some(RoundPlan::broadcast(env.n, down)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        if exchange != 0 {
+            return Ok(());
+        }
         let n = env.n as f64;
-        let d = env.d;
-        let selected = sample_clients(env.n, env.cfg.tau, rng);
-        let tau_eff = selected.len() as f64;
-
-        // Uplink: compressed innovations from participants.
-        let mut g_est = vec![0.0; d];
-        // All memories contribute (server stores them); participants add
-        // fresh innovations, reweighted by n/τ.
-        for i in 0..env.n {
-            crate::linalg::axpy(1.0 / n, &self.shifts[i], &mut g_est);
+        let tau_eff = replies.len() as f64;
+        // All memories contribute (the server stores them); participants
+        // add fresh innovations, reweighted by n/τ.
+        let mut g_est = vec![0.0; env.d];
+        for shift in &self.shifts {
+            crate::linalg::axpy(1.0 / n, shift, &mut g_est);
         }
-        for &i in &selected {
-            let gi = env.grad_reg(i, &self.x_client);
-            let diff = crate::linalg::sub(&gi, &self.shifts[i]);
-            let (delta, cost) = self.up.compress_vec(&diff, rng);
-            tally.up(cost + BitCost::bits(1.0), env.cfg.float_bits);
-            crate::linalg::axpy(1.0 / tau_eff, &delta, &mut g_est);
-            crate::linalg::axpy(self.alpha, &delta, &mut self.shifts[i]);
+        for (i, up) in replies {
+            let delta = up.vector("delta")?;
+            crate::linalg::axpy(1.0 / tau_eff, delta, &mut g_est);
+            crate::linalg::axpy(self.alpha, delta, &mut self.shifts[*i]);
         }
-
-        // Server update + compressed model broadcast.
         crate::linalg::axpy(-self.gamma, &g_est, &mut self.x);
-        let upd = crate::linalg::sub(&self.x, &self.x_client);
-        let (cupd, dcost) = self.down.compress_vec(&upd, rng);
-        for _ in 0..env.n {
-            tally.down(dcost, env.cfg.float_bits);
-        }
-        crate::linalg::axpy(1.0, &cupd, &mut self.x_client);
-
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -102,6 +145,32 @@ impl Method for Artemis {
 
     fn label(&self) -> String {
         "artemis".into()
+    }
+}
+
+impl ClientStep for ArtemisClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let mut up = Packet::empty();
+        if exchange == 0 {
+            let mut gi = local.grad(&self.x_view);
+            crate::linalg::axpy(self.lambda, &self.x_view, &mut gi);
+            let diff = crate::linalg::sub(&gi, &self.shift);
+            let (delta, cost) = self.up_comp.compress_vec(&diff, rng);
+            crate::linalg::axpy(self.alpha, &delta, &mut self.shift);
+            // The participation bit rides the uplink.
+            up.push_vector("delta", delta, cost + BitCost::bits(1.0));
+        } else {
+            let cupd = down.vector("model_update")?;
+            crate::linalg::axpy(1.0, cupd, &mut self.x_view);
+        }
+        Ok(up)
     }
 }
 

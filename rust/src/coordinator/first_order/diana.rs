@@ -6,65 +6,102 @@
 //!
 //! Theoretical parameters (strongly convex case): `α = 1/(ω+1)`,
 //! `γ = 1/(L(1 + 6ω/n))`.
+//!
+//! One exchange per round: model broadcast down (`d` floats), compressed
+//! innovation `Δ_i` up. Shift memories live on both sides of the wire and
+//! stay in sync by applying the identical `+ α Δ_i` update.
 
-use crate::compressors::{CompressorClass, VecCompressor};
-use crate::compressors::BitCost;
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::compressors::{BitCost, CompressorClass, VecCompressor};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::Vector;
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// DIANA state.
-pub struct Diana {
+/// DIANA server: model + server-side shift copies.
+pub struct DianaServer {
     x: Vector,
-    /// Shift memories `h_i`.
+    /// Shift memories `h_i` (server copies).
     shifts: Vec<Vector>,
-    comp: Box<dyn VecCompressor>,
+    comp_name: String,
     gamma: f64,
     alpha: f64,
 }
 
-impl Diana {
-    pub fn new(env: &Env) -> Self {
-        let d = env.d;
-        let comp = env.cfg.grad_comp.build_vec(d);
-        let omega = match comp.class_vec(d) {
-            CompressorClass::Unbiased { omega } => omega,
-            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0, // conservative mapping
-        };
-        let alpha = 1.0 / (omega + 1.0);
-        let gamma = env
-            .cfg
-            .gamma
-            .unwrap_or(1.0 / (env.smoothness * (1.0 + 6.0 * omega / env.n as f64)));
-        Diana {
-            x: vec![0.0; d],
-            shifts: vec![vec![0.0; d]; env.n],
-            comp,
-            gamma,
-            alpha,
-        }
-    }
+/// DIANA client: its shift memory + compressor.
+pub struct DianaClient {
+    shift: Vector,
+    comp: Box<dyn VecCompressor>,
+    lambda: f64,
+    alpha: f64,
 }
 
-impl Method for Diana {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
+/// Build the DIANA split.
+pub fn split(env: &Env) -> (DianaServer, Vec<DianaClient>) {
+    let d = env.d;
+    let probe = env.cfg.grad_comp.build_vec(d);
+    let omega = match probe.class_vec(d) {
+        CompressorClass::Unbiased { omega } => omega,
+        CompressorClass::Contractive { delta } => 1.0 / delta - 1.0, // conservative mapping
+    };
+    let alpha = 1.0 / (omega + 1.0);
+    let gamma = env
+        .cfg
+        .gamma
+        .unwrap_or(1.0 / (env.smoothness * (1.0 + 6.0 * omega / env.n as f64)));
+    let clients = (0..env.n)
+        .map(|_| DianaClient {
+            shift: vec![0.0; d],
+            comp: env.cfg.grad_comp.build_vec(d),
+            lambda: env.cfg.lambda,
+            alpha,
+        })
+        .collect();
+    let server = DianaServer {
+        x: vec![0.0; d],
+        shifts: vec![vec![0.0; d]; env.n],
+        comp_name: VecCompressor::name(probe.as_ref()),
+        gamma,
+        alpha,
+    };
+    (server, clients)
+}
+
+impl ServerState for DianaServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        _rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        if exchange != 0 {
+            return Ok(None);
+        }
+        let mut down = Packet::empty();
+        down.push_vector("model", self.x.clone(), BitCost::floats(env.d));
+        Ok(Some(RoundPlan::broadcast(env.n, down)))
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        _exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
         let n = env.n as f64;
-        let d = env.d;
-        let mut g_est = vec![0.0; d];
-        for i in 0..env.n {
-            let gi = env.grad_reg(i, &self.x);
-            let diff = crate::linalg::sub(&gi, &self.shifts[i]);
-            let (delta, cost) = self.comp.compress_vec(&diff, rng);
-            tally.up(cost, env.cfg.float_bits);
-            tally.down(BitCost::floats(d), env.cfg.float_bits);
-            crate::linalg::axpy(1.0 / n, &self.shifts[i], &mut g_est);
-            crate::linalg::axpy(1.0 / n, &delta, &mut g_est);
-            crate::linalg::axpy(self.alpha, &delta, &mut self.shifts[i]);
+        let mut g_est = vec![0.0; env.d];
+        for (i, up) in replies {
+            let delta = up.vector("delta")?;
+            crate::linalg::axpy(1.0 / n, &self.shifts[*i], &mut g_est);
+            crate::linalg::axpy(1.0 / n, delta, &mut g_est);
+            crate::linalg::axpy(self.alpha, delta, &mut self.shifts[*i]);
         }
         crate::linalg::axpy(-self.gamma, &g_est, &mut self.x);
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -72,7 +109,28 @@ impl Method for Diana {
     }
 
     fn label(&self) -> String {
-        format!("diana[{}]", VecCompressor::name(self.comp.as_ref()))
+        format!("diana[{}]", self.comp_name)
+    }
+}
+
+impl ClientStep for DianaClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        _exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let x = down.vector("model")?;
+        let mut gi = local.grad(x);
+        crate::linalg::axpy(self.lambda, x, &mut gi);
+        let diff = crate::linalg::sub(&gi, &self.shift);
+        let (delta, cost) = self.comp.compress_vec(&diff, rng);
+        crate::linalg::axpy(self.alpha, &delta, &mut self.shift);
+        let mut up = Packet::empty();
+        up.push_vector("delta", delta, cost);
+        Ok(up)
     }
 }
 

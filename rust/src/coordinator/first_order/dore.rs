@@ -5,94 +5,138 @@
 //! server-side error accumulator `e` so no information is permanently lost.
 //! Clients therefore track a compressed mirror `x̂` of the server model and
 //! the server corrects the residual next round.
+//!
+//! Exchanges: 0 polls every client at its mirror (compressed residual up);
+//! 1 broadcasts the compressed model residual (both sides apply the same
+//! damped update to their mirror copy).
 
 use crate::compressors::{CompressorClass, VecCompressor};
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::Vector;
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// DORE state.
-pub struct Dore {
+/// DORE server.
+pub struct DoreServer {
     /// Server model.
     x: Vector,
-    /// Clients' compressed mirror of the model.
+    /// Server copy of the clients' compressed mirror.
     x_hat: Vector,
     /// Server-side downlink residual accumulator.
     err: Vector,
+    /// Server-side shift copies.
     shifts: Vec<Vector>,
-    up: Box<dyn VecCompressor>,
-    down: Box<dyn VecCompressor>,
+    down_comp: Box<dyn VecCompressor>,
     gamma: f64,
     alpha: f64,
     /// Residual damping (DORE's β/η knob; 1 = plain residual).
     damping: f64,
 }
 
-impl Dore {
-    pub fn new(env: &Env) -> Self {
-        let d = env.d;
-        let up = env.cfg.grad_comp.build_vec(d);
-        let down = env.cfg.model_comp.build_vec(d);
-        let omega = match up.class_vec(d) {
-            CompressorClass::Unbiased { omega } => omega,
-            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
-        };
-        let omega_d = match down.class_vec(d) {
-            CompressorClass::Unbiased { omega } => omega,
-            CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
-        };
-        let gamma = env
-            .cfg
-            .gamma
-            .unwrap_or(1.0 / (env.smoothness * (1.0 + 4.0 * omega / env.n as f64) * (1.0 + omega_d)));
-        Dore {
-            x: vec![0.0; d],
-            x_hat: vec![0.0; d],
-            err: vec![0.0; d],
-            shifts: vec![vec![0.0; d]; env.n],
-            up,
-            down,
-            gamma,
-            alpha: 1.0 / (omega + 1.0),
-            damping: 1.0 / (omega_d + 1.0),
-        }
-    }
+/// DORE client.
+pub struct DoreClient {
+    /// Compressed mirror `x̂` of the server model.
+    x_hat: Vector,
+    shift: Vector,
+    up_comp: Box<dyn VecCompressor>,
+    lambda: f64,
+    alpha: f64,
+    damping: f64,
 }
 
-impl Method for Dore {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
-        let n = env.n as f64;
-        let d = env.d;
+/// Build the DORE split.
+pub fn split(env: &Env) -> (DoreServer, Vec<DoreClient>) {
+    let d = env.d;
+    let probe_up = env.cfg.grad_comp.build_vec(d);
+    let down_comp = env.cfg.model_comp.build_vec(d);
+    let omega = match probe_up.class_vec(d) {
+        CompressorClass::Unbiased { omega } => omega,
+        CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+    };
+    let omega_d = match down_comp.class_vec(d) {
+        CompressorClass::Unbiased { omega } => omega,
+        CompressorClass::Contractive { delta } => 1.0 / delta - 1.0,
+    };
+    let gamma = env
+        .cfg
+        .gamma
+        .unwrap_or(1.0 / (env.smoothness * (1.0 + 4.0 * omega / env.n as f64) * (1.0 + omega_d)));
+    let alpha = 1.0 / (omega + 1.0);
+    let damping = 1.0 / (omega_d + 1.0);
+    let clients = (0..env.n)
+        .map(|_| DoreClient {
+            x_hat: vec![0.0; d],
+            shift: vec![0.0; d],
+            up_comp: env.cfg.grad_comp.build_vec(d),
+            lambda: env.cfg.lambda,
+            alpha,
+            damping,
+        })
+        .collect();
+    let server = DoreServer {
+        x: vec![0.0; d],
+        x_hat: vec![0.0; d],
+        err: vec![0.0; d],
+        shifts: vec![vec![0.0; d]; env.n],
+        down_comp,
+        gamma,
+        alpha,
+        damping,
+    };
+    (server, clients)
+}
 
-        // Uplink: compressed gradient residuals at the client mirror x̂.
-        let mut g_est = vec![0.0; d];
-        for i in 0..env.n {
-            let gi = env.grad_reg(i, &self.x_hat);
-            let diff = crate::linalg::sub(&gi, &self.shifts[i]);
-            let (delta, cost) = self.up.compress_vec(&diff, rng);
-            tally.up(cost, env.cfg.float_bits);
-            crate::linalg::axpy(1.0 / n, &self.shifts[i], &mut g_est);
-            crate::linalg::axpy(1.0 / n, &delta, &mut g_est);
-            crate::linalg::axpy(self.alpha, &delta, &mut self.shifts[i]);
+impl ServerState for DoreServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        match exchange {
+            0 => Ok(Some(RoundPlan::broadcast(env.n, Packet::empty()))),
+            1 => {
+                // Downlink: compress (model residual + accumulated error).
+                let mut q = crate::linalg::sub(&self.x, &self.x_hat);
+                crate::linalg::axpy(1.0, &self.err, &mut q);
+                let (cq, dcost) = self.down_comp.compress_vec(&q, rng);
+                // Error feedback: whatever the compressor dropped carries
+                // over to next round.
+                self.err = crate::linalg::sub(&q, &cq);
+                crate::linalg::axpy(self.damping, &cq, &mut self.x_hat);
+                let mut down = Packet::empty();
+                down.push_vector("model_residual", cq, dcost);
+                Ok(Some(RoundPlan::broadcast(env.n, down)))
+            }
+            _ => Ok(None),
         }
+    }
 
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        if exchange != 0 {
+            return Ok(());
+        }
+        let n = env.n as f64;
+        let mut g_est = vec![0.0; env.d];
+        for (i, up) in replies {
+            let delta = up.vector("delta")?;
+            crate::linalg::axpy(1.0 / n, &self.shifts[*i], &mut g_est);
+            crate::linalg::axpy(1.0 / n, delta, &mut g_est);
+            crate::linalg::axpy(self.alpha, delta, &mut self.shifts[*i]);
+        }
         // Server model step.
         crate::linalg::axpy(-self.gamma, &g_est, &mut self.x);
-
-        // Downlink: compress (model residual + accumulated error).
-        let mut q = crate::linalg::sub(&self.x, &self.x_hat);
-        crate::linalg::axpy(1.0, &self.err, &mut q);
-        let (cq, dcost) = self.down.compress_vec(&q, rng);
-        for _ in 0..env.n {
-            tally.down(dcost, env.cfg.float_bits);
-        }
-        // Error feedback: whatever the compressor dropped is carried over.
-        self.err = crate::linalg::sub(&q, &cq);
-        crate::linalg::axpy(self.damping, &cq, &mut self.x_hat);
-
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -101,6 +145,32 @@ impl Method for Dore {
 
     fn label(&self) -> String {
         "dore".into()
+    }
+}
+
+impl ClientStep for DoreClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let mut up = Packet::empty();
+        if exchange == 0 {
+            // Compressed gradient residual at the mirror x̂.
+            let mut gi = local.grad(&self.x_hat);
+            crate::linalg::axpy(self.lambda, &self.x_hat, &mut gi);
+            let diff = crate::linalg::sub(&gi, &self.shift);
+            let (delta, cost) = self.up_comp.compress_vec(&diff, rng);
+            crate::linalg::axpy(self.alpha, &delta, &mut self.shift);
+            up.push_vector("delta", delta, cost);
+        } else {
+            let cq = down.vector("model_residual")?;
+            crate::linalg::axpy(self.damping, cq, &mut self.x_hat);
+        }
+        Ok(up)
     }
 }
 

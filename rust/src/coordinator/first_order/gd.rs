@@ -1,38 +1,64 @@
 //! Vanilla distributed gradient descent: `x ← x − γ ∇f(x)`, `γ = 1/L`.
-//! Clients upload exact gradients (`d` floats), server broadcasts the model.
+//! One exchange per round: the server broadcasts the model (`d` floats
+//! down), clients upload exact regularized gradients (`d` floats up).
 
 use crate::compressors::BitCost;
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::Vector;
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// Distributed GD.
-pub struct Gd {
+/// GD server.
+pub struct GdServer {
     x: Vector,
     gamma: f64,
 }
 
-impl Gd {
-    pub fn new(env: &Env) -> Self {
-        let gamma = env.cfg.gamma.unwrap_or(1.0 / env.smoothness);
-        Gd { x: vec![0.0; env.d], gamma }
-    }
+/// GD client (stateless beyond the ridge constant).
+pub struct GdClient {
+    lambda: f64,
 }
 
-impl Method for Gd {
-    fn step(&mut self, env: &Env, _round: usize, _rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
+/// Build the GD split.
+pub fn split(env: &Env) -> (GdServer, Vec<GdClient>) {
+    let gamma = env.cfg.gamma.unwrap_or(1.0 / env.smoothness);
+    let clients = (0..env.n).map(|_| GdClient { lambda: env.cfg.lambda }).collect();
+    (GdServer { x: vec![0.0; env.d], gamma }, clients)
+}
+
+impl ServerState for GdServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        _rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        if exchange != 0 {
+            return Ok(None);
+        }
+        let mut down = Packet::empty();
+        down.push_vector("model", self.x.clone(), BitCost::floats(env.d));
+        Ok(Some(RoundPlan::broadcast(env.n, down)))
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        _exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
         let n = env.n as f64;
-        let d = env.d;
-        let mut g = vec![0.0; d];
-        for i in 0..env.n {
-            crate::linalg::axpy(1.0 / n, &env.grad_reg(i, &self.x), &mut g);
-            tally.up(BitCost::floats(d), env.cfg.float_bits);
-            tally.down(BitCost::floats(d), env.cfg.float_bits);
+        let mut g = vec![0.0; env.d];
+        for (_, up) in replies {
+            crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut g);
         }
         crate::linalg::axpy(-self.gamma, &g, &mut self.x);
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -41,6 +67,26 @@ impl Method for Gd {
 
     fn label(&self) -> String {
         "gd".into()
+    }
+}
+
+impl ClientStep for GdClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        _exchange: usize,
+        down: &Downlink,
+        _rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let x = down.vector("model")?;
+        // Regularized local gradient ∇f_i(x) + λx.
+        let mut g = local.grad(x);
+        crate::linalg::axpy(self.lambda, x, &mut g);
+        let d = g.len();
+        let mut up = Packet::empty();
+        up.push_vector("grad", g, BitCost::floats(d));
+        Ok(up)
     }
 }
 

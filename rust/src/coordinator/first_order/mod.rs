@@ -1,5 +1,7 @@
 //! First-order baselines the paper compares against (Figure 1 row 2,
-//! Figures 4–5): GD, DIANA, ADIANA, S-Local-GD, Artemis, DORE.
+//! Figures 4–5): GD, DIANA, ADIANA, S-Local-GD, Artemis, DORE — each as a
+//! `ServerState` + `ClientStep` pair built by the module's `split`
+//! constructor.
 //!
 //! All fold the ridge into the local gradients (`∇f_i + λx`) and use the
 //! theoretical stepsizes from their respective papers, instantiated with the
@@ -7,16 +9,16 @@
 //! and `μ = λ` — matching the paper's "theoretical stepsizes were used for
 //! gradient type methods".
 
-mod adiana;
-mod artemis;
-mod diana;
-mod dore;
-mod gd;
-mod slocal;
+pub mod adiana;
+pub mod artemis;
+pub mod diana;
+pub mod dore;
+pub mod gd;
+pub mod slocal;
 
-pub use adiana::Adiana;
-pub use artemis::Artemis;
-pub use diana::Diana;
-pub use dore::Dore;
-pub use gd::Gd;
-pub use slocal::SLocalGd;
+pub use adiana::{AdianaClient, AdianaServer};
+pub use artemis::{ArtemisClient, ArtemisServer};
+pub use diana::{DianaClient, DianaServer};
+pub use dore::{DoreClient, DoreServer};
+pub use gd::{GdClient, GdServer};
+pub use slocal::{SLocalClient, SLocalServer};

@@ -5,90 +5,129 @@
 //! `x_i ← x_i − γ(∇f_i(x_i) − h_i)` and communicate only on
 //! `ξ^k ~ Bernoulli(p)` rounds, where the server averages the local models
 //! and the shifts are updated toward the local gradients with probability
-//! `q` (`h_i ← h_i + qp/γ·(x̄ − x_i)` in the framework's formulation;
-//! we use the gradient-tracking form `h_i ← ∇f_i(x_i) − (1/n)Σ∇f_j(x_j)`
-//! at sync which the framework covers). The paper's experiments use
+//! `q` (we use the gradient-tracking form `h_i ← ∇f_i(x_i) − (1/n)Σ∇f_j(x_j)`
+//! at sync, which the framework covers). The paper's experiments use
 //! `p = q = 1/n`.
+//!
+//! Exchanges: 0 carries the sync/refresh control bits down (uncharged) and
+//! — on sync rounds — the local models up (`d` floats; refresh rounds also
+//! ride the local gradients up uncharged, the framework-message convention
+//! of the reference accounting); exchange 1 broadcasts the average (`d`
+//! floats, plus the uncharged gradient mean on refresh rounds).
 
 use crate::compressors::BitCost;
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::Vector;
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// S-Local-GD state.
-pub struct SLocalGd {
+/// S-Local-GD server.
+pub struct SLocalServer {
     /// Server model (last synced average).
     x: Vector,
-    /// Local models.
-    xi: Vec<Vector>,
-    /// Shifts `h_i` (Σ h_i = 0 invariant).
-    shifts: Vec<Vector>,
-    gamma: f64,
     /// Communication probability.
     p: f64,
     /// Shift update probability.
     q: f64,
+    // ── per-round scratch ──
+    sync: bool,
+    refresh: bool,
+    avg: Vector,
+    gbar: Vector,
 }
 
-impl SLocalGd {
-    pub fn new(env: &Env) -> Self {
-        let d = env.d;
-        let gamma = env.cfg.gamma.unwrap_or(1.0 / (4.0 * env.smoothness));
-        let p = 1.0 / env.n as f64;
-        SLocalGd {
+/// S-Local-GD client.
+pub struct SLocalClient {
+    /// Local model `x_i`.
+    x: Vector,
+    /// Shift `h_i` (Σ h_i = 0 invariant).
+    shift: Vector,
+    /// Local gradient at sync (for the tracking-form refresh).
+    g_last: Vector,
+    gamma: f64,
+    lambda: f64,
+}
+
+/// Build the S-Local-GD split.
+pub fn split(env: &Env) -> (SLocalServer, Vec<SLocalClient>) {
+    let d = env.d;
+    let gamma = env.cfg.gamma.unwrap_or(1.0 / (4.0 * env.smoothness));
+    let clients = (0..env.n)
+        .map(|_| SLocalClient {
             x: vec![0.0; d],
-            xi: vec![vec![0.0; d]; env.n],
-            shifts: vec![vec![0.0; d]; env.n],
+            shift: vec![0.0; d],
+            g_last: vec![0.0; d],
             gamma,
-            p,
-            q: 1.0 / env.n as f64,
+            lambda: env.cfg.lambda,
+        })
+        .collect();
+    let server = SLocalServer {
+        x: vec![0.0; d],
+        p: 1.0 / env.n as f64,
+        q: 1.0 / env.n as f64,
+        sync: false,
+        refresh: false,
+        avg: vec![0.0; d],
+        gbar: vec![0.0; d],
+    };
+    (server, clients)
+}
+
+impl ServerState for SLocalServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        match exchange {
+            0 => {
+                self.sync = rng.bernoulli(self.p);
+                self.refresh = self.sync && rng.bernoulli(self.q);
+                let mut down = Packet::empty();
+                down.push_flags("ctl", vec![self.sync, self.refresh], BitCost::zero());
+                Ok(Some(RoundPlan::broadcast(env.n, down)))
+            }
+            1 if self.sync => {
+                let mut down = Packet::empty();
+                down.push_vector("avg", self.avg.clone(), BitCost::floats(env.d));
+                if self.refresh {
+                    down.push_vector("gbar", self.gbar.clone(), BitCost::zero());
+                }
+                Ok(Some(RoundPlan::broadcast(env.n, down)))
+            }
+            _ => Ok(None),
         }
     }
-}
 
-impl Method for SLocalGd {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        if exchange != 0 || !self.sync {
+            return Ok(());
+        }
         let n = env.n as f64;
         let d = env.d;
-
-        // Local shifted steps (no communication).
-        for i in 0..env.n {
-            let gi = env.grad_reg(i, &self.xi[i]);
-            for k in 0..d {
-                self.xi[i][k] -= self.gamma * (gi[k] - self.shifts[i][k]);
+        let mut avg = vec![0.0; d];
+        let mut gbar = vec![0.0; d];
+        for (_, up) in replies {
+            crate::linalg::axpy(1.0 / n, up.vector("model")?, &mut avg);
+            if self.refresh {
+                crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut gbar);
             }
         }
-
-        // Synchronization round with probability p.
-        if rng.bernoulli(self.p) {
-            let mut avg = vec![0.0; d];
-            for i in 0..env.n {
-                crate::linalg::axpy(1.0 / n, &self.xi[i], &mut avg);
-                tally.up(BitCost::floats(d), env.cfg.float_bits);
-                tally.down(BitCost::floats(d), env.cfg.float_bits);
-            }
-            // Shift refresh with probability q: gradient-tracking form,
-            // preserving Σ h_i = 0.
-            if rng.bernoulli(self.q) {
-                let grads: Vec<Vector> =
-                    (0..env.n).map(|i| env.grad_reg(i, &self.xi[i])).collect();
-                let mut gbar = vec![0.0; d];
-                for g in &grads {
-                    crate::linalg::axpy(1.0 / n, g, &mut gbar);
-                }
-                for i in 0..env.n {
-                    self.shifts[i] = crate::linalg::sub(&grads[i], &gbar);
-                }
-            }
-            for i in 0..env.n {
-                self.xi[i] = avg.clone();
-            }
-            self.x = avg;
-        }
-
-        Ok(tally.into_step())
+        self.x = avg.clone();
+        self.avg = avg;
+        self.gbar = gbar;
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -97,6 +136,48 @@ impl Method for SLocalGd {
 
     fn label(&self) -> String {
         "s-local-gd".into()
+    }
+}
+
+impl ClientStep for SLocalClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        _rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let mut up = Packet::empty();
+        if exchange == 0 {
+            // Local shifted step (every round; no communication cost).
+            let mut gi = local.grad(&self.x);
+            crate::linalg::axpy(self.lambda, &self.x, &mut gi);
+            for (xk, (gk, hk)) in self.x.iter_mut().zip(gi.iter().zip(&self.shift)) {
+                *xk -= self.gamma * (gk - hk);
+            }
+            let ctl = down.flags("ctl")?;
+            let (sync, refresh) = (ctl[0], ctl[1]);
+            if sync {
+                let d = self.x.len();
+                up.push_vector("model", self.x.clone(), BitCost::floats(d));
+                if refresh {
+                    // Post-step local gradient, for the tracking refresh.
+                    let mut g = local.grad(&self.x);
+                    crate::linalg::axpy(self.lambda, &self.x, &mut g);
+                    self.g_last = g.clone();
+                    up.push_vector("grad", g, BitCost::zero());
+                }
+            }
+        } else {
+            // Sync broadcast: refresh shifts (preserving Σ h_i = 0), then
+            // adopt the average.
+            if let Some(gbar) = down.vector_opt("gbar")? {
+                self.shift = crate::linalg::sub(&self.g_last, gbar);
+            }
+            self.x = down.vector("avg")?.to_vec();
+        }
+        Ok(up)
     }
 }
 

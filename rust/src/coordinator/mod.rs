@@ -1,11 +1,28 @@
 //! The federated coordinator — the paper's system contribution, in Rust.
 //!
-//! Architecture: a [`Method`] is a server+clients state machine advancing one
-//! communication round per [`Method::step`] call, with *exact bit accounting*
-//! of everything that would cross the wire (messages are materialized as
-//! compressed payloads with [`crate::compressors::BitCost`]s — the simulated
-//! network of DESIGN.md §6.2). [`run_federated`] owns the round loop,
-//! convergence tracking against the Newton reference optimum, and stopping
+//! # Architecture: explicit server/client rounds over a transport
+//!
+//! Every method is split into two halves that only talk through
+//! [`crate::transport`] messages:
+//!
+//! * a [`ServerState`] — the aggregate model: it **plans** each exchange of
+//!   a round (who participates, what rides on the downlink), and
+//!   **absorbs** the uplinks (decode, aggregate, Newton/gradient step);
+//! * a [`crate::transport::ClientStep`] per client — the local worker: it
+//!   receives a [`crate::transport::Downlink`], runs the expensive local
+//!   work (oracle calls, basis projection, compression) against its
+//!   [`crate::problem::LocalProblem`], and replies with an
+//!   [`crate::transport::Uplink`].
+//!
+//! [`run_federated_with`] drives the generic round loop through a chosen
+//! [`crate::transport::Transport`] backend — [`crate::transport::Lockstep`]
+//! (serial reference) or [`crate::transport::Threaded`] (concurrent
+//! in-round workers) — and both produce bit-identical histories (see the
+//! transport module for the determinism contract). The per-round
+//! communication tally is derived from the [`crate::compressors::BitCost`]s
+//! of the packets that actually crossed the simulated wire, with exact bit
+//! accounting of indices/flags/floats (DESIGN.md §6.2); convergence is
+//! tracked against the Newton reference optimum with the paper's stopping
 //! rules.
 //!
 //! Method implementations:
@@ -18,15 +35,19 @@ pub mod first_order;
 pub mod second_order;
 
 use crate::basis::{HessianBasis, PsdBasis, StandardBasis, SubspaceBasis, SymTriBasis};
-use crate::config::{Algorithm, BasisKind, RunConfig};
+use crate::config::{Algorithm, BasisKind, RunConfig, TransportSpec};
 use crate::data::FederatedDataset;
 use crate::linalg::{Mat, Vector};
 use crate::metrics::{History, RoundRecord};
 use crate::problem::{GlobalObjective, LocalProblem, LogisticProblem};
 use crate::rng::Rng;
+use crate::transport::{
+    client_rngs, ClientStep, Downlink, Lockstep, ProblemFactory, Threaded, Transport, Uplink,
+};
 use anyhow::Result;
 
-/// Shared, read-only run environment handed to methods each round.
+/// Shared, read-only run environment handed to the server each round (and
+/// to both halves at construction time).
 pub struct Env<'a> {
     /// Per-client local objectives (data terms only; λ is global).
     pub locals: &'a [Box<dyn LocalProblem>],
@@ -47,21 +68,6 @@ impl<'a> Env<'a> {
         GlobalObjective::new(self.locals, self.cfg.lambda)
     }
 
-    /// Regularized local gradient `∇f_i(x) + λx` (first-order methods fold
-    /// the ridge into each client).
-    pub fn grad_reg(&self, i: usize, x: &[f64]) -> Vector {
-        let mut g = self.locals[i].grad(x);
-        crate::linalg::axpy(self.cfg.lambda, x, &mut g);
-        g
-    }
-
-    /// Regularized local Hessian `∇²f_i(x) + λI`.
-    pub fn hess_reg(&self, i: usize, x: &[f64]) -> Mat {
-        let mut h = self.locals[i].hess(x);
-        h.add_diag(self.cfg.lambda);
-        h
-    }
-
     /// Build the configured Hessian basis for client `i`.
     pub fn build_basis(&self, i: usize) -> Box<dyn HessianBasis> {
         let kind = self.cfg.effective_basis();
@@ -79,7 +85,8 @@ impl<'a> Env<'a> {
     }
 }
 
-/// Per-round communication tally (sums over clients, in bits).
+/// Per-round communication tally (sums over clients, in bits). Derived by
+/// the round loop from the packets that actually crossed the transport.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommTally {
     pub up_bits: f64,
@@ -96,24 +103,61 @@ impl CommTally {
     pub fn down(&mut self, cost: crate::compressors::BitCost, float_bits: u32) {
         self.down_bits += cost.total_bits(float_bits);
     }
+}
 
-    pub fn into_step(self) -> StepInfo {
-        StepInfo { up_bits_total: self.up_bits, down_bits_total: self.down_bits }
+/// What the server plans for one exchange: per-addressed-client downlinks,
+/// in **ascending client order**.
+pub struct RoundPlan {
+    pub sends: Vec<(usize, Downlink)>,
+}
+
+impl RoundPlan {
+    /// Address a set of clients (must already be ascending, as
+    /// [`sample_clients`] returns).
+    pub fn to_clients(sends: Vec<(usize, Downlink)>) -> Self {
+        RoundPlan { sends }
+    }
+
+    /// The same downlink to every client (per-client clones, each charged).
+    ///
+    /// The clone per client is deliberate: packets are owned values so they
+    /// can cross threads (and, later, sockets) without a shared-buffer
+    /// protocol, and the O(d) copy is noise next to the O(m·d²) oracle work
+    /// each delivery triggers client-side.
+    pub fn broadcast(n: usize, down: Downlink) -> Self {
+        RoundPlan { sends: (0..n).map(|i| (i, down.clone())).collect() }
     }
 }
 
-/// What a method reports after one round.
-pub struct StepInfo {
-    /// Sum over clients of uplink bits this round.
-    pub up_bits_total: f64,
-    /// Sum over clients of downlink bits this round.
-    pub down_bits_total: f64,
-}
+/// The server half of a federated method.
+///
+/// A round is a sequence of exchanges: the round loop calls
+/// [`ServerState::plan`] with `exchange = 0, 1, …` until it returns `None`,
+/// running [`ServerState::absorb`] on the replies in between. Most methods
+/// plan one or two exchanges; DINGO's line search plans one per gradient
+/// round trip.
+pub trait ServerState {
+    /// Plan exchange `exchange` of `round`; `None` ⇒ round complete.
+    /// Server-side randomness (participation, ξ schedules, broadcast
+    /// compression) must draw from `rng` — the run's single server stream.
+    fn plan(
+        &mut self,
+        env: &Env,
+        round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>>;
 
-/// One federated optimization method (server + clients).
-pub trait Method {
-    /// Advance one communication round.
-    fn step(&mut self, env: &Env, round: usize, rng: &mut Rng) -> Result<StepInfo>;
+    /// Absorb the uplinks of the exchange just executed (ascending client
+    /// order, exactly the clients the plan addressed).
+    fn absorb(
+        &mut self,
+        env: &Env,
+        round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        rng: &mut Rng,
+    ) -> Result<()>;
 
     /// Current global iterate `x^k` (the model the server would deploy).
     fn x(&self) -> &[f64];
@@ -145,50 +189,141 @@ impl RunOutput {
     }
 }
 
-/// Build native local problems from a dataset.
-pub fn native_locals(fed: &FederatedDataset) -> Vec<Box<dyn LocalProblem>> {
-    fed.clients
-        .iter()
-        .map(|c| Box::new(LogisticProblem::new(c.a.clone(), c.b.clone())) as Box<dyn LocalProblem>)
-        .collect()
+/// Build client `i`'s native local problem from a dataset — the single
+/// construction point shared by [`native_locals`] and the `Threaded`
+/// backend's worker-side problem factories, so the two can never diverge.
+pub fn native_local(fed: &FederatedDataset, i: usize) -> Box<dyn LocalProblem> {
+    let c = &fed.clients[i];
+    Box::new(LogisticProblem::new(c.a.clone(), c.b.clone()))
 }
 
-/// Run a federated optimization over native (Rust) local problems.
+/// Build native local problems from a dataset.
+pub fn native_locals(fed: &FederatedDataset) -> Vec<Box<dyn LocalProblem>> {
+    (0..fed.clients.len()).map(|i| native_local(fed, i)).collect()
+}
+
+/// Run a federated optimization over native (Rust) local problems, through
+/// the backend selected by `cfg.transport`. The dataset doubles as the
+/// problem factory the `Threaded` backend needs (each worker thread builds
+/// its own oracles — [`LocalProblem`] is non-`Send`).
 pub fn run_federated(fed: &FederatedDataset, cfg: &RunConfig) -> Result<RunOutput> {
     let locals = native_locals(fed);
     let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
-    run_federated_with(&locals, features, cfg)
+    let factory = |i: usize| native_local(fed, i);
+    let factory: ProblemFactory<'_> = &factory;
+    run_federated_factory(&locals, features, cfg, Some(factory))
 }
 
 /// Run over caller-supplied local problems (e.g. PJRT-backed ones).
 /// `features[i]` supplies client `i`'s raw data matrix when the subspace
 /// basis or NL1 is in play (pass `None` to withhold it).
+///
+/// Only the `Lockstep` backend is available here: arbitrary oracles are
+/// non-`Send`, so the `Threaded` backend cannot move them onto workers —
+/// use [`run_federated`] (or [`run_federated_factory`] with a factory) for
+/// threaded execution.
 pub fn run_federated_with(
     locals: &[Box<dyn LocalProblem>],
     features: Vec<Option<Mat>>,
     cfg: &RunConfig,
 ) -> Result<RunOutput> {
+    run_federated_factory(locals, features, cfg, None)
+}
+
+/// The generic entry point: drives the round loop through `cfg.transport`.
+/// `factory` rebuilds client oracles on worker threads; without one, only
+/// `Lockstep` is possible and `Threaded` is rejected with a clear error.
+pub fn run_federated_factory(
+    locals: &[Box<dyn LocalProblem>],
+    features: Vec<Option<Mat>>,
+    cfg: &RunConfig,
+    factory: Option<ProblemFactory<'_>>,
+) -> Result<RunOutput> {
     anyhow::ensure!(!locals.is_empty(), "need at least one client");
     anyhow::ensure!(features.len() == locals.len(), "features/locals length mismatch");
     let d = locals[0].dim();
     let n = locals.len();
-    let obj = GlobalObjective::new(locals, cfg.lambda);
-    let (x_star, f_star) = obj.reference_optimum()?;
     let smoothness = estimate_smoothness(locals, cfg.lambda);
     let env = Env { locals, cfg, d, n, smoothness, features };
 
-    let mut method = build_method(&env)?;
+    let (mut server, clients) = build_split(&env)?;
+    let rngs = client_rngs(cfg.seed, n);
+    match cfg.transport {
+        TransportSpec::Lockstep => {
+            let mut transport = Lockstep::new(env.locals, clients, rngs);
+            drive(&env, server.as_mut(), &mut transport)
+        }
+        TransportSpec::Threaded(_) => {
+            let Some(factory) = factory else {
+                anyhow::bail!(
+                    "transport '{}' needs rebuildable local problems (oracles are \
+                     non-Send); run through run_federated / run_federated_factory, \
+                     or use --transport lockstep",
+                    cfg.transport
+                )
+            };
+            let workers = cfg.transport.resolved_workers(n);
+            std::thread::scope(|scope| {
+                let mut transport = Threaded::spawn(scope, workers, clients, rngs, factory);
+                drive(&env, server.as_mut(), &mut transport)
+            })
+        }
+    }
+}
+
+/// Execute one full round (all its exchanges) through a transport and
+/// return the bits that crossed. Public so benches and the equivalence
+/// tests can drive the protocol directly.
+pub fn run_one_round(
+    env: &Env,
+    server: &mut dyn ServerState,
+    transport: &mut dyn Transport,
+    round: usize,
+    rng: &mut Rng,
+) -> Result<CommTally> {
+    let mut tally = CommTally::default();
+    let fb = env.cfg.float_bits;
+    let mut exchange = 0usize;
+    while let Some(plan) = server.plan(env, round, exchange, rng)? {
+        debug_assert!(
+            plan.sends.windows(2).all(|w| w[0].0 < w[1].0),
+            "plan sends must be ascending and unique"
+        );
+        for (_, down) in &plan.sends {
+            tally.down(down.cost(), fb);
+        }
+        let replies = transport.exchange(round, exchange, plan.sends)?;
+        for (_, up) in &replies {
+            tally.up(up.cost(), fb);
+        }
+        server.absorb(env, round, exchange, &replies, rng)?;
+        exchange += 1;
+    }
+    Ok(tally)
+}
+
+/// The round loop: convergence tracking against the Newton reference
+/// optimum, stopping rules, and message-derived bit accounting.
+fn drive(
+    env: &Env,
+    server: &mut dyn ServerState,
+    transport: &mut dyn Transport,
+) -> Result<RunOutput> {
+    let cfg = env.cfg;
+    let n = env.n;
+    let obj = env.objective();
+    let (x_star, f_star) = obj.reference_optimum()?;
     let mut rng = Rng::new(cfg.seed);
-    let mut history = History::new(method.label());
-    history.setup_bits_per_node = method.setup_bits_per_node(&env);
+    let mut history = History::new(server.label());
+    history.setup_bits_per_node = server.setup_bits_per_node(env);
 
     let mut up_cum = 0.0; // per-node cumulative
     let mut down_cum = 0.0;
     for round in 0..cfg.rounds {
-        let info = method.step(&env, round, &mut rng)?;
-        up_cum += info.up_bits_total / n as f64;
-        down_cum += info.down_bits_total / n as f64;
-        let x = method.x();
+        let tally = run_one_round(env, server, transport, round, &mut rng)?;
+        up_cum += tally.up_bits / n as f64;
+        down_cum += tally.down_bits / n as f64;
+        let x = server.x();
         let gap = obj.loss(x) - f_star;
         let grad_norm = crate::linalg::norm2(&obj.grad(x));
         let dist = crate::linalg::norm2(&crate::linalg::sub(x, &x_star));
@@ -201,7 +336,7 @@ pub fn run_federated_with(
             dist_to_opt: dist,
         });
         if !gap.is_finite() {
-            anyhow::bail!("{} diverged at round {round} (gap = {gap})", method.label());
+            anyhow::bail!("{} diverged at round {round} (gap = {gap})", server.label());
         }
         if cfg.target_gap > 0.0 && gap <= cfg.target_gap {
             break;
@@ -217,7 +352,7 @@ pub fn run_federated_with(
         }
     }
 
-    Ok(RunOutput { history, x_final: method.x().to_vec(), x_star, f_star })
+    Ok(RunOutput { history, x_final: server.x().to_vec(), x_star, f_star })
 }
 
 /// Global smoothness bound `L = λ_max(4·avg ∇²f_i(0)) + λ` for logistic data
@@ -235,25 +370,37 @@ pub fn estimate_smoothness(locals: &[Box<dyn LocalProblem>], lambda: f64) -> f64
     e.values.first().copied().unwrap_or(0.0) + lambda
 }
 
-/// Dispatch an algorithm to its implementation.
-fn build_method(env: &Env) -> Result<Box<dyn Method>> {
+fn boxed<S, C>(pair: (S, Vec<C>)) -> (Box<dyn ServerState>, Vec<Box<dyn ClientStep>>)
+where
+    S: ServerState + 'static,
+    C: ClientStep + 'static,
+{
+    let (server, clients) = pair;
+    (
+        Box::new(server),
+        clients.into_iter().map(|c| Box::new(c) as Box<dyn ClientStep>).collect(),
+    )
+}
+
+/// Dispatch an algorithm to its server/client split.
+pub fn build_split(env: &Env) -> Result<(Box<dyn ServerState>, Vec<Box<dyn ClientStep>>)> {
     use Algorithm::*;
     Ok(match env.cfg.algorithm {
-        Newton => Box::new(second_order::NewtonMethod::new(env)),
-        Bl1 => Box::new(second_order::Bl1::new(env)),
-        Bl2 => Box::new(second_order::Bl2::new(env)),
-        Bl3 => Box::new(second_order::Bl3::new(env)?),
-        FedNl => Box::new(second_order::Bl1::fednl(env)),
-        FedNlBc => Box::new(second_order::Bl1::fednl_bc(env)),
-        FedNlPp => Box::new(second_order::Bl2::fednl_pp(env)),
-        Nl1 => Box::new(second_order::Nl1::new(env)?),
-        Dingo => Box::new(second_order::Dingo::new(env)),
-        Gd => Box::new(first_order::Gd::new(env)),
-        Diana => Box::new(first_order::Diana::new(env)),
-        Adiana => Box::new(first_order::Adiana::new(env)),
-        SLocalGd => Box::new(first_order::SLocalGd::new(env)),
-        Artemis => Box::new(first_order::Artemis::new(env)),
-        Dore => Box::new(first_order::Dore::new(env)),
+        Newton => boxed(second_order::newton::split(env)),
+        Bl1 => boxed(second_order::bl1::split(env, None)),
+        Bl2 => boxed(second_order::bl2::split(env, None)),
+        Bl3 => boxed(second_order::bl3::split(env)?),
+        FedNl => boxed(second_order::bl1::split(env, Some("fednl"))),
+        FedNlBc => boxed(second_order::bl1::split(env, Some("fednl-bc"))),
+        FedNlPp => boxed(second_order::bl2::split(env, Some("fednl-pp"))),
+        Nl1 => boxed(second_order::nl1::split(env)?),
+        Dingo => boxed(second_order::dingo::split(env)),
+        Gd => boxed(first_order::gd::split(env)),
+        Diana => boxed(first_order::diana::split(env)),
+        Adiana => boxed(first_order::adiana::split(env)),
+        SLocalGd => boxed(first_order::slocal::split(env)),
+        Artemis => boxed(first_order::artemis::split(env)),
+        Dore => boxed(first_order::dore::split(env)),
     })
 }
 
@@ -279,7 +426,7 @@ pub fn project_psd(m: &Mat, mu: f64) -> Mat {
 
 /// Independent-inclusion client sampling with `P[i ∈ S] = τ/n`
 /// (the participation model of Algorithms 2–3). Guarantees at least one
-/// participant by resampling empty draws.
+/// participant by resampling empty draws. Output is ascending.
 pub fn sample_clients(n: usize, tau: Option<usize>, rng: &mut Rng) -> Vec<usize> {
     let tau = tau.unwrap_or(n).min(n);
     if tau >= n {
@@ -292,6 +439,39 @@ pub fn sample_clients(n: usize, tau: Option<usize>, rng: &mut Rng) -> Vec<usize>
             return s;
         }
     }
+}
+
+/// Test-only serial protocol driver over *concrete* (unboxed) halves, so
+/// method unit tests can drive rounds and then inspect internal state on
+/// both sides of the wire.
+#[cfg(test)]
+pub(crate) fn step_rounds_manual(
+    env: &Env,
+    server: &mut dyn ServerState,
+    clients: &mut [&mut dyn ClientStep],
+    rounds: usize,
+) -> Result<()> {
+    let mut rng = Rng::new(env.cfg.seed);
+    let mut rngs = client_rngs(env.cfg.seed, clients.len());
+    for round in 0..rounds {
+        let mut exchange = 0usize;
+        while let Some(plan) = server.plan(env, round, exchange, &mut rng)? {
+            let mut replies = Vec::with_capacity(plan.sends.len());
+            for (i, down) in plan.sends {
+                let up = clients[i].compute(
+                    env.locals[i].as_ref(),
+                    round,
+                    exchange,
+                    &down,
+                    &mut rngs[i],
+                )?;
+                replies.push((i, up));
+            }
+            server.absorb(env, round, exchange, &replies, &mut rng)?;
+            exchange += 1;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -423,6 +603,43 @@ mod tests {
                 r.bits_per_node(),
                 h.setup_bits_per_node
             );
+        }
+    }
+
+    #[test]
+    fn threaded_transport_runs_and_matches_lockstep() {
+        // The determinism contract in miniature (every algorithm is covered
+        // by tests/transport_equivalence.rs): same seed, different backend,
+        // byte-identical trace.
+        let fed = tiny_fed(45);
+        let mut cfg = RunConfig {
+            algorithm: Algorithm::Bl1,
+            rounds: 25,
+            target_gap: 0.0,
+            ..RunConfig::default()
+        };
+        let a = run_federated(&fed, &cfg).unwrap();
+        cfg.transport = TransportSpec::Threaded(3);
+        let b = run_federated(&fed, &cfg).unwrap();
+        assert_eq!(a.history.records, b.history.records);
+        assert_eq!(a.x_final, b.x_final);
+    }
+
+    #[test]
+    fn run_federated_with_rejects_threaded() {
+        // Caller-supplied oracles can't be rebuilt on worker threads.
+        let fed = tiny_fed(46);
+        let locals = native_locals(&fed);
+        let features: Vec<Option<Mat>> = vec![None; locals.len()];
+        let cfg = RunConfig {
+            algorithm: Algorithm::Gd,
+            rounds: 2,
+            transport: TransportSpec::Threaded(2),
+            ..RunConfig::default()
+        };
+        match run_federated_with(&locals, features, &cfg) {
+            Ok(_) => panic!("threaded transport must be rejected without a factory"),
+            Err(e) => assert!(format!("{e:#}").contains("lockstep"), "{e:#}"),
         }
     }
 }

@@ -11,7 +11,14 @@
 //!
 //! With the standard basis, `p = 1`, and identity `Q`, BL1 *is* FedNL;
 //! with the standard basis and compressing `Q`, it is FedNL-BC — both are
-//! exposed as constructors and exercised by the equivalence tests.
+//! exposed through [`split`]'s label override and exercised by the
+//! equivalence tests.
+//!
+//! Round protocol: exchange 0 triggers the clients (who already hold `z^k`
+//! and `ξ^k` from the previous broadcast) — the uplink carries the gradient
+//! coefficients (ξ rounds only) and the compressed Hessian difference
+//! `S_i^k`; exchange 1 broadcasts the compressed model delta `v^k` with the
+//! next round's ξ bit riding along.
 //!
 //! Per the repo convention (DESIGN.md §6.3), the ridge λ of eq. (16) lives at
 //! the server: local Hessians are data-only (inside the data span, keeping
@@ -19,15 +26,16 @@
 
 use crate::basis::HessianBasis;
 use crate::compressors::{BitCost, MatCompressor, VecCompressor};
-use crate::coordinator::{project_psd, CommTally, Env, Method, StepInfo};
+use crate::coordinator::{project_psd, Env, RoundPlan, ServerState};
 use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// BL1 state (server + all clients, co-located in the simulated network).
-pub struct Bl1 {
+/// BL1 server: decoded Hessian aggregate, gradient anchor, Newton solve.
+pub struct Bl1Server {
     label: String,
-    // ── server ──
     /// Current model iterate `x^k` (the server's latest Newton solve).
     x: Vector,
     /// Broadcast model `z^k` (what clients hold).
@@ -35,99 +43,102 @@ pub struct Bl1 {
     /// Gradient anchor `w^k`.
     w: Vector,
     /// Aggregate decoded Hessian estimate `H^k` (data part).
-    h_agg: Mat,
+    pub(crate) h_agg: Mat,
     /// `∇f(w^k)` (data avg + λw), cached from the last ξ=1 round.
     grad_w: Vector,
     /// Current round's ξ (sampled at the end of the previous round; ξ⁰ = 1).
     xi: bool,
-    // ── per client ──
-    bases: Vec<Box<dyn HessianBasis>>,
-    comps: Vec<Box<dyn MatCompressor>>,
-    /// Learned coefficient matrices `L_i^k`.
-    l: Vec<Mat>,
+    /// Server-side basis copies (decode side of the transfer).
+    pub(crate) bases: Vec<Box<dyn HessianBasis>>,
     model_comp: Box<dyn VecCompressor>,
     eta: f64,
     alpha: f64,
 }
 
-impl Bl1 {
-    /// BL1 with the configured basis/compressors (paper defaults: subspace
-    /// basis, Top-K with `K = r`, identity `Q`, `p = 1`).
-    pub fn new(env: &Env) -> Self {
-        Self::build(env, None)
-    }
+/// BL1 client: learned coefficients `L_i^k` and the model mirror.
+pub struct Bl1Client {
+    basis: Box<dyn HessianBasis>,
+    comp: Box<dyn MatCompressor>,
+    /// Learned coefficient matrix `L_i^k`.
+    pub(crate) l: Mat,
+    /// Model mirror `z^k`.
+    z: Vector,
+    /// This round's ξ (delivered with the previous broadcast; ξ⁰ = 1).
+    xi: bool,
+    eta: f64,
+    alpha: f64,
+}
 
-    /// FedNL [Safaryan et al. 2021] = BL1 with the standard basis
-    /// (the run config's `p` / `Q` still apply; paper defaults p=1, Q=id).
-    pub fn fednl(env: &Env) -> Self {
-        Self::build(env, Some("fednl"))
-    }
+/// Build the BL1 split. `fednl_label = Some(..)` forces the standard basis
+/// (the FedNL / FedNL-BC specializations).
+pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl1Server, Vec<Bl1Client>) {
+    let d = env.d;
+    let force_standard = fednl_label.is_some();
+    let x0 = vec![0.0; d];
 
-    /// FedNL-BC = FedNL + bidirectional compression (alias — behaviour is
-    /// fully determined by the configured `model_comp` and `p`).
-    pub fn fednl_bc(env: &Env) -> Self {
-        Self::build(env, Some("fednl-bc"))
-    }
-
-    fn build(env: &Env, fednl_label: Option<&str>) -> Self {
-        let d = env.d;
-        let force_standard = fednl_label.is_some();
-        let x0 = vec![0.0; d];
-
-        let mut bases: Vec<Box<dyn HessianBasis>> = Vec::with_capacity(env.n);
-        let mut comps: Vec<Box<dyn MatCompressor>> = Vec::with_capacity(env.n);
-        let mut l: Vec<Mat> = Vec::with_capacity(env.n);
-        let mut h_agg = Mat::zeros(d, d);
-        for i in 0..env.n {
-            let basis: Box<dyn HessianBasis> = if force_standard {
-                Box::new(crate::basis::StandardBasis::new(d))
-            } else {
-                env.build_basis(i)
-            };
-            // Compressor operates on the coefficient object.
-            let (cr, _cc) = basis.coeff_shape();
-            let comp = env.cfg.hess_comp.build_mat(cr);
-            // L_i⁰ = h(∇²f_i(x⁰)) — the paper's initialization.
-            let li = basis.encode(&env.locals[i].hess(&x0));
-            h_agg.add_scaled(1.0 / env.n as f64, &basis.decode(&li));
-            bases.push(basis);
-            comps.push(comp);
-            l.push(li);
+    let build_basis = |i: usize| -> Box<dyn HessianBasis> {
+        if force_standard {
+            Box::new(crate::basis::StandardBasis::new(d))
+        } else {
+            env.build_basis(i)
         }
+    };
 
-        let model_comp = env.cfg.model_comp.build_vec(d);
-        let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
-        // α default from the compressor class (Asm. 4.5/4.6) — probe on the
-        // first client's coefficient size.
-        let (cr, cc) = bases[0].coeff_shape();
-        let alpha = env
-            .cfg
-            .alpha
-            .unwrap_or_else(|| comps[0].class(cr * cc, cr).default_stepsize());
-
-        let obj = env.objective();
-        let grad_w = obj.grad(&x0);
-        let label = match fednl_label {
-            Some(name) => name.to_string(),
-            None => format!("bl1[{}]", bases[0].name()),
-        };
-        Bl1 {
-            label,
-            x: x0.clone(),
+    let mut server_bases: Vec<Box<dyn HessianBasis>> = Vec::with_capacity(env.n);
+    let mut clients: Vec<Bl1Client> = Vec::with_capacity(env.n);
+    let mut h_agg = Mat::zeros(d, d);
+    // Probed from client 0's compressor/coefficient shape below.
+    let model_comp = env.cfg.model_comp.build_vec(d);
+    let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
+    let mut alpha = env.cfg.alpha.unwrap_or(0.0);
+    for i in 0..env.n {
+        let basis = build_basis(i);
+        // Compressor operates on the coefficient object.
+        let (cr, cc) = basis.coeff_shape();
+        let comp = env.cfg.hess_comp.build_mat(cr);
+        if i == 0 && env.cfg.alpha.is_none() {
+            // α default from the compressor class (Asm. 4.5/4.6) — probe on
+            // the first client's coefficient size.
+            alpha = comp.class(cr * cc, cr).default_stepsize();
+        }
+        // L_i⁰ = h(∇²f_i(x⁰)) — the paper's initialization.
+        let li = basis.encode(&env.locals[i].hess(&x0));
+        h_agg.add_scaled(1.0 / env.n as f64, &basis.decode(&li));
+        server_bases.push(build_basis(i));
+        clients.push(Bl1Client {
+            basis,
+            comp,
+            l: li,
             z: x0.clone(),
-            w: x0,
-            h_agg,
-            grad_w,
             xi: true,
-            bases,
-            comps,
-            l,
-            model_comp,
             eta,
             alpha,
-        }
+        });
     }
 
+    let obj = env.objective();
+    let grad_w = obj.grad(&x0);
+    let label = match fednl_label {
+        Some(name) => name.to_string(),
+        None => format!("bl1[{}]", server_bases[0].name()),
+    };
+    let server = Bl1Server {
+        label,
+        x: x0.clone(),
+        z: x0.clone(),
+        w: x0,
+        h_agg,
+        grad_w,
+        xi: true,
+        bases: server_bases,
+        model_comp,
+        eta,
+        alpha,
+    };
+    (server, clients)
+}
+
+impl Bl1Server {
     /// The PD-safeguarded system matrix `[H^k + λI]_μ`, μ = λ.
     fn system_matrix(&self, lambda: f64) -> Mat {
         let mut m = self.h_agg.clone();
@@ -136,9 +147,44 @@ impl Bl1 {
     }
 }
 
-impl Method for Bl1 {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
+impl ServerState for Bl1Server {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        Ok(match exchange {
+            // Trigger: clients hold z^k and ξ^k already.
+            0 => Some(RoundPlan::broadcast(env.n, Packet::empty())),
+            // Model broadcast (lines 18–22): v^k = Q(x^{k+1} − z^k), with
+            // ξ^{k+1} riding along (1 bit).
+            1 => {
+                let dx = crate::linalg::sub(&self.x, &self.z);
+                let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
+                crate::linalg::axpy(self.eta, &v, &mut self.z);
+                self.xi = rng.bernoulli(env.cfg.p);
+                let mut down = Packet::empty();
+                down.push_vector("model_delta", v, vcost);
+                down.push_flags("xi", vec![self.xi], BitCost::bits(1.0));
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+            _ => None,
+        })
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        if exchange != 0 {
+            return Ok(());
+        }
         let n = env.n as f64;
         let lambda = env.cfg.lambda;
 
@@ -146,13 +192,10 @@ impl Method for Bl1 {
         let h_mu = self.system_matrix(lambda);
         let g: Vector = if self.xi {
             self.w = self.z.clone();
-            // Clients send ∇f_i(z^k) as basis coefficients.
             let mut g = vec![0.0; env.d];
-            for i in 0..env.n {
-                let gi = env.locals[i].grad(&self.z);
-                let gc = self.bases[i].encode_grad(&gi);
-                tally.up(BitCost::floats(gc.len()), env.cfg.float_bits);
-                crate::linalg::axpy(1.0 / n, &self.bases[i].decode_grad(&gc), &mut g);
+            for (i, up) in replies {
+                let gc = up.vector("grad_coeff")?;
+                crate::linalg::axpy(1.0 / n, &self.bases[*i].decode_grad(gc), &mut g);
             }
             crate::linalg::axpy(lambda, &self.z, &mut g);
             self.grad_w = g.clone();
@@ -169,30 +212,13 @@ impl Method for Bl1 {
         let step = cholesky_solve(&h_mu, &g).or_else(|_| lu_solve(&h_mu, &g))?;
         self.x = crate::linalg::sub(&self.z, &step);
 
-        // ── Hessian learning (lines 8–9 / 17) ──
-        for i in 0..env.n {
-            let hz = env.locals[i].hess(&self.z);
-            let target = self.bases[i].encode(&hz);
-            let diff = &target - &self.l[i];
-            let (s, cost) = self.comps[i].compress(&diff, rng);
-            tally.up(cost, env.cfg.float_bits);
-            self.l[i].add_scaled(self.alpha, &s);
-            self.h_agg.add_scaled(self.alpha / n, &self.bases[i].decode(&s));
+        // ── Hessian learning (lines 8–9 / 17): decode the compressed
+        //    differences into the aggregate ──
+        for (i, up) in replies {
+            let s = up.matrix("hess_delta")?;
+            self.h_agg.add_scaled(self.alpha / n, &self.bases[*i].decode(s));
         }
-
-        // ── model broadcast (lines 18–22) ──
-        let dx = crate::linalg::sub(&self.x, &self.z);
-        let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
-        for _ in 0..env.n {
-            // ξ^{k+1} bit rides along with v^k.
-            tally.down(vcost + BitCost::bits(1.0), env.cfg.float_bits);
-        }
-        crate::linalg::axpy(self.eta, &v, &mut self.z);
-
-        // ── next round's ξ ──
-        self.xi = rng.bernoulli(env.cfg.p);
-
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -220,15 +246,50 @@ impl Method for Bl1 {
     }
 }
 
+impl ClientStep for Bl1Client {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        if exchange == 1 {
+            // Apply the model broadcast; stash ξ^{k+1} for the next round.
+            let v = down.vector("model_delta")?;
+            crate::linalg::axpy(self.eta, v, &mut self.z);
+            self.xi = down.flags("xi")?[0];
+            return Ok(Packet::empty());
+        }
+        let mut up = Packet::empty();
+        // Gradient in basis coefficients, on ξ rounds only.
+        if self.xi {
+            let gi = local.grad(&self.z);
+            let gc = self.basis.encode_grad(&gi);
+            let gcost = BitCost::floats(gc.len());
+            up.push_vector("grad_coeff", gc, gcost);
+        }
+        // Compressed Hessian-coefficient difference; learn locally in sync
+        // with the server's decoded aggregate.
+        let hz = local.hess(&self.z);
+        let target = self.basis.encode(&hz);
+        let diff = &target - &self.l;
+        let (s, cost) = self.comp.compress(&diff, rng);
+        self.l.add_scaled(self.alpha, &s);
+        up.push_matrix("hess_delta", s, cost);
+        Ok(up)
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::Bl1;
+    use super::split;
     use crate::compressors::CompressorSpec;
-    use crate::coordinator::Method;
-    use crate::rng::Rng;
     use crate::config::{Algorithm, BasisKind, RunConfig};
-    use crate::coordinator::{run_federated, RunOutput};
+    use crate::coordinator::{run_federated, step_rounds_manual, RunOutput};
     use crate::data::{FederatedDataset, SyntheticSpec};
+    use crate::transport::ClientStep;
 
     fn fed(seed: u64) -> FederatedDataset {
         FederatedDataset::synthetic(&SyntheticSpec {
@@ -339,9 +400,10 @@ mod tests {
 
     #[test]
     fn server_aggregate_tracks_decoded_coefficients() {
-        // The incrementally-maintained H^k must equal (1/n) Σ decode(L_i^k)
-        // exactly after many compressed rounds — any drift here silently
-        // corrupts every Newton step.
+        // The server's incrementally-maintained H^k must equal
+        // (1/n) Σ decode(L_i^k) over the *clients'* learned coefficients
+        // exactly after many compressed rounds — the two sides of the wire
+        // may never drift, or every Newton step is silently corrupted.
         let f = fed(12);
         let locals = crate::coordinator::native_locals(&f);
         let cfg = cfg(Algorithm::Bl1);
@@ -354,16 +416,17 @@ mod tests {
             smoothness: 1.0,
             features,
         };
-        let mut bl1 = Bl1::new(&env);
-        let mut rng = Rng::new(5);
-        for round in 0..25 {
-            bl1.step(&env, round, &mut rng).unwrap();
+        let (mut server, mut clients) = split(&env, None);
+        {
+            let mut refs: Vec<&mut dyn ClientStep> =
+                clients.iter_mut().map(|c| c as &mut dyn ClientStep).collect();
+            step_rounds_manual(&env, &mut server, &mut refs, 25).unwrap();
         }
         let mut expect = crate::linalg::Mat::zeros(env.d, env.d);
-        for i in 0..env.n {
-            expect.add_scaled(1.0 / env.n as f64, &bl1.bases[i].decode(&bl1.l[i]));
+        for (i, c) in clients.iter().enumerate() {
+            expect.add_scaled(1.0 / env.n as f64, &server.bases[i].decode(&c.l));
         }
-        let drift = (&expect - &bl1.h_agg).fro_norm();
+        let drift = (&expect - &server.h_agg).fro_norm();
         assert!(drift < 1e-10, "aggregate drift {drift}");
     }
 

@@ -16,26 +16,30 @@
 //! increment from the Hessian message alone (eq. 13), saving the `d`-float
 //! gradient upload.
 //!
-//! With the standard basis this is exactly FedNL-PP (exposed as a
-//! constructor).
+//! With the standard basis this is exactly FedNL-PP (via [`split`]'s label
+//! override).
+//!
+//! Round protocol (one exchange): the server solves with last round's
+//! aggregates, samples the participants, and sends each one its compressed
+//! model delta `v_i` plus its ξ_i bit; the uplink carries the compressed
+//! Hessian difference `S_i`, the shift increment `Δl_i` (1 float + the ξ
+//! bit, as the paper's accounting rides them along), and — on ξ_i = 1 —
+//! the fresh `g_i` (`d` floats).
 
 use crate::basis::HessianBasis;
 use crate::compressors::{BitCost, MatCompressor, VecCompressor};
-use crate::coordinator::{sample_clients, CommTally, Env, Method, StepInfo};
+use crate::coordinator::{sample_clients, Env, RoundPlan, ServerState};
 use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-struct ClientState {
-    basis: Box<dyn HessianBasis>,
-    comp: Box<dyn MatCompressor>,
-    /// Learned coefficients `L_i^k`.
-    l: Mat,
-    /// Decoded Hessian estimate `H_i^k` (kept symmetric).
-    h: Mat,
-    /// Shift `l_i^k`.
-    shift: f64,
-    /// Local model mirror `z_i^k`.
+/// Server-side view of one client (everything reconstructible from the
+/// wire: the learned Hessian lives only in the aggregate).
+struct ClientView {
+    /// Mirror of the client's model mirror `z_i^k` (the server knows every
+    /// `v_i` it sent).
     z: Vector,
     /// Gradient anchor `w_i^k`.
     w: Vector,
@@ -43,95 +47,134 @@ struct ClientState {
     g: Vector,
 }
 
-/// BL2 state.
-pub struct Bl2 {
+/// BL2 server.
+pub struct Bl2Server {
     label: String,
     x: Vector,
-    clients: Vec<ClientState>,
+    views: Vec<ClientView>,
+    /// Server-side basis copies (decode side).
+    bases: Vec<Box<dyn HessianBasis>>,
     /// Server aggregates.
     g_agg: Vector,
-    h_agg: Mat,
+    pub(crate) h_agg: Mat,
     shift_agg: f64,
     model_comp: Box<dyn VecCompressor>,
     eta: f64,
     alpha: f64,
+    /// ξ_i drawn in `plan` for this round's participants (client, ξ_i),
+    /// consumed by `absorb`.
+    pending_xi: Vec<(usize, bool)>,
 }
 
-impl Bl2 {
-    pub fn new(env: &Env) -> Self {
-        Self::build(env, None)
-    }
+/// BL2 client.
+pub struct Bl2Client {
+    basis: Box<dyn HessianBasis>,
+    comp: Box<dyn MatCompressor>,
+    /// Learned coefficients `L_i^k`.
+    pub(crate) l: Mat,
+    /// Decoded Hessian estimate `H_i^k` (kept symmetric).
+    pub(crate) h: Mat,
+    /// Shift `l_i^k`.
+    shift: f64,
+    /// Local model mirror `z_i^k`.
+    z: Vector,
+    /// Gradient anchor `w_i^k`.
+    w: Vector,
+    eta: f64,
+    alpha: f64,
+}
 
-    /// FedNL-PP [Safaryan et al. 2021] = BL2 with the standard basis.
-    pub fn fednl_pp(env: &Env) -> Self {
-        Self::build(env, Some("fednl-pp"))
-    }
-
-    fn build(env: &Env, fednl_label: Option<&str>) -> Self {
-        let d = env.d;
-        let n = env.n as f64;
-        let x0 = vec![0.0; d];
-        let force_standard = fednl_label.is_some();
-
-        let mut clients = Vec::with_capacity(env.n);
-        let mut g_agg = vec![0.0; d];
-        let mut h_agg = Mat::zeros(d, d);
-        let mut shift_agg = 0.0;
-        for i in 0..env.n {
-            let basis: Box<dyn HessianBasis> = if force_standard {
-                Box::new(crate::basis::StandardBasis::new(d))
-            } else {
-                env.build_basis(i)
-            };
-            let (cr, _) = basis.coeff_shape();
-            let comp = env.cfg.hess_comp.build_mat(cr);
-            let hess0 = env.locals[i].hess(&x0);
-            let l = basis.encode(&hess0);
-            let mut h = basis.decode(&l);
-            h.symmetrize();
-            let shift = (&h - &hess0).fro_norm();
-            // g_i⁰ = (H_i⁰ + l_i⁰ I) w⁰ − ∇f_i(w⁰); w⁰ = 0 ⇒ −∇f_i(0).
-            let mut g = env.locals[i].grad(&x0);
-            for v in g.iter_mut() {
-                *v = -*v;
-            }
-            crate::linalg::axpy(1.0 / n, &g, &mut g_agg);
-            h_agg.add_scaled(1.0 / n, &h);
-            shift_agg += shift / n;
-            clients.push(ClientState { basis, comp, l, h, shift, z: x0.clone(), w: x0.clone(), g });
+/// Build the BL2 split. `fednl_label = Some(..)` forces the standard basis
+/// (FedNL-PP).
+pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl2Server, Vec<Bl2Client>) {
+    let d = env.d;
+    let n = env.n as f64;
+    let x0 = vec![0.0; d];
+    let force_standard = fednl_label.is_some();
+    let build_basis = |i: usize| -> Box<dyn HessianBasis> {
+        if force_standard {
+            Box::new(crate::basis::StandardBasis::new(d))
+        } else {
+            env.build_basis(i)
         }
+    };
 
-        let model_comp = env.cfg.model_comp.build_vec(d);
-        let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
-        let (cr, cc) = clients[0].basis.coeff_shape();
-        let alpha = env
-            .cfg
-            .alpha
-            .unwrap_or_else(|| clients[0].comp.class(cr * cc, cr).default_stepsize());
-        let label = match fednl_label {
-            Some(name) => name.to_string(),
-            None => format!("bl2[{}]", clients[0].basis.name()),
-        };
-        Bl2 {
-            label,
-            x: x0,
-            clients,
-            g_agg,
-            h_agg,
-            shift_agg,
-            model_comp,
+    let model_comp = env.cfg.model_comp.build_vec(d);
+    let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
+    let mut alpha = env.cfg.alpha.unwrap_or(0.0);
+
+    let mut clients = Vec::with_capacity(env.n);
+    let mut views = Vec::with_capacity(env.n);
+    let mut bases = Vec::with_capacity(env.n);
+    let mut g_agg = vec![0.0; d];
+    let mut h_agg = Mat::zeros(d, d);
+    let mut shift_agg = 0.0;
+    for i in 0..env.n {
+        let basis = build_basis(i);
+        let (cr, cc) = basis.coeff_shape();
+        let comp = env.cfg.hess_comp.build_mat(cr);
+        if i == 0 && env.cfg.alpha.is_none() {
+            alpha = comp.class(cr * cc, cr).default_stepsize();
+        }
+        let hess0 = env.locals[i].hess(&x0);
+        let l = basis.encode(&hess0);
+        let mut h = basis.decode(&l);
+        h.symmetrize();
+        let shift = (&h - &hess0).fro_norm();
+        // g_i⁰ = (H_i⁰ + l_i⁰ I) w⁰ − ∇f_i(w⁰); w⁰ = 0 ⇒ −∇f_i(0).
+        let mut g = env.locals[i].grad(&x0);
+        for v in g.iter_mut() {
+            *v = -*v;
+        }
+        crate::linalg::axpy(1.0 / n, &g, &mut g_agg);
+        h_agg.add_scaled(1.0 / n, &h);
+        shift_agg += shift / n;
+        views.push(ClientView { z: x0.clone(), w: x0.clone(), g: g.clone() });
+        bases.push(build_basis(i));
+        clients.push(Bl2Client {
+            basis,
+            comp,
+            l,
+            h,
+            shift,
+            z: x0.clone(),
+            w: x0.clone(),
             eta,
             alpha,
-        }
+        });
     }
+    let label = match fednl_label {
+        Some(name) => name.to_string(),
+        None => format!("bl2[{}]", bases[0].name()),
+    };
+    let server = Bl2Server {
+        label,
+        x: x0,
+        views,
+        bases,
+        g_agg,
+        h_agg,
+        shift_agg,
+        model_comp,
+        eta,
+        alpha,
+        pending_xi: Vec::new(),
+    };
+    (server, clients)
 }
 
-impl Method for Bl2 {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
-        let n = env.n as f64;
+impl ServerState for Bl2Server {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        if exchange != 0 {
+            return Ok(None);
+        }
         let lambda = env.cfg.lambda;
-        let d = env.d;
 
         // ── server: Newton-type solve with last round's aggregates ──
         let mut m = self.h_agg.clone();
@@ -139,64 +182,65 @@ impl Method for Bl2 {
         m.add_diag(self.shift_agg + lambda);
         self.x = cholesky_solve(&m, &self.g_agg).or_else(|_| lu_solve(&m, &self.g_agg))?;
 
-        // ── participation ──
+        // ── participation + per-participant downlink ──
         let selected = sample_clients(env.n, env.cfg.tau, rng);
-
+        self.pending_xi.clear();
+        let mut sends = Vec::with_capacity(selected.len());
         for &i in &selected {
-            let c = &mut self.clients[i];
-
             // Model downlink: v_i = Q_i(x^{k+1} − z_i^k).
-            let dx = crate::linalg::sub(&self.x, &c.z);
+            let dx = crate::linalg::sub(&self.x, &self.views[i].z);
             let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
-            tally.down(vcost, env.cfg.float_bits);
-            crate::linalg::axpy(self.eta, &v, &mut c.z);
-
-            // Hessian learning at z_i^{k+1}.
-            let hz = env.locals[i].hess(&c.z);
-            let target = c.basis.encode(&hz);
-            let diff = &target - &c.l;
-            let (s, scost) = c.comp.compress(&diff, rng);
-            tally.up(scost, env.cfg.float_bits);
-            c.l.add_scaled(self.alpha, &s);
-            let delta_h = &c.basis.decode(&s) * self.alpha;
-            c.h += &delta_h;
-            c.h.symmetrize();
-
-            let new_shift = (&c.h - &hz).fro_norm();
-            let dshift = new_shift - c.shift;
-            c.shift = new_shift;
-            // l_i diff + ξ_i bit always ride along.
-            tally.up(BitCost::floats(1) + BitCost::bits(1.0), env.cfg.float_bits);
-
+            crate::linalg::axpy(self.eta, &v, &mut self.views[i].z);
             let xi = rng.bernoulli(env.cfg.p);
-            let g_old = c.g.clone();
-            if xi {
-                // w_i ← z_i^{k+1}; fresh g_i; send the difference (d floats).
-                c.w = c.z.clone();
-                let mut g = c.h.matvec(&c.w);
-                crate::linalg::axpy(c.shift, &c.w, &mut g);
-                let gw = env.locals[i].grad(&c.w);
-                crate::linalg::axpy(-1.0, &gw, &mut g);
-                c.g = g;
-                tally.up(BitCost::floats(d), env.cfg.float_bits);
+            self.pending_xi.push((i, xi));
+            let mut down = Packet::empty();
+            down.push_vector("model_delta", v, vcost);
+            // The ξ_i bit's cost rides the uplink (the paper's accounting).
+            down.push_flags("xi", vec![xi], BitCost::zero());
+            sends.push((i, down));
+        }
+        Ok(Some(RoundPlan::to_clients(sends)))
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        _exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        let n = env.n as f64;
+        for ((i, up), (xi_client, xi)) in replies.iter().zip(&self.pending_xi) {
+            debug_assert_eq!(i, xi_client, "absorb order must match plan order");
+            let view = &mut self.views[*i];
+            // Decode the Hessian learning step exactly as the client did.
+            let s = up.matrix("hess_delta")?;
+            let delta_h = &self.bases[*i].decode(s) * self.alpha;
+            let dshift = up.scalars("shift_delta")?[0];
+
+            let g_old = view.g.clone();
+            if *xi {
+                // w_i ← z_i^{k+1}; fresh g_i arrives on the wire.
+                view.w = view.z.clone();
+                view.g = up.vector("grad_update")?.to_vec();
             } else {
                 // Server reconstructs: Δg_i = (α·decode(S)_s + Δl·I) w_i
                 // (eq. 13); no gradient upload.
                 let mut sym_dh = delta_h.clone();
                 sym_dh.symmetrize();
-                let mut dg = sym_dh.matvec(&c.w);
-                crate::linalg::axpy(dshift, &c.w, &mut dg);
-                crate::linalg::axpy(1.0, &dg, &mut c.g);
+                let mut dg = sym_dh.matvec(&view.w);
+                crate::linalg::axpy(dshift, &view.w, &mut dg);
+                crate::linalg::axpy(1.0, &dg, &mut view.g);
             }
 
             // Server aggregate updates.
-            let dg = crate::linalg::sub(&c.g, &g_old);
+            let dg = crate::linalg::sub(&view.g, &g_old);
             crate::linalg::axpy(1.0 / n, &dg, &mut self.g_agg);
             self.h_agg.add_scaled(1.0 / n, &delta_h);
             self.shift_agg += dshift / n;
         }
-
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -205,11 +249,11 @@ impl Method for Bl2 {
 
     fn setup_bits_per_node(&self, env: &Env) -> f64 {
         let total: f64 = self
-            .clients
+            .bases
             .iter()
-            .map(|c| {
-                if c.basis.grad_coeff_len() < c.basis.dim() {
-                    (c.basis.grad_coeff_len() * c.basis.dim()) as f64 * env.cfg.float_bits as f64
+            .map(|b| {
+                if b.grad_coeff_len() < b.dim() {
+                    (b.grad_coeff_len() * b.dim()) as f64 * env.cfg.float_bits as f64
                 } else {
                     0.0
                 }
@@ -223,9 +267,53 @@ impl Method for Bl2 {
     }
 }
 
+impl ClientStep for Bl2Client {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        _exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let d = self.z.len();
+        // Apply the model downlink.
+        let v = down.vector("model_delta")?;
+        crate::linalg::axpy(self.eta, v, &mut self.z);
+        let xi = down.flags("xi")?[0];
+
+        // Hessian learning at z_i^{k+1}.
+        let hz = local.hess(&self.z);
+        let target = self.basis.encode(&hz);
+        let diff = &target - &self.l;
+        let (s, scost) = self.comp.compress(&diff, rng);
+        self.l.add_scaled(self.alpha, &s);
+        let delta_h = &self.basis.decode(&s) * self.alpha;
+        self.h += &delta_h;
+        self.h.symmetrize();
+        let new_shift = (&self.h - &hz).fro_norm();
+        let dshift = new_shift - self.shift;
+        self.shift = new_shift;
+
+        let mut up = Packet::empty();
+        up.push_matrix("hess_delta", s, scost);
+        // Δl_i + the ξ_i bit always ride along.
+        up.push_scalars("shift_delta", vec![dshift], BitCost::floats(1) + BitCost::bits(1.0));
+        if xi {
+            // w_i ← z_i^{k+1}; fresh g_i; send it whole (d floats).
+            self.w = self.z.clone();
+            let mut g = self.h.matvec(&self.w);
+            crate::linalg::axpy(self.shift, &self.w, &mut g);
+            let gw = local.grad(&self.w);
+            crate::linalg::axpy(-1.0, &gw, &mut g);
+            up.push_vector("grad_update", g, BitCost::floats(d));
+        }
+        Ok(up)
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    
     use crate::compressors::CompressorSpec;
     use crate::config::{Algorithm, RunConfig};
     use crate::coordinator::{run_federated, RunOutput};

@@ -15,147 +15,187 @@
 //! The server maintains the split aggregates `A^k, C^k` (so the global
 //! rescale by `β^k = max_i β_i^k` is free) and the split gradient shifts
 //! `g_1^k, g_2^k` with `g^k = β^k g_1^k − g_2^k`.
+//!
+//! Round protocol (one exchange, like BL2): the downlink carries the
+//! compressed model delta `v_i` + ξ_i; the uplink carries the compressed
+//! coefficient difference `S_i`, the `(β_i, Δγ_i)` ride-alongs (2 floats +
+//! the ξ bit), and — on ξ_i = 1 — the fresh split gradients `g_{i,1},
+//! g_{i,2}` (2d floats). The server reconstructs `ΔA_i, ΔC_i` from the wire
+//! exactly as the client applied them.
 
 use crate::basis::{HessianBasis, PsdBasis};
 use crate::compressors::{BitCost, MatCompressor, VecCompressor};
 use crate::config::Bl3Option;
-use crate::coordinator::{sample_clients, CommTally, Env, Method, StepInfo};
+use crate::coordinator::{sample_clients, Env, RoundPlan, ServerState};
 use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-struct ClientState {
-    comp: Box<dyn MatCompressor>,
-    /// Learned coefficients `L_i^k` (symmetric, the h̃ convention).
-    l: Mat,
-    /// `γ_i^k`.
-    gamma: f64,
-    /// `β_i^k`.
-    beta: f64,
-    /// `A_i^k = Σ ((L_i)_{jl} + 2γ_i) B^{jl}`.
-    a: Mat,
-    /// `C_i^k = Σ 2γ_i B^{jl}`.
-    c: Mat,
-    /// Model mirror and gradient anchor.
+/// Server-side view of one client.
+struct ClientView {
+    /// Mirror of the client's model mirror.
     z: Vector,
+    /// Gradient anchor `w_i^k`.
     w: Vector,
     /// `g_{i,1} = A_i w_i`, `g_{i,2} = C_i w_i + ∇f_i(w_i)`.
     g1: Vector,
     g2: Vector,
-    /// Previous iterate's coefficient target (for β Option 1).
-    prev_target: Mat,
+    /// `β_i^k` (non-participants keep theirs; the global β is the max).
+    beta: f64,
 }
 
-/// BL3 state.
-pub struct Bl3 {
+/// BL3 server.
+pub struct Bl3Server {
     x: Vector,
     basis: PsdBasis,
     /// `Σ_{jl} B^{jl}` — the decode of the all-ones coefficient matrix,
     /// reused for the `2γ` rank-structure updates.
     ones_decoded: Mat,
-    clients: Vec<ClientState>,
-    beta: f64,
-    a_agg: Mat,
-    c_agg: Mat,
+    views: Vec<ClientView>,
+    pub(crate) beta: f64,
+    pub(crate) a_agg: Mat,
+    pub(crate) c_agg: Mat,
     g1_agg: Vector,
     g2_agg: Vector,
     model_comp: Box<dyn VecCompressor>,
+    eta: f64,
+    alpha: f64,
+    option: Bl3Option,
+    /// ξ_i drawn in `plan` for this round's participants.
+    pending_xi: Vec<(usize, bool)>,
+}
+
+/// BL3 client.
+pub struct Bl3Client {
+    basis: PsdBasis,
+    ones_decoded: Mat,
+    comp: Box<dyn MatCompressor>,
+    /// Learned coefficients `L_i^k` (symmetric, the h̃ convention).
+    l: Mat,
+    /// `γ_i^k`.
+    gamma: f64,
+    /// `A_i^k = Σ ((L_i)_{jl} + 2γ_i) B^{jl}`, `C_i^k = Σ 2γ_i B^{jl}`.
+    a: Mat,
+    c: Mat,
+    /// Model mirror and gradient anchor.
+    pub(crate) z: Vector,
+    w: Vector,
+    /// Previous iterate's coefficient target (for β Option 1).
+    prev_target: Mat,
     eta: f64,
     alpha: f64,
     c_const: f64,
     option: Bl3Option,
 }
 
-impl Bl3 {
-    pub fn new(env: &Env) -> Result<Self> {
-        let d = env.d;
-        let n = env.n as f64;
-        let x0 = vec![0.0; d];
-        let basis = PsdBasis::new(d);
-        let ones_decoded = basis.decode(&Mat::from_fn(d, d, |_, _| 1.0));
-        let c_const = env.cfg.bl3_c;
-        anyhow::ensure!(c_const > 0.0, "BL3 requires c > 0");
+/// Max ratio `(target_{jl} + 2γ)/(L_{jl} + 2γ)` over all entries.
+fn beta_for(target: &Mat, l: &Mat, gamma: f64) -> f64 {
+    let mut beta = f64::NEG_INFINITY;
+    for (t, li) in target.data().iter().zip(l.data()) {
+        let denom = li + 2.0 * gamma;
+        debug_assert!(denom > 0.0, "BL3 denominator not positive: {denom}");
+        beta = beta.max((t + 2.0 * gamma) / denom);
+    }
+    beta
+}
 
-        let mut clients = Vec::with_capacity(env.n);
-        let mut a_agg = Mat::zeros(d, d);
-        let mut c_agg = Mat::zeros(d, d);
-        let mut g1_agg = vec![0.0; d];
-        let mut g2_agg = vec![0.0; d];
-        for i in 0..env.n {
-            let hess0 = env.locals[i].hess(&x0);
-            let l = basis.encode(&hess0);
-            let gamma = c_const.max(l.max_abs());
-            // A_i = decode(L) + 2γ·decode(1), C_i = 2γ·decode(1).
-            let mut a = basis.decode(&l);
-            a.add_scaled(2.0 * gamma, &ones_decoded);
-            let c = &ones_decoded * (2.0 * gamma);
-            // β_i⁰: target == L ⇒ every ratio is 1.
-            let beta = 1.0;
-            // w⁰ = 0 ⇒ g1 = 0, g2 = ∇f_i(0).
-            let g1 = vec![0.0; d];
-            let g2 = env.locals[i].grad(&x0);
-            a_agg.add_scaled(1.0 / n, &a);
-            c_agg.add_scaled(1.0 / n, &c);
-            crate::linalg::axpy(1.0 / n, &g1, &mut g1_agg);
-            crate::linalg::axpy(1.0 / n, &g2, &mut g2_agg);
-            let comp = env.cfg.hess_comp.build_mat(d);
-            clients.push(ClientState {
-                comp,
-                prev_target: l.clone(),
-                l,
-                gamma,
-                beta,
-                a,
-                c,
-                z: x0.clone(),
-                w: x0.clone(),
-                g1,
-                g2,
-            });
+/// Build the BL3 split.
+pub fn split(env: &Env) -> Result<(Bl3Server, Vec<Bl3Client>)> {
+    let d = env.d;
+    let n = env.n as f64;
+    let x0 = vec![0.0; d];
+    let basis = PsdBasis::new(d);
+    let ones_decoded = basis.decode(&Mat::from_fn(d, d, |_, _| 1.0));
+    let c_const = env.cfg.bl3_c;
+    anyhow::ensure!(c_const > 0.0, "BL3 requires c > 0");
+
+    let model_comp = env.cfg.model_comp.build_vec(d);
+    let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
+    let mut alpha = env.cfg.alpha.unwrap_or(0.0);
+
+    let mut clients = Vec::with_capacity(env.n);
+    let mut views = Vec::with_capacity(env.n);
+    let mut a_agg = Mat::zeros(d, d);
+    let mut c_agg = Mat::zeros(d, d);
+    let mut g1_agg = vec![0.0; d];
+    let mut g2_agg = vec![0.0; d];
+    for i in 0..env.n {
+        let hess0 = env.locals[i].hess(&x0);
+        let l = basis.encode(&hess0);
+        let gamma = c_const.max(l.max_abs());
+        // A_i = decode(L) + 2γ·decode(1), C_i = 2γ·decode(1).
+        let mut a = basis.decode(&l);
+        a.add_scaled(2.0 * gamma, &ones_decoded);
+        let c = &ones_decoded * (2.0 * gamma);
+        // w⁰ = 0 ⇒ g1 = 0, g2 = ∇f_i(0); β_i⁰ = 1 (target == L).
+        let g1 = vec![0.0; d];
+        let g2 = env.locals[i].grad(&x0);
+        a_agg.add_scaled(1.0 / n, &a);
+        c_agg.add_scaled(1.0 / n, &c);
+        crate::linalg::axpy(1.0 / n, &g1, &mut g1_agg);
+        crate::linalg::axpy(1.0 / n, &g2, &mut g2_agg);
+        let comp = env.cfg.hess_comp.build_mat(d);
+        if i == 0 && env.cfg.alpha.is_none() {
+            alpha = comp.class(d * d, d).default_stepsize();
         }
-
-        let model_comp = env.cfg.model_comp.build_vec(d);
-        let eta = env.cfg.eta.unwrap_or_else(|| model_comp.class_vec(d).default_stepsize());
-        let alpha = env
-            .cfg
-            .alpha
-            .unwrap_or_else(|| clients[0].comp.class(d * d, d).default_stepsize());
-        Ok(Bl3 {
-            x: x0,
-            basis,
-            ones_decoded,
-            clients,
+        views.push(ClientView {
+            z: x0.clone(),
+            w: x0.clone(),
+            g1: g1.clone(),
+            g2: g2.clone(),
             beta: 1.0,
-            a_agg,
-            c_agg,
-            g1_agg,
-            g2_agg,
-            model_comp,
+        });
+        clients.push(Bl3Client {
+            basis: PsdBasis::new(d),
+            ones_decoded: ones_decoded.clone(),
+            comp,
+            prev_target: l.clone(),
+            l,
+            gamma,
+            a,
+            c,
+            z: x0.clone(),
+            w: x0.clone(),
             eta,
             alpha,
             c_const,
             option: env.cfg.bl3_option,
-        })
+        });
     }
 
-    /// Max ratio `(target_{jl} + 2γ)/(L_{jl} + 2γ)` over all entries.
-    fn beta_for(target: &Mat, l: &Mat, gamma: f64) -> f64 {
-        let mut beta = f64::NEG_INFINITY;
-        for (t, li) in target.data().iter().zip(l.data()) {
-            let denom = li + 2.0 * gamma;
-            debug_assert!(denom > 0.0, "BL3 denominator not positive: {denom}");
-            beta = beta.max((t + 2.0 * gamma) / denom);
-        }
-        beta
-    }
+    let server = Bl3Server {
+        x: x0,
+        basis,
+        ones_decoded,
+        views,
+        beta: 1.0,
+        a_agg,
+        c_agg,
+        g1_agg,
+        g2_agg,
+        model_comp,
+        eta,
+        alpha,
+        option: env.cfg.bl3_option,
+        pending_xi: Vec::new(),
+    };
+    Ok((server, clients))
 }
 
-impl Method for Bl3 {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
-        let n = env.n as f64;
+impl ServerState for Bl3Server {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        if exchange != 0 {
+            return Ok(None);
+        }
         let lambda = env.cfg.lambda;
-        let d = env.d;
 
         // ── server: x^{k+1} = (H^k + λI)^{-1} g^k, H = βA − C, g = βg₁ − g₂.
         let mut h = &self.a_agg * self.beta;
@@ -168,78 +208,71 @@ impl Method for Bl3 {
         }
         self.x = cholesky_solve(&h, &g).or_else(|_| lu_solve(&h, &g))?;
 
-        // ── participation ──
+        // ── participation + per-participant downlink ──
         let selected = sample_clients(env.n, env.cfg.tau, rng);
-
+        self.pending_xi.clear();
+        let mut sends = Vec::with_capacity(selected.len());
         for &i in &selected {
-            let c = &mut self.clients[i];
-
-            // Model downlink.
-            let dx = crate::linalg::sub(&self.x, &c.z);
+            let dx = crate::linalg::sub(&self.x, &self.views[i].z);
             let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
-            tally.down(vcost, env.cfg.float_bits);
-            crate::linalg::axpy(self.eta, &v, &mut c.z);
+            crate::linalg::axpy(self.eta, &v, &mut self.views[i].z);
+            let xi = rng.bernoulli(env.cfg.p);
+            self.pending_xi.push((i, xi));
+            let mut down = Packet::empty();
+            down.push_vector("model_delta", v, vcost);
+            // The ξ_i bit's cost rides the uplink (the paper's accounting).
+            down.push_flags("xi", vec![xi], BitCost::zero());
+            sends.push((i, down));
+        }
+        Ok(Some(RoundPlan::to_clients(sends)))
+    }
 
-            // Hessian-coefficient learning at z_i^{k+1}.
-            let target = self.basis.encode(&env.locals[i].hess(&c.z));
-            let diff = &target - &c.l;
-            let (s, scost) = c.comp.compress(&diff, rng);
-            tally.up(scost, env.cfg.float_bits);
-            let mut dl = s;
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        _exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        let n = env.n as f64;
+        for ((i, up), (xi_client, xi)) in replies.iter().zip(&self.pending_xi) {
+            debug_assert_eq!(i, xi_client, "absorb order must match plan order");
+            let view = &mut self.views[*i];
+            let s = up.matrix("hess_delta")?;
+            let ride = up.scalars("beta_gamma")?;
+            let (beta_new, dgamma) = (ride[0], ride[1]);
+
+            // Reconstruct ΔA_i, ΔC_i exactly as the client applied them.
+            let mut dl = s.clone();
             dl.data_mut().iter_mut().for_each(|v| *v *= self.alpha);
-            let l_new = &c.l + &dl;
-            let gamma_new = self.c_const.max(l_new.max_abs());
-            let dgamma = gamma_new - c.gamma;
-
-            // β_i update (Option 1 uses the previous round's target).
-            let beta_target = match self.option {
-                Bl3Option::One => &c.prev_target,
-                Bl3Option::Two => &target,
-            };
-            let beta_new = Self::beta_for(beta_target, &l_new, gamma_new);
-
-            // A_i += decode(ΔL) + 2Δγ Σ B;  C_i += 2Δγ Σ B.
             let mut da = self.basis.decode(&dl);
             da.add_scaled(2.0 * dgamma, &self.ones_decoded);
             let dc = &self.ones_decoded * (2.0 * dgamma);
-            c.a += &da;
-            c.c += &dc;
-            c.l = l_new;
-            c.gamma = gamma_new;
-            c.beta = beta_new;
-            c.prev_target = target;
 
-            // β_i, Δγ and ξ_i ride along every participating round.
-            tally.up(BitCost::floats(2) + BitCost::bits(1.0), env.cfg.float_bits);
-
-            let xi = rng.bernoulli(env.cfg.p);
-            let g1_old = c.g1.clone();
-            let g2_old = c.g2.clone();
-            if xi {
-                c.w = c.z.clone();
-                c.g1 = c.a.matvec(&c.w);
-                let mut g2 = c.c.matvec(&c.w);
-                crate::linalg::axpy(1.0, &env.locals[i].grad(&c.w), &mut g2);
-                c.g2 = g2;
-                tally.up(BitCost::floats(2 * d), env.cfg.float_bits);
+            let g1_old = view.g1.clone();
+            let g2_old = view.g2.clone();
+            if *xi {
+                view.w = view.z.clone();
+                view.g1 = up.vector("g1")?.to_vec();
+                view.g2 = up.vector("g2")?.to_vec();
             } else {
-                // Server reconstructs: Δg₁ = ΔA·w_i, Δg₂ = ΔC·w_i
-                // (w_i unchanged, ∇f_i(w_i) unchanged).
-                crate::linalg::axpy(1.0, &da.matvec(&c.w), &mut c.g1);
-                crate::linalg::axpy(1.0, &dc.matvec(&c.w), &mut c.g2);
+                // Δg₁ = ΔA·w_i, Δg₂ = ΔC·w_i (w_i and ∇f_i(w_i) unchanged).
+                crate::linalg::axpy(1.0, &da.matvec(&view.w), &mut view.g1);
+                crate::linalg::axpy(1.0, &dc.matvec(&view.w), &mut view.g2);
             }
+            view.beta = beta_new;
 
             // Server aggregates.
             self.a_agg.add_scaled(1.0 / n, &da);
             self.c_agg.add_scaled(1.0 / n, &dc);
-            crate::linalg::axpy(1.0 / n, &crate::linalg::sub(&c.g1, &g1_old), &mut self.g1_agg);
-            crate::linalg::axpy(1.0 / n, &crate::linalg::sub(&c.g2, &g2_old), &mut self.g2_agg);
+            crate::linalg::axpy(1.0 / n, &crate::linalg::sub(&view.g1, &g1_old), &mut self.g1_agg);
+            crate::linalg::axpy(1.0 / n, &crate::linalg::sub(&view.g2, &g2_old), &mut self.g2_agg);
         }
 
         // β^{k+1} = max_i β_i (non-participants keep their β_i).
-        self.beta = self.clients.iter().map(|c| c.beta).fold(f64::NEG_INFINITY, f64::max);
-
-        Ok(tally.into_step())
+        self.beta = self.views.iter().map(|v| v.beta).fold(f64::NEG_INFINITY, f64::max);
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -248,6 +281,68 @@ impl Method for Bl3 {
 
     fn label(&self) -> String {
         format!("bl3[opt{}]", if self.option == Bl3Option::One { 1 } else { 2 })
+    }
+}
+
+impl ClientStep for Bl3Client {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        _exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let d = self.z.len();
+        // Model downlink.
+        let v = down.vector("model_delta")?;
+        crate::linalg::axpy(self.eta, v, &mut self.z);
+        let xi = down.flags("xi")?[0];
+
+        // Hessian-coefficient learning at z_i^{k+1}.
+        let target = self.basis.encode(&local.hess(&self.z));
+        let diff = &target - &self.l;
+        let (s, scost) = self.comp.compress(&diff, rng);
+        let mut dl = s.clone();
+        dl.data_mut().iter_mut().for_each(|v| *v *= self.alpha);
+        let l_new = &self.l + &dl;
+        let gamma_new = self.c_const.max(l_new.max_abs());
+        let dgamma = gamma_new - self.gamma;
+
+        // β_i update (Option 1 uses the previous round's target).
+        let beta_target = match self.option {
+            Bl3Option::One => &self.prev_target,
+            Bl3Option::Two => &target,
+        };
+        let beta_new = beta_for(beta_target, &l_new, gamma_new);
+
+        // A_i += decode(ΔL) + 2Δγ Σ B;  C_i += 2Δγ Σ B.
+        let mut da = self.basis.decode(&dl);
+        da.add_scaled(2.0 * dgamma, &self.ones_decoded);
+        let dc = &self.ones_decoded * (2.0 * dgamma);
+        self.a += &da;
+        self.c += &dc;
+        self.l = l_new;
+        self.gamma = gamma_new;
+        self.prev_target = target;
+
+        let mut up = Packet::empty();
+        up.push_matrix("hess_delta", s, scost);
+        // β_i, Δγ and ξ_i ride along every participating round.
+        up.push_scalars(
+            "beta_gamma",
+            vec![beta_new, dgamma],
+            BitCost::floats(2) + BitCost::bits(1.0),
+        );
+        if xi {
+            self.w = self.z.clone();
+            let g1 = self.a.matvec(&self.w);
+            let mut g2 = self.c.matvec(&self.w);
+            crate::linalg::axpy(1.0, &local.grad(&self.w), &mut g2);
+            up.push_vector("g1", g1, BitCost::floats(d));
+            up.push_vector("g2", g2, BitCost::floats(d));
+        }
+        Ok(up)
     }
 }
 
@@ -317,8 +412,8 @@ mod tests {
     #[test]
     fn estimator_dominates_local_hessians() {
         // The §5 PD claim: H^k + λI ⪰ λI (in fact H_i ⪰ ∇²f_i ⪰ 0). We
-        // check the aggregate stays PD along a run by asserting the Cholesky
-        // solve never falls back / errors, and spot-check H ⪰ avg ∇²f_i − ε.
+        // drive the wire protocol directly and spot-check H ⪰ avg ∇²f_i − ε
+        // at the clients' model mirrors.
         let f = fed(34);
         let locals = crate::coordinator::native_locals(&f);
         let cfg = base_cfg();
@@ -331,15 +426,28 @@ mod tests {
             smoothness: 1.0,
             features,
         };
-        let mut bl3 = Bl3::new(&env).unwrap();
-        let mut rng = Rng::new(35);
+        let (mut server, mut clients) = split(&env).unwrap();
+        let mut rng = crate::rng::Rng::new(env.cfg.seed);
+        let mut rngs = crate::transport::client_rngs(env.cfg.seed, clients.len());
         for round in 0..30 {
-            bl3.step(&env, round, &mut rng).unwrap();
+            // Drive one round of the wire protocol by hand.
+            let mut exchange = 0usize;
+            while let Some(plan) = server.plan(&env, round, exchange, &mut rng).unwrap() {
+                let mut replies = Vec::with_capacity(plan.sends.len());
+                for (i, down) in plan.sends {
+                    let up = clients[i]
+                        .compute(env.locals[i].as_ref(), round, exchange, &down, &mut rngs[i])
+                        .unwrap();
+                    replies.push((i, up));
+                }
+                server.absorb(&env, round, exchange, &replies, &mut rng).unwrap();
+                exchange += 1;
+            }
             // H = βA − C must dominate each client's Hessian at its mirror.
-            let mut h = &bl3.a_agg * bl3.beta;
-            h -= &bl3.c_agg;
+            let mut h = &server.a_agg * server.beta;
+            h -= &server.c_agg;
             let mut avg_hess = Mat::zeros(env.d, env.d);
-            for (i, c) in bl3.clients.iter().enumerate() {
+            for (i, c) in clients.iter().enumerate() {
                 avg_hess.add_scaled(1.0 / env.n as f64, &locals[i].hess(&c.z));
             }
             let diff = &h - &avg_hess;

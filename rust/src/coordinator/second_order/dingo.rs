@@ -7,144 +7,205 @@
 //! 2. Clients send `H_i g` and `H̃_i^† g̃`, where `H̃_i = [H_i; φ I]`
 //!    (Tikhonov-augmented) and `g̃ = [g; 0]`, so
 //!    `H̃_i^† g̃ = (H_i² + φ²I)^{-1} H_i g`.
-//! 3. Server forms `h = (1/n) Σ H_i g`. Clients whose direction fails the
-//!    alignment test `⟨H̃_i^†g̃, h⟩ ≥ θ‖g‖²` send the Lagrangian-corrected
-//!    direction `p_i = −H̃_i^†g̃ − λ_i (H̃_iᵀH̃_i)^{-1} h` with the exact
-//!    multiplier restoring equality (DINGO Case 3).
+//! 3. Server broadcasts `h = (1/n) Σ H_i g`. Clients whose direction fails
+//!    the alignment test `⟨H̃_i^†g̃, h⟩ ≥ θ‖g‖²` send the
+//!    Lagrangian-corrected direction
+//!    `p_i = −H̃_i^†g̃ − λ_i (H̃_iᵀH̃_i)^{-1} h` with the exact multiplier
+//!    restoring equality (DINGO Case 3).
 //! 4. Backtracking line search on `‖∇f(x + αp)‖²` over
-//!    `α ∈ {1, 2⁻¹, …, 2⁻¹⁰}` (each trial costs a gradient round trip).
+//!    `α ∈ {1, 2⁻¹, …, 2⁻¹⁰}` — each trial is one gradient round trip,
+//!    i.e. one exchange of the round.
 //!
 //! Parameters follow the authors' choice used in the paper's experiments:
 //! `θ = 10⁻⁴, φ = 10⁻⁶, ρ = 10⁻⁴`. Local Hessians include the ridge
 //! (DINGO has no server-side Hessian model to fold λ into).
+//!
+//! Wire-cost conventions match the pre-transport accounting: the model
+//! point rides exchange 0 uncharged (its cost is the line-search trial
+//! broadcasts), phase-2 uplinks are charged `2d` floats covering both
+//! Hessian-vector quantities, and the phase-3 direction is covered by that
+//! same charge.
 
 use crate::compressors::BitCost;
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
-use crate::linalg::{sym_eigen, Vector};
+use crate::coordinator::{Env, RoundPlan, ServerState};
+use crate::linalg::{sym_eigen, EigenDecomposition, Vector};
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// DINGO state.
-pub struct Dingo {
+/// DINGO server: drives the 4-phase round as a sequence of exchanges.
+pub struct DingoServer {
     x: Vector,
+    rho: f64,
+    // ── per-round scratch (reset at exchange 0) ──
+    g: Vector,
+    g_norm_sq: f64,
+    h_g: Vector,
+    p: Vector,
+    pt_h: f64,
+    proceed: bool,
+    accepted: bool,
+    x_try: Vector,
+}
+
+/// DINGO client: local spectral quantities, cached between exchanges.
+pub struct DingoClient {
+    lambda: f64,
     theta: f64,
     phi: f64,
-    rho: f64,
+    // ── per-round scratch ──
+    x: Vector,
+    g: Vector,
+    eig: Option<EigenDecomposition>,
+    pinv_g: Vector,
 }
 
-impl Dingo {
-    pub fn new(env: &Env) -> Self {
-        Dingo { x: vec![0.0; env.d], theta: 1e-4, phi: 1e-6, rho: 1e-4 }
-    }
-
-    /// Global regularized gradient.
-    fn grad(env: &Env, x: &[f64]) -> Vector {
-        let n = env.n as f64;
-        let mut g = vec![0.0; env.d];
-        for i in 0..env.n {
-            crate::linalg::axpy(1.0 / n, &env.locals[i].grad(x), &mut g);
-        }
-        crate::linalg::axpy(env.cfg.lambda, x, &mut g);
-        g
-    }
+/// Build the DINGO split.
+pub fn split(env: &Env) -> (DingoServer, Vec<DingoClient>) {
+    let d = env.d;
+    let server = DingoServer {
+        x: vec![0.0; d],
+        rho: 1e-4,
+        g: vec![0.0; d],
+        g_norm_sq: 0.0,
+        h_g: vec![0.0; d],
+        p: vec![0.0; d],
+        pt_h: 0.0,
+        proceed: false,
+        accepted: false,
+        x_try: vec![0.0; d],
+    };
+    let clients = (0..env.n)
+        .map(|_| DingoClient {
+            lambda: env.cfg.lambda,
+            theta: 1e-4,
+            phi: 1e-6,
+            x: vec![0.0; d],
+            g: vec![0.0; d],
+            eig: None,
+            pinv_g: vec![0.0; d],
+        })
+        .collect();
+    (server, clients)
 }
 
-impl Method for Dingo {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let _ = rng;
-        let mut tally = CommTally::default();
+impl ServerState for DingoServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        _rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        let d = env.d;
+        Ok(match exchange {
+            // Phase 1a: ask for gradients at the current model (the model
+            // point rides uncharged — see the module notes).
+            0 => {
+                self.proceed = false;
+                self.accepted = false;
+                let mut down = Packet::empty();
+                down.push_vector("x", self.x.clone(), BitCost::zero());
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+            // Phase 1b: broadcast g (d floats), flagging whether the round
+            // continues (a numerically-zero gradient ends it here, after
+            // the charge — matching the reference accounting).
+            1 => {
+                let mut down = Packet::empty();
+                down.push_vector("g", self.g.clone(), BitCost::floats(d));
+                down.push_flags("proceed", vec![self.proceed], BitCost::zero());
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+            // Phase 2→3: broadcast h = avg H_i g (d floats).
+            2 => {
+                if !self.proceed {
+                    return Ok(None);
+                }
+                let mut down = Packet::empty();
+                down.push_vector("h_g", self.h_g.clone(), BitCost::floats(d));
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+            // Phase 4: line-search trials, one gradient round trip each.
+            e => {
+                if !self.proceed || self.accepted {
+                    return Ok(None);
+                }
+                let t = e - 3;
+                if t > 10 {
+                    // Smallest step as a fallback (DINGO's theory guarantees
+                    // acceptance; numerically we take the most conservative
+                    // trial).
+                    crate::linalg::axpy(0.5_f64.powi(10), &self.p, &mut self.x);
+                    return Ok(None);
+                }
+                let alpha = 0.5_f64.powi(t as i32);
+                self.x_try = self.x.clone();
+                crate::linalg::axpy(alpha, &self.p, &mut self.x_try);
+                let mut down = Packet::empty();
+                down.push_vector("x_try", self.x_try.clone(), BitCost::floats(d));
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+        })
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
         let n = env.n as f64;
         let d = env.d;
-        let fb = env.cfg.float_bits;
-
-        // 1. Gradient round.
-        let g = Self::grad(env, &self.x);
-        for _ in 0..env.n {
-            tally.up(BitCost::floats(d), fb); // ∇f_i up
-            tally.down(BitCost::floats(d), fb); // g broadcast
-        }
-        let g_norm_sq = crate::linalg::norm2_sq(&g);
-        if g_norm_sq < 1e-300 {
-            return Ok(tally.into_step());
-        }
-
-        // 2. Per-client spectral quantities via eigendecomposition of the
-        //    regularized local Hessian (exact pseudo-inverse algebra).
-        let mut h_g = vec![0.0; d]; // (1/n) Σ H_i g
-        let mut eigs = Vec::with_capacity(env.n);
-        for i in 0..env.n {
-            let hi = env.hess_reg(i, &self.x);
-            let e = sym_eigen(&hi);
-            let hg = hi.matvec(&g);
-            crate::linalg::axpy(1.0 / n, &hg, &mut h_g);
-            tally.up(BitCost::floats(2 * d), fb); // H_i g and H̃^†g̃ up
-            eigs.push(e);
-        }
-        for _ in 0..env.n {
-            tally.down(BitCost::floats(d), fb); // h broadcast
-        }
-
-        // Per-client candidate directions with the case analysis.
-        let mut p = vec![0.0; d];
-        for e in &eigs {
-            // In the eigenbasis of H_i: H̃^†g̃ = λ/(λ²+φ²) ⊙ ĝ,
-            // (H̃ᵀH̃)^{-1}v = 1/(λ²+φ²) ⊙ v̂.
-            let vt_g = e.vectors.matvec_t(&g);
-            let vt_h = e.vectors.matvec_t(&h_g);
-            let mut pinv_g = vec![0.0; d];
-            let mut inv_h = vec![0.0; d];
-            for k in 0..d {
-                let lam = e.values[k];
-                let denom = lam * lam + self.phi * self.phi;
-                pinv_g[k] = lam / denom * vt_g[k];
-                inv_h[k] = 1.0 / denom * vt_h[k];
+        match exchange {
+            0 => {
+                let mut g = vec![0.0; d];
+                for (_, up) in replies {
+                    crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut g);
+                }
+                crate::linalg::axpy(env.cfg.lambda, &self.x, &mut g);
+                self.g_norm_sq = crate::linalg::norm2_sq(&g);
+                self.g = g;
+                self.proceed = self.g_norm_sq >= 1e-300;
             }
-            let pinv_g = e.vectors.matvec(&pinv_g);
-            let inv_h = e.vectors.matvec(&inv_h);
-
-            let align = crate::linalg::dot(&pinv_g, &h_g);
-            let mut pi: Vector;
-            if align >= self.theta * g_norm_sq {
-                // Case 1/2: the plain pseudo-inverse direction works.
-                pi = crate::linalg::scale(-1.0, &pinv_g);
-            } else {
-                // Case 3: Lagrangian correction. λ_i > 0 restores
-                // ⟨−p_i, h⟩ = θ‖g‖² exactly.
-                let denom = crate::linalg::dot(&inv_h, &h_g).max(1e-300);
-                let lam_i = (self.theta * g_norm_sq - align) / denom;
-                pi = crate::linalg::scale(-1.0, &pinv_g);
-                crate::linalg::axpy(-lam_i, &inv_h, &mut pi);
+            1 => {
+                if !self.proceed {
+                    return Ok(());
+                }
+                let mut h_g = vec![0.0; d];
+                for (_, up) in replies {
+                    crate::linalg::axpy(1.0 / n, up.vector("hess_g")?, &mut h_g);
+                }
+                self.h_g = h_g;
             }
-            crate::linalg::axpy(1.0 / n, &pi, &mut p);
-        }
-        // Direction uplink already charged (2d); correction term reuse.
-
-        // 3. Backtracking line search on ‖∇f‖².
-        let pt_h = crate::linalg::dot(&p, &h_g);
-        let mut accepted = false;
-        for t in 0..=10 {
-            let alpha = 0.5_f64.powi(t);
-            let mut x_try = self.x.clone();
-            crate::linalg::axpy(alpha, &p, &mut x_try);
-            let g_try = Self::grad(env, &x_try);
-            // One gradient round trip per trial.
-            for _ in 0..env.n {
-                tally.up(BitCost::floats(d), fb);
-                tally.down(BitCost::floats(d), fb);
+            2 => {
+                let mut p = vec![0.0; d];
+                for (_, up) in replies {
+                    crate::linalg::axpy(1.0 / n, up.vector("direction")?, &mut p);
+                }
+                self.pt_h = crate::linalg::dot(&p, &self.h_g);
+                self.p = p;
             }
-            if crate::linalg::norm2_sq(&g_try) <= g_norm_sq + 2.0 * alpha * self.rho * pt_h {
-                self.x = x_try;
-                accepted = true;
-                break;
+            _ => {
+                let mut g_try = vec![0.0; d];
+                for (_, up) in replies {
+                    crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut g_try);
+                }
+                crate::linalg::axpy(env.cfg.lambda, &self.x_try, &mut g_try);
+                let t = exchange - 3;
+                let alpha = 0.5_f64.powi(t as i32);
+                if crate::linalg::norm2_sq(&g_try)
+                    <= self.g_norm_sq + 2.0 * alpha * self.rho * self.pt_h
+                {
+                    self.x = self.x_try.clone();
+                    self.accepted = true;
+                }
             }
         }
-        if !accepted {
-            // Smallest step as a fallback (DINGO's theory guarantees
-            // acceptance; numerically we take the most conservative trial).
-            crate::linalg::axpy(0.5_f64.powi(10), &p, &mut self.x);
-        }
-
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -156,9 +217,91 @@ impl Method for Dingo {
     }
 }
 
+impl ClientStep for DingoClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        _rng: &mut Rng,
+    ) -> Result<Uplink> {
+        let mut up = Packet::empty();
+        match exchange {
+            0 => {
+                self.x = down.vector("x")?.to_vec();
+                self.eig = None;
+                let gi = local.grad(&self.x);
+                let d = gi.len();
+                up.push_vector("grad", gi, BitCost::floats(d));
+            }
+            1 => {
+                self.g = down.vector("g")?.to_vec();
+                if !down.flags("proceed")?[0] {
+                    return Ok(up);
+                }
+                // Regularized local Hessian (DINGO folds λ in locally).
+                let mut hi = local.hess(&self.x);
+                hi.add_diag(self.lambda);
+                let d = self.x.len();
+                let hg = hi.matvec(&self.g);
+                let e = sym_eigen(&hi);
+                // In the eigenbasis of H_i: H̃^†g̃ = λ/(λ²+φ²) ⊙ ĝ.
+                let vt_g = e.vectors.matvec_t(&self.g);
+                let mut pinv_g = vec![0.0; d];
+                for k in 0..d {
+                    let lam = e.values[k];
+                    let denom = lam * lam + self.phi * self.phi;
+                    pinv_g[k] = lam / denom * vt_g[k];
+                }
+                self.pinv_g = e.vectors.matvec(&pinv_g);
+                self.eig = Some(e);
+                // H_i g and H̃^†g̃ up: 2d floats.
+                up.push_vector("hess_g", hg, BitCost::floats(2 * d));
+            }
+            2 => {
+                let h_g = down.vector("h_g")?;
+                let e = self.eig.as_ref().expect("phase-2 eigens cached");
+                let d = self.x.len();
+                // (H̃ᵀH̃)^{-1}h = V 1/(λ²+φ²) Vᵀ h.
+                let vt_h = e.vectors.matvec_t(h_g);
+                let mut inv_h = vec![0.0; d];
+                for k in 0..d {
+                    let lam = e.values[k];
+                    inv_h[k] = 1.0 / (lam * lam + self.phi * self.phi) * vt_h[k];
+                }
+                let inv_h = e.vectors.matvec(&inv_h);
+
+                let g_norm_sq = crate::linalg::norm2_sq(&self.g);
+                let align = crate::linalg::dot(&self.pinv_g, h_g);
+                let mut pi: Vector;
+                if align >= self.theta * g_norm_sq {
+                    // Case 1/2: the plain pseudo-inverse direction works.
+                    pi = crate::linalg::scale(-1.0, &self.pinv_g);
+                } else {
+                    // Case 3: Lagrangian correction. λ_i > 0 restores
+                    // ⟨−p_i, h⟩ = θ‖g‖² exactly.
+                    let denom = crate::linalg::dot(&inv_h, h_g).max(1e-300);
+                    let lam_i = (self.theta * g_norm_sq - align) / denom;
+                    pi = crate::linalg::scale(-1.0, &self.pinv_g);
+                    crate::linalg::axpy(-lam_i, &inv_h, &mut pi);
+                }
+                // Already covered by the 2d-float phase-2 charge.
+                up.push_vector("direction", pi, BitCost::zero());
+            }
+            _ => {
+                let x_try = down.vector("x_try")?;
+                let gi = local.grad(x_try);
+                let d = gi.len();
+                up.push_vector("grad", gi, BitCost::floats(d));
+            }
+        }
+        Ok(up)
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    
     use crate::config::{Algorithm, RunConfig};
     use crate::coordinator::run_federated;
     use crate::data::{FederatedDataset, SyntheticSpec};

@@ -1,16 +1,18 @@
 //! Second-order federated methods: the paper's BL1/BL2/BL3, their FedNL
-//! specializations, and the NL1 / DINGO / Newton baselines.
+//! specializations, and the NL1 / DINGO / Newton baselines — each as a
+//! `ServerState` + `ClientStep` pair built by the module's `split`
+//! constructor.
 
-mod bl1;
-mod bl2;
-mod bl3;
-mod dingo;
-mod newton;
-mod nl1;
+pub mod bl1;
+pub mod bl2;
+pub mod bl3;
+pub mod dingo;
+pub mod newton;
+pub mod nl1;
 
-pub use bl1::Bl1;
-pub use bl2::Bl2;
-pub use bl3::Bl3;
-pub use dingo::Dingo;
-pub use newton::NewtonMethod;
-pub use nl1::Nl1;
+pub use bl1::{Bl1Client, Bl1Server};
+pub use bl2::{Bl2Client, Bl2Server};
+pub use bl3::{Bl3Client, Bl3Server};
+pub use dingo::{DingoClient, DingoServer};
+pub use newton::{NewtonClient, NewtonServer};
+pub use nl1::{Nl1Client, Nl1Server};

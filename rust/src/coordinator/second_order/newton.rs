@@ -12,77 +12,105 @@
 //! The server reconstructs exact Hessians (the bases are lossless on GLM
 //! data-Hessians), so iterates are identical across bases — only the wire
 //! cost differs, which is precisely the point of Figure 2.
+//!
+//! Round protocol: exchange 0 polls every client for its gradient/Hessian
+//! coefficients at the current model; exchange 1 broadcasts the solved
+//! model (`d` floats) back.
 
 use crate::basis::HessianBasis;
 use crate::compressors::BitCost;
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
 
-/// Distributed exact Newton.
-pub struct NewtonMethod {
+/// Wire cost of one client's Hessian in its basis (floats).
+fn hess_floats(basis: &dyn HessianBasis) -> usize {
+    let (r, c) = basis.coeff_shape();
+    if basis.name() == "symtri" {
+        // Lower-triangular packing.
+        r * (r + 1) / 2
+    } else {
+        r * c
+    }
+}
+
+/// Newton server: decodes coefficients, solves, broadcasts the model.
+pub struct NewtonServer {
     x: Vector,
-    bases: Vec<Box<dyn HessianBasis>>,
+    /// Server-side basis copies (decode side of the basis transfer).
+    pub(crate) bases: Vec<Box<dyn HessianBasis>>,
 }
 
-impl NewtonMethod {
-    pub fn new(env: &Env) -> Self {
-        let bases = (0..env.n).map(|i| env.build_basis(i)).collect();
-        NewtonMethod { x: vec![0.0; env.d], bases }
+/// Newton client: encodes exact local gradient/Hessian at its model mirror.
+pub struct NewtonClient {
+    basis: Box<dyn HessianBasis>,
+    /// Model mirror `x^k` (kept in sync by the exchange-1 broadcast).
+    x: Vector,
+}
+
+/// Build the server/client split for classical Newton.
+pub fn split(env: &Env) -> (NewtonServer, Vec<NewtonClient>) {
+    let server_bases: Vec<Box<dyn HessianBasis>> = (0..env.n).map(|i| env.build_basis(i)).collect();
+    let clients = (0..env.n)
+        .map(|i| NewtonClient { basis: env.build_basis(i), x: vec![0.0; env.d] })
+        .collect();
+    (NewtonServer { x: vec![0.0; env.d], bases: server_bases }, clients)
+}
+
+impl ServerState for NewtonServer {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        _rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        Ok(match exchange {
+            // Poll every client for coefficients at the current model.
+            0 => Some(RoundPlan::broadcast(env.n, Packet::empty())),
+            // Broadcast the solved model.
+            1 => {
+                let mut down = Packet::empty();
+                down.push_vector("model", self.x.clone(), BitCost::floats(env.d));
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+            _ => None,
+        })
     }
 
-    /// Wire cost of one client's Hessian in its basis (floats).
-    fn hess_floats(basis: &dyn HessianBasis) -> usize {
-        let (r, c) = basis.coeff_shape();
-        if basis.name() == "symtri" {
-            // Lower-triangular packing.
-            r * (r + 1) / 2
-        } else {
-            r * c
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        if exchange != 0 {
+            return Ok(());
         }
-    }
-}
-
-impl Method for NewtonMethod {
-    fn step(&mut self, env: &Env, _round: usize, _rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
         let n = env.n as f64;
         let d = env.d;
-
-        // Clients send exact gradient + Hessian coefficients.
         let mut g = vec![0.0; d];
         let mut h = Mat::zeros(d, d);
-        for i in 0..env.n {
-            let basis = &self.bases[i];
-            let gi = env.locals[i].grad(&self.x);
-            let hi = env.locals[i].hess(&self.x);
-            // Encode → wire → decode (asserting losslessness is covered by
-            // basis tests; here we just run the actual path).
-            let gc = basis.encode_grad(&gi);
-            let hc = basis.encode(&hi);
-            tally.up(
-                BitCost::floats(gc.len()) + BitCost::floats(Self::hess_floats(basis.as_ref())),
-                env.cfg.float_bits,
-            );
-            let gi_dec = basis.decode_grad(&gc);
-            let hi_dec = basis.decode(&hc);
-            crate::linalg::axpy(1.0 / n, &gi_dec, &mut g);
-            h.add_scaled(1.0 / n, &hi_dec);
+        for (i, up) in replies {
+            let basis = &self.bases[*i];
+            let gc = up.vector("grad_coeff")?;
+            let hc = up.matrix("hess_coeff")?;
+            crate::linalg::axpy(1.0 / n, &basis.decode_grad(gc), &mut g);
+            h.add_scaled(1.0 / n, &basis.decode(hc));
         }
         // Ridge term (server-side, eq. 16).
         crate::linalg::axpy(env.cfg.lambda, &self.x, &mut g);
         h.add_diag(env.cfg.lambda);
-
         let step = cholesky_solve(&h, &g).or_else(|_| lu_solve(&h, &g))?;
         for (xi, si) in self.x.iter_mut().zip(&step) {
             *xi -= si;
         }
-        // Model broadcast.
-        for _ in 0..env.n {
-            tally.down(BitCost::floats(d), env.cfg.float_bits);
-        }
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -107,6 +135,34 @@ impl Method for NewtonMethod {
 
     fn label(&self) -> String {
         format!("newton[{}]", self.bases.first().map(|b| b.name()).unwrap_or_default())
+    }
+}
+
+impl ClientStep for NewtonClient {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        _rng: &mut Rng,
+    ) -> Result<Uplink> {
+        if exchange == 1 {
+            self.x = down.vector("model")?.to_vec();
+            return Ok(Packet::empty());
+        }
+        let gi = local.grad(&self.x);
+        let hi = local.hess(&self.x);
+        // Encode → wire → decode (asserting losslessness is covered by
+        // basis tests; here we just run the actual path).
+        let gc = self.basis.encode_grad(&gi);
+        let hc = self.basis.encode(&hi);
+        let mut up = Packet::empty();
+        let gcost = BitCost::floats(gc.len());
+        up.push_vector("grad_coeff", gc, gcost);
+        let hcost = BitCost::floats(hess_floats(self.basis.as_ref()));
+        up.push_matrix("hess_coeff", hc, hcost);
+        Ok(up)
     }
 }
 

@@ -13,67 +13,51 @@
 //! Positive definiteness follows NL1's projection choice: the server clamps
 //! the learned coefficients at 0 when assembling (logistic `φ″ ≥ 0`), so the
 //! assembled matrix is always PSD and `+λI` makes it PD.
+//!
+//! Round protocol: exchange 0 polls every client — the uplink carries the
+//! full local gradient (`d` floats, NL1 is not lazy) and the compressed
+//! coefficient difference; exchange 1 broadcasts the solved model.
 
 use crate::compressors::{BitCost, CompressorClass, VecCompressor};
-use crate::coordinator::{CommTally, Env, Method, StepInfo};
+use crate::coordinator::{Env, RoundPlan, ServerState};
 use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::problem::LocalProblem;
 use crate::rng::Rng;
+use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::{Context, Result};
 
-struct ClientState {
-    /// Learned per-datapoint coefficients `l_{ij}^k` (length m).
-    coeffs: Vector,
-    comp: Box<dyn VecCompressor>,
-}
-
-/// NL1 state.
-pub struct Nl1 {
+/// NL1 server: revealed data + learned per-datapoint coefficients.
+pub struct Nl1Server {
     x: Vector,
     z: Vector,
-    clients: Vec<ClientState>,
+    /// Learned coefficients per client (server copy, kept in sync with the
+    /// client's by applying the same wire updates).
+    pub(crate) coeffs: Vec<Vector>,
     /// Server-side assembled Hessian estimate `(1/n)Σ H_i` with clamped
     /// coefficients, maintained incrementally.
-    h_agg: Mat,
+    pub(crate) h_agg: Mat,
     alpha: f64,
 }
 
-impl Nl1 {
-    pub fn new(env: &Env) -> Result<Self> {
-        let d = env.d;
-        let n = env.n as f64;
-        let x0 = vec![0.0; d];
-        let mut clients = Vec::with_capacity(env.n);
-        let mut h_agg = Mat::zeros(d, d);
-        let mut alpha = env.cfg.alpha.unwrap_or(0.0);
-        for i in 0..env.n {
-            env.features[i]
-                .as_ref()
-                .context("NL1 requires server access to client features (§2.2)")?;
-            let m = env.locals[i].n_points();
-            anyhow::ensure!(m > 0, "NL1 requires data-based local problems");
-            // Initialize with the exact coefficients at x⁰ — equivalently
-            // H_i⁰ = ∇²f_i(x⁰), matching the other methods' initialization.
-            let coeffs = hess_coeffs(env, i, &x0);
-            h_agg.add_scaled(1.0 / n, &assemble(env, i, &coeffs));
-            let comp = env.cfg.hess_comp_as_vec(m);
-            if env.cfg.alpha.is_none() {
-                alpha = match comp.class_vec(m) {
-                    CompressorClass::Unbiased { omega } => 1.0 / (omega + 1.0),
-                    CompressorClass::Contractive { .. } => 1.0,
-                };
-            }
-            clients.push(ClientState { coeffs, comp });
-        }
-        Ok(Nl1 { x: x0.clone(), z: x0, clients, h_agg, alpha })
-    }
+/// NL1 client: its own data (for the φ″ targets) and coefficient copy.
+pub struct Nl1Client {
+    /// This client's feature matrix (its own data — no revelation here;
+    /// the *server's* copy is what Table 1 charges).
+    features: Mat,
+    /// Learned per-datapoint coefficients `l_{ij}^k` (length m).
+    coeffs: Vector,
+    comp: Box<dyn VecCompressor>,
+    /// Model mirror `z^k`.
+    z: Vector,
+    alpha: f64,
 }
 
-/// The Hessian's per-datapoint weights `φ″(a_jᵀx)/1` — for logistic
+/// The Hessian's per-datapoint weights `φ″(a_jᵀx)` — for logistic
 /// regression `σ(z)σ(−z)`, *without* the 1/m factor (NL1's convention keeps
 /// 1/m in the assembly).
-fn hess_coeffs(env: &Env, i: usize, x: &[f64]) -> Vector {
-    let a = env.features[i].as_ref().expect("validated in new()");
-    a.matvec(x)
+fn hess_coeffs(features: &Mat, x: &[f64]) -> Vector {
+    features
+        .matvec(x)
         .into_iter()
         .map(|z| {
             let s = crate::problem::sigmoid(z);
@@ -83,26 +67,91 @@ fn hess_coeffs(env: &Env, i: usize, x: &[f64]) -> Vector {
 }
 
 /// Assemble `(1/m) Σ_j max(l_j, 0) a_j a_jᵀ` from coefficients.
-fn assemble(env: &Env, i: usize, coeffs: &[f64]) -> Mat {
-    let a = env.features[i].as_ref().expect("validated in new()");
-    let m = a.rows() as f64;
+pub(crate) fn assemble(features: &Mat, coeffs: &[f64]) -> Mat {
+    let m = features.rows() as f64;
     let w: Vector = coeffs.iter().map(|&c| c.max(0.0) / m).collect();
-    a.gram_scaled(&w)
+    features.gram_scaled(&w)
 }
 
-impl Method for Nl1 {
-    fn step(&mut self, env: &Env, _round: usize, rng: &mut Rng) -> Result<StepInfo> {
-        let mut tally = CommTally::default();
+/// Build the NL1 split.
+pub fn split(env: &Env) -> Result<(Nl1Server, Vec<Nl1Client>)> {
+    let d = env.d;
+    let n = env.n as f64;
+    let x0 = vec![0.0; d];
+    let mut clients = Vec::with_capacity(env.n);
+    let mut coeffs_srv = Vec::with_capacity(env.n);
+    let mut h_agg = Mat::zeros(d, d);
+    let mut alpha = env.cfg.alpha.unwrap_or(0.0);
+    for i in 0..env.n {
+        let features = env.features[i]
+            .as_ref()
+            .context("NL1 requires server access to client features (§2.2)")?
+            .clone();
+        let m = env.locals[i].n_points();
+        anyhow::ensure!(m > 0, "NL1 requires data-based local problems");
+        // Initialize with the exact coefficients at x⁰ — equivalently
+        // H_i⁰ = ∇²f_i(x⁰), matching the other methods' initialization.
+        let coeffs = hess_coeffs(&features, &x0);
+        h_agg.add_scaled(1.0 / n, &assemble(&features, &coeffs));
+        let comp = env.cfg.hess_comp_as_vec(m);
+        if env.cfg.alpha.is_none() {
+            alpha = match comp.class_vec(m) {
+                CompressorClass::Unbiased { omega } => 1.0 / (omega + 1.0),
+                CompressorClass::Contractive { .. } => 1.0,
+            };
+        }
+        coeffs_srv.push(coeffs.clone());
+        clients.push(Nl1Client { features, coeffs, comp, z: x0.clone(), alpha });
+    }
+    // All clients share α (probed per client exactly as the pre-transport
+    // implementation did — the last client's class wins on heterogeneous m).
+    for c in clients.iter_mut() {
+        c.alpha = alpha;
+    }
+    let server = Nl1Server { x: x0.clone(), z: x0, coeffs: coeffs_srv, h_agg, alpha };
+    Ok((server, clients))
+}
+
+impl ServerState for Nl1Server {
+    fn plan(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        _rng: &mut Rng,
+    ) -> Result<Option<RoundPlan>> {
+        Ok(match exchange {
+            0 => Some(RoundPlan::broadcast(env.n, Packet::empty())),
+            1 => {
+                // Model broadcast; clients re-anchor z ← x.
+                let mut down = Packet::empty();
+                down.push_vector("model", self.x.clone(), BitCost::floats(env.d));
+                self.z = self.x.clone();
+                Some(RoundPlan::broadcast(env.n, down))
+            }
+            _ => None,
+        })
+    }
+
+    fn absorb(
+        &mut self,
+        env: &Env,
+        _round: usize,
+        exchange: usize,
+        replies: &[(usize, Uplink)],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        if exchange != 0 {
+            return Ok(());
+        }
         let n = env.n as f64;
         let lambda = env.cfg.lambda;
         let d = env.d;
 
         // Gradient phase: full gradients every round (NL1 is not lazy).
         let mut g = vec![0.0; d];
-        for i in 0..env.n {
-            let gi = env.locals[i].grad(&self.z);
-            tally.up(BitCost::floats(d), env.cfg.float_bits);
-            crate::linalg::axpy(1.0 / n, &gi, &mut g);
+        for (_, up) in replies {
+            crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut g);
         }
         crate::linalg::axpy(lambda, &self.z, &mut g);
 
@@ -112,24 +161,21 @@ impl Method for Nl1 {
         let step = cholesky_solve(&h, &g).or_else(|_| lu_solve(&h, &g))?;
         self.x = crate::linalg::sub(&self.z, &step);
 
-        // Coefficient learning: compressed differences of the m-vectors.
-        for i in 0..env.n {
-            let target = hess_coeffs(env, i, &self.z);
-            let diff = crate::linalg::sub(&target, &self.clients[i].coeffs);
-            let (s, cost) = self.clients[i].comp.compress_vec(&diff, rng);
-            tally.up(cost, env.cfg.float_bits);
-            // Incremental server-side assembly: only touched coefficients
-            // change the Gram estimate (K rank-one updates).
-            let a = env.features[i].as_ref().unwrap();
+        // Coefficient learning: apply the compressed differences to the
+        // server's copy, with incremental rank-one Gram updates (only
+        // touched coefficients change the estimate).
+        for (i, up) in replies {
+            let s = up.vector("coeff_delta")?;
+            let a = env.features[*i].as_ref().expect("validated in split()");
             let m = a.rows() as f64;
             for (j, &sj) in s.iter().enumerate() {
                 if sj == 0.0 {
                     continue;
                 }
-                let old = self.clients[i].coeffs[j];
+                let old = self.coeffs[*i][j];
                 let new = old + self.alpha * sj;
                 let dw = (new.max(0.0) - old.max(0.0)) / m;
-                self.clients[i].coeffs[j] = new;
+                self.coeffs[*i][j] = new;
                 if dw != 0.0 {
                     // H += (dw/n) a_j a_jᵀ
                     let row = a.row(j).to_vec();
@@ -138,21 +184,14 @@ impl Method for Nl1 {
                         if f == 0.0 {
                             continue;
                         }
-                        for q in 0..d {
-                            self.h_agg[(p, q)] += f * row[q];
+                        for (q, &rq) in row.iter().enumerate() {
+                            self.h_agg[(p, q)] += f * rq;
                         }
                     }
                 }
             }
         }
-
-        // Model broadcast.
-        for _ in 0..env.n {
-            tally.down(BitCost::floats(d), env.cfg.float_bits);
-        }
-        self.z = self.x.clone();
-
-        Ok(tally.into_step())
+        Ok(())
     }
 
     fn x(&self) -> &[f64] {
@@ -172,6 +211,38 @@ impl Method for Nl1 {
     }
 }
 
+impl ClientStep for Nl1Client {
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        _round: usize,
+        exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink> {
+        if exchange == 1 {
+            self.z = down.vector("model")?.to_vec();
+            return Ok(Packet::empty());
+        }
+        let d = self.z.len();
+        let mut up = Packet::empty();
+        // Raw data gradient; the server adds λz after averaging.
+        let gi = local.grad(&self.z);
+        up.push_vector("grad", gi, BitCost::floats(d));
+        // Compressed coefficient difference; keep the local copy in sync.
+        let target = hess_coeffs(&self.features, &self.z);
+        let diff = crate::linalg::sub(&target, &self.coeffs);
+        let (s, cost) = self.comp.compress_vec(&diff, rng);
+        for (c, &sj) in self.coeffs.iter_mut().zip(&s) {
+            if sj != 0.0 {
+                *c += self.alpha * sj;
+            }
+        }
+        up.push_vector("coeff_delta", s, cost);
+        Ok(up)
+    }
+}
+
 impl crate::config::RunConfig {
     /// NL1 compresses an `m`-vector with the configured Hessian compressor;
     /// Rand-K/Top-K/dithering specs transfer directly.
@@ -185,7 +256,7 @@ mod tests {
     use super::*;
     use crate::compressors::CompressorSpec;
     use crate::config::{Algorithm, RunConfig};
-    use crate::coordinator::run_federated;
+    use crate::coordinator::{run_federated, step_rounds_manual};
     use crate::data::{FederatedDataset, SyntheticSpec};
 
     fn fed(seed: u64) -> FederatedDataset {
@@ -231,7 +302,8 @@ mod tests {
     #[test]
     fn nl1_incremental_assembly_matches_full() {
         // After several compressed rounds, the incrementally-maintained
-        // aggregate must equal assembling from the learned coefficients.
+        // aggregate must equal assembling from the learned coefficients —
+        // and the server's coefficient copies must equal the clients'.
         let f = fed(43);
         let locals = crate::coordinator::native_locals(&f);
         let cfg = RunConfig {
@@ -249,19 +321,24 @@ mod tests {
             smoothness: 1.0,
             features,
         };
-        let mut nl1 = Nl1::new(&env).unwrap();
-        let mut rng = Rng::new(44);
-        for round in 0..10 {
-            nl1.step(&env, round, &mut rng).unwrap();
+        let (mut server, mut clients) = split(&env).unwrap();
+        {
+            let mut refs: Vec<&mut dyn ClientStep> =
+                clients.iter_mut().map(|c| c as &mut dyn ClientStep).collect();
+            step_rounds_manual(&env, &mut server, &mut refs, 10).unwrap();
         }
         let mut full = Mat::zeros(env.d, env.d);
         for i in 0..env.n {
-            full.add_scaled(1.0 / env.n as f64, &assemble(&env, i, &nl1.clients[i].coeffs));
+            assert_eq!(server.coeffs[i], clients[i].coeffs, "client {i} desynced");
+            full.add_scaled(
+                1.0 / env.n as f64,
+                &assemble(env.features[i].as_ref().unwrap(), &server.coeffs[i]),
+            );
         }
         assert!(
-            (&full - &nl1.h_agg).fro_norm() < 1e-9,
+            (&full - &server.h_agg).fro_norm() < 1e-9,
             "incremental drift {}",
-            (&full - &nl1.h_agg).fro_norm()
+            (&full - &server.h_agg).fro_norm()
         );
     }
 }

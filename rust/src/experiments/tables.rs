@@ -12,7 +12,10 @@ use anyhow::{Context, Result};
 /// next to *measured* per-round floats from actual runs on an a1a-shaped
 /// dataset, validating the accounting end to end.
 pub fn table1(seed: u64, jobs: usize) -> Result<()> {
-    let entry = registry().into_iter().find(|e| e.name == "a1a").unwrap();
+    let entry = registry()
+        .into_iter()
+        .find(|e| e.name == "a1a")
+        .context("dataset 'a1a' missing from the Table 2 registry")?;
     let fed = entry.build(seed, false);
     let d = fed.dim();
     let m = fed.clients[0].m();

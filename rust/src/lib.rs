@@ -14,8 +14,11 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the federated coordinator: per-algorithm server and
-//!   client state machines, compressed message passing with exact bit
-//!   accounting, participation sampling, metrics, experiment harness and CLI.
+//!   client state machines split across an explicit message-passing
+//!   [`transport`] layer (serial `Lockstep` reference backend and a
+//!   concurrent in-round `Threaded` worker pool, bit-identical by contract),
+//!   compressed messages with exact bit accounting, participation sampling,
+//!   metrics, experiment harness and CLI.
 //! * **L2 (python/compile/model.py)** — the local GLM loss/gradient/Hessian as
 //!   a JAX program, AOT-lowered per data shape to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — the Pallas hot-spot kernels (scaled
@@ -68,6 +71,7 @@ pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sweep;
+pub mod transport;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -76,7 +80,7 @@ pub mod prelude {
         BitCost, Compose, Identity, MatCompressor, NaturalCompression, RandDithering, RandK,
         RankR, TopK, VecCompressor,
     };
-    pub use crate::config::{Algorithm, RunConfig};
+    pub use crate::config::{Algorithm, RunConfig, TransportSpec};
     pub use crate::coordinator::{run_federated, RunOutput};
     pub use crate::data::{FederatedDataset, SyntheticSpec};
     pub use crate::linalg::{Mat, Vector};
@@ -84,4 +88,5 @@ pub mod prelude {
     pub use crate::problem::{LocalProblem, LogisticProblem};
     pub use crate::rng::Rng;
     pub use crate::sweep::{run_cells, DatasetRef, SweepCell, SweepSpec};
+    pub use crate::transport::{ClientStep, Lockstep, Threaded, Transport};
 }

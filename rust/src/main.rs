@@ -21,6 +21,9 @@
 //! --tau t1,...             participation levels (`all` or counts)       [all]
 //! --seeds SPEC             `1..5` (inclusive) or `1,2,7`                [1]
 //! --rounds N --lambda X --target-gap X --max-bits X    shared run template
+//! --transport SPEC         lockstep | threaded | threaded:<k>      [lockstep]
+//!                          (threaded:<k> budgets --jobs down by k so the
+//!                          total thread count stays ≈ --jobs)
 //! --jobs N                 worker threads                  [all hardware cores]
 //! --name NAME              sweep name (output dir under runs/)         [sweep]
 //! --out DIR                explicit output directory       [runs/<name>]
@@ -55,6 +58,9 @@
 //! --eta X --alpha X        stepsizes (defaults: compressor-class rules)
 //! --target-gap X           stop at f(x)−f* ≤ X                            [1e-12]
 //! --seed N                 RNG seed                                       [1]
+//! --transport SPEC         lockstep | threaded | threaded:<k>             [lockstep]
+//!                          (in-round client concurrency; results are
+//!                          bit-identical across backends)
 //! --pjrt                   evaluate loss/grad/Hessian via PJRT artifacts
 //!                          (needs a build with `--features pjrt`)
 //! --artifacts DIR          artifact directory for --pjrt                  [artifacts]
@@ -63,7 +69,7 @@
 
 use anyhow::{bail, Context, Result};
 use basis_learn::compressors::CompressorSpec;
-use basis_learn::config::{Algorithm, BasisKind, RunConfig};
+use basis_learn::config::{Algorithm, BasisKind, RunConfig, TransportSpec};
 use basis_learn::coordinator::{run_federated, RunOutput};
 use basis_learn::data::{registry, FederatedDataset, SyntheticSpec};
 use basis_learn::experiments::{run_experiment, runs_dir, EXPERIMENTS};
@@ -190,7 +196,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 const SWEEP_FLAGS: &[&str] = &[
     "algo", "dataset", "hess-comp", "model-comp", "grad-comp", "basis", "p", "tau", "seeds",
     "rounds", "lambda", "target-gap", "max-bits", "jobs", "name", "out", "master-seed",
-    "full-scale", "resume",
+    "full-scale", "resume", "transport",
 ];
 
 /// `repro sweep` — expand the grid axes into cells, execute them across the
@@ -249,13 +255,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             lambda: args.parsed("lambda")?.unwrap_or(1e-3),
             target_gap: args.parsed("target-gap")?.unwrap_or(1e-12),
             max_bits_per_node: Some(args.parsed("max-bits")?.unwrap_or(3e8)),
+            transport: args.parsed("transport")?.unwrap_or_default(),
             ..RunConfig::default()
         },
         master_seed: args.parsed("master-seed")?.unwrap_or(0),
     };
 
     let cells = spec.expand();
-    let jobs: usize = args.parsed("jobs")?.unwrap_or_else(default_jobs);
+    let mut jobs: usize = args.parsed("jobs")?.unwrap_or_else(default_jobs);
+    // A threaded in-run transport multiplies thread counts: budget the
+    // sweep's worker pool so jobs × in-run workers ≈ the requested jobs.
+    if let TransportSpec::Threaded(_) = spec.base.transport {
+        let per_run = spec.base.transport.resolved_workers(usize::MAX);
+        let budgeted = (jobs / per_run.max(1)).max(1);
+        if budgeted != jobs {
+            println!(
+                "transport {}: budgeting sweep workers {jobs} → {budgeted} \
+                 ({per_run} in-run client workers each)",
+                spec.base.transport
+            );
+            jobs = budgeted;
+        }
+    }
     let name = args.flag("name").unwrap_or("sweep");
     let out_dir = args
         .flag("out")
@@ -504,8 +525,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         gamma: args.parsed("gamma")?,
         target_gap: args.parsed("target-gap")?.unwrap_or(1e-12),
         seed: args.parsed("seed")?.unwrap_or(1),
+        transport: args.parsed("transport")?.unwrap_or_default(),
         ..RunConfig::default()
     };
+    if args.has("pjrt") && cfg.transport != TransportSpec::Lockstep {
+        bail!("--pjrt requires --transport lockstep (PJRT oracles are single-threaded)");
+    }
 
     let out = if args.has("pjrt") {
         run_pjrt(args, &fed, &cfg)?

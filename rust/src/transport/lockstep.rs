@@ -1,0 +1,52 @@
+//! The in-process reference backend: clients execute serially on the
+//! calling thread, borrowing the caller's local problems. This is the
+//! semantics baseline — [`super::Threaded`] must match it bit for bit —
+//! and the only backend usable with non-`Send` oracles (PJRT).
+
+use super::{ClientStep, Downlink, Transport, Uplink};
+use crate::problem::LocalProblem;
+use crate::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Serial in-process transport.
+pub struct Lockstep<'a> {
+    locals: &'a [Box<dyn LocalProblem>],
+    clients: Vec<Box<dyn ClientStep>>,
+    rngs: Vec<Rng>,
+}
+
+impl<'a> Lockstep<'a> {
+    /// `clients[i]` talks to `locals[i]` and draws from `rngs[i]`.
+    pub fn new(
+        locals: &'a [Box<dyn LocalProblem>],
+        clients: Vec<Box<dyn ClientStep>>,
+        rngs: Vec<Rng>,
+    ) -> Self {
+        assert_eq!(locals.len(), clients.len(), "locals/clients length mismatch");
+        assert_eq!(rngs.len(), clients.len(), "rngs/clients length mismatch");
+        Lockstep { locals, clients, rngs }
+    }
+}
+
+impl Transport for Lockstep<'_> {
+    fn exchange(
+        &mut self,
+        round: usize,
+        exchange: usize,
+        sends: Vec<(usize, Downlink)>,
+    ) -> Result<Vec<(usize, Uplink)>> {
+        let mut replies = Vec::with_capacity(sends.len());
+        for (i, down) in sends {
+            ensure!(i < self.clients.len(), "no client {i}");
+            let up = self.clients[i].compute(
+                self.locals[i].as_ref(),
+                round,
+                exchange,
+                &down,
+                &mut self.rngs[i],
+            )?;
+            replies.push((i, up));
+        }
+        Ok(replies)
+    }
+}

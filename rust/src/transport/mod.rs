@@ -1,0 +1,323 @@
+//! The message-passing transport layer: what actually crosses the wire.
+//!
+//! # Architecture
+//!
+//! Every federated method is split into a server half
+//! ([`crate::coordinator::ServerState`]) and a per-client half
+//! ([`ClientStep`]). One communication round is a sequence of *exchanges*;
+//! each exchange is
+//!
+//! ```text
+//! server  ── plan ──▶  Downlink per addressed client
+//! client  ─ compute ─▶ Uplink  (runs concurrently under Threaded)
+//! server  ── absorb ─▶ state update, next exchange or end of round
+//! ```
+//!
+//! Most methods use one exchange per round (plus a broadcast-only second
+//! exchange for bidirectionally-compressed methods); DINGO's line search
+//! uses one exchange per gradient round trip. Messages are materialized as
+//! [`Packet`]s of typed [`Msg`]s — compressed vectors/matrices, scalar
+//! ride-alongs, flag bits — each carrying its exact
+//! [`crate::compressors::BitCost`]. The round loop derives the per-round
+//! communication tally by summing the costs of the packets that actually
+//! crossed, so bit accounting can no longer drift from the message flow.
+//!
+//! # Message types
+//!
+//! | payload              | used for                                        |
+//! |----------------------|-------------------------------------------------|
+//! | [`Payload::Vector`]  | gradients, models, compressed model deltas      |
+//! | [`Payload::Matrix`]  | compressed Hessian-coefficient differences      |
+//! | [`Payload::Scalars`] | shift/β/γ ride-alongs                           |
+//! | [`Payload::Flags`]   | ξ bits, sync/refresh control bits               |
+//!
+//! A [`Msg`] has a `kind` tag so the receiving half looks fields up by name
+//! rather than by fragile positional index; a kind that is absent (e.g. the
+//! gradient coefficients on a ξ = 0 round) is simply not pushed.
+//!
+//! # Backend matrix
+//!
+//! | backend              | clients run     | local problems      | use case |
+//! |----------------------|-----------------|---------------------|----------|
+//! | [`Lockstep`]         | serially, in-process | borrowed (any, incl. non-`Send` PJRT oracles) | reference semantics, tests, PJRT |
+//! | [`Threaded`]         | concurrently on a scoped worker pool | rebuilt per worker from a [`ProblemFactory`] | multi-core simulation |
+//!
+//! # Determinism guarantee
+//!
+//! Both backends produce **bit-identical** [`crate::metrics::History`]
+//! traces (enforced for every [`crate::config::Algorithm`] by
+//! `tests/transport_equivalence.rs`):
+//!
+//! * server-side randomness (participation sampling, ξ schedules, model
+//!   broadcast compression) draws from the single run stream
+//!   `Rng::new(cfg.seed)`, exactly as the pre-transport coordinator did and
+//!   in the same order — so configurations whose client-side compressors
+//!   are deterministic (Top-K, Rank-R, identity: every figure/table BL
+//!   configuration) reproduce the pre-refactor trajectories bit for bit;
+//! * client-side randomness (stochastic compressors) draws from per-client
+//!   streams split off the run seed via [`client_rngs`] /
+//!   [`crate::rng::Rng::derive`], owned by the client for the whole run —
+//!   so results cannot depend on scheduling order, only on the client
+//!   index. (This is the one intentional behavior change of the transport
+//!   refactor: configurations with *stochastic client-side* compressors
+//!   draw from split streams instead of the old shared interleaved stream —
+//!   same distribution, different samples.)
+//!
+//! [`Threaded`] routes each client to a fixed worker, collects the round's
+//! uplinks, and sorts them by client index before the server absorbs them,
+//! so the absorb order is identical to [`Lockstep`]'s.
+//!
+//! This layer is the prerequisite for real-socket federation: a future
+//! TCP-loopback backend only needs to serialize [`Packet`]s (every payload
+//! is plain `f64`/`bool` data) and implement [`Transport::exchange`].
+
+mod lockstep;
+mod threaded;
+
+pub use lockstep::Lockstep;
+pub use threaded::Threaded;
+
+use crate::compressors::BitCost;
+use crate::linalg::{Mat, Vector};
+use crate::problem::LocalProblem;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+/// One typed message payload (see the module table).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Dense float vector (gradient, model, compressed model delta, ...).
+    Vector(Vector),
+    /// Coefficient matrix (compressed Hessian difference, ...).
+    Matrix(Mat),
+    /// A few scalar ride-alongs (shift diffs, β, γ, ...).
+    Scalars(Vec<f64>),
+    /// Control bits (ξ, sync/refresh flags, ...).
+    Flags(Vec<bool>),
+}
+
+/// One message: a tagged payload plus its exact wire cost.
+///
+/// `cost` is what the simulated network charges — it is *not* derived from
+/// the payload size, because compressed payloads travel in their decoded
+/// form (e.g. a Top-K difference matrix is dense with zeros but costs
+/// `K` floats + `K` indices), and some framework messages ride along
+/// uncharged under the paper's accounting conventions (`BitCost::zero`).
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub kind: &'static str,
+    pub payload: Payload,
+    pub cost: BitCost,
+}
+
+/// An ordered bundle of messages travelling in one direction of one
+/// exchange. [`Downlink`]/[`Uplink`] name the two directions.
+#[derive(Clone, Debug, Default)]
+pub struct Packet {
+    pub msgs: Vec<Msg>,
+}
+
+/// Server → client packet.
+pub type Downlink = Packet;
+/// Client → server packet.
+pub type Uplink = Packet;
+
+impl Packet {
+    /// An empty packet (a zero-cost "go" trigger).
+    pub fn empty() -> Packet {
+        Packet::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    /// Total wire cost of the packet.
+    pub fn cost(&self) -> BitCost {
+        let mut c = BitCost::zero();
+        for m in &self.msgs {
+            c += m.cost;
+        }
+        c
+    }
+
+    pub fn push_vector(&mut self, kind: &'static str, v: Vector, cost: BitCost) {
+        self.msgs.push(Msg { kind, payload: Payload::Vector(v), cost });
+    }
+
+    pub fn push_matrix(&mut self, kind: &'static str, m: Mat, cost: BitCost) {
+        self.msgs.push(Msg { kind, payload: Payload::Matrix(m), cost });
+    }
+
+    pub fn push_scalars(&mut self, kind: &'static str, s: Vec<f64>, cost: BitCost) {
+        self.msgs.push(Msg { kind, payload: Payload::Scalars(s), cost });
+    }
+
+    pub fn push_flags(&mut self, kind: &'static str, f: Vec<bool>, cost: BitCost) {
+        self.msgs.push(Msg { kind, payload: Payload::Flags(f), cost });
+    }
+
+    fn find(&self, kind: &str) -> Option<&Payload> {
+        self.msgs.iter().find(|m| m.kind == kind).map(|m| &m.payload)
+    }
+
+    /// Whether a message of this kind is present.
+    pub fn has(&self, kind: &str) -> bool {
+        self.find(kind).is_some()
+    }
+
+    /// The vector message tagged `kind` (error if absent or mistyped —
+    /// both halves of a method are written together, so this is a protocol
+    /// bug, not a runtime condition).
+    pub fn vector(&self, kind: &str) -> Result<&[f64]> {
+        match self.find(kind) {
+            Some(Payload::Vector(v)) => Ok(v),
+            Some(_) => bail!("message '{kind}' is not a vector"),
+            None => bail!("missing vector message '{kind}'"),
+        }
+    }
+
+    /// The vector tagged `kind` if present (for ξ-conditional messages).
+    pub fn vector_opt(&self, kind: &str) -> Result<Option<&[f64]>> {
+        match self.find(kind) {
+            Some(Payload::Vector(v)) => Ok(Some(v)),
+            Some(_) => bail!("message '{kind}' is not a vector"),
+            None => Ok(None),
+        }
+    }
+
+    /// The matrix message tagged `kind`.
+    pub fn matrix(&self, kind: &str) -> Result<&Mat> {
+        match self.find(kind) {
+            Some(Payload::Matrix(m)) => Ok(m),
+            Some(_) => bail!("message '{kind}' is not a matrix"),
+            None => bail!("missing matrix message '{kind}'"),
+        }
+    }
+
+    /// The scalar list tagged `kind`.
+    pub fn scalars(&self, kind: &str) -> Result<&[f64]> {
+        match self.find(kind) {
+            Some(Payload::Scalars(s)) => Ok(s),
+            Some(_) => bail!("message '{kind}' is not a scalar list"),
+            None => bail!("missing scalar message '{kind}'"),
+        }
+    }
+
+    /// The flag list tagged `kind`.
+    pub fn flags(&self, kind: &str) -> Result<&[bool]> {
+        match self.find(kind) {
+            Some(Payload::Flags(f)) => Ok(f),
+            Some(_) => bail!("message '{kind}' is not a flag list"),
+            None => bail!("missing flag message '{kind}'"),
+        }
+    }
+}
+
+/// The client half of a federated method: per-exchange local work.
+///
+/// Implementations own all per-client state (model mirrors, learned
+/// coefficients, compressors, scratch). `Send` is required so the
+/// [`Threaded`] backend can move the state onto a worker thread; the local
+/// problem itself is *not* `Send` and is therefore passed in by the
+/// backend each call (borrowed under [`Lockstep`], worker-owned under
+/// [`Threaded`]).
+pub trait ClientStep: Send {
+    /// Handle one exchange: receive `down`, do local work (oracle calls,
+    /// basis projection, compression — the dominant per-round cost), reply.
+    ///
+    /// `rng` is this client's private stream for the whole run; stochastic
+    /// compression must draw from it and nothing else.
+    fn compute(
+        &mut self,
+        local: &dyn LocalProblem,
+        round: usize,
+        exchange: usize,
+        down: &Downlink,
+        rng: &mut Rng,
+    ) -> Result<Uplink>;
+}
+
+/// Builds client `i`'s local problem. The [`Threaded`] backend calls this
+/// once per client *on the owning worker thread*, because
+/// [`LocalProblem`] is deliberately non-`Send` (PJRT handles).
+pub type ProblemFactory<'a> = &'a (dyn Fn(usize) -> Box<dyn LocalProblem> + Sync);
+
+/// A transport backend: executes one exchange of one round.
+pub trait Transport {
+    /// Deliver each `(client, downlink)` pair, run the addressed clients'
+    /// [`ClientStep::compute`], and return `(client, uplink)` replies
+    /// **sorted by client index** (callers send in ascending order; replies
+    /// come back in ascending order regardless of scheduling).
+    fn exchange(
+        &mut self,
+        round: usize,
+        exchange: usize,
+        sends: Vec<(usize, Downlink)>,
+    ) -> Result<Vec<(usize, Uplink)>>;
+}
+
+/// Per-client RNG streams for one run: client `i` owns
+/// `Rng::new(seed).derive(i)` for the run's whole lifetime. A pure
+/// function of `(seed, i)` — independent of backend and scheduling.
+pub fn client_rngs(seed: u64, n: usize) -> Vec<Rng> {
+    let root = Rng::new(seed);
+    (0..n).map(|i| root.derive(i as u64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_cost_sums_messages() {
+        let mut p = Packet::empty();
+        assert!(p.is_empty());
+        assert_eq!(p.cost(), BitCost::zero());
+        p.push_vector("g", vec![1.0, 2.0], BitCost::floats(2));
+        p.push_flags("xi", vec![true], BitCost::bits(1.0));
+        let c = p.cost();
+        assert_eq!(c.floats, 2.0);
+        assert_eq!(c.aux_bits, 1.0);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn packet_lookup_by_kind_and_type() {
+        let mut p = Packet::empty();
+        p.push_vector("v", vec![3.0], BitCost::zero());
+        p.push_matrix("m", Mat::zeros(2, 2), BitCost::zero());
+        p.push_scalars("s", vec![0.5, 0.25], BitCost::zero());
+        p.push_flags("f", vec![false, true], BitCost::zero());
+        assert_eq!(p.vector("v").unwrap(), &[3.0]);
+        assert_eq!(p.matrix("m").unwrap().rows(), 2);
+        assert_eq!(p.scalars("s").unwrap(), &[0.5, 0.25]);
+        assert_eq!(p.flags("f").unwrap(), &[false, true]);
+        assert!(p.has("v") && !p.has("w"));
+        // Absent and mistyped lookups are protocol errors…
+        assert!(p.vector("w").is_err());
+        assert!(p.matrix("v").is_err());
+        assert!(p.scalars("f").is_err());
+        assert!(p.flags("s").is_err());
+        // …except the explicitly optional form.
+        assert!(p.vector_opt("w").unwrap().is_none());
+        assert_eq!(p.vector_opt("v").unwrap().unwrap(), &[3.0]);
+        assert!(p.vector_opt("m").is_err());
+    }
+
+    #[test]
+    fn client_streams_are_reproducible_and_distinct() {
+        let a = client_rngs(7, 4);
+        let b = client_rngs(7, 4);
+        for (x, y) in a.iter().zip(&b) {
+            let (mut x, mut y) = (x.clone(), y.clone());
+            for _ in 0..16 {
+                assert_eq!(x.next_u64(), y.next_u64());
+            }
+        }
+        let mut c0 = a[0].clone();
+        let mut c1 = a[1].clone();
+        let same = (0..64).filter(|_| c0.next_u64() == c1.next_u64()).count();
+        assert!(same < 2, "client streams must be independent");
+    }
+}

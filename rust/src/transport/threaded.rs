@@ -1,0 +1,248 @@
+//! The concurrent in-round backend: a scoped worker pool executes each
+//! addressed client's per-exchange work (Hessian evaluation, basis
+//! projection, compression — the dominant cost of a BL/FedNL round) in
+//! parallel.
+//!
+//! Determinism: client `i` is pinned to worker `i % workers` for the whole
+//! run, owns its private RNG stream, and uplinks are sorted by client index
+//! before they are handed back — so the server observes exactly the
+//! [`super::Lockstep`] order no matter how the OS schedules the workers.
+//!
+//! Each worker builds its *own* local problems through the
+//! [`super::ProblemFactory`] on its own thread, because
+//! [`crate::problem::LocalProblem`] is deliberately non-`Send`.
+
+use super::{ClientStep, Downlink, ProblemFactory, Transport, Uplink};
+use crate::problem::LocalProblem;
+use crate::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::thread::Scope;
+
+/// One client pinned to a worker: index, state, private RNG stream.
+type ClientSlot = (usize, Box<dyn ClientStep>, Rng);
+/// A slot plus the worker-built local problem it talks to.
+type WorkerSlot = (usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>);
+
+/// One unit of client work.
+struct Job {
+    round: usize,
+    exchange: usize,
+    client: usize,
+    down: Downlink,
+}
+
+/// Scoped worker-pool transport. Create with [`Threaded::spawn`] inside a
+/// [`std::thread::scope`]; dropping it shuts the workers down (the scope
+/// then joins them).
+pub struct Threaded {
+    /// Per-worker job queues; client `i` is routed to `i % workers`.
+    to_workers: Vec<mpsc::Sender<Job>>,
+    results: mpsc::Receiver<(usize, Result<Uplink>)>,
+    workers: usize,
+}
+
+impl Threaded {
+    /// Spawn `workers` scoped threads, each owning the client states (and
+    /// factory-built local problems) of its residual class.
+    pub fn spawn<'scope, 'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        clients: Vec<Box<dyn ClientStep>>,
+        rngs: Vec<Rng>,
+        factory: ProblemFactory<'env>,
+    ) -> Threaded {
+        assert_eq!(clients.len(), rngs.len(), "rngs/clients length mismatch");
+        let workers = workers.clamp(1, clients.len().max(1));
+        let mut parts: Vec<Vec<ClientSlot>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, (c, r)) in clients.into_iter().zip(rngs).enumerate() {
+            parts[i % workers].push((i, c, r));
+        }
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<Uplink>)>();
+        let mut to_workers = Vec::with_capacity(workers);
+        for part in parts {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            to_workers.push(job_tx);
+            let res_tx = res_tx.clone();
+            scope.spawn(move || worker_loop(part, job_rx, res_tx, factory));
+        }
+        Threaded { to_workers, results: res_rx, workers }
+    }
+}
+
+fn worker_loop(
+    part: Vec<ClientSlot>,
+    jobs: mpsc::Receiver<Job>,
+    results: mpsc::Sender<(usize, Result<Uplink>)>,
+    factory: ProblemFactory<'_>,
+) {
+    // Local problems are built here, on the owning thread, and never leave.
+    let mut table: Vec<WorkerSlot> = part
+        .into_iter()
+        .map(|(i, c, r)| {
+            let local = factory(i);
+            (i, c, r, local)
+        })
+        .collect();
+    while let Ok(job) = jobs.recv() {
+        let reply = match table.iter_mut().find(|(i, ..)| *i == job.client) {
+            None => Err(anyhow!("client {} is not owned by this worker", job.client)),
+            Some((_, step, rng, local)) => {
+                // A panicking client must still produce a reply, or the
+                // main thread would wait forever for this exchange.
+                match catch_unwind(AssertUnwindSafe(|| {
+                    step.compute(local.as_ref(), job.round, job.exchange, &job.down, rng)
+                })) {
+                    Ok(res) => res,
+                    Err(payload) => Err(anyhow!(
+                        "client {} panicked: {}",
+                        job.client,
+                        panic_message(payload)
+                    )),
+                }
+            }
+        };
+        if results.send((job.client, reply)).is_err() {
+            break; // transport dropped — shut down
+        }
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string payload>".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::BitCost;
+    use crate::problem::QuadraticProblem;
+    use crate::transport::{client_rngs, Packet};
+
+    /// Echo client: replies with its id and the downlink's scalar doubled.
+    /// `boom` panics on round ≥ 1 — driving the worker's catch_unwind path.
+    struct Echo {
+        id: usize,
+        boom: bool,
+    }
+
+    impl ClientStep for Echo {
+        fn compute(
+            &mut self,
+            _local: &dyn LocalProblem,
+            round: usize,
+            _exchange: usize,
+            down: &Downlink,
+            _rng: &mut Rng,
+        ) -> Result<Uplink> {
+            if self.boom && round >= 1 {
+                panic!("client {} exploded", self.id);
+            }
+            let x = down.scalars("x")?[0];
+            let mut up = Packet::empty();
+            up.push_scalars("echo", vec![self.id as f64, 2.0 * x], BitCost::floats(2));
+            Ok(up)
+        }
+    }
+
+    fn factory() -> impl Fn(usize) -> Box<dyn LocalProblem> + Sync {
+        |_i| {
+            Box::new(QuadraticProblem::new(crate::linalg::Mat::diag(&[1.0]), vec![0.0]))
+                as Box<dyn LocalProblem>
+        }
+    }
+
+    fn sends(n: usize, x: f64) -> Vec<(usize, Downlink)> {
+        (0..n)
+            .map(|i| {
+                let mut d = Packet::empty();
+                d.push_scalars("x", vec![x + i as f64], BitCost::zero());
+                (i, d)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn replies_come_back_in_client_order() {
+        let n = 7;
+        let clients: Vec<Box<dyn ClientStep>> =
+            (0..n).map(|id| Box::new(Echo { id, boom: false }) as Box<dyn ClientStep>).collect();
+        let f = factory();
+        std::thread::scope(|scope| {
+            let mut t = Threaded::spawn(scope, 3, clients, client_rngs(1, n), &f);
+            for round in 0..4 {
+                let replies = t.exchange(round, 0, sends(n, 10.0 * round as f64)).unwrap();
+                assert_eq!(replies.len(), n);
+                for (expect, (i, up)) in replies.iter().enumerate() {
+                    // Sorted ascending regardless of worker scheduling, and
+                    // each reply really came from the addressed client.
+                    assert_eq!(*i, expect);
+                    let echo = up.scalars("echo").unwrap();
+                    assert_eq!(echo[0] as usize, expect);
+                    assert_eq!(echo[1], 2.0 * (10.0 * round as f64 + expect as f64));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn panicking_client_yields_error_not_deadlock() {
+        // The worker must reply even when compute panics, or the exchange
+        // would wait forever; the error surfaces cleanly on the main thread.
+        let n = 4;
+        let clients: Vec<Box<dyn ClientStep>> = (0..n)
+            .map(|id| Box::new(Echo { id, boom: id == 2 }) as Box<dyn ClientStep>)
+            .collect();
+        let f = factory();
+        std::thread::scope(|scope| {
+            let mut t = Threaded::spawn(scope, 2, clients, client_rngs(1, n), &f);
+            // Round 0 is fine…
+            assert_eq!(t.exchange(0, 0, sends(n, 0.0)).unwrap().len(), n);
+            // …round 1 panics in client 2's worker: clean Err, no hang, and
+            // the message names the culprit.
+            let err = t.exchange(1, 0, sends(n, 0.0)).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("client 2") && msg.contains("exploded"), "{msg}");
+        });
+    }
+}
+
+impl Transport for Threaded {
+    fn exchange(
+        &mut self,
+        round: usize,
+        exchange: usize,
+        sends: Vec<(usize, Downlink)>,
+    ) -> Result<Vec<(usize, Uplink)>> {
+        let expected = sends.len();
+        for (client, down) in sends {
+            let w = client % self.workers;
+            self.to_workers[w]
+                .send(Job { round, exchange, client, down })
+                .map_err(|_| anyhow!("transport worker {w} shut down"))?;
+        }
+        let mut replies: Vec<(usize, Result<Uplink>)> = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            let r = self
+                .results
+                .recv()
+                .map_err(|_| anyhow!("transport workers disconnected mid-exchange"))?;
+            replies.push(r);
+        }
+        // Restore the deterministic (lockstep) order before the server
+        // absorbs; errors surface lowest-client-first for determinism too.
+        replies.sort_by_key(|(i, _)| *i);
+        let mut out = Vec::with_capacity(expected);
+        for (i, r) in replies {
+            out.push((i, r.with_context(|| format!("client {i}, round {round}"))?));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,201 @@
+//! The transport layer's determinism contract: for **every** `Algorithm`
+//! variant, a federated run must produce a byte-identical `History`
+//! (rounds, bits up/down, gaps, distances) under the `Lockstep` and
+//! `Threaded` backends, at any worker count — client randomness comes from
+//! per-client streams and absorb order is pinned, so scheduling cannot
+//! leak into results.
+//!
+//! Configurations deliberately exercise the stochastic paths (Rand-K /
+//! dithering client compressors, partial participation, lazy-gradient ξ
+//! schedules, bidirectional compression) — the cases where a scheduling
+//! leak would actually show up.
+
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, RunConfig, TransportSpec};
+use basis_learn::coordinator::{run_federated, RunOutput};
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+
+fn fed(seed: u64) -> FederatedDataset {
+    FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 5,
+        m_per_client: 25,
+        dim: 10,
+        intrinsic_dim: 4,
+        noise: 0.0,
+        seed,
+    })
+}
+
+/// A config per algorithm that exercises its interesting wire paths
+/// (stochastic compression, PP, ξ < 1, bidirectional) in few rounds.
+fn cfg_for(algo: Algorithm) -> RunConfig {
+    use Algorithm::*;
+    let base = RunConfig {
+        algorithm: algo,
+        lambda: 1e-3,
+        target_gap: 0.0, // run every round — compare full traces
+        seed: 99,
+        ..RunConfig::default()
+    };
+    match algo {
+        Newton => RunConfig { rounds: 8, ..base },
+        Bl1 => RunConfig {
+            rounds: 20,
+            hess_comp: CompressorSpec::TopK(4),
+            model_comp: CompressorSpec::TopK(5),
+            p: 0.5,
+            ..base
+        },
+        Bl2 => RunConfig {
+            rounds: 20,
+            hess_comp: CompressorSpec::RandK(4),
+            tau: Some(3),
+            p: 0.5,
+            ..base
+        },
+        Bl3 => RunConfig {
+            rounds: 20,
+            hess_comp: CompressorSpec::TopK(10),
+            model_comp: CompressorSpec::TopK(5),
+            tau: Some(3),
+            p: 0.5,
+            ..base
+        },
+        FedNl => RunConfig { rounds: 15, hess_comp: CompressorSpec::RankR(1), ..base },
+        FedNlPp => RunConfig {
+            rounds: 20,
+            hess_comp: CompressorSpec::RankR(1),
+            tau: Some(3),
+            ..base
+        },
+        FedNlBc => RunConfig {
+            rounds: 20,
+            hess_comp: CompressorSpec::TopK(50),
+            model_comp: CompressorSpec::TopK(5),
+            ..base
+        },
+        Nl1 => RunConfig { rounds: 15, hess_comp: CompressorSpec::RandK(2), ..base },
+        Dingo => RunConfig { rounds: 4, ..base },
+        Gd => RunConfig { rounds: 30, ..base },
+        Diana => RunConfig {
+            rounds: 50,
+            grad_comp: CompressorSpec::Dithering(Some(4)),
+            ..base
+        },
+        Adiana => RunConfig {
+            rounds: 50,
+            grad_comp: CompressorSpec::Dithering(None),
+            ..base
+        },
+        SLocalGd => RunConfig { rounds: 60, ..base },
+        Artemis => RunConfig {
+            rounds: 50,
+            grad_comp: CompressorSpec::Dithering(None),
+            model_comp: CompressorSpec::TopK(4),
+            tau: Some(3),
+            ..base
+        },
+        Dore => RunConfig {
+            rounds: 50,
+            grad_comp: CompressorSpec::Dithering(None),
+            model_comp: CompressorSpec::Dithering(None),
+            ..base
+        },
+    }
+}
+
+fn assert_identical(algo: Algorithm, a: &RunOutput, b: &RunOutput, what: &str) {
+    assert_eq!(
+        a.history.records.len(),
+        b.history.records.len(),
+        "{algo}: round counts differ under {what}"
+    );
+    // Byte-identical trace: every f64 must match exactly, not approximately.
+    assert_eq!(a.history.records, b.history.records, "{algo}: history differs under {what}");
+    assert_eq!(
+        a.history.setup_bits_per_node, b.history.setup_bits_per_node,
+        "{algo}: setup bits differ under {what}"
+    );
+    assert_eq!(a.history.label, b.history.label, "{algo}: label differs under {what}");
+    assert_eq!(a.x_final, b.x_final, "{algo}: final iterate differs under {what}");
+}
+
+#[test]
+fn every_algorithm_is_backend_invariant() {
+    for &algo in Algorithm::all() {
+        let f = fed(2024);
+        let cfg = cfg_for(algo);
+        let lockstep = run_federated(&f, &cfg).unwrap_or_else(|e| panic!("{algo} lockstep: {e:#}"));
+        assert!(
+            lockstep.final_gap().is_finite(),
+            "{algo}: lockstep run did not produce a finite gap"
+        );
+        for workers in [1usize, 3] {
+            let cfg_t =
+                RunConfig { transport: TransportSpec::Threaded(workers), ..cfg.clone() };
+            let threaded = run_federated(&f, &cfg_t)
+                .unwrap_or_else(|e| panic!("{algo} threaded:{workers}: {e:#}"));
+            assert_identical(algo, &lockstep, &threaded, &format!("threaded:{workers}"));
+        }
+    }
+}
+
+#[test]
+fn worker_count_may_exceed_clients() {
+    // More workers than clients must clamp, not hang or skew routing.
+    let f = fed(7);
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl1,
+        rounds: 10,
+        target_gap: 0.0,
+        ..RunConfig::default()
+    };
+    let a = run_federated(&f, &cfg).unwrap();
+    let cfg_t = RunConfig { transport: TransportSpec::Threaded(64), ..cfg };
+    let b = run_federated(&f, &cfg_t).unwrap();
+    assert_identical(Algorithm::Bl1, &a, &b, "threaded:64");
+}
+
+#[test]
+fn auto_worker_count_matches_lockstep() {
+    // `threaded` (k = 0) resolves to the hardware parallelism — still
+    // bit-identical.
+    let f = fed(8);
+    let cfg = RunConfig {
+        algorithm: Algorithm::Bl2,
+        rounds: 12,
+        tau: Some(2),
+        target_gap: 0.0,
+        ..RunConfig::default()
+    };
+    let a = run_federated(&f, &cfg).unwrap();
+    let cfg_t = RunConfig { transport: TransportSpec::Threaded(0), ..cfg };
+    let b = run_federated(&f, &cfg_t).unwrap();
+    assert_identical(Algorithm::Bl2, &a, &b, "threaded (auto)");
+}
+
+#[test]
+fn broken_config_does_not_hang_under_threaded() {
+    // A configuration that fails at construction (RankR has no vector form,
+    // so build_vec panics in the method split, before the pool spawns) must
+    // not leave the run hanging or silently succeeding under the threaded
+    // backend. The *in-round* failure path — a client panicking on a worker
+    // mid-exchange — is covered by the worker-pool unit tests in
+    // `transport::threaded`.
+    let f = fed(9);
+    let cfg = RunConfig {
+        algorithm: Algorithm::Diana,
+        grad_comp: CompressorSpec::RankR(1), // RankR::build_vec panics
+        rounds: 5,
+        transport: TransportSpec::Threaded(2),
+        ..RunConfig::default()
+    };
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_federated(&f, &cfg)));
+    // Either a clean Err or a propagated panic is acceptable — what is not
+    // acceptable is hanging (the test harness would time out) or silently
+    // succeeding.
+    match res {
+        Ok(out) => assert!(out.is_err(), "bad compressor must not run"),
+        Err(_) => {}
+    }
+}
