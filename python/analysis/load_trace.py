@@ -1,0 +1,251 @@
+"""Loader + validator for obs trace files (standard library only).
+
+The Rust side (``repro run --trace`` / ``repro sweep --trace``) writes one
+JSON object per line; the field-by-field schema is in ``docs/TRACING.md``.
+Three event shapes share the stream:
+
+* ``span`` — a timed phase (``round``, ``plan``, ``exchange``, ``absorb``,
+  ``eval``, ``compute``, ``queue``, ``cell``) with ``ts_us`` + ``dur_us``.
+* ``bits`` — one wire message (``name`` = ``msg``) with ``dir``/``kind``/
+  ``floats``/``aux_bits``/``bits``.
+* ``mark`` — an instant (``run``, ``dataset_cache``) with optional ``note``.
+
+Usage::
+
+    python -m analysis.load_trace trace.jsonl
+    python -m analysis.load_trace trace.jsonl --chrome trace_chrome.json
+
+The second form additionally cross-checks a ``repro trace --chrome`` export
+against the JSONL it was derived from. Exit status is non-zero when
+validation finds problems, so CI can use this as a schema gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from dataclasses import dataclass
+from pathlib import Path
+
+from analysis.loader import PathLike, load_jsonl
+
+EVENT_KINDS = ("span", "bits", "mark")
+
+#: Tolerance for span-nesting comparisons. Timestamps come from a monotonic
+#: clock, so a child span genuinely ends no later than its parent; the eps
+#: only guards against f64 round-off in the microsecond arithmetic.
+NEST_EPS_US = 1e-6
+
+
+@dataclass
+class TraceEvent:
+    """One trace row. Optional fields are ``None`` when absent."""
+
+    ev: str
+    name: str
+    lane: str
+    ts_us: float
+    dur_us: float | None = None
+    cell: int | None = None
+    round: int | None = None
+    exchange: int | None = None
+    client: int | None = None
+    dir: str | None = None
+    kind: str | None = None
+    floats: float | None = None
+    aux_bits: float | None = None
+    bits: float | None = None
+    note: str | None = None
+
+    @classmethod
+    def from_dict(cls, row: dict) -> "TraceEvent":
+        for req in ("ev", "name", "lane", "ts_us"):
+            if req not in row:
+                raise ValueError(f"trace event missing required field {req!r}: {row}")
+
+        def opt_int(key: str) -> int | None:
+            return None if row.get(key) is None else int(row[key])
+
+        def opt_float(key: str) -> float | None:
+            return None if row.get(key) is None else float(row[key])
+
+        return cls(
+            ev=str(row["ev"]),
+            name=str(row["name"]),
+            lane=str(row["lane"]),
+            ts_us=float(row["ts_us"]),
+            dur_us=opt_float("dur_us"),
+            cell=opt_int("cell"),
+            round=opt_int("round"),
+            exchange=opt_int("exchange"),
+            client=opt_int("client"),
+            dir=row.get("dir"),
+            kind=row.get("kind"),
+            floats=opt_float("floats"),
+            aux_bits=opt_float("aux_bits"),
+            bits=opt_float("bits"),
+            note=row.get("note"),
+        )
+
+    @property
+    def end_us(self) -> float:
+        return self.ts_us + (self.dur_us or 0.0)
+
+
+def load_trace(path: PathLike) -> list[TraceEvent]:
+    """Load a trace JSONL file (a torn final line is dropped, as with runs)."""
+    return [TraceEvent.from_dict(r) for r in load_jsonl(path)]
+
+
+def validate(events: list[TraceEvent]) -> list[str]:
+    """Schema + structural checks. Returns a list of problems (empty = OK).
+
+    Beyond per-event field checks, verifies *span nesting*: within each
+    (cell, lane) timeline, spans must form a forest — any two spans are
+    either disjoint or one contains the other. Overlapping-but-not-nested
+    spans mean the instrumentation (or the clock) is broken.
+    """
+    problems: list[str] = []
+    for i, e in enumerate(events):
+        where = f"event {i} ({e.ev} {e.name!r})"
+        if e.ev not in EVENT_KINDS:
+            problems.append(f"{where}: unknown ev {e.ev!r}")
+        if e.ev == "span":
+            if e.dur_us is None:
+                problems.append(f"{where}: span without dur_us")
+            elif e.dur_us < 0.0:
+                problems.append(f"{where}: negative dur_us {e.dur_us}")
+        else:
+            if e.dur_us is not None:
+                problems.append(f"{where}: {e.ev} event carries dur_us")
+        if e.ev == "bits":
+            for req in ("dir", "kind", "bits"):
+                if getattr(e, req) is None:
+                    problems.append(f"{where}: bits event without {req!r}")
+            if e.dir not in (None, "up", "down"):
+                problems.append(f"{where}: bad dir {e.dir!r}")
+    problems.extend(check_span_nesting(events))
+    return problems
+
+
+def check_span_nesting(events: list[TraceEvent]) -> list[str]:
+    """Per-(cell, lane) stack-discipline check over span intervals."""
+    problems: list[str] = []
+    timelines: dict[tuple[int | None, str], list[TraceEvent]] = defaultdict(list)
+    for e in events:
+        if e.ev == "span" and e.dur_us is not None and e.dur_us >= 0.0:
+            timelines[(e.cell, e.lane)].append(e)
+    for (cell, lane), spans in sorted(timelines.items(), key=lambda kv: str(kv[0])):
+        # Widest-first at equal start so a parent precedes the children it
+        # encloses; then simulate a stack of open spans.
+        spans.sort(key=lambda s: (s.ts_us, -(s.dur_us or 0.0)))
+        stack: list[TraceEvent] = []
+        for s in spans:
+            while stack and stack[-1].end_us <= s.ts_us + NEST_EPS_US:
+                stack.pop()
+            if stack and s.end_us > stack[-1].end_us + NEST_EPS_US:
+                top = stack[-1]
+                problems.append(
+                    f"cell={cell} lane={lane}: span {s.name!r} "
+                    f"[{s.ts_us:.1f}, {s.end_us:.1f}]us overlaps but is not "
+                    f"nested in {top.name!r} [{top.ts_us:.1f}, {top.end_us:.1f}]us"
+                )
+            stack.append(s)
+    return problems
+
+
+def phase_totals(events: list[TraceEvent]) -> dict[str, float]:
+    """Total self-reported duration (µs) per span name, largest first."""
+    totals: dict[str, float] = defaultdict(float)
+    for e in events:
+        if e.ev == "span" and e.dur_us is not None:
+            totals[e.name] += e.dur_us
+    return dict(sorted(totals.items(), key=lambda kv: -kv[1]))
+
+
+def bits_by_kind(events: list[TraceEvent]) -> dict[tuple[str, str], tuple[int, float]]:
+    """(direction, message kind) → (message count, total bits)."""
+    out: dict[tuple[str, str], tuple[int, float]] = {}
+    for e in events:
+        if e.ev == "bits" and e.dir is not None and e.kind is not None:
+            n, b = out.get((e.dir, e.kind), (0, 0.0))
+            out[(e.dir, e.kind)] = (n + 1, b + (e.bits or 0.0))
+    return out
+
+
+def round_flows(events: list[TraceEvent]) -> dict[tuple[int | None, int, str], float]:
+    """(cell, round, direction) → total bits on the wire that round."""
+    out: dict[tuple[int | None, int, str], float] = defaultdict(float)
+    for e in events:
+        if e.ev == "bits" and e.round is not None and e.dir is not None:
+            out[(e.cell, e.round, e.dir)] += e.bits or 0.0
+    return dict(out)
+
+
+def load_chrome(path: PathLike) -> list[dict]:
+    """Load a ``repro trace --chrome`` export's ``traceEvents`` array."""
+    doc = json.loads(Path(path).read_text(encoding="utf-8"))
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: no traceEvents array — not a Chrome trace export")
+    return events
+
+
+def cross_check_chrome(events: list[TraceEvent], chrome: list[dict]) -> list[str]:
+    """Verify a Chrome export is a faithful projection of the JSONL trace.
+
+    Every span must appear as one "X" complete event and every bits/mark
+    event as one "i" instant; total span time must agree exactly (both
+    sides carry the same f64 microsecond values).
+    """
+    problems: list[str] = []
+    by_ph: dict[str, int] = defaultdict(int)
+    for c in chrome:
+        by_ph[c.get("ph", "?")] += 1
+    n_spans = sum(1 for e in events if e.ev == "span")
+    n_instants = sum(1 for e in events if e.ev != "span")
+    if by_ph.get("X", 0) != n_spans:
+        problems.append(f"chrome has {by_ph.get('X', 0)} X events, trace has {n_spans} spans")
+    if by_ph.get("i", 0) != n_instants:
+        problems.append(
+            f"chrome has {by_ph.get('i', 0)} instants, trace has {n_instants} bits/mark events"
+        )
+    if by_ph.get("M", 0) == 0:
+        problems.append("chrome export has no thread_name metadata events")
+    chrome_dur = sum(c.get("dur", 0.0) for c in chrome if c.get("ph") == "X")
+    trace_dur = sum(e.dur_us or 0.0 for e in events if e.ev == "span")
+    if chrome_dur != trace_dur:
+        problems.append(f"chrome span time {chrome_dur}us != trace span time {trace_dur}us")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSONL written by repro --trace")
+    ap.add_argument("--chrome", help="Chrome trace-event JSON to cross-check")
+    args = ap.parse_args(argv)
+
+    events = load_trace(args.trace)
+    problems = validate(events)
+    if args.chrome:
+        problems += cross_check_chrome(events, load_chrome(args.chrome))
+
+    n_spans = sum(1 for e in events if e.ev == "span")
+    n_bits = sum(1 for e in events if e.ev == "bits")
+    print(f"{args.trace}: {len(events)} events ({n_spans} spans, {n_bits} messages)")
+    for name, total in phase_totals(events).items():
+        print(f"  phase {name:<12} {total / 1e3:10.2f} ms")
+    up = sum(b for (d, _), (_, b) in bits_by_kind(events).items() if d == "up")
+    down = sum(b for (d, _), (_, b) in bits_by_kind(events).items() if d == "down")
+    print(f"  bits: up {up:.0f}, down {down:.0f}")
+    if problems:
+        for p in problems:
+            print(f"PROBLEM: {p}")
+        return 1
+    print("ok: schema valid, span nesting consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,103 @@
+"""Plot where round time goes: per-phase stacked bars from obs traces.
+
+Input: one or more trace JSONL files written by ``repro run --trace`` or
+``repro sweep --trace``. One bar per file (labelled from the filename),
+one colored segment per span phase (``plan``, ``compute``, ``exchange``,
+``absorb``, ``eval``, ...), sized by total time spent in that phase.
+
+Usage::
+
+    python -m analysis.plot_phase_breakdown runs/trace_*.jsonl \
+        --out phase_breakdown.png
+
+Only this script needs matplotlib; ``analysis.load_trace`` is stdlib-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from analysis.load_trace import load_trace, phase_totals
+
+#: Container spans are unions of the leaf phases below them; stacking both
+#: would double-count, so they are dropped unless --all is given.
+CONTAINER_PHASES = ("round", "cell")
+
+
+def collect_breakdowns(
+    paths: list[Path], *, keep_containers: bool
+) -> tuple[list[str], list[dict[str, float]]]:
+    labels: list[str] = []
+    breakdowns: list[dict[str, float]] = []
+    for path in paths:
+        totals = phase_totals(load_trace(path))
+        if not keep_containers:
+            for name in CONTAINER_PHASES:
+                totals.pop(name, None)
+        labels.append(path.stem)
+        breakdowns.append(totals)
+    return labels, breakdowns
+
+
+def plot(
+    labels: list[str], breakdowns: list[dict[str, float]], *, out: Path, title: str | None
+) -> None:
+    # Imported lazily so the loaders stay dependency-light.
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    # Stable phase order across bars: by total time over all traces.
+    order: dict[str, float] = {}
+    for b in breakdowns:
+        for name, total in b.items():
+            order[name] = order.get(name, 0.0) + total
+    phases = sorted(order, key=lambda n: -order[n])
+
+    fig, ax = plt.subplots(figsize=(max(4.0, 1.2 * len(labels) + 2.0), 4.2))
+    xs = range(len(labels))
+    bottoms = [0.0] * len(labels)
+    for phase in phases:
+        heights = [b.get(phase, 0.0) / 1e3 for b in breakdowns]
+        ax.bar(xs, heights, bottom=bottoms, label=phase, width=0.6)
+        bottoms = [b + h for b, h in zip(bottoms, heights)]
+    ax.set_xticks(list(xs))
+    ax.set_xticklabels(labels, rotation=20, ha="right", fontsize=8)
+    ax.set_ylabel("time in phase (ms)")
+    if title:
+        ax.set_title(title)
+    ax.grid(True, axis="y", alpha=0.25, linewidth=0.5)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    out.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(out, dpi=160)
+    plt.close(fig)
+
+
+def main(argv: list[str] | None = None) -> Path:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="+", help="trace JSONL files from repro --trace")
+    ap.add_argument(
+        "--all",
+        action="store_true",
+        help="also stack container spans (round/cell); double-counts leaf time",
+    )
+    ap.add_argument("--out", default="phase_breakdown.png", help="output image path")
+    ap.add_argument("--title", help="figure title")
+    args = ap.parse_args(argv)
+
+    paths = [Path(t) for t in args.traces]
+    for p in paths:
+        if not p.is_file():
+            raise FileNotFoundError(f"no such trace file: {p}")
+    labels, breakdowns = collect_breakdowns(paths, keep_containers=args.all)
+    out = Path(args.out)
+    plot(labels, breakdowns, out=out, title=args.title)
+    print(f"wrote {out} ({len(labels)} traces)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,8 @@
 
 Fixtures mirror the Rust sinks byte-conventions: `runs.jsonl` rows as
 written by `run_row`, `summary.jsonl` rows as written by `summary_jsonl`,
-and the 7-column per-round history CSV of `History::to_csv`.
+the 7-column per-round history CSV of `History::to_csv`, and obs trace
+events as written by `Event::to_json` (docs/TRACING.md).
 """
 
 import json
@@ -10,8 +11,10 @@ import textwrap
 
 import pytest
 
+from analysis import load_trace as lt
 from analysis import loader
 from analysis.plot_gap_vs_bits import collect_csvs, main as plot_main, series_label
+from analysis.plot_phase_breakdown import collect_breakdowns, main as phase_main
 
 RUN_ROWS = [
     {
@@ -161,5 +164,177 @@ def test_plot_script_end_to_end(tmp_path):
     written = plot_main(
         [str(tmp_path), "--experiment", "fig1", "--uplink", "--out", str(out)]
     )
+    assert written == out
+    assert out.stat().st_size > 0
+
+
+# --- obs trace loader -------------------------------------------------------
+
+TRACE_ROWS = [
+    {"ev": "mark", "name": "run", "lane": "server", "ts_us": 0.0, "note": "label=BL1"},
+    {"ev": "span", "name": "round", "lane": "server", "ts_us": 1.0, "dur_us": 100.0, "round": 0},
+    {
+        "ev": "span",
+        "name": "plan",
+        "lane": "server",
+        "ts_us": 2.0,
+        "dur_us": 10.0,
+        "round": 0,
+        "exchange": 0,
+    },
+    {
+        "ev": "bits",
+        "name": "msg",
+        "lane": "server",
+        "ts_us": 13.0,
+        "round": 0,
+        "exchange": 0,
+        "client": 1,
+        "dir": "down",
+        "kind": "model",
+        "floats": 10,
+        "aux_bits": 0,
+        "bits": 640.0,
+    },
+    {
+        "ev": "span",
+        "name": "compute",
+        "lane": "client:1",
+        "ts_us": 15.0,
+        "dur_us": 60.0,
+        "round": 0,
+        "exchange": 0,
+        "client": 1,
+    },
+    {
+        "ev": "bits",
+        "name": "msg",
+        "lane": "server",
+        "ts_us": 80.0,
+        "round": 0,
+        "exchange": 0,
+        "client": 1,
+        "dir": "up",
+        "kind": "hess_delta",
+        "floats": 4,
+        "aux_bits": 64,
+        "bits": 320.0,
+    },
+    {"ev": "span", "name": "cell", "lane": "sweep:0", "ts_us": 0.0, "dur_us": 120.0, "cell": 3},
+]
+
+
+def test_load_trace_validates_clean_fixture(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    write_jsonl(path, TRACE_ROWS)
+    events = lt.load_trace(path)
+    assert len(events) == len(TRACE_ROWS)
+    assert lt.validate(events) == []
+    # Optional fields survive as None; typed fields are coerced.
+    run = events[0]
+    assert run.ev == "mark" and run.dur_us is None and run.note == "label=BL1"
+    msg = events[3]
+    assert msg.dir == "down" and msg.kind == "model" and msg.bits == 640.0
+    assert msg.client == 1 and isinstance(msg.client, int)
+
+
+def test_load_trace_requires_base_fields(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    write_jsonl(path, [{"name": "x", "lane": "server", "ts_us": 0.0}, TRACE_ROWS[0]])
+    with pytest.raises(ValueError, match="missing required field 'ev'"):
+        lt.load_trace(path)
+
+
+def test_validate_flags_schema_problems():
+    events = [
+        lt.TraceEvent(ev="span", name="nodur", lane="server", ts_us=0.0),
+        lt.TraceEvent(ev="span", name="neg", lane="server", ts_us=0.0, dur_us=-1.0),
+        lt.TraceEvent(ev="bits", name="msg", lane="server", ts_us=0.0, bits=8.0),
+        lt.TraceEvent(ev="bits", name="msg", lane="server", ts_us=0.0, dir="sideways",
+                      kind="model", bits=8.0),
+        lt.TraceEvent(ev="zap", name="x", lane="server", ts_us=0.0),
+    ]
+    problems = "\n".join(lt.validate(events))
+    assert "span without dur_us" in problems
+    assert "negative dur_us" in problems
+    assert "bits event without 'dir'" in problems
+    assert "bad dir 'sideways'" in problems
+    assert "unknown ev 'zap'" in problems
+
+
+def test_span_nesting_check():
+    def span(name, ts, dur, lane="server", cell=None):
+        return lt.TraceEvent(ev="span", name=name, lane=lane, ts_us=ts, dur_us=dur, cell=cell)
+
+    # Properly nested + disjoint siblings: clean.
+    good = [span("round", 0.0, 100.0), span("plan", 1.0, 10.0), span("absorb", 20.0, 30.0)]
+    assert lt.check_span_nesting(good) == []
+    # Straddling spans in one timeline: flagged.
+    bad = [span("a", 0.0, 50.0), span("b", 40.0, 50.0)]
+    assert any("overlaps but is not nested" in p for p in lt.check_span_nesting(bad))
+    # The same intervals on different lanes (or cells) never conflict.
+    assert lt.check_span_nesting([span("a", 0.0, 50.0), span("b", 40.0, 50.0, lane="client:0")
+                                  ]) == []
+    assert lt.check_span_nesting([span("a", 0.0, 50.0, cell=0), span("b", 40.0, 50.0, cell=1)
+                                  ]) == []
+
+
+def test_trace_aggregations():
+    events = [lt.TraceEvent.from_dict(r) for r in TRACE_ROWS]
+    totals = lt.phase_totals(events)
+    assert totals == {"cell": 120.0, "round": 100.0, "compute": 60.0, "plan": 10.0}
+    assert list(totals) == ["cell", "round", "compute", "plan"]  # largest first
+    kinds = lt.bits_by_kind(events)
+    assert kinds[("down", "model")] == (1, 640.0)
+    assert kinds[("up", "hess_delta")] == (1, 320.0)
+    flows = lt.round_flows(events)
+    assert flows[(None, 0, "down")] == 640.0
+    assert flows[(None, 0, "up")] == 320.0
+
+
+def test_chrome_cross_check(tmp_path):
+    events = [lt.TraceEvent.from_dict(r) for r in TRACE_ROWS]
+    chrome = tmp_path / "chrome.json"
+    x = [{"ph": "X", "dur": e.dur_us} for e in events if e.ev == "span"]
+    i = [{"ph": "i"} for e in events if e.ev != "span"]
+    meta = [{"ph": "M", "name": "thread_name"}]
+    chrome.write_text(json.dumps({"traceEvents": x + i + meta}), encoding="utf-8")
+    assert lt.cross_check_chrome(events, lt.load_chrome(chrome)) == []
+    # Dropping a span or perturbing a duration is caught.
+    chrome.write_text(json.dumps({"traceEvents": x[1:] + i + meta}), encoding="utf-8")
+    problems = lt.cross_check_chrome(events, lt.load_chrome(chrome))
+    assert any("X events" in p for p in problems)
+    assert any("span time" in p for p in problems)
+    # A non-export JSON file is rejected outright.
+    chrome.write_text(json.dumps({"other": 1}), encoding="utf-8")
+    with pytest.raises(ValueError, match="traceEvents"):
+        lt.load_chrome(chrome)
+
+
+def test_load_trace_cli_gate(tmp_path, capsys):
+    path = tmp_path / "trace.jsonl"
+    write_jsonl(path, TRACE_ROWS)
+    assert lt.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "7 events" in out and "ok: schema valid" in out
+    # Broken trace → non-zero exit for the CI gate.
+    write_jsonl(path, TRACE_ROWS + [{"ev": "span", "name": "nodur", "lane": "x", "ts_us": 0.0}])
+    assert lt.main([str(path)]) == 1
+    assert "PROBLEM" in capsys.readouterr().out
+
+
+def test_phase_breakdown_collect_and_plot(tmp_path):
+    a = tmp_path / "trace_bl1.jsonl"
+    b = tmp_path / "trace_fednl.jsonl"
+    write_jsonl(a, TRACE_ROWS)
+    write_jsonl(b, TRACE_ROWS[:3])  # run mark + round + plan only
+    labels, breakdowns = collect_breakdowns([a, b], keep_containers=False)
+    assert labels == ["trace_bl1", "trace_fednl"]
+    # Container spans (round/cell) are dropped to avoid double counting.
+    assert breakdowns[0] == {"compute": 60.0, "plan": 10.0}
+    assert breakdowns[1] == {"plan": 10.0}
+    pytest.importorskip("matplotlib")
+    out = tmp_path / "phases.png"
+    written = phase_main([str(a), str(b), "--out", str(out), "--title", "phases"])
     assert written == out
     assert out.stat().st_size > 0

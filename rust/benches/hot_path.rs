@@ -151,6 +151,7 @@ fn bench_transport(b: &mut Bench) {
         n: fed.n_clients(),
         smoothness,
         features,
+        obs: basis_learn::obs::Obs::noop(),
     };
 
     {

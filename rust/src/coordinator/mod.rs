@@ -39,6 +39,7 @@ use crate::config::{Algorithm, BasisKind, RunConfig, TransportSpec};
 use crate::data::FederatedDataset;
 use crate::linalg::{Mat, Vector};
 use crate::metrics::{History, RoundRecord};
+use crate::obs::{Ctx, Dir, Lane, Obs, Recorder, NOOP};
 use crate::problem::{GlobalObjective, LocalProblem, LogisticProblem};
 use crate::rng::Rng;
 use crate::transport::{
@@ -60,6 +61,8 @@ pub struct Env<'a> {
     pub smoothness: f64,
     /// Per-client feature matrices, when available (basis extraction, NL1).
     pub features: Vec<Option<Mat>>,
+    /// Trace recorder handle — [`Obs::noop`] unless the run is traced.
+    pub obs: Obs<'a>,
 }
 
 impl<'a> Env<'a> {
@@ -207,11 +210,22 @@ pub fn native_locals(fed: &FederatedDataset) -> Vec<Box<dyn LocalProblem>> {
 /// problem factory the `Threaded` backend needs (each worker thread builds
 /// its own oracles — [`LocalProblem`] is non-`Send`).
 pub fn run_federated(fed: &FederatedDataset, cfg: &RunConfig) -> Result<RunOutput> {
+    run_federated_traced(fed, cfg, &NOOP)
+}
+
+/// [`run_federated`] with a trace recorder observing the run. With
+/// [`crate::obs::NoopRecorder`] this is exactly `run_federated` (byte-
+/// identical output — the neutrality contract in `rust/src/obs/`).
+pub fn run_federated_traced(
+    fed: &FederatedDataset,
+    cfg: &RunConfig,
+    rec: &dyn Recorder,
+) -> Result<RunOutput> {
     let locals = native_locals(fed);
     let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
     let factory = |i: usize| native_local(fed, i);
     let factory: ProblemFactory<'_> = &factory;
-    run_federated_factory(&locals, features, cfg, Some(factory))
+    run_federated_factory_traced(&locals, features, cfg, Some(factory), rec)
 }
 
 /// Run over caller-supplied local problems (e.g. PJRT-backed ones).
@@ -227,7 +241,17 @@ pub fn run_federated_with(
     features: Vec<Option<Mat>>,
     cfg: &RunConfig,
 ) -> Result<RunOutput> {
-    run_federated_factory(locals, features, cfg, None)
+    run_federated_factory_traced(locals, features, cfg, None, &NOOP)
+}
+
+/// [`run_federated_with`] with a trace recorder observing the run.
+pub fn run_federated_with_traced(
+    locals: &[Box<dyn LocalProblem>],
+    features: Vec<Option<Mat>>,
+    cfg: &RunConfig,
+    rec: &dyn Recorder,
+) -> Result<RunOutput> {
+    run_federated_factory_traced(locals, features, cfg, None, rec)
 }
 
 /// The generic entry point: drives the round loop through `cfg.transport`.
@@ -239,18 +263,29 @@ pub fn run_federated_factory(
     cfg: &RunConfig,
     factory: Option<ProblemFactory<'_>>,
 ) -> Result<RunOutput> {
+    run_federated_factory_traced(locals, features, cfg, factory, &NOOP)
+}
+
+/// [`run_federated_factory`] with a trace recorder observing the run.
+pub fn run_federated_factory_traced<'a>(
+    locals: &'a [Box<dyn LocalProblem>],
+    features: Vec<Option<Mat>>,
+    cfg: &'a RunConfig,
+    factory: Option<ProblemFactory<'a>>,
+    rec: &'a dyn Recorder,
+) -> Result<RunOutput> {
     anyhow::ensure!(!locals.is_empty(), "need at least one client");
     anyhow::ensure!(features.len() == locals.len(), "features/locals length mismatch");
     let d = locals[0].dim();
     let n = locals.len();
     let smoothness = estimate_smoothness(locals, cfg.lambda);
-    let env = Env { locals, cfg, d, n, smoothness, features };
+    let env = Env { locals, cfg, d, n, smoothness, features, obs: Obs::new(rec) };
 
     let (mut server, clients) = build_split(&env)?;
     let rngs = client_rngs(cfg.seed, n);
     match cfg.transport {
         TransportSpec::Lockstep => {
-            let mut transport = Lockstep::new(env.locals, clients, rngs);
+            let mut transport = Lockstep::new(env.locals, clients, rngs).with_obs(env.obs);
             drive(&env, server.as_mut(), &mut transport)
         }
         TransportSpec::Threaded(_) => {
@@ -264,7 +299,8 @@ pub fn run_federated_factory(
             };
             let workers = cfg.transport.resolved_workers(n);
             std::thread::scope(|scope| {
-                let mut transport = Threaded::spawn(scope, workers, clients, rngs, factory);
+                let mut transport =
+                    Threaded::spawn_obs(scope, workers, clients, rngs, factory, env.obs);
                 drive(&env, server.as_mut(), &mut transport)
             })
         }
@@ -283,20 +319,35 @@ pub fn run_one_round(
 ) -> Result<CommTally> {
     let mut tally = CommTally::default();
     let fb = env.cfg.float_bits;
+    let obs = env.obs;
     let mut exchange = 0usize;
-    while let Some(plan) = server.plan(env, round, exchange, rng)? {
+    loop {
+        let ctx = Ctx::round(round, exchange);
+        let plan = {
+            let _span = obs.span("plan", Lane::Server, ctx);
+            server.plan(env, round, exchange, rng)?
+        };
+        let Some(plan) = plan else { break };
         debug_assert!(
             plan.sends.windows(2).all(|w| w[0].0 < w[1].0),
             "plan sends must be ascending and unique"
         );
-        for (_, down) in &plan.sends {
+        for (i, down) in &plan.sends {
             tally.down(down.cost(), fb);
+            obs.packet(Dir::Down, Lane::Server, Ctx::client(round, exchange, *i), down, fb);
         }
-        let replies = transport.exchange(round, exchange, plan.sends)?;
-        for (_, up) in &replies {
+        let replies = {
+            let _span = obs.span("exchange", Lane::Server, ctx);
+            transport.exchange(round, exchange, plan.sends)?
+        };
+        for (i, up) in &replies {
             tally.up(up.cost(), fb);
+            obs.packet(Dir::Up, Lane::Server, Ctx::client(round, exchange, *i), up, fb);
         }
-        server.absorb(env, round, exchange, &replies, rng)?;
+        {
+            let _span = obs.span("absorb", Lane::Server, ctx);
+            server.absorb(env, round, exchange, &replies, rng)?;
+        }
         exchange += 1;
     }
     Ok(tally)
@@ -311,18 +362,33 @@ fn drive(
 ) -> Result<RunOutput> {
     let cfg = env.cfg;
     let n = env.n;
+    let obs = env.obs;
     let obj = env.objective();
     let (x_star, f_star) = obj.reference_optimum()?;
     let mut rng = Rng::new(cfg.seed);
     let mut history = History::new(server.label());
     history.setup_bits_per_node = server.setup_bits_per_node(env);
+    if obs.enabled() {
+        obs.mark(
+            "run",
+            Lane::Server,
+            Ctx::default(),
+            Some(format!(
+                "label={} n={} d={} transport={}",
+                history.label, n, env.d, cfg.transport
+            )),
+        );
+    }
 
     let mut up_cum = 0.0; // per-node cumulative
     let mut down_cum = 0.0;
     for round in 0..cfg.rounds {
+        let round_ctx = Ctx { round: Some(round), ..Ctx::default() };
+        let _round_span = obs.span("round", Lane::Server, round_ctx);
         let tally = run_one_round(env, server, transport, round, &mut rng)?;
         up_cum += tally.up_bits / n as f64;
         down_cum += tally.down_bits / n as f64;
+        let eval_span = obs.span("eval", Lane::Server, round_ctx);
         let x = server.x();
         let gap = obj.loss(x) - f_star;
         let grad_norm = crate::linalg::norm2(&obj.grad(x));
@@ -335,6 +401,7 @@ fn drive(
             grad_norm,
             dist_to_opt: dist,
         });
+        drop(eval_span);
         if !gap.is_finite() {
             anyhow::bail!("{} diverged at round {round} (gap = {gap})", server.label());
         }

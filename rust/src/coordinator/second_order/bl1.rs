@@ -415,6 +415,7 @@ mod tests {
             n: f.n_clients(),
             smoothness: 1.0,
             features,
+            obs: crate::obs::Obs::noop(),
         };
         let (mut server, mut clients) = split(&env, None);
         {

@@ -66,6 +66,7 @@ pub mod data;
 pub mod experiments;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod problem;
 pub mod rng;
 #[cfg(feature = "pjrt")]
@@ -85,6 +86,7 @@ pub mod prelude {
     pub use crate::data::{FederatedDataset, SyntheticSpec};
     pub use crate::linalg::{Mat, Vector};
     pub use crate::metrics::History;
+    pub use crate::obs::{JsonlRecorder, NoopRecorder, Obs, Recorder};
     pub use crate::problem::{LocalProblem, LogisticProblem};
     pub use crate::rng::Rng;
     pub use crate::sweep::{run_cells, DatasetRef, SweepCell, SweepSpec};

@@ -4,6 +4,7 @@
 //! repro experiment <id> [--full-scale] [--seed N] [--jobs N]   regenerate a paper table/figure
 //! repro sweep [grid axes] [--jobs N]                           ad-hoc parallel run grid
 //! repro run [options]                                          one federated run
+//! repro trace <trace.jsonl> [--chrome OUT.json]                summarize / export a trace
 //! repro data <name> [--full-scale]                             inspect a registry dataset
 //! repro list                                                   algorithms / experiments / datasets
 //! ```
@@ -30,6 +31,8 @@
 //! --master-seed N          re-randomize all derived cell seeds            [0]
 //! --full-scale             paper-sized datasets
 //! --resume                 skip cells already completed in <out>/runs.jsonl
+//! --trace PATH             record a trace JSONL (see docs/TRACING.md)
+//! --progress [on|off]      live progress to stderr      [on when stderr is a TTY]
 //! ```
 //! Results land in `<out>/runs.jsonl` (one row per run, durably appended in
 //! completion order) and `<out>/summary.jsonl` (cross-seed aggregates,
@@ -65,19 +68,30 @@
 //!                          (needs a build with `--features pjrt`)
 //! --artifacts DIR          artifact directory for --pjrt                  [artifacts]
 //! --csv PATH               write the run history CSV
+//! --trace PATH             record a trace JSONL (see docs/TRACING.md)
 //! ```
+//!
+//! `repro trace <trace.jsonl>` prints per-phase wall-time, per-message-kind
+//! bit-flow, and sweep-worker-utilization tables from a `--trace` file;
+//! `--chrome OUT.json` additionally exports Chrome trace-event JSON
+//! loadable in `chrome://tracing` or <https://ui.perfetto.dev>.
 
 use anyhow::{bail, Context, Result};
 use basis_learn::compressors::CompressorSpec;
 use basis_learn::config::{Algorithm, BasisKind, RunConfig, TransportSpec};
-use basis_learn::coordinator::{run_federated, RunOutput};
+use basis_learn::coordinator::{run_federated_traced, RunOutput};
 use basis_learn::data::{registry, FederatedDataset, SyntheticSpec};
 use basis_learn::experiments::{run_experiment, runs_dir, EXPERIMENTS};
+use basis_learn::obs::{
+    bits_table, chrome_trace, load_trace, phase_table, worker_table, JsonlRecorder, Obs,
+    Recorder, NOOP,
+};
 use basis_learn::sweep::{
     aggregate, default_jobs, load_jsonl, parse_axis, parse_bases, parse_datasets, parse_seeds,
-    parse_taus, plan_resume, ranked, rows_from_results, run_cells, run_row, summary_jsonl,
+    parse_taus, plan_resume, ranked, rows_from_results, run_cells_obs, run_row, summary_jsonl,
     summary_table, CellStatus, Json, JsonlSink, RunRow, SweepSpec, SWEEP_TARGETS,
 };
+use std::io::IsTerminal;
 use std::path::PathBuf;
 
 fn main() {
@@ -145,9 +159,10 @@ fn real_main() -> Result<()> {
         Some("experiment") | Some("exp") => cmd_experiment(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
         Some("data") => cmd_data(&args),
         Some("list") => cmd_list(),
-        Some(other) => bail!("unknown command '{other}' (experiment|sweep|run|data|list)"),
+        Some(other) => bail!("unknown command '{other}' (experiment|sweep|run|trace|data|list)"),
         None => {
             print_usage();
             Ok(())
@@ -157,7 +172,19 @@ fn real_main() -> Result<()> {
 
 fn print_usage() {
     println!("repro — Basis Matters (Qian et al., 2021) reproduction");
-    println!("usage: repro <experiment|sweep|run|data|list> [options]   (see README.md)");
+    println!("usage: repro <experiment|sweep|run|trace|data|list> [options]   (see README.md)");
+}
+
+/// `--trace <path>`: open a buffered JSONL trace recorder (flushed by the
+/// caller when the traced workload ends).
+fn trace_recorder(args: &Args) -> Result<Option<(JsonlRecorder, PathBuf)>> {
+    if !args.has("trace") {
+        return Ok(None);
+    }
+    let path = PathBuf::from(args.flag("trace").context("--trace needs a file path")?);
+    let rec = JsonlRecorder::create(&path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    Ok(Some((rec, path)))
 }
 
 fn cmd_list() -> Result<()> {
@@ -196,8 +223,31 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 const SWEEP_FLAGS: &[&str] = &[
     "algo", "dataset", "hess-comp", "model-comp", "grad-comp", "basis", "p", "tau", "seeds",
     "rounds", "lambda", "target-gap", "max-bits", "jobs", "name", "out", "master-seed",
-    "full-scale", "resume", "transport",
+    "full-scale", "resume", "transport", "trace", "progress",
 ];
+
+/// Whether to emit live progress lines to stderr: explicit `--progress`
+/// (`on`/`off`) wins; otherwise on exactly when stderr is a TTY (so
+/// redirected/CI output stays clean without a flag).
+fn progress_enabled(args: &Args) -> bool {
+    match args.flag("progress") {
+        Some("off") | Some("false") | Some("0") => false,
+        Some(_) => true,
+        None => args.has("progress") || std::io::stderr().is_terminal(),
+    }
+}
+
+/// `1h02m`, `3m20s`, `45s` — compact ETA rendering.
+fn fmt_duration(secs: f64) -> String {
+    let s = secs.max(0.0).round() as u64;
+    if s >= 3600 {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    } else if s >= 60 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{s}s")
+    }
+}
 
 /// `repro sweep` — expand the grid axes into cells, execute them across the
 /// thread pool, stream per-run JSONL, and write ranked cross-seed aggregates.
@@ -307,10 +357,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         (JsonlSink::create(&runs_path)?, Vec::new(), cells.clone())
     };
 
+    let recorder = trace_recorder(args)?;
+    let rec: &dyn Recorder = match &recorder {
+        Some((r, _)) => r,
+        None => &NOOP,
+    };
+    let progress = progress_enabled(args);
+    let sweep_start = std::time::Instant::now();
     let total = todo.len();
     let mut done = 0usize;
     let mut sink_err: Option<anyhow::Error> = None;
-    let results = run_cells(&todo, jobs, |r| {
+    let results = run_cells_obs(&todo, jobs, Obs::new(rec), |r| {
         done += 1;
         if let Err(e) = sink.push(&run_row(r, &SWEEP_TARGETS)) {
             if sink_err.is_none() {
@@ -331,9 +388,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             }
             _ => {}
         }
+        if progress {
+            let elapsed = sweep_start.elapsed().as_secs_f64().max(1e-9);
+            let rate = done as f64 / elapsed;
+            let eta = (total - done) as f64 / rate.max(1e-9);
+            eprintln!(
+                "progress: {done}/{total} cells | {rate:.2} cells/s | ETA {} | {jobs} workers",
+                fmt_duration(eta)
+            );
+        }
     });
     if let Some(e) = sink_err {
         return Err(e).context("writing runs.jsonl");
+    }
+    if let Some((r, path)) = &recorder {
+        r.flush().with_context(|| format!("flushing trace {}", path.display()))?;
+        println!("wrote trace {} (inspect with `repro trace {}`)", path.display(), path.display());
     }
 
     // Cross-seed aggregation, ranked best-first (deterministic bytes): kept
@@ -474,8 +544,13 @@ fn cmd_data(args: &Args) -> Result<()> {
 /// The `--pjrt` execution path: local objectives served by the AOT-compiled
 /// JAX/Pallas artifacts through the PJRT C API.
 #[cfg(feature = "pjrt")]
-fn run_pjrt(args: &Args, fed: &FederatedDataset, cfg: &RunConfig) -> Result<RunOutput> {
-    use basis_learn::coordinator::run_federated_with;
+fn run_pjrt(
+    args: &Args,
+    fed: &FederatedDataset,
+    cfg: &RunConfig,
+    rec: &dyn Recorder,
+) -> Result<RunOutput> {
+    use basis_learn::coordinator::run_federated_with_traced;
     use basis_learn::problem::LocalProblem;
     use basis_learn::runtime::{PjrtProblem, Runtime};
     use std::rc::Rc;
@@ -492,11 +567,16 @@ fn run_pjrt(args: &Args, fed: &FederatedDataset, cfg: &RunConfig) -> Result<RunO
         })
         .collect::<Result<_>>()?;
     let features = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
-    run_federated_with(&locals, features, cfg)
+    run_federated_with_traced(&locals, features, cfg, rec)
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn run_pjrt(_args: &Args, _fed: &FederatedDataset, _cfg: &RunConfig) -> Result<RunOutput> {
+fn run_pjrt(
+    _args: &Args,
+    _fed: &FederatedDataset,
+    _cfg: &RunConfig,
+    _rec: &dyn Recorder,
+) -> Result<RunOutput> {
     bail!(
         "this binary was built without PJRT support; rebuild with \
          `cargo build --features pjrt` (after enabling the `xla` dependency \
@@ -532,11 +612,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         bail!("--pjrt requires --transport lockstep (PJRT oracles are single-threaded)");
     }
 
-    let out = if args.has("pjrt") {
-        run_pjrt(args, &fed, &cfg)?
-    } else {
-        run_federated(&fed, &cfg)?
+    let recorder = trace_recorder(args)?;
+    let rec: &dyn Recorder = match &recorder {
+        Some((r, _)) => r,
+        None => &NOOP,
     };
+    let out = if args.has("pjrt") {
+        run_pjrt(args, &fed, &cfg, rec)?
+    } else {
+        run_federated_traced(&fed, &cfg, rec)?
+    };
+    if let Some((r, path)) = &recorder {
+        r.flush().with_context(|| format!("flushing trace {}", path.display()))?;
+        println!("wrote trace {} (inspect with `repro trace {}`)", path.display(), path.display());
+    }
 
     println!(
         "{} on {} — {} rounds, final gap {:.3e}, {:.3e} bits/node (up+down)",
@@ -550,6 +639,37 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = args.flag("csv") {
         std::fs::write(path, out.history.to_csv())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `repro trace` — summarize a `--trace` JSONL file (per-phase wall time,
+/// per-kind bit flows, sweep-worker utilization) and optionally export
+/// Chrome trace-event JSON.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: repro trace <trace.jsonl> [--chrome OUT.json]")?;
+    let load = load_trace(std::path::Path::new(path))?;
+    if load.torn_tail {
+        eprintln!("note: dropped a torn final line (interrupted trace)");
+    }
+    println!("{path}: {} events", load.rows.len());
+    println!("\nper-phase wall time:\n{}", phase_table(&load.rows));
+    println!("bit flow by (direction, message kind):\n{}", bits_table(&load.rows));
+    let workers = worker_table(&load.rows);
+    if !workers.is_empty() {
+        println!("sweep worker utilization:\n{workers}");
+    }
+    if args.has("chrome") {
+        let out = args.flag("chrome").context("--chrome needs an output path")?;
+        std::fs::write(out, chrome_trace(&load.rows))
+            .with_context(|| format!("writing {out}"))?;
+        println!(
+            "wrote Chrome trace-event JSON to {out} — load it in chrome://tracing \
+             or https://ui.perfetto.dev"
+        );
     }
     Ok(())
 }

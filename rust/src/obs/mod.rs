@@ -1,0 +1,33 @@
+//! Round-level tracing and bit-flow observability.
+//!
+//! The paper's claims are about *where bits and time go per round*; this
+//! module is the measurement layer that makes those flows visible without
+//! perturbing the runs that produce them.
+//!
+//! Two halves:
+//!
+//! * [`recorder`] — the write side. A [`Recorder`] trait with two
+//!   implementations: [`NoopRecorder`] (the default everywhere; provably
+//!   zero-impact — traced and untraced runs are byte-identical because the
+//!   recorder has no channel back into the run) and [`JsonlRecorder`]
+//!   (buffered JSONL trace events on disk). Instrumented code holds a
+//!   cheap [`Obs`] handle and emits spans ([`Obs::span`]), per-packet
+//!   bit-flow events ([`Obs::packet`]), and point marks ([`Obs::mark`]).
+//! * [`trace`] — the read side. [`load_trace`] parses a trace file back
+//!   into [`TraceRow`]s; [`phase_table`] / [`bits_table`] /
+//!   [`worker_table`] summarize it for the `repro trace` subcommand; and
+//!   [`chrome_trace`] exports Chrome trace-event JSON for
+//!   `chrome://tracing` / <https://ui.perfetto.dev>.
+//!
+//! The event schema is documented field-by-field in `docs/TRACING.md`.
+
+pub mod recorder;
+pub mod trace;
+
+pub use recorder::{
+    CellScope, Ctx, Dir, Event, EventKind, JsonlRecorder, Lane, NoopRecorder, Obs, Recorder,
+    SpanGuard, NOOP,
+};
+pub use trace::{
+    bits_table, chrome_trace, load_trace, phase_table, worker_table, TraceLoad, TraceRow,
+};

@@ -1,0 +1,572 @@
+//! The recorder core: trace [`Event`]s, the [`Recorder`] sink trait, the
+//! zero-impact [`NoopRecorder`], the durable [`JsonlRecorder`], and the
+//! copyable [`Obs`] handle instrumented code carries.
+//!
+//! # Neutrality contract
+//!
+//! The default recorder is [`NOOP`]: [`Obs::noop`] hands every
+//! instrumentation site a handle whose `enabled()` is `false`, so spans,
+//! marks, and bit-flow events all reduce to a branch on a constant — no
+//! clock reads, no allocation, no I/O. A traced run and an untraced run
+//! must produce **byte-identical** [`crate::metrics::History`] traces
+//! (enforced by `tests/obs_trace.rs`): recording observes the run, it never
+//! participates in it. That is why [`Recorder::record`] takes `&self` and
+//! returns nothing — a recorder has no channel through which it could
+//! perturb the computation.
+//!
+//! # Threading
+//!
+//! `Recorder: Sync` so a single recorder can be shared by reference across
+//! the `Threaded` transport's workers and the sweep executor's threads
+//! (`&dyn Recorder` is `Send` exactly because the trait requires `Sync`).
+//! [`JsonlRecorder`] serializes concurrent `record` calls through a mutex;
+//! event order in the file is therefore an arbitrary interleaving across
+//! threads, and consumers order by timestamp (which is global: all
+//! timestamps come from one monotonic epoch).
+
+use crate::sweep::{Json, JsonlSink};
+use crate::transport::Packet;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// What an [`Event`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A timed phase: `ts_us` is the start, `dur_us` the duration.
+    Span,
+    /// One message crossing the transport (an instant, with bit fields).
+    Bits,
+    /// A point annotation (run metadata, cache hit/miss, ...).
+    Mark,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Span => "span",
+            EventKind::Bits => "bits",
+            EventKind::Mark => "mark",
+        }
+    }
+}
+
+/// Which logical timeline an event belongs to. Lanes are what the Chrome
+/// export renders as threads: the server loop, each client's compute
+/// stream, and each sweep worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// The coordinator round loop (plan/exchange/absorb/eval).
+    Server,
+    /// Client `i`'s local work (compute, queue wait).
+    Client(usize),
+    /// Sweep executor worker `w` (cell spans, cache events).
+    Sweep(usize),
+}
+
+impl Lane {
+    /// Stable serialized form: `server`, `client:3`, `sweep:0`.
+    pub fn render(&self) -> String {
+        match self {
+            Lane::Server => "server".to_string(),
+            Lane::Client(i) => format!("client:{i}"),
+            Lane::Sweep(w) => format!("sweep:{w}"),
+        }
+    }
+}
+
+/// Where in the run an event happened. All fields optional: a sweep-level
+/// event has only `cell`, a round-loop event has `round`/`exchange`, a
+/// per-client event adds `client`. [`CellScope`] injects `cell` into every
+/// event recorded inside one sweep cell.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Ctx {
+    pub cell: Option<usize>,
+    pub round: Option<usize>,
+    pub exchange: Option<usize>,
+    pub client: Option<usize>,
+}
+
+impl Ctx {
+    /// Round-loop context (server lane).
+    pub fn round(round: usize, exchange: usize) -> Ctx {
+        Ctx { round: Some(round), exchange: Some(exchange), ..Ctx::default() }
+    }
+
+    /// Per-client context within an exchange.
+    pub fn client(round: usize, exchange: usize, client: usize) -> Ctx {
+        Ctx { client: Some(client), ..Ctx::round(round, exchange) }
+    }
+}
+
+/// Message direction for bit-flow events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Up,
+    Down,
+}
+
+impl Dir {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dir::Up => "up",
+            Dir::Down => "down",
+        }
+    }
+}
+
+/// One trace event. Flat by design: every event carries the same base
+/// fields (`ev`, `name`, `lane`, `ts_us`) plus kind-specific optionals, so
+/// the JSONL schema (docs/TRACING.md) is a single row shape consumers can
+/// filter rather than a tagged union they must dispatch on.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub ev: EventKind,
+    pub name: &'static str,
+    /// Microseconds since the recorder's epoch (span start for spans).
+    pub ts_us: f64,
+    /// Span duration in microseconds (spans only).
+    pub dur_us: Option<f64>,
+    pub lane: Lane,
+    pub ctx: Ctx,
+    /// Direction of a bit-flow event.
+    pub dir: Option<Dir>,
+    /// Message kind tag of a bit-flow event (`"model"`, `"hess_delta"`, ...).
+    pub kind: Option<&'static str>,
+    /// Float payload count of the message ([`crate::compressors::BitCost`]).
+    pub floats: Option<f64>,
+    /// Auxiliary bits of the message (indices, flags).
+    pub aux_bits: Option<f64>,
+    /// Total wire bits: `floats · float_bits + aux_bits`.
+    pub bits: Option<f64>,
+    /// Free-form annotation (marks).
+    pub note: Option<String>,
+}
+
+impl Event {
+    /// Render as one JSONL row. Absent optionals are omitted, not null, so
+    /// rows stay small at per-message granularity.
+    pub fn to_json(&self) -> Json {
+        let mut kvs: Vec<(String, Json)> = vec![
+            ("ev".into(), Json::str(self.ev.as_str())),
+            ("name".into(), Json::str(self.name)),
+            ("lane".into(), Json::str(self.lane.render())),
+            ("ts_us".into(), Json::num(self.ts_us)),
+        ];
+        if let Some(d) = self.dur_us {
+            kvs.push(("dur_us".into(), Json::num(d)));
+        }
+        if let Some(c) = self.ctx.cell {
+            kvs.push(("cell".into(), Json::num(c as f64)));
+        }
+        if let Some(r) = self.ctx.round {
+            kvs.push(("round".into(), Json::num(r as f64)));
+        }
+        if let Some(x) = self.ctx.exchange {
+            kvs.push(("exchange".into(), Json::num(x as f64)));
+        }
+        if let Some(i) = self.ctx.client {
+            kvs.push(("client".into(), Json::num(i as f64)));
+        }
+        if let Some(d) = self.dir {
+            kvs.push(("dir".into(), Json::str(d.as_str())));
+        }
+        if let Some(k) = self.kind {
+            kvs.push(("kind".into(), Json::str(k)));
+        }
+        if let Some(f) = self.floats {
+            kvs.push(("floats".into(), Json::num(f)));
+        }
+        if let Some(a) = self.aux_bits {
+            kvs.push(("aux_bits".into(), Json::num(a)));
+        }
+        if let Some(b) = self.bits {
+            kvs.push(("bits".into(), Json::num(b)));
+        }
+        if let Some(n) = &self.note {
+            kvs.push(("note".into(), Json::str(n.clone())));
+        }
+        Json::Obj(kvs)
+    }
+}
+
+/// A trace event sink. Implementations must be cheap when disabled and
+/// must never influence the run they observe (no panics, no blocking on
+/// anything the run waits for).
+pub trait Recorder: Sync {
+    /// Whether events are consumed at all. Instrumentation sites gate every
+    /// clock read and allocation on this, so a disabled recorder costs one
+    /// branch per site.
+    fn enabled(&self) -> bool;
+
+    /// Microseconds since this recorder's epoch (monotonic across threads).
+    fn now_us(&self) -> f64;
+
+    /// Consume one event. Infallible by signature: I/O errors are latched
+    /// internally and surfaced by [`Recorder::flush`].
+    fn record(&self, ev: Event);
+
+    /// Drain buffered events to durable storage; returns the first latched
+    /// write error, if any.
+    fn flush(&self) -> Result<()>;
+}
+
+/// The default recorder: drops everything, reads no clock.
+pub struct NoopRecorder;
+
+/// The shared no-op instance [`Obs::noop`] points at.
+pub static NOOP: NoopRecorder = NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn now_us(&self) -> f64 {
+        0.0
+    }
+
+    fn record(&self, _ev: Event) {}
+
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+struct JsonlRecorderInner {
+    sink: JsonlSink,
+    /// First write error, latched; `record` goes quiet after it and
+    /// `flush` reports it.
+    err: Option<anyhow::Error>,
+}
+
+/// Durable trace sink: one JSONL row per event, buffered in memory and
+/// written in large chunks (per-event fsync would dominate a traced run —
+/// a single round emits one row per message per client). [`Self::flush`]
+/// drains the buffer and fsyncs; call it once when the traced workload
+/// ends. A crash mid-trace loses at most the buffered tail plus a torn
+/// final line, exactly what [`crate::sweep::load_jsonl`] recovers from.
+pub struct JsonlRecorder {
+    epoch: Instant,
+    inner: Mutex<JsonlRecorderInner>,
+}
+
+impl JsonlRecorder {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &Path) -> Result<JsonlRecorder> {
+        Ok(JsonlRecorder {
+            epoch: Instant::now(),
+            inner: Mutex::new(JsonlRecorderInner {
+                sink: JsonlSink::create_buffered(path)?,
+                err: None,
+            }),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, JsonlRecorderInner> {
+        // A panic while holding the lock only poisons buffered trace rows,
+        // never run state — keep recording.
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+impl Recorder for JsonlRecorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn record(&self, ev: Event) {
+        let row = ev.to_json();
+        let mut inner = self.lock();
+        if inner.err.is_some() {
+            return;
+        }
+        if let Err(e) = inner.sink.push(&row) {
+            inner.err = Some(e);
+        }
+    }
+
+    fn flush(&self) -> Result<()> {
+        let mut inner = self.lock();
+        if let Some(e) = inner.err.take() {
+            return Err(e);
+        }
+        inner.sink.flush()
+    }
+}
+
+/// A recorder view that stamps a sweep-cell id onto every event passing
+/// through it, so one shared trace file can attribute events to cells no
+/// matter how the executor interleaves them.
+pub struct CellScope<'a> {
+    inner: &'a dyn Recorder,
+    cell: usize,
+}
+
+impl<'a> CellScope<'a> {
+    pub fn new(inner: &'a dyn Recorder, cell: usize) -> CellScope<'a> {
+        CellScope { inner, cell }
+    }
+}
+
+impl Recorder for CellScope<'_> {
+    fn enabled(&self) -> bool {
+        self.inner.enabled()
+    }
+
+    fn now_us(&self) -> f64 {
+        self.inner.now_us()
+    }
+
+    fn record(&self, mut ev: Event) {
+        ev.ctx.cell = Some(self.cell);
+        self.inner.record(ev);
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// The handle instrumented code carries: a copyable reference to a
+/// recorder plus convenience constructors for the three event shapes.
+/// `Copy` so it rides into scoped worker closures for free.
+#[derive(Clone, Copy)]
+pub struct Obs<'a> {
+    pub rec: &'a dyn Recorder,
+}
+
+impl<'a> Obs<'a> {
+    pub fn new(rec: &'a dyn Recorder) -> Obs<'a> {
+        Obs { rec }
+    }
+
+    /// The zero-impact default handle.
+    pub fn noop() -> Obs<'static> {
+        Obs { rec: &NOOP }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rec.enabled()
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.rec.now_us()
+    }
+
+    /// Open a timed span; the returned guard records it when dropped.
+    /// Disabled recorders get an inert guard (no clock read).
+    #[must_use = "the span is recorded when the guard drops — bind it (`let _span = ...`)"]
+    pub fn span(&self, name: &'static str, lane: Lane, ctx: Ctx) -> SpanGuard<'a> {
+        if !self.rec.enabled() {
+            return SpanGuard { rec: None, start_us: 0.0, name, lane, ctx };
+        }
+        SpanGuard { rec: Some(self.rec), start_us: self.rec.now_us(), name, lane, ctx }
+    }
+
+    /// Record a span with explicit endpoints — for durations measured
+    /// across threads (e.g. queue wait: enqueue stamped on the sender,
+    /// dequeue observed on the worker).
+    pub fn span_at(&self, name: &'static str, lane: Lane, ctx: Ctx, start_us: f64, end_us: f64) {
+        if !self.rec.enabled() {
+            return;
+        }
+        self.rec.record(Event {
+            ev: EventKind::Span,
+            name,
+            ts_us: start_us,
+            dur_us: Some((end_us - start_us).max(0.0)),
+            lane,
+            ctx,
+            dir: None,
+            kind: None,
+            floats: None,
+            aux_bits: None,
+            bits: None,
+            note: None,
+        });
+    }
+
+    /// Emit one bit-flow event per message of a packet crossing the
+    /// transport. `ctx.client` identifies the peer; `dir` the direction.
+    pub fn packet(&self, dir: Dir, lane: Lane, ctx: Ctx, packet: &Packet, float_bits: u32) {
+        if !self.rec.enabled() {
+            return;
+        }
+        let ts_us = self.rec.now_us();
+        for m in &packet.msgs {
+            self.rec.record(Event {
+                ev: EventKind::Bits,
+                name: "msg",
+                ts_us,
+                dur_us: None,
+                lane,
+                ctx,
+                dir: Some(dir),
+                kind: Some(m.kind),
+                floats: Some(m.cost.floats),
+                aux_bits: Some(m.cost.aux_bits),
+                bits: Some(m.cost.total_bits(float_bits)),
+                note: None,
+            });
+        }
+    }
+
+    /// Record a point annotation.
+    pub fn mark(&self, name: &'static str, lane: Lane, ctx: Ctx, note: Option<String>) {
+        if !self.rec.enabled() {
+            return;
+        }
+        self.rec.record(Event {
+            ev: EventKind::Mark,
+            name,
+            ts_us: self.rec.now_us(),
+            dur_us: None,
+            lane,
+            ctx,
+            dir: None,
+            kind: None,
+            floats: None,
+            aux_bits: None,
+            bits: None,
+            note,
+        });
+    }
+}
+
+/// RAII guard for a timed span: records the `Span` event on drop. Inert
+/// (no event, no clock read) when the recorder is disabled.
+pub struct SpanGuard<'a> {
+    rec: Option<&'a dyn Recorder>,
+    start_us: f64,
+    name: &'static str,
+    lane: Lane,
+    ctx: Ctx,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec else { return };
+        let end_us = rec.now_us();
+        rec.record(Event {
+            ev: EventKind::Span,
+            name: self.name,
+            ts_us: self.start_us,
+            dur_us: Some((end_us - self.start_us).max(0.0)),
+            lane: self.lane,
+            ctx: self.ctx,
+            dir: None,
+            kind: None,
+            floats: None,
+            aux_bits: None,
+            bits: None,
+            note: None,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::BitCost;
+    use crate::sweep::load_jsonl;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bl_obs_rec_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn noop_is_disabled_and_silent() {
+        let obs = Obs::noop();
+        assert!(!obs.enabled());
+        assert_eq!(obs.now_us(), 0.0);
+        // None of these may panic or do anything observable.
+        let _span = obs.span("x", Lane::Server, Ctx::default());
+        obs.span_at("y", Lane::Client(0), Ctx::default(), 0.0, 1.0);
+        obs.mark("z", Lane::Sweep(0), Ctx::default(), Some("note".into()));
+        let mut p = Packet::empty();
+        p.push_scalars("s", vec![1.0], BitCost::floats(1));
+        obs.packet(Dir::Up, Lane::Server, Ctx::default(), &p, 64);
+        NOOP.flush().unwrap();
+    }
+
+    #[test]
+    fn jsonl_recorder_writes_all_event_shapes() {
+        let path = tmp_path("shapes");
+        let rec = JsonlRecorder::create(&path).unwrap();
+        let obs = Obs::new(&rec);
+        assert!(obs.enabled());
+        {
+            let _span = obs.span("plan", Lane::Server, Ctx::round(3, 0));
+        }
+        obs.mark("dataset_cache", Lane::Sweep(1), Ctx::default(), Some("hit".into()));
+        let mut p = Packet::empty();
+        p.push_scalars("shift_delta", vec![1.0, 2.0], BitCost::floats(2));
+        p.push_flags("xi", vec![true], BitCost::bits(1.0));
+        obs.packet(Dir::Up, Lane::Server, Ctx::client(3, 0, 2), &p, 64);
+        rec.flush().unwrap();
+
+        let load = load_jsonl(&path).unwrap();
+        assert!(!load.torn_tail);
+        assert_eq!(load.rows.len(), 4); // span + mark + 2 msgs
+        let span = &load.rows[0];
+        assert_eq!(span.get("ev").unwrap().as_str(), Some("span"));
+        assert_eq!(span.get("name").unwrap().as_str(), Some("plan"));
+        assert_eq!(span.get("lane").unwrap().as_str(), Some("server"));
+        assert_eq!(span.get("round").unwrap().as_usize(), Some(3));
+        assert!(span.get("dur_us").unwrap().as_f64().unwrap() >= 0.0);
+        let mark = &load.rows[1];
+        assert_eq!(mark.get("ev").unwrap().as_str(), Some("mark"));
+        assert_eq!(mark.get("lane").unwrap().as_str(), Some("sweep:1"));
+        assert_eq!(mark.get("note").unwrap().as_str(), Some("hit"));
+        let msg = &load.rows[2];
+        assert_eq!(msg.get("ev").unwrap().as_str(), Some("bits"));
+        assert_eq!(msg.get("dir").unwrap().as_str(), Some("up"));
+        assert_eq!(msg.get("kind").unwrap().as_str(), Some("shift_delta"));
+        assert_eq!(msg.get("client").unwrap().as_usize(), Some(2));
+        assert_eq!(msg.get("floats").unwrap().as_f64(), Some(2.0));
+        assert_eq!(msg.get("bits").unwrap().as_f64(), Some(128.0));
+        let flags = &load.rows[3];
+        assert_eq!(flags.get("kind").unwrap().as_str(), Some("xi"));
+        assert_eq!(flags.get("bits").unwrap().as_f64(), Some(1.0));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn cell_scope_stamps_cell_ids() {
+        let path = tmp_path("cellscope");
+        let rec = JsonlRecorder::create(&path).unwrap();
+        let scoped = CellScope::new(&rec, 7);
+        let obs = Obs::new(&scoped);
+        obs.mark("dataset_cache", Lane::Sweep(0), Ctx::default(), None);
+        {
+            let _span = obs.span("compute", Lane::Client(1), Ctx::client(0, 0, 1));
+        }
+        rec.flush().unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert_eq!(load.rows.len(), 2);
+        for row in &load.rows {
+            assert_eq!(row.get("cell").unwrap().as_usize(), Some(7), "{row:?}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn timestamps_are_monotonic() {
+        let path = tmp_path("mono");
+        let rec = JsonlRecorder::create(&path).unwrap();
+        let a = rec.now_us();
+        let b = rec.now_us();
+        assert!(b >= a && a >= 0.0);
+        rec.flush().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,417 @@
+//! Reading traces back: parse the JSONL rows [`super::JsonlRecorder`]
+//! wrote, summarize them into per-phase / per-message-kind / per-worker
+//! tables (the `repro trace` subcommand), and export Chrome trace-event
+//! JSON loadable in `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use crate::sweep::{load_jsonl, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One parsed trace event (the read-side mirror of [`super::Event`], with
+/// owned strings — the writer's `&'static str` tags don't survive a file
+/// round trip).
+#[derive(Clone, Debug)]
+pub struct TraceRow {
+    pub ev: String,
+    pub name: String,
+    pub lane: String,
+    pub ts_us: f64,
+    pub dur_us: Option<f64>,
+    pub cell: Option<usize>,
+    pub round: Option<usize>,
+    pub exchange: Option<usize>,
+    pub client: Option<usize>,
+    pub dir: Option<String>,
+    pub kind: Option<String>,
+    pub floats: Option<f64>,
+    pub aux_bits: Option<f64>,
+    pub bits: Option<f64>,
+    pub note: Option<String>,
+}
+
+impl TraceRow {
+    pub fn from_json(j: &Json) -> Result<TraceRow> {
+        let req_str = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("trace row missing string field '{key}': {}", j.render()))
+        };
+        let opt_str = |key: &str| j.get(key).and_then(Json::as_str).map(str::to_string);
+        let opt_num = |key: &str| j.get(key).and_then(Json::as_f64);
+        let opt_idx = |key: &str| j.get(key).and_then(Json::as_usize);
+        Ok(TraceRow {
+            ev: req_str("ev")?,
+            name: req_str("name")?,
+            lane: req_str("lane")?,
+            ts_us: j
+                .get("ts_us")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("trace row missing 'ts_us': {}", j.render()))?,
+            dur_us: opt_num("dur_us"),
+            cell: opt_idx("cell"),
+            round: opt_idx("round"),
+            exchange: opt_idx("exchange"),
+            client: opt_idx("client"),
+            dir: opt_str("dir"),
+            kind: opt_str("kind"),
+            floats: opt_num("floats"),
+            aux_bits: opt_num("aux_bits"),
+            bits: opt_num("bits"),
+            note: opt_str("note"),
+        })
+    }
+
+    pub fn is_span(&self) -> bool {
+        self.ev == "span"
+    }
+
+    pub fn is_bits(&self) -> bool {
+        self.ev == "bits"
+    }
+}
+
+/// A loaded trace file.
+#[derive(Debug)]
+pub struct TraceLoad {
+    /// Events in file order (an arbitrary cross-thread interleaving; order
+    /// by `ts_us` for timelines).
+    pub rows: Vec<TraceRow>,
+    /// Whether a torn final line (interrupted trace) was dropped.
+    pub torn_tail: bool,
+}
+
+/// Load a trace JSONL file, tolerating the torn final line an interrupted
+/// run leaves behind.
+pub fn load_trace(path: &Path) -> Result<TraceLoad> {
+    let load = load_jsonl(path)?;
+    let rows = load
+        .rows
+        .iter()
+        .map(TraceRow::from_json)
+        .collect::<Result<Vec<_>>>()
+        .with_context(|| format!("parsing trace {}", path.display()))?;
+    Ok(TraceLoad { rows, torn_tail: load.torn_tail })
+}
+
+fn fmt_us(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{:.2}s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{us:.1}µs")
+    }
+}
+
+/// Per-phase wall-time table: one row per span name, with count, total,
+/// mean, and max. Lanes are aggregated (a `compute` row sums all clients).
+pub fn phase_table(rows: &[TraceRow]) -> String {
+    // name → (count, total_us, max_us)
+    let mut phases: BTreeMap<&str, (usize, f64, f64)> = BTreeMap::new();
+    for r in rows.iter().filter(|r| r.is_span()) {
+        let dur = r.dur_us.unwrap_or(0.0);
+        let e = phases.entry(r.name.as_str()).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += dur;
+        e.2 = e.2.max(dur);
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<12} {:>8} {:>12} {:>12} {:>12}",
+        "phase", "count", "total", "mean", "max"
+    );
+    let mut ordered: Vec<_> = phases.into_iter().collect();
+    // Largest total first — the table answers "where does the time go".
+    ordered.sort_by(|a, b| b.1 .1.total_cmp(&a.1 .1));
+    for (name, (count, total, max)) in ordered {
+        let mean = total / count.max(1) as f64;
+        let _ = writeln!(
+            out,
+            "{name:<12} {count:>8} {:>12} {:>12} {:>12}",
+            fmt_us(total),
+            fmt_us(mean),
+            fmt_us(max)
+        );
+    }
+    out
+}
+
+/// Per-message-kind bit-flow table: one row per (direction, kind), with
+/// message count, float/aux split, total bits, and share of its direction.
+pub fn bits_table(rows: &[TraceRow]) -> String {
+    // (dir, kind) → (msgs, floats, aux_bits, bits)
+    let mut flows: BTreeMap<(String, String), (usize, f64, f64, f64)> = BTreeMap::new();
+    let mut dir_total: BTreeMap<String, f64> = BTreeMap::new();
+    for r in rows.iter().filter(|r| r.is_bits()) {
+        let dir = r.dir.clone().unwrap_or_default();
+        let kind = r.kind.clone().unwrap_or_default();
+        let bits = r.bits.unwrap_or(0.0);
+        let e = flows.entry((dir.clone(), kind)).or_insert((0, 0.0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += r.floats.unwrap_or(0.0);
+        e.2 += r.aux_bits.unwrap_or(0.0);
+        e.3 += bits;
+        *dir_total.entry(dir).or_insert(0.0) += bits;
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<5} {:<14} {:>8} {:>14} {:>14} {:>14} {:>7}",
+        "dir", "kind", "msgs", "floats", "aux_bits", "bits", "share"
+    );
+    let mut ordered: Vec<_> = flows.into_iter().collect();
+    // Group by direction, then largest flow first within each direction.
+    ordered.sort_by(|a, b| {
+        (&a.0 .0, b.1 .3)
+            .partial_cmp(&(&b.0 .0, a.1 .3))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for ((dir, kind), (msgs, floats, aux, bits)) in ordered {
+        let share = 100.0 * bits / dir_total.get(&dir).copied().unwrap_or(f64::INFINITY);
+        let _ = writeln!(
+            out,
+            "{dir:<5} {kind:<14} {msgs:>8} {floats:>14.0} {aux:>14.0} {bits:>14.0} {share:>6.1}%"
+        );
+    }
+    for (dir, total) in dir_total {
+        let _ = writeln!(
+            out,
+            "{dir:<5} {:<14} {:>8} {:>14} {:>14} {total:>14.0}",
+            "(total)", "", "", ""
+        );
+    }
+    out
+}
+
+/// Sweep-worker utilization: per `sweep:<w>` lane, cells executed, busy
+/// time (sum of `cell` spans), and busy share of the trace wall-clock.
+/// Empty when the trace has no sweep lanes (plain `repro run --trace`).
+pub fn worker_table(rows: &[TraceRow]) -> String {
+    let spans: Vec<&TraceRow> = rows
+        .iter()
+        .filter(|r| r.is_span() && r.name == "cell" && r.lane.starts_with("sweep:"))
+        .collect();
+    if spans.is_empty() {
+        return String::new();
+    }
+    let t0 = spans.iter().map(|r| r.ts_us).fold(f64::INFINITY, f64::min);
+    let t1 = spans
+        .iter()
+        .map(|r| r.ts_us + r.dur_us.unwrap_or(0.0))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let wall = (t1 - t0).max(1e-9);
+    let mut workers: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+    for r in &spans {
+        let e = workers.entry(r.lane.as_str()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += r.dur_us.unwrap_or(0.0);
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<10} {:>8} {:>12} {:>8}", "worker", "cells", "busy", "util");
+    for (lane, (cells, busy)) in workers {
+        let _ = writeln!(
+            out,
+            "{lane:<10} {cells:>8} {:>12} {:>7.1}%",
+            fmt_us(busy),
+            100.0 * busy / wall
+        );
+    }
+    out
+}
+
+/// Numeric thread id for a lane string, for the Chrome export: `server` →
+/// 0, `client:i` → 1 + i, `sweep:w` → 10000 + w (far from any client id).
+fn lane_tid(lane: &str) -> usize {
+    if let Some(i) = lane.strip_prefix("client:").and_then(|s| s.parse::<usize>().ok()) {
+        return 1 + i;
+    }
+    if let Some(w) = lane.strip_prefix("sweep:").and_then(|s| s.parse::<usize>().ok()) {
+        return 10_000 + w;
+    }
+    0
+}
+
+/// Process id for the Chrome export: cell `c` → `c + 1`; events outside
+/// any cell (plain runs, sweep-level marks) → 0.
+fn row_pid(row: &TraceRow) -> usize {
+    row.cell.map(|c| c + 1).unwrap_or(0)
+}
+
+fn obj(kvs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Export a trace as Chrome trace-event JSON (the `{"traceEvents": [...]}`
+/// object form). Spans become complete (`"X"`) events, bit-flow events and
+/// marks become instants (`"i"`), and each (pid, lane) pair gets a
+/// `thread_name` metadata record so the timeline is labelled.
+pub fn chrome_trace(rows: &[TraceRow]) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(rows.len() + 16);
+    let mut lanes: BTreeMap<(usize, usize), String> = BTreeMap::new();
+    for r in rows {
+        let pid = row_pid(r);
+        let tid = lane_tid(&r.lane);
+        lanes.entry((pid, tid)).or_insert_with(|| r.lane.clone());
+        let mut args: Vec<(&str, Json)> = Vec::new();
+        if let Some(c) = r.cell {
+            args.push(("cell", Json::num(c as f64)));
+        }
+        if let Some(rnd) = r.round {
+            args.push(("round", Json::num(rnd as f64)));
+        }
+        if let Some(x) = r.exchange {
+            args.push(("exchange", Json::num(x as f64)));
+        }
+        if let Some(i) = r.client {
+            args.push(("client", Json::num(i as f64)));
+        }
+        if let Some(b) = r.bits {
+            args.push(("bits", Json::num(b)));
+        }
+        if let Some(f) = r.floats {
+            args.push(("floats", Json::num(f)));
+        }
+        if let Some(a) = r.aux_bits {
+            args.push(("aux_bits", Json::num(a)));
+        }
+        if let Some(n) = &r.note {
+            args.push(("note", Json::str(n.clone())));
+        }
+        let name = match (&r.ev[..], &r.dir, &r.kind) {
+            ("bits", Some(dir), Some(kind)) => format!("{kind} {dir}"),
+            _ => r.name.clone(),
+        };
+        let mut ev: Vec<(&str, Json)> = vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str(if r.is_span() { "X" } else { "i" })),
+            ("ts", Json::num(r.ts_us)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+        ];
+        if r.is_span() {
+            ev.push(("dur", Json::num(r.dur_us.unwrap_or(0.0))));
+        } else {
+            // Instant scope: thread.
+            ev.push(("s", Json::str("t")));
+        }
+        ev.push(("args", obj(args)));
+        events.push(obj(ev));
+    }
+    for ((pid, tid), lane) in lanes {
+        events.push(obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", obj(vec![("name", Json::str(lane))])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(line: &str) -> TraceRow {
+        TraceRow::from_json(&Json::parse(line).unwrap()).unwrap()
+    }
+
+    fn fixture() -> Vec<TraceRow> {
+        vec![
+            row(r#"{"ev":"mark","name":"run","lane":"server","ts_us":0,"note":"label=BL1"}"#),
+            row(r#"{"ev":"span","name":"round","lane":"server","ts_us":1,"dur_us":100,"round":0}"#),
+            row(concat!(
+                r#"{"ev":"span","name":"plan","lane":"server","ts_us":2,"dur_us":10,"#,
+                r#""round":0,"exchange":0}"#
+            )),
+            row(concat!(
+                r#"{"ev":"bits","name":"msg","lane":"server","ts_us":13,"round":0,"#,
+                r#""exchange":0,"client":1,"dir":"down","kind":"model","#,
+                r#""floats":10,"aux_bits":0,"bits":640}"#
+            )),
+            row(concat!(
+                r#"{"ev":"span","name":"compute","lane":"client:1","ts_us":15,"#,
+                r#""dur_us":60,"round":0,"exchange":0,"client":1}"#
+            )),
+            row(concat!(
+                r#"{"ev":"bits","name":"msg","lane":"server","ts_us":80,"round":0,"#,
+                r#""exchange":0,"client":1,"dir":"up","kind":"hess_delta","#,
+                r#""floats":4,"aux_bits":64,"bits":320}"#
+            )),
+            row(r#"{"ev":"span","name":"cell","lane":"sweep:0","ts_us":0,"dur_us":120,"cell":3}"#),
+        ]
+    }
+
+    #[test]
+    fn parse_requires_base_fields() {
+        assert!(TraceRow::from_json(&Json::parse(r#"{"name":"x"}"#).unwrap()).is_err());
+        assert!(TraceRow::from_json(
+            &Json::parse(r#"{"ev":"span","name":"x","lane":"server"}"#).unwrap()
+        )
+        .is_err());
+        let r = row(r#"{"ev":"span","name":"x","lane":"server","ts_us":1.5,"dur_us":2.5}"#);
+        assert_eq!(r.ts_us, 1.5);
+        assert_eq!(r.dur_us, Some(2.5));
+        assert_eq!(r.cell, None);
+    }
+
+    #[test]
+    fn tables_cover_all_shapes() {
+        let rows = fixture();
+        let phases = phase_table(&rows);
+        assert!(phases.contains("round"), "{phases}");
+        assert!(phases.contains("plan"), "{phases}");
+        assert!(phases.contains("compute"), "{phases}");
+        let bits = bits_table(&rows);
+        assert!(bits.contains("model"), "{bits}");
+        assert!(bits.contains("hess_delta"), "{bits}");
+        assert!(bits.contains("640"), "{bits}");
+        let workers = worker_table(&rows);
+        assert!(workers.contains("sweep:0"), "{workers}");
+        assert!(workers.contains("100.0%"), "{workers}");
+        // No sweep lanes → empty worker table.
+        assert!(worker_table(&rows[..6]).is_empty());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_matching_counts() {
+        let rows = fixture();
+        let text = chrome_trace(&rows);
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let count = |ph: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+                .count()
+        };
+        let spans = rows.iter().filter(|r| r.is_span()).count();
+        let instants = rows.len() - spans;
+        assert_eq!(count("X"), spans);
+        assert_eq!(count("i"), instants);
+        assert!(count("M") >= 3, "one thread_name per (pid, lane)");
+        // Spans carry durations; instants carry the thread scope marker.
+        for e in events {
+            match e.get("ph").and_then(Json::as_str) {
+                Some("X") => assert!(e.get("dur").is_some()),
+                Some("i") => assert_eq!(e.get("s").and_then(Json::as_str), Some("t")),
+                _ => {}
+            }
+        }
+        // The cell span lands in pid 4 (cell 3 + 1), the rest in pid 0.
+        let cell_ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("cell"))
+            .unwrap();
+        assert_eq!(cell_ev.get("pid").unwrap().as_usize(), Some(4));
+    }
+}

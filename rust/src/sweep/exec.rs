@@ -22,9 +22,10 @@
 //!   rest of the sweep proceeds.
 
 use super::spec::{DatasetRef, SweepCell};
-use crate::coordinator::run_federated;
+use crate::coordinator::run_federated_traced;
 use crate::data::FederatedDataset;
 use crate::metrics::{History, RunSummary};
+use crate::obs::{CellScope, Ctx, Lane, Obs};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -81,6 +82,29 @@ impl CellResult {
     pub fn summary(&self, targets: &[f64]) -> Option<RunSummary> {
         self.history.as_ref().map(|h| h.summarize(targets))
     }
+
+    /// The run's history, or a contextful error naming the cell — use this
+    /// instead of `history.as_ref().unwrap()` wherever a missing history is
+    /// a bug worth a diagnosable message.
+    pub fn require_history(&self) -> anyhow::Result<&History> {
+        match (&self.history, &self.status) {
+            (Some(h), _) => Ok(h),
+            (None, CellStatus::Failed(msg)) => Err(anyhow::anyhow!(
+                "cell {} (group {}, dataset {}, data_seed {}) failed: {msg}",
+                self.id,
+                self.group,
+                self.dataset,
+                self.data_seed
+            )),
+            (None, CellStatus::Ok) => Err(anyhow::anyhow!(
+                "cell {} (group {}, dataset {}, data_seed {}) has status Ok but no history",
+                self.id,
+                self.group,
+                self.dataset,
+                self.data_seed
+            )),
+        }
+    }
 }
 
 /// Worker count to use when the user didn't specify `--jobs`.
@@ -97,6 +121,19 @@ pub fn default_jobs() -> usize {
 pub fn run_cells(
     cells: &[SweepCell],
     jobs: usize,
+    on_done: impl FnMut(&CellResult),
+) -> Vec<CellResult> {
+    run_cells_obs(cells, jobs, Obs::noop(), on_done)
+}
+
+/// [`run_cells`] with a trace recorder observing the sweep: each cell gets
+/// a `cell` span on its worker's `sweep:<w>` lane plus a `dataset_cache`
+/// hit/miss mark, and every event emitted inside the cell's federated run
+/// is stamped with the cell id (see [`CellScope`]).
+pub fn run_cells_obs(
+    cells: &[SweepCell],
+    jobs: usize,
+    obs: Obs<'_>,
     mut on_done: impl FnMut(&CellResult),
 ) -> Vec<CellResult> {
     if cells.is_empty() {
@@ -107,7 +144,7 @@ pub fn run_cells(
     let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
     let mut slots: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
     std::thread::scope(|scope| {
-        for _ in 0..jobs {
+        for w in 0..jobs {
             let tx = tx.clone();
             let next = &next;
             scope.spawn(move || loop {
@@ -115,7 +152,7 @@ pub fn run_cells(
                 if i >= cells.len() {
                     break;
                 }
-                let res = run_cell(&cells[i]);
+                let res = run_cell(&cells[i], obs, w);
                 if tx.send((i, res)).is_err() {
                     break;
                 }
@@ -155,13 +192,25 @@ fn cached_dataset(ds: &DatasetRef, data_seed: u64) -> (Rc<FederatedDataset>, boo
 }
 
 /// Run one cell with panic isolation.
-fn run_cell(cell: &SweepCell) -> CellResult {
+fn run_cell(cell: &SweepCell, obs: Obs<'_>, worker: usize) -> CellResult {
     let start = Instant::now();
+    // Everything recorded inside this cell (round loop, transport, the
+    // marks below) carries the cell id, no matter how workers interleave.
+    let scoped = CellScope::new(obs.rec, cell.id);
+    let cell_obs = Obs::new(&scoped);
+    let cell_span = cell_obs.span("cell", Lane::Sweep(worker), Ctx::default());
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         let (fed, cache_hit) = cached_dataset(&cell.dataset, cell.data_seed);
+        cell_obs.mark(
+            "dataset_cache",
+            Lane::Sweep(worker),
+            Ctx::default(),
+            Some(if cache_hit { "hit" } else { "miss" }.to_string()),
+        );
         let name = fed.name.clone();
-        run_federated(&fed, &cell.cfg).map(|out| (name, cache_hit, out))
+        run_federated_traced(&fed, &cell.cfg, &scoped).map(|out| (name, cache_hit, out))
     }));
+    drop(cell_span);
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
     let (dataset, status, history, dataset_cache_hit) = match outcome {
         Ok(Ok((name, hit, out))) => (name, CellStatus::Ok, Some(out.history), hit),
@@ -234,7 +283,7 @@ mod tests {
             assert_eq!(a.status, b.status);
             assert!(a.status.is_ok(), "{:?}", a.status);
             // Bit-for-bit identical traces regardless of scheduling.
-            let (ha, hb) = (a.history.as_ref().unwrap(), b.history.as_ref().unwrap());
+            let (ha, hb) = (a.require_history().unwrap(), b.require_history().unwrap());
             assert_eq!(ha.records, hb.records);
             assert_eq!(ha.setup_bits_per_node, hb.setup_bits_per_node);
         }
@@ -328,7 +377,7 @@ mod tests {
         let serial = run_cells(&cells, 1, |_| {}); // hits within the worker
         let spread = run_cells(&cells, 4, |_| {}); // mostly fresh builds
         for (a, b) in serial.iter().zip(&spread) {
-            let (ha, hb) = (a.history.as_ref().unwrap(), b.history.as_ref().unwrap());
+            let (ha, hb) = (a.require_history().unwrap(), b.require_history().unwrap());
             assert_eq!(ha.records, hb.records);
         }
     }

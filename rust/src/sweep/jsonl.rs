@@ -369,23 +369,37 @@ impl<'a> Parser<'a> {
 
 // ── Crash-safe JSONL files ──────────────────────────────────────────────
 
-/// Durable line-at-a-time JSONL writer.
+/// Line-at-a-time JSONL writer with two durability modes.
 ///
-/// Each [`JsonlSink::push`] renders the row, issues a *single* `write` of
-/// `line + '\n'`, and fsyncs (`sync_data`) before returning — so after a
-/// crash or SIGKILL, at most the final line of the file is torn, which is
-/// exactly the failure mode [`load_jsonl`] recovers from. One fsync per row
-/// is noise next to the cost of the federated run that produced it.
+/// In the default (durable) mode each [`JsonlSink::push`] renders the row,
+/// issues a *single* `write` of `line + '\n'`, and fsyncs (`sync_data`)
+/// before returning — so after a crash or SIGKILL, at most the final line
+/// of the file is torn, which is exactly the failure mode [`load_jsonl`]
+/// recovers from. One fsync per row is noise next to the cost of the
+/// federated run that produced it.
+///
+/// [`JsonlSink::create_buffered`] opens a high-throughput variant for
+/// trace streams (thousands of rows per second, where a per-row fsync
+/// would dominate): rows accumulate in memory and hit the file in ~64 KiB
+/// chunks; call [`JsonlSink::flush`] to drain and fsync. A crash still
+/// tears at most one line — chunks end on row boundaries — but may lose
+/// the buffered tail, which is acceptable for traces and not for results.
 pub struct JsonlSink {
     file: std::fs::File,
+    /// Fsync every row (results) vs buffer in memory (traces).
+    durable: bool,
+    buf: String,
 }
+
+/// Buffered mode flushes to the file once this many bytes accumulate.
+const SINK_BUF_BYTES: usize = 64 * 1024;
 
 impl JsonlSink {
     /// Open `path` truncated (a fresh sweep).
     pub fn create(path: &Path) -> Result<JsonlSink> {
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        Ok(JsonlSink { file })
+        Ok(JsonlSink { file, durable: true, buf: String::new() })
     }
 
     /// Open `path` for appending (a resumed sweep; the file must already be
@@ -396,14 +410,43 @@ impl JsonlSink {
             .append(true)
             .open(path)
             .with_context(|| format!("opening {} for append", path.display()))?;
-        Ok(JsonlSink { file })
+        Ok(JsonlSink { file, durable: true, buf: String::new() })
     }
 
-    /// Durably append one row.
+    /// Open `path` truncated, in buffered (non-fsyncing) mode — for
+    /// high-rate trace streams. Pair with [`JsonlSink::flush`].
+    pub fn create_buffered(path: &Path) -> Result<JsonlSink> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlSink { file, durable: false, buf: String::new() })
+    }
+
+    /// Append one row: durably (write + fsync) in the default mode,
+    /// into the memory buffer in buffered mode.
     pub fn push(&mut self, row: &Json) -> Result<()> {
-        let mut line = row.render();
-        line.push('\n');
-        self.file.write_all(line.as_bytes())?;
+        if self.durable {
+            let mut line = row.render();
+            line.push('\n');
+            self.file.write_all(line.as_bytes())?;
+            self.file.sync_data()?;
+        } else {
+            self.buf.push_str(&row.render());
+            self.buf.push('\n');
+            if self.buf.len() >= SINK_BUF_BYTES {
+                self.file.write_all(self.buf.as_bytes())?;
+                self.buf.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain any buffered rows to the file and fsync. A no-op beyond the
+    /// fsync in durable mode.
+    pub fn flush(&mut self) -> Result<()> {
+        if !self.buf.is_empty() {
+            self.file.write_all(self.buf.as_bytes())?;
+            self.buf.clear();
+        }
         self.file.sync_data()?;
         Ok(())
     }
@@ -595,6 +638,32 @@ mod tests {
         let load = load_jsonl(&path).unwrap();
         assert_eq!(load.rows.len(), 3);
         assert_eq!(load.rows[2], Json::Null);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn buffered_sink_holds_rows_until_flush() {
+        let path = tmp_path("buffered");
+        let mut sink = JsonlSink::create_buffered(&path).unwrap();
+        let rows: Vec<Json> = (0..100)
+            .map(|i| Json::Obj(vec![("i".into(), Json::num(i as f64))]))
+            .collect();
+        for r in &rows {
+            sink.push(r).unwrap();
+        }
+        // Small rows stay in memory until flush — nothing on disk yet.
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        sink.flush().unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert!(!load.torn_tail);
+        assert_eq!(load.rows, rows);
+        // Pushing past the chunk threshold spills without an explicit flush.
+        let big = Json::Obj(vec![("pad".into(), Json::str("x".repeat(70 * 1024)))]);
+        sink.push(&big).unwrap();
+        assert!(std::fs::metadata(&path).unwrap().len() > 70 * 1024);
+        sink.flush().unwrap();
+        let load = load_jsonl(&path).unwrap();
+        assert_eq!(load.rows.len(), 101);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -64,7 +64,7 @@ pub use agg::{
     aggregate, plan_resume, ranked, rows_from_results, run_row, summary_jsonl, summary_table,
     GroupSummary, ResumePlan, RunRow, TargetAgg,
 };
-pub use exec::{default_jobs, run_cells, CellResult, CellStatus, SWEEP_TARGETS};
+pub use exec::{default_jobs, run_cells, run_cells_obs, CellResult, CellStatus, SWEEP_TARGETS};
 pub use jsonl::{load_jsonl, Json, JsonlLoad, JsonlSink};
 pub use spec::{
     derive_cell_seed, parse_axis, parse_bases, parse_datasets, parse_seeds, parse_taus,

@@ -4,15 +4,17 @@
 //! and the only backend usable with non-`Send` oracles (PJRT).
 
 use super::{ClientStep, Downlink, Transport, Uplink};
+use crate::obs::{Ctx, Lane, Obs};
 use crate::problem::LocalProblem;
 use crate::rng::Rng;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 /// Serial in-process transport.
 pub struct Lockstep<'a> {
     locals: &'a [Box<dyn LocalProblem>],
     clients: Vec<Box<dyn ClientStep>>,
     rngs: Vec<Rng>,
+    obs: Obs<'a>,
 }
 
 impl<'a> Lockstep<'a> {
@@ -24,7 +26,14 @@ impl<'a> Lockstep<'a> {
     ) -> Self {
         assert_eq!(locals.len(), clients.len(), "locals/clients length mismatch");
         assert_eq!(rngs.len(), clients.len(), "rngs/clients length mismatch");
-        Lockstep { locals, clients, rngs }
+        Lockstep { locals, clients, rngs, obs: Obs::noop() }
+    }
+
+    /// Attach a trace recorder: each client's `compute` is timed on its
+    /// own `client:<i>` lane.
+    pub fn with_obs(mut self, obs: Obs<'a>) -> Self {
+        self.obs = obs;
+        self
     }
 }
 
@@ -38,13 +47,11 @@ impl Transport for Lockstep<'_> {
         let mut replies = Vec::with_capacity(sends.len());
         for (i, down) in sends {
             ensure!(i < self.clients.len(), "no client {i}");
-            let up = self.clients[i].compute(
-                self.locals[i].as_ref(),
-                round,
-                exchange,
-                &down,
-                &mut self.rngs[i],
-            )?;
+            let _span = self.obs.span("compute", Lane::Client(i), Ctx::client(round, exchange, i));
+            let up = self
+                .clients[i]
+                .compute(self.locals[i].as_ref(), round, exchange, &down, &mut self.rngs[i])
+                .with_context(|| format!("client {i}, round {round}"))?;
             replies.push((i, up));
         }
         Ok(replies)

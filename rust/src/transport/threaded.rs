@@ -11,8 +11,14 @@
 //! Each worker builds its *own* local problems through the
 //! [`super::ProblemFactory`] on its own thread, because
 //! [`crate::problem::LocalProblem`] is deliberately non-`Send`.
+//!
+//! When traced, each job yields two spans on the client's lane: `queue`
+//! (enqueue on the main thread → dequeue on the worker; cross-thread, so
+//! it uses the recorder's shared monotonic epoch) and `compute` (the
+//! client work itself) — separating pool contention from real work.
 
 use super::{ClientStep, Downlink, ProblemFactory, Transport, Uplink};
+use crate::obs::{Ctx, Lane, Obs};
 use crate::problem::LocalProblem;
 use crate::rng::Rng;
 use anyhow::{anyhow, Context, Result};
@@ -31,19 +37,23 @@ struct Job {
     exchange: usize,
     client: usize,
     down: Downlink,
+    /// Enqueue timestamp (recorder epoch µs; 0 when untraced) — the start
+    /// of the job's `queue` span.
+    sent_us: f64,
 }
 
 /// Scoped worker-pool transport. Create with [`Threaded::spawn`] inside a
 /// [`std::thread::scope`]; dropping it shuts the workers down (the scope
 /// then joins them).
-pub struct Threaded {
+pub struct Threaded<'a> {
     /// Per-worker job queues; client `i` is routed to `i % workers`.
     to_workers: Vec<mpsc::Sender<Job>>,
     results: mpsc::Receiver<(usize, Result<Uplink>)>,
     workers: usize,
+    obs: Obs<'a>,
 }
 
-impl Threaded {
+impl Threaded<'_> {
     /// Spawn `workers` scoped threads, each owning the client states (and
     /// factory-built local problems) of its residual class.
     pub fn spawn<'scope, 'env: 'scope>(
@@ -52,7 +62,20 @@ impl Threaded {
         clients: Vec<Box<dyn ClientStep>>,
         rngs: Vec<Rng>,
         factory: ProblemFactory<'env>,
-    ) -> Threaded {
+    ) -> Threaded<'env> {
+        Threaded::spawn_obs(scope, workers, clients, rngs, factory, Obs::noop())
+    }
+
+    /// [`Threaded::spawn`] with a trace recorder shared by the main thread
+    /// (enqueue stamps) and every worker (queue/compute spans).
+    pub fn spawn_obs<'scope, 'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        clients: Vec<Box<dyn ClientStep>>,
+        rngs: Vec<Rng>,
+        factory: ProblemFactory<'env>,
+        obs: Obs<'env>,
+    ) -> Threaded<'env> {
         assert_eq!(clients.len(), rngs.len(), "rngs/clients length mismatch");
         let workers = workers.clamp(1, clients.len().max(1));
         let mut parts: Vec<Vec<ClientSlot>> = (0..workers).map(|_| Vec::new()).collect();
@@ -65,9 +88,9 @@ impl Threaded {
             let (job_tx, job_rx) = mpsc::channel::<Job>();
             to_workers.push(job_tx);
             let res_tx = res_tx.clone();
-            scope.spawn(move || worker_loop(part, job_rx, res_tx, factory));
+            scope.spawn(move || worker_loop(part, job_rx, res_tx, factory, obs));
         }
-        Threaded { to_workers, results: res_rx, workers }
+        Threaded { to_workers, results: res_rx, workers, obs }
     }
 }
 
@@ -76,6 +99,7 @@ fn worker_loop(
     jobs: mpsc::Receiver<Job>,
     results: mpsc::Sender<(usize, Result<Uplink>)>,
     factory: ProblemFactory<'_>,
+    obs: Obs<'_>,
 ) {
     // Local problems are built here, on the owning thread, and never leave.
     let mut table: Vec<WorkerSlot> = part
@@ -86,9 +110,15 @@ fn worker_loop(
         })
         .collect();
     while let Ok(job) = jobs.recv() {
+        let ctx = Ctx::client(job.round, job.exchange, job.client);
+        if obs.enabled() {
+            // Queue wait: enqueue stamp (main thread) → now (this worker).
+            obs.span_at("queue", Lane::Client(job.client), ctx, job.sent_us, obs.now_us());
+        }
         let reply = match table.iter_mut().find(|(i, ..)| *i == job.client) {
             None => Err(anyhow!("client {} is not owned by this worker", job.client)),
             Some((_, step, rng, local)) => {
+                let _span = obs.span("compute", Lane::Client(job.client), ctx);
                 // A panicking client must still produce a reply, or the
                 // main thread would wait forever for this exchange.
                 match catch_unwind(AssertUnwindSafe(|| {
@@ -212,9 +242,41 @@ mod tests {
             assert!(msg.contains("client 2") && msg.contains("exploded"), "{msg}");
         });
     }
+
+    #[test]
+    fn traced_pool_emits_queue_and_compute_spans() {
+        use crate::obs::{JsonlRecorder, Recorder};
+        let n = 4;
+        let clients: Vec<Box<dyn ClientStep>> =
+            (0..n).map(|id| Box::new(Echo { id, boom: false }) as Box<dyn ClientStep>).collect();
+        let f = factory();
+        let path = std::env::temp_dir()
+            .join(format!("bl_threaded_trace_{}", std::process::id()));
+        let rec = JsonlRecorder::create(&path).unwrap();
+        std::thread::scope(|scope| {
+            let mut t =
+                Threaded::spawn_obs(scope, 2, clients, client_rngs(1, n), &f, Obs::new(&rec));
+            t.exchange(0, 0, sends(n, 1.0)).unwrap();
+        });
+        rec.flush().unwrap();
+        let load = crate::sweep::load_jsonl(&path).unwrap();
+        let names: Vec<&str> = load
+            .rows
+            .iter()
+            .filter_map(|r| r.get("name").and_then(crate::sweep::Json::as_str))
+            .collect();
+        // One queue + one compute span per client job.
+        assert_eq!(names.iter().filter(|s| **s == "queue").count(), n);
+        assert_eq!(names.iter().filter(|s| **s == "compute").count(), n);
+        for row in &load.rows {
+            assert!(row.get("client").is_some(), "{row:?}");
+            assert!(row.get("dur_us").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
 }
 
-impl Transport for Threaded {
+impl Transport for Threaded<'_> {
     fn exchange(
         &mut self,
         round: usize,
@@ -222,10 +284,11 @@ impl Transport for Threaded {
         sends: Vec<(usize, Downlink)>,
     ) -> Result<Vec<(usize, Uplink)>> {
         let expected = sends.len();
+        let sent_us = if self.obs.enabled() { self.obs.now_us() } else { 0.0 };
         for (client, down) in sends {
             let w = client % self.workers;
             self.to_workers[w]
-                .send(Job { round, exchange, client, down })
+                .send(Job { round, exchange, client, down, sent_us })
                 .map_err(|_| anyhow!("transport worker {w} shut down"))?;
         }
         let mut replies: Vec<(usize, Result<Uplink>)> = Vec::with_capacity(expected);

@@ -1,0 +1,245 @@
+//! The observability layer's two contracts (ISSUE 6):
+//!
+//! 1. **Neutrality** — tracing observes, never participates: a run traced
+//!    through a [`JsonlRecorder`] must produce a byte-identical `History`
+//!    (and final iterate) to the same run untraced, for second-order and
+//!    FedNL-family cells on *both* transport backends.
+//! 2. **Reconciliation** — the trace is exact, not approximate: per-round
+//!    uplink/downlink bit sums over the trace's per-message events equal
+//!    the run's `CommTally` (and the `History`'s cumulative per-node bits
+//!    × n) with exact f64 equality. Bit costs are integer-valued and
+//!    n = 4 divides exactly, so there is no tolerance to hide behind.
+
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, RunConfig, TransportSpec};
+use basis_learn::coordinator::{
+    build_split, estimate_smoothness, native_locals, run_federated, run_federated_traced,
+    run_one_round, CommTally, Env,
+};
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::obs::{chrome_trace, load_trace, JsonlRecorder, Obs, Recorder, TraceRow};
+use basis_learn::rng::Rng;
+use basis_learn::sweep::{run_cells_obs, DatasetRef, Json, SweepSpec};
+use basis_learn::transport::{client_rngs, Lockstep};
+
+fn fed(seed: u64) -> FederatedDataset {
+    FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 4, // power of two: per-node bit divisions stay exact
+        m_per_client: 25,
+        dim: 10,
+        intrinsic_dim: 4,
+        noise: 0.0,
+        seed,
+    })
+}
+
+fn cfg_bl1() -> RunConfig {
+    RunConfig {
+        algorithm: Algorithm::Bl1,
+        rounds: 15,
+        hess_comp: CompressorSpec::TopK(4),
+        model_comp: CompressorSpec::TopK(5),
+        p: 0.5,
+        lambda: 1e-3,
+        target_gap: 0.0,
+        seed: 7,
+        ..RunConfig::default()
+    }
+}
+
+fn cfg_fednl() -> RunConfig {
+    RunConfig {
+        algorithm: Algorithm::FedNl,
+        rounds: 12,
+        hess_comp: CompressorSpec::RankR(1),
+        lambda: 1e-3,
+        target_gap: 0.0,
+        seed: 7,
+        ..RunConfig::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("bl_obs_it_{tag}_{}", std::process::id()))
+}
+
+/// Sum the traced wire bits for one (cell?, round, direction).
+fn bits_sum(rows: &[TraceRow], cell: Option<usize>, round: usize, dir: &str) -> f64 {
+    rows.iter()
+        .filter(|r| {
+            r.is_bits()
+                && (cell.is_none() || r.cell == cell)
+                && r.round == Some(round)
+                && r.dir.as_deref() == Some(dir)
+        })
+        .map(|r| r.bits.unwrap())
+        .sum()
+}
+
+#[test]
+fn tracing_is_neutral_for_bl1_and_fednl_on_both_backends() {
+    for (tag, base) in [("bl1", cfg_bl1()), ("fednl", cfg_fednl())] {
+        for (ti, transport) in [TransportSpec::Lockstep, TransportSpec::Threaded(3)]
+            .into_iter()
+            .enumerate()
+        {
+            let cfg = RunConfig { transport, ..base.clone() };
+            let f = fed(2026);
+            let plain = run_federated(&f, &cfg).unwrap();
+            let path = tmp_path(&format!("neutral_{tag}_{ti}"));
+            let rec = JsonlRecorder::create(&path).unwrap();
+            let traced = run_federated_traced(&f, &cfg, &rec).unwrap();
+            rec.flush().unwrap();
+            // Byte-identical history: every f64 must match exactly.
+            assert_eq!(
+                plain.history.records, traced.history.records,
+                "{tag}/{transport}: tracing changed the history"
+            );
+            assert_eq!(plain.history.setup_bits_per_node, traced.history.setup_bits_per_node);
+            assert_eq!(plain.history.label, traced.history.label);
+            assert_eq!(plain.x_final, traced.x_final);
+            // ... and the traced run really did record something substantial.
+            let rows = load_trace(&path).unwrap().rows;
+            assert!(
+                rows.len() > cfg.rounds * 4,
+                "{tag}/{transport}: only {} trace events",
+                rows.len()
+            );
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}
+
+#[test]
+fn per_round_trace_bits_reconcile_with_comm_tally() {
+    let f = fed(11);
+    let cfg = cfg_bl1();
+    let locals = native_locals(&f);
+    let features: Vec<_> = f.clients.iter().map(|c| Some(c.a.clone())).collect();
+    let smoothness = estimate_smoothness(&locals, cfg.lambda);
+    let path = tmp_path("tally");
+    let rec = JsonlRecorder::create(&path).unwrap();
+    let env = Env {
+        locals: &locals,
+        cfg: &cfg,
+        d: f.dim(),
+        n: f.n_clients(),
+        smoothness,
+        features,
+        obs: Obs::new(&rec),
+    };
+    let (mut server, clients) = build_split(&env).unwrap();
+    let mut transport =
+        Lockstep::new(&locals, clients, client_rngs(cfg.seed, env.n)).with_obs(env.obs);
+    let mut rng = Rng::new(cfg.seed);
+    let mut tallies: Vec<CommTally> = Vec::new();
+    for round in 0..cfg.rounds {
+        tallies
+            .push(run_one_round(&env, server.as_mut(), &mut transport, round, &mut rng).unwrap());
+    }
+    rec.flush().unwrap();
+    let rows = load_trace(&path).unwrap().rows;
+    // Exact reconciliation, round by round, direction by direction.
+    for (round, tally) in tallies.iter().enumerate() {
+        assert_eq!(bits_sum(&rows, None, round, "up"), tally.up_bits, "round {round} uplink");
+        assert_eq!(
+            bits_sum(&rows, None, round, "down"),
+            tally.down_bits,
+            "round {round} downlink"
+        );
+    }
+    // Every wire event is attributable: direction, client, message kind.
+    for r in rows.iter().filter(|r| r.is_bits()) {
+        assert!(r.client.is_some() && r.kind.is_some(), "unattributed bits event: {r:?}");
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn sweep_trace_attributes_cells_and_reconciles_histories() {
+    // A sweep over ≥ 2 algorithms (the acceptance-criteria scenario).
+    let spec = SweepSpec {
+        algos: vec![Algorithm::Bl1, Algorithm::FedNl],
+        datasets: vec![DatasetRef::Synthetic(SyntheticSpec {
+            n_clients: 4,
+            m_per_client: 20,
+            dim: 8,
+            intrinsic_dim: 3,
+            noise: 0.0,
+            seed: 0,
+        })],
+        hess_comps: vec![CompressorSpec::TopK(3)],
+        seeds: vec![1],
+        base: RunConfig { rounds: 10, target_gap: 0.0, ..RunConfig::default() },
+        ..SweepSpec::default()
+    };
+    let cells = spec.expand();
+    assert_eq!(cells.len(), 2);
+    let path = tmp_path("sweep");
+    let rec = JsonlRecorder::create(&path).unwrap();
+    let results = run_cells_obs(&cells, 2, Obs::new(&rec), |_| {});
+    rec.flush().unwrap();
+    let rows = load_trace(&path).unwrap().rows;
+    // Every event in a sweep trace is attributed to its cell.
+    for r in &rows {
+        assert!(r.cell.is_some(), "cell-less event: {} {}", r.ev, r.name);
+    }
+    assert_eq!(rows.iter().filter(|r| r.name == "cell").count(), 2, "one cell span per cell");
+    assert_eq!(
+        rows.iter().filter(|r| r.name == "dataset_cache").count(),
+        2,
+        "one cache mark per cell"
+    );
+    // Per-cell, per-round: trace bits == history's per-node cumulative
+    // deltas × n, exactly (n = 4, so the division roundtrips losslessly).
+    for res in &results {
+        let h = res.require_history().unwrap();
+        let n = 4.0;
+        let (mut prev_up, mut prev_down) = (0.0, 0.0);
+        for record in &h.records {
+            assert_eq!(
+                bits_sum(&rows, Some(res.id), record.round, "up"),
+                (record.bits_up_per_node - prev_up) * n,
+                "cell {} round {} uplink",
+                res.id,
+                record.round
+            );
+            assert_eq!(
+                bits_sum(&rows, Some(res.id), record.round, "down"),
+                (record.bits_down_per_node - prev_down) * n,
+                "cell {} round {} downlink",
+                res.id,
+                record.round
+            );
+            prev_up = record.bits_up_per_node;
+            prev_down = record.bits_down_per_node;
+        }
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn chrome_export_round_trips_a_real_trace() {
+    let f = fed(5);
+    let cfg = RunConfig { rounds: 5, ..cfg_fednl() };
+    let path = tmp_path("chrome");
+    let rec = JsonlRecorder::create(&path).unwrap();
+    run_federated_traced(&f, &cfg, &rec).unwrap();
+    rec.flush().unwrap();
+    let rows = load_trace(&path).unwrap().rows;
+    let text = chrome_trace(&rows);
+    let parsed = Json::parse(&text).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let count = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+            .count()
+    };
+    let spans = rows.iter().filter(|r| r.is_span()).count();
+    assert!(spans > 0);
+    assert_eq!(count("X"), spans, "one complete event per span");
+    assert_eq!(count("i"), rows.len() - spans, "one instant per bits/mark event");
+    assert!(count("M") >= 2, "thread_name metadata for server + clients");
+    std::fs::remove_file(&path).unwrap();
+}
