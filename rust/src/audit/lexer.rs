@@ -1,0 +1,349 @@
+//! A lightweight Rust tokenizer — just enough lexical structure for the
+//! audit rules, with none of `syn`'s weight (the crate is zero-dependency
+//! by policy, and the audit must not change that).
+//!
+//! The lexer's one job is to let rules match *code*, never prose: string
+//! literals keep their decoded-ish text (rules need `push_vector("grad", …)`
+//! kinds), comments are kept as tokens (the `audit:allow` escapes live
+//! there), and everything else — identifiers, numbers, single-char
+//! punctuation — comes out with a line number attached. Multi-character
+//! operators are deliberately *not* fused: `::` is two `:` tokens, which
+//! keeps the lexer trivial and makes rule patterns explicit.
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unwrap`, `mod`, `HashMap`, …).
+    Ident,
+    /// String literal; `text` holds the raw contents *between* the quotes
+    /// (escapes unprocessed — rules only match simple tag strings).
+    Str,
+    /// Character literal (contents not exposed; rules never need them).
+    Char,
+    /// Numeric literal (integer part only; `1.5` is `Num . Num`).
+    Num,
+    /// Lifetime (`'a`) — distinct from `Char` so quotes cannot confuse
+    /// string masking.
+    Lifetime,
+    /// Single punctuation character in `text`.
+    Punct,
+    /// Comment (line or block); `text` holds the full comment including
+    /// its delimiters. Doc comments are comments too, which is what masks
+    /// `.unwrap()` in rustdoc examples from the panic rule.
+    Comment,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// Is this an identifier with exactly this text?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this a punctuation token with exactly this character?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// Tokenize Rust source. Never fails: unterminated constructs run to end of
+/// input, and any byte the lexer does not understand becomes a `Punct` —
+/// the audit scans files that are known to compile, so graceful degradation
+/// beats error plumbing.
+pub fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    // Count newlines inside src[start..end) and advance `line`.
+    let count_lines = |line: &mut u32, start: usize, end: usize| {
+        *line += b[start..end].iter().filter(|&&c| c == b'\n').count() as u32;
+    };
+
+    while i < n {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let end = src[i..].find('\n').map(|j| i + j).unwrap_or(n);
+                toks.push(Token { kind: TokKind::Comment, text: src[i..end].into(), line });
+                i = end;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                // Block comments nest in Rust.
+                let start = i;
+                let tok_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if i + 1 < n && b[i] == b'/' && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if i + 1 < n && b[i] == b'*' && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                count_lines(&mut line, start, i);
+                toks.push(Token {
+                    kind: TokKind::Comment,
+                    text: src[start..i].into(),
+                    line: tok_line,
+                });
+            }
+            b'"' => {
+                let (end, text) = scan_string(src, i);
+                let tok_line = line;
+                count_lines(&mut line, i, end);
+                toks.push(Token { kind: TokKind::Str, text, line: tok_line });
+                i = end;
+            }
+            b'r' | b'b' if raw_string_hashes(&src[i..]).is_some() => {
+                // r"…", r#"…"#, b"…", br#"…"# — find the matching close.
+                // audit:allow(panic-safety): the match guard just checked is_some().
+                let (prefix_len, hashes) = raw_string_hashes(&src[i..]).unwrap();
+                let body_start = i + prefix_len;
+                if hashes == 0 && src[i..].starts_with("b\"") {
+                    // Plain byte string: ordinary escape rules.
+                    let (end, text) = scan_string(src, i + 1);
+                    let tok_line = line;
+                    count_lines(&mut line, i, end);
+                    toks.push(Token { kind: TokKind::Str, text, line: tok_line });
+                    i = end;
+                } else {
+                    let close = format!("\"{}", "#".repeat(hashes));
+                    let end = src[body_start..]
+                        .find(&close)
+                        .map(|j| body_start + j + close.len())
+                        .unwrap_or(n);
+                    let text_end = end.saturating_sub(close.len()).max(body_start);
+                    let tok_line = line;
+                    count_lines(&mut line, i, end);
+                    toks.push(Token {
+                        kind: TokKind::Str,
+                        text: src[body_start..text_end].into(),
+                        line: tok_line,
+                    });
+                    i = end;
+                }
+            }
+            b'\'' => {
+                // Char literal ('x', '\n', '\u{1F600}') vs lifetime ('a).
+                if let Some(len) = char_literal_len(&src[i..]) {
+                    let tok_line = line;
+                    count_lines(&mut line, i, i + len);
+                    toks.push(Token { kind: TokKind::Char, text: String::new(), line: tok_line });
+                    i += len;
+                } else {
+                    let mut j = i + 1;
+                    while j < n && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                        j += 1;
+                    }
+                    toks.push(Token {
+                        kind: TokKind::Lifetime,
+                        text: src[i..j].into(),
+                        line,
+                    });
+                    i = j;
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let mut j = i + 1;
+                while j < n && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Ident, text: src[i..j].into(), line });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                // Loose: digits + alphanumerics + `_` (covers 0xFF, 1_000,
+                // 2e3's mantissa). `1.5` splits at the dot, which is fine.
+                let mut j = i + 1;
+                while j < n && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Num, text: src[i..j].into(), line });
+                i = j;
+            }
+            _ => {
+                toks.push(Token {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// If `rest` starts a raw (or raw byte) string — `r"`, `r#…#"`, `br"`,
+/// `b"` — return `(prefix length through the opening quote, hash count)`.
+fn raw_string_hashes(rest: &str) -> Option<(usize, usize)> {
+    let bytes = rest.as_bytes();
+    let mut i = 0usize;
+    if bytes.first() == Some(&b'b') {
+        i += 1;
+    }
+    if bytes.get(i) == Some(&b'r') {
+        i += 1;
+    } else if i == 1 && bytes.get(i) == Some(&b'"') {
+        // b"…" — byte string without `r`.
+        return Some((2, 0));
+    } else {
+        return None;
+    }
+    let mut hashes = 0usize;
+    while bytes.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if bytes.get(i) == Some(&b'"') {
+        Some((i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Scan an ordinary `"…"` string starting at `start` (which must be the
+/// opening quote). Returns `(index past the closing quote, contents)`.
+fn scan_string(src: &str, start: usize) -> (usize, String) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => j = (j + 2).min(n),
+            b'"' => return (j + 1, src[start + 1..j].into()),
+            _ => j += 1,
+        }
+    }
+    (n, src[(start + 1).min(n)..].into())
+}
+
+/// Length of a char literal at the start of `rest` (which begins with `'`),
+/// or `None` if this is a lifetime / stray quote.
+fn char_literal_len(rest: &str) -> Option<usize> {
+    let b = rest.as_bytes();
+    if b.len() < 3 {
+        return None;
+    }
+    if b[1] == b'\\' {
+        // Escaped: find the closing quote (handles \n, \', \u{…}).
+        let mut j = 2;
+        while j < b.len() && b[j] != b'\'' {
+            j += 1;
+        }
+        return if j < b.len() { Some(j + 1) } else { None };
+    }
+    // Unescaped char literal is exactly '<one char>' — possibly multibyte.
+    let mut chars = rest.char_indices().skip(1);
+    let (_, c) = chars.next()?;
+    if c == '\'' {
+        return None; // `''` is not a char literal.
+    }
+    let (close_idx, close) = chars.next()?;
+    if close == '\'' {
+        Some(close_idx + 1)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let t = kinds("foo.bar(1, x_2);");
+        assert_eq!(
+            t,
+            vec![
+                (TokKind::Ident, "foo".into()),
+                (TokKind::Punct, ".".into()),
+                (TokKind::Ident, "bar".into()),
+                (TokKind::Punct, "(".into()),
+                (TokKind::Num, "1".into()),
+                (TokKind::Punct, ",".into()),
+                (TokKind::Ident, "x_2".into()),
+                (TokKind::Punct, ")".into()),
+                (TokKind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_keep_contents_and_mask_code() {
+        let t = kinds(r#"push("grad .unwrap() inside", 1)"#);
+        assert!(t.contains(&(TokKind::Str, "grad .unwrap() inside".into())));
+        // The unwrap inside the string is not an Ident token.
+        assert!(!t.iter().any(|(k, s)| *k == TokKind::Ident && s == "unwrap"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let t = kinds(r###"let s = r#"a "quoted" b"#; let b = b"xyz";"###);
+        assert!(t.contains(&(TokKind::Str, "a \"quoted\" b".into())));
+        assert!(t.contains(&(TokKind::Str, "xyz".into())));
+    }
+
+    #[test]
+    fn comments_are_tokens_with_text() {
+        let t = lex("x // audit:allow(panic-safety): fine\n/* block\n.unwrap() */ y");
+        let comments: Vec<_> =
+            t.iter().filter(|t| t.kind == TokKind::Comment).collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("audit:allow"));
+        assert_eq!(comments[0].line, 1);
+        assert_eq!(comments[1].line, 2);
+        // Code in comments never becomes idents.
+        assert!(!t.iter().any(|t| t.is_ident("unwrap")));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let t = kinds("let c = 'x'; fn f<'a>(v: &'a str) { let n = '\\n'; }");
+        let chars = t.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        let lifes = t.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+        assert_eq!(chars, 2);
+        assert_eq!(lifes, 2);
+    }
+
+    #[test]
+    fn line_numbers_advance_through_multiline_tokens() {
+        let src = "a\n\"two\nline\"\nb";
+        let t = lex(src);
+        assert_eq!(t[0].line, 1); // a
+        assert_eq!(t[1].line, 2); // the string starts on line 2
+        assert_eq!(t[2].line, 4); // b — the string consumed line 3
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let t = lex("/* outer /* inner */ still */ x");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].kind, TokKind::Comment);
+        assert!(t[1].is_ident("x"));
+    }
+}

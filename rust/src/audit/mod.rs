@@ -1,0 +1,251 @@
+//! `repro audit` — a zero-dependency static-analysis pass over the crate's
+//! own source.
+//!
+//! The paper's claims rest on exact bit accounting and bit-for-bit
+//! deterministic reproduction; the dynamic tests
+//! (`tests/transport_equivalence.rs`, `tests/obs_trace.rs`) enforce those
+//! invariants only on the configurations they happen to execute. This pass
+//! enforces them *at the source level*: a new message kind that forgets to
+//! declare its charge policy, a `HashMap` order leak, a stray wall-clock
+//! read, or an algorithm missing from the equivalence test fails
+//! `repro audit` (and CI) before any run executes.
+//!
+//! Structure: [`lexer`] tokenizes (no `syn` — the crate is
+//! anyhow-only by policy), [`source`] shapes files (test-code exclusion,
+//! `audit:allow` escapes), [`rules`] holds the rule registry, and
+//! [`report`] renders human tables and JSONL. The rule catalogue, the
+//! rationale for each rule, and the escape syntax are documented in
+//! `docs/AUDIT.md`.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+use anyhow::{ensure, Context, Result};
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// What to audit and how strictly.
+pub struct AuditConfig {
+    /// Crate root: the directory containing `src/` (and, for the full rule
+    /// set, `tests/` and a `docs/` beside or above it).
+    pub root: PathBuf,
+    /// Cross-check the text-parsed registries against the compiled-in ones
+    /// (`transport::kinds::KINDS`, `Algorithm::all()`). True only when
+    /// auditing this crate itself — fixture crates declare their own.
+    pub check_runtime_registry: bool,
+}
+
+impl AuditConfig {
+    /// Audit this crate's own source tree (the CI gate and the self-audit
+    /// test). The root is baked in at compile time; pass `--root` to the
+    /// CLI to audit a checkout living elsewhere.
+    pub fn for_this_crate() -> AuditConfig {
+        AuditConfig {
+            root: PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+            check_runtime_registry: true,
+        }
+    }
+
+    /// Audit an arbitrary crate-shaped tree (fixtures, other checkouts).
+    pub fn for_root(root: impl Into<PathBuf>) -> AuditConfig {
+        AuditConfig { root: root.into(), check_runtime_registry: false }
+    }
+}
+
+/// One rule violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the scanned `src/` (or the literal `tests/…` /
+    /// `docs/…` path for cross-file checks).
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// The outcome of one audit pass.
+pub struct AuditReport {
+    /// Violations after `audit:allow` suppression, sorted by
+    /// (file, line, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings suppressed by justified `audit:allow` escapes.
+    pub allows_honored: usize,
+}
+
+impl AuditReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Everything the rules see.
+pub struct AuditCtx<'a> {
+    pub cfg: &'a AuditConfig,
+    pub files: &'a [SourceFile],
+    /// `docs/TRACING.md` contents (checked beside `root`, then above it).
+    pub tracing_md: Option<String>,
+    /// `tests/transport_equivalence.rs`, lexed with tests *included*.
+    pub equivalence: Option<SourceFile>,
+}
+
+/// Run the full audit.
+pub fn run(cfg: &AuditConfig) -> Result<AuditReport> {
+    let src_dir = cfg.root.join("src");
+    ensure!(
+        src_dir.is_dir(),
+        "audit root {} has no src/ directory",
+        cfg.root.display()
+    );
+    let mut files = Vec::new();
+    for path in source::walk_rs_files(&src_dir)? {
+        let rel = rel_path(&path, &src_dir);
+        files.push(SourceFile::load(&path, rel, true)?);
+    }
+
+    let tracing_md = [cfg.root.join("docs/TRACING.md"), cfg.root.join("../docs/TRACING.md")]
+        .iter()
+        .find(|p| p.is_file())
+        .map(|p| {
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))
+        })
+        .transpose()?;
+
+    let eq_path = cfg.root.join("tests/transport_equivalence.rs");
+    let equivalence = if eq_path.is_file() {
+        Some(SourceFile::load(&eq_path, "tests/transport_equivalence.rs".into(), false)?)
+    } else {
+        None
+    };
+
+    let ctx = AuditCtx { cfg, files: &files, tracing_md, equivalence };
+    let mut raw = Vec::new();
+    rules::run_all(&ctx, &mut raw);
+    if cfg.check_runtime_registry {
+        cross_check_runtime(&ctx, &mut raw);
+    }
+
+    // Suppress findings covered by justified allows (marking them used).
+    let mut findings = Vec::new();
+    let mut allows_honored = 0usize;
+    for f in raw {
+        let allow = files
+            .iter()
+            .find(|sf| sf.rel == f.file)
+            .and_then(|sf| sf.allow_for(f.rule, f.line));
+        match allow {
+            Some(a) => {
+                a.used.set(true);
+                allows_honored += 1;
+            }
+            None => findings.push(f),
+        }
+    }
+
+    // Escape hygiene: malformed/unjustified directives are findings, and
+    // so are justified ones that no longer suppress anything.
+    for sf in &files {
+        for a in &sf.allows {
+            if !rules::is_allowable_rule(&a.rule) {
+                findings.push(Finding {
+                    rule: rules::ALLOW_SYNTAX,
+                    file: sf.rel.clone(),
+                    line: a.line,
+                    msg: format!(
+                        "audit:allow names unknown rule \"{}\"; known rules: {}",
+                        a.rule,
+                        rule_id_list()
+                    ),
+                });
+            } else if !a.justified {
+                findings.push(Finding {
+                    rule: rules::ALLOW_SYNTAX,
+                    file: sf.rel.clone(),
+                    line: a.line,
+                    msg: format!(
+                        "audit:allow({}) needs a justification: \
+                         `// audit:allow({}): <why this is sound>`",
+                        a.rule, a.rule
+                    ),
+                });
+            } else if !a.used.get() {
+                findings.push(Finding {
+                    rule: rules::UNUSED_ALLOW,
+                    file: sf.rel.clone(),
+                    line: a.line,
+                    msg: format!(
+                        "audit:allow({}) suppresses nothing; remove the stale escape",
+                        a.rule
+                    ),
+                });
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(AuditReport { findings, files_scanned: files.len(), allows_honored })
+}
+
+/// The text parsers double as the fixtures' ground truth, so when auditing
+/// this crate they must agree exactly with the compiled registries.
+fn cross_check_runtime(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    use crate::config::Algorithm;
+    use crate::transport::kinds::KINDS;
+
+    let mut parsed_kinds = Vec::new();
+    for file in ctx.files {
+        rules::bit_accounting::collect_registry(file, &mut parsed_kinds);
+    }
+    let mut parsed: Vec<&str> = parsed_kinds.iter().map(|e| e.name.as_str()).collect();
+    let mut compiled: Vec<&str> = KINDS.iter().map(|k| k.name).collect();
+    parsed.sort_unstable();
+    compiled.sort_unstable();
+    if parsed != compiled {
+        out.push(Finding {
+            rule: "registry-sync",
+            file: "transport/kinds.rs".into(),
+            line: 1,
+            msg: format!(
+                "text-parsed kind registry {parsed:?} disagrees with the compiled \
+                 transport::kinds::KINDS {compiled:?}"
+            ),
+        });
+    }
+
+    let mut parsed_algos: Vec<String> = rules::registry_sync::algorithm_variants(ctx)
+        .into_iter()
+        .map(|(n, _, _)| n)
+        .collect();
+    let mut compiled_algos: Vec<String> =
+        Algorithm::all().iter().map(|a| format!("{a:?}")).collect();
+    parsed_algos.sort_unstable();
+    compiled_algos.sort_unstable();
+    if parsed_algos != compiled_algos {
+        out.push(Finding {
+            rule: "registry-sync",
+            file: "config.rs".into(),
+            line: 1,
+            msg: format!(
+                "text-parsed Algorithm variants {parsed_algos:?} disagree with the \
+                 compiled Algorithm::all() {compiled_algos:?}"
+            ),
+        });
+    }
+}
+
+fn rule_id_list() -> String {
+    rules::RULES.iter().map(|r| r.id).collect::<Vec<_>>().join(", ")
+}
+
+fn rel_path(path: &Path, base: &Path) -> String {
+    path.strip_prefix(base)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

@@ -1,0 +1,110 @@
+//! Rendering an [`AuditReport`] for humans (aligned table on stdout) and
+//! machines (JSONL, same value model as the sweep sink).
+
+use super::AuditReport;
+use crate::sweep::jsonl::Json;
+
+/// Human-readable report: one row per finding plus a summary line.
+pub fn render_table(report: &AuditReport) -> String {
+    let mut out = String::new();
+    if !report.findings.is_empty() {
+        let loc_w = report
+            .findings
+            .iter()
+            .map(|f| f.file.len() + 1 + digits(f.line))
+            .max()
+            .unwrap_or(0);
+        let rule_w =
+            report.findings.iter().map(|f| f.rule.len()).max().unwrap_or(0);
+        for f in &report.findings {
+            let loc = format!("{}:{}", f.file, f.line);
+            out.push_str(&format!(
+                "{loc:<loc_w$}  {rule:<rule_w$}  {msg}\n",
+                rule = f.rule,
+                msg = f.msg
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "audit: {} finding(s) in {} file(s) scanned, {} allow(s) honored\n",
+        report.findings.len(),
+        report.files_scanned,
+        report.allows_honored
+    ));
+    out
+}
+
+/// Machine-readable report: one `finding` row per violation, then one
+/// `summary` row (always last, so a consumer can detect truncation).
+pub fn render_jsonl(report: &AuditReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        let row = Json::Obj(vec![
+            ("ev".into(), Json::str("finding")),
+            ("rule".into(), Json::str(f.rule)),
+            ("file".into(), Json::str(f.file.as_str())),
+            ("line".into(), Json::num(f.line as f64)),
+            ("msg".into(), Json::str(f.msg.as_str())),
+        ]);
+        out.push_str(&row.render());
+        out.push('\n');
+    }
+    let summary = Json::Obj(vec![
+        ("ev".into(), Json::str("summary")),
+        ("findings".into(), Json::num(report.findings.len() as f64)),
+        ("files_scanned".into(), Json::num(report.files_scanned as f64)),
+        ("allows_honored".into(), Json::num(report.allows_honored as f64)),
+    ]);
+    out.push_str(&summary.render());
+    out.push('\n');
+    out
+}
+
+fn digits(mut n: u32) -> usize {
+    let mut d = 1;
+    while n >= 10 {
+        n /= 10;
+        d += 1;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::Finding;
+
+    fn report() -> AuditReport {
+        AuditReport {
+            findings: vec![Finding {
+                rule: "panic-safety",
+                file: "a/b.rs".into(),
+                line: 12,
+                msg: "`.unwrap()` can panic".into(),
+            }],
+            files_scanned: 3,
+            allows_honored: 2,
+        }
+    }
+
+    #[test]
+    fn table_lists_findings_and_summary() {
+        let t = render_table(&report());
+        assert!(t.contains("a/b.rs:12"));
+        assert!(t.contains("panic-safety"));
+        assert!(t.contains("audit: 1 finding(s) in 3 file(s) scanned, 2 allow(s) honored"));
+    }
+
+    #[test]
+    fn jsonl_rows_parse_back() {
+        let j = render_jsonl(&report());
+        let lines: Vec<_> = j.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let row = Json::parse(lines[0]).unwrap();
+        assert_eq!(row.get("ev").and_then(|v| v.as_str()), Some("finding"));
+        assert_eq!(row.get("line").and_then(|v| v.as_f64()), Some(12.0));
+        let sum = Json::parse(lines[1]).unwrap();
+        assert_eq!(sum.get("ev").and_then(|v| v.as_str()), Some("summary"));
+        assert_eq!(sum.get("findings").and_then(|v| v.as_f64()), Some(1.0));
+    }
+}

@@ -1,0 +1,202 @@
+//! `bit-accounting`: the wire vocabulary is closed and every kind's charge
+//! policy is declared exactly once.
+//!
+//! Ground truth is the `Kind { name: …, dir: …, charge: … }` table in
+//! `transport/kinds.rs` — parsed from *source text*, not from the compiled
+//! registry, so fixture crates under `tests/audit_fixtures/` can declare
+//! their own vocabularies and the rule still applies. When auditing the
+//! real crate the orchestrator additionally cross-checks the parsed table
+//! against the compiled-in `transport::kinds::KINDS`, so the text parser
+//! cannot silently drift from the code.
+//!
+//! Checks:
+//! 1. every `push_vector/matrix/scalars/flags` call uses a *string-literal*
+//!    kind (a computed kind defeats static accounting);
+//! 2. every pushed kind is declared in the registry;
+//! 3. a `Charge::Charged` kind is never pushed with `BitCost::zero()`;
+//! 4. a `Charge::Free` kind is always pushed with exactly `BitCost::zero()`
+//!    (`Charge::Mixed` skips 3–4);
+//! 5. every registered kind has at least one push site (no dead vocabulary);
+//! 6. registry names are unique.
+
+use super::super::{AuditCtx, Finding};
+use super::{is_bitcost_zero, is_method_call, top_level_args};
+use crate::audit::lexer::TokKind;
+
+const RULE: &str = "bit-accounting";
+const PUSHERS: [&str; 4] = ["push_vector", "push_matrix", "push_scalars", "push_flags"];
+
+struct PushSite {
+    file: String,
+    line: u32,
+    /// `None` ⇒ the kind argument was not a string literal.
+    kind: Option<String>,
+    /// Whether the cost argument is literally `BitCost::zero()`.
+    zero_cost: bool,
+}
+
+pub(crate) struct RegEntry {
+    pub file: String,
+    pub line: u32,
+    pub name: String,
+    pub charge: String,
+}
+
+pub fn check(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    let mut pushes = Vec::new();
+    let mut registry = Vec::new();
+    for file in ctx.files {
+        collect_push_sites(file, &mut pushes);
+        collect_registry(file, &mut registry);
+    }
+
+    // 6. duplicate registry names.
+    for (i, e) in registry.iter().enumerate() {
+        if registry[..i].iter().any(|p| p.name == e.name) {
+            out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!("message kind \"{}\" is registered more than once", e.name),
+            });
+        }
+    }
+
+    for p in &pushes {
+        let Some(kind) = &p.kind else {
+            // 1. computed kind.
+            out.push(Finding {
+                rule: RULE,
+                file: p.file.clone(),
+                line: p.line,
+                msg: "message kind must be a string literal so its charge policy \
+                      can be statically accounted for"
+                    .into(),
+            });
+            continue;
+        };
+        let Some(entry) = registry.iter().find(|e| &e.name == kind) else {
+            // 2. unregistered kind.
+            out.push(Finding {
+                rule: RULE,
+                file: p.file.clone(),
+                line: p.line,
+                msg: format!(
+                    "message kind \"{kind}\" is not declared in the kinds registry \
+                     (transport/kinds.rs); register it with its charge policy"
+                ),
+            });
+            continue;
+        };
+        // 3./4. charge policy vs. the cost argument.
+        match entry.charge.as_str() {
+            "Charged" if p.zero_cost => out.push(Finding {
+                rule: RULE,
+                file: p.file.clone(),
+                line: p.line,
+                msg: format!(
+                    "kind \"{kind}\" is registered Charged but pushed with BitCost::zero(); \
+                     either charge its bits or register it Free"
+                ),
+            }),
+            "Free" if !p.zero_cost => out.push(Finding {
+                rule: RULE,
+                file: p.file.clone(),
+                line: p.line,
+                msg: format!(
+                    "kind \"{kind}\" is registered Free but pushed with a non-zero cost; \
+                     either push BitCost::zero() or register it Charged"
+                ),
+            }),
+            _ => {}
+        }
+    }
+
+    // 5. dead vocabulary.
+    for e in &registry {
+        let used = pushes.iter().any(|p| p.kind.as_deref() == Some(e.name.as_str()));
+        if !used {
+            out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!(
+                    "registered kind \"{}\" has no push site; remove it or wire it up",
+                    e.name
+                ),
+            });
+        }
+    }
+}
+
+fn collect_push_sites(file: &crate::audit::source::SourceFile, out: &mut Vec<PushSite>) {
+    let code = &file.code;
+    for i in 0..code.len() {
+        if code[i].kind != TokKind::Ident
+            || !PUSHERS.contains(&code[i].text.as_str())
+            || !is_method_call(code, i, &code[i].text)
+        {
+            continue;
+        }
+        let (args, _) = top_level_args(code, i + 1);
+        let kind = args.first().and_then(|&(a, b)| {
+            if b - a == 1 && code[a].kind == TokKind::Str {
+                Some(code[a].text.clone())
+            } else {
+                None
+            }
+        });
+        let zero_cost = args.last().is_some_and(|&r| is_bitcost_zero(code, r));
+        out.push(PushSite { file: file.rel.clone(), line: code[i].line, kind, zero_cost });
+    }
+}
+
+/// Parse `Kind { name: "…", dir: Direction::…, charge: Charge::… }` struct
+/// literals out of the token stream (skipping the `struct Kind { … }`
+/// declaration itself).
+pub(crate) fn collect_registry(
+    file: &crate::audit::source::SourceFile,
+    out: &mut Vec<RegEntry>,
+) {
+    let code = &file.code;
+    for i in 0..code.len() {
+        if !code[i].is_ident("Kind")
+            || !code.get(i + 1).is_some_and(|t| t.is_punct('{'))
+            || (i > 0 && code[i - 1].is_ident("struct"))
+        {
+            continue;
+        }
+        let end = super::match_brace(code, i + 1);
+        let body = &code[i + 2..end.saturating_sub(1).max(i + 2)];
+        let mut name = None;
+        let mut charge = None;
+        let mut j = 0usize;
+        while j + 1 < body.len() {
+            if body[j].kind == TokKind::Ident && body[j + 1].is_punct(':') {
+                match body[j].text.as_str() {
+                    "name" => {
+                        if body.get(j + 2).map(|t| t.kind) == Some(TokKind::Str) {
+                            name = body.get(j + 2).map(|t| t.text.clone());
+                        }
+                    }
+                    "charge" => {
+                        // charge: Charge::<Variant>
+                        if body.get(j + 2).is_some_and(|t| t.is_ident("Charge")) {
+                            charge = body.get(j + 5).map(|t| t.text.clone());
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if let Some(name) = name {
+            out.push(RegEntry {
+                file: file.rel.clone(),
+                line: code[i].line,
+                name,
+                charge: charge.unwrap_or_default(),
+            });
+        }
+    }
+}

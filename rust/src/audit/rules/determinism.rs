@@ -1,0 +1,100 @@
+//! The determinism rules: nothing that feeds `History`, fingerprints, or
+//! JSONL output may depend on iteration order, wall clocks, or ambient
+//! randomness.
+//!
+//! * `determinism-hash` — any `HashMap`/`HashSet` token. Std hash maps
+//!   iterate in randomized order, which is exactly the class of bug the
+//!   transport-equivalence contract exists to exclude; `BTreeMap`/`BTreeSet`
+//!   or sorted iteration are the sanctioned replacements everywhere, not
+//!   just on the output path — a hash map that is "only used for lookups"
+//!   today is one refactor away from being iterated.
+//! * `determinism-clock` — `Instant::now`/`SystemTime::now` call paths.
+//!   Clocks are the observability layer's business: `obs/` and
+//!   `bench_util.rs` are exempt wholesale, and the two progress-reporting
+//!   sites outside them carry justified allows.
+//! * `determinism-rng` — `Rng::new(…)` outside `rng.rs` must visibly take
+//!   a seed: some argument identifier has to contain `seed`. Everything
+//!   else must split streams via `Rng::derive`, so every random draw in a
+//!   run is a pure function of the run seed.
+
+use super::super::{AuditCtx, Finding};
+use super::{path_call, top_level_args};
+use crate::audit::lexer::TokKind;
+
+pub fn check_hash(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    const RULE: &str = "determinism-hash";
+    for file in ctx.files {
+        for t in &file.code {
+            if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.rel.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "`{}` iterates in randomized order; use the BTree form or sorted iteration",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+pub fn check_clock(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    const RULE: &str = "determinism-clock";
+    for file in ctx.files {
+        if file.rel.starts_with("obs/") || file.rel == "bench_util.rs" {
+            continue;
+        }
+        let code = &file.code;
+        for i in 0..code.len() {
+            let t = &code[i];
+            if t.kind != TokKind::Ident || (t.text != "Instant" && t.text != "SystemTime") {
+                continue;
+            }
+            let is_now = code.get(i + 1).is_some_and(|a| a.is_punct(':'))
+                && code.get(i + 2).is_some_and(|a| a.is_punct(':'))
+                && code.get(i + 3).is_some_and(|a| a.is_ident("now"));
+            if is_now {
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.rel.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "`{}::now` outside obs/ and bench_util; clocks must not reach run state",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+pub fn check_rng(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    const RULE: &str = "determinism-rng";
+    for file in ctx.files {
+        if file.rel == "rng.rs" {
+            continue; // the stream-derivation module itself
+        }
+        let code = &file.code;
+        for i in 0..code.len() {
+            let Some(open) = path_call(code, i, "Rng", "new") else { continue };
+            let (args, _) = top_level_args(code, open);
+            let seeded = args.iter().any(|&(a, b)| {
+                code[a..b].iter().any(|t| {
+                    t.kind == TokKind::Ident && t.text.to_ascii_lowercase().contains("seed")
+                })
+            });
+            if !seeded {
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.rel.clone(),
+                    line: code[i].line,
+                    msg: "`Rng::new` without an explicit seed argument; derive streams from \
+                          the run seed (`Rng::derive`) so draws are reproducible"
+                        .into(),
+                });
+            }
+        }
+    }
+}

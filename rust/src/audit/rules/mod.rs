@@ -1,0 +1,169 @@
+//! The audit's rule registry and the shared token-pattern helpers the
+//! rules are built from.
+//!
+//! Each rule is a plain function over the [`AuditCtx`]: it scans the
+//! lexed `code` views (non-test tokens only) and appends [`Finding`]s.
+//! Suppression by `audit:allow` happens *after* all rules run, in the
+//! orchestrator — rules never see allows, which keeps them honest.
+
+pub mod bit_accounting;
+pub mod determinism;
+pub mod panic_safety;
+pub mod registry_sync;
+
+use super::lexer::{TokKind, Token};
+use super::{AuditCtx, Finding};
+
+/// One registered rule.
+pub struct RuleInfo {
+    /// The id used in reports and in `audit:allow` escapes.
+    pub id: &'static str,
+    /// One-line summary for `docs/AUDIT.md` and the rule list.
+    pub summary: &'static str,
+    pub run: fn(&AuditCtx, &mut Vec<Finding>),
+}
+
+/// Every scan rule, in report order. `allow-syntax` and `unused-allow`
+/// findings are emitted by the orchestrator itself and cannot be
+/// suppressed.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "panic-safety",
+        summary: "no unwrap()/expect()/panic! in library paths",
+        run: panic_safety::check,
+    },
+    RuleInfo {
+        id: "determinism-hash",
+        summary: "no HashMap/HashSet — iteration order must be deterministic",
+        run: determinism::check_hash,
+    },
+    RuleInfo {
+        id: "determinism-clock",
+        summary: "no Instant::now/SystemTime::now outside obs/ and bench_util",
+        run: determinism::check_clock,
+    },
+    RuleInfo {
+        id: "determinism-rng",
+        summary: "RNG streams must derive from an explicit seed",
+        run: determinism::check_rng,
+    },
+    RuleInfo {
+        id: "bit-accounting",
+        summary: "every wire message kind is registered with its charge policy",
+        run: bit_accounting::check,
+    },
+    RuleInfo {
+        id: "registry-sync",
+        summary: "algorithms, message kinds and trace names stay registered and documented",
+        run: registry_sync::check,
+    },
+];
+
+/// Orchestrator-emitted rule ids.
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+pub const UNUSED_ALLOW: &str = "unused-allow";
+
+/// Is `id` a scan rule that `audit:allow` may name?
+pub fn is_allowable_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Run every scan rule.
+pub fn run_all(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    for rule in RULES {
+        (rule.run)(ctx, out);
+    }
+}
+
+// ── token-pattern helpers ──────────────────────────────────────────────
+
+/// Does `code[i..]` start the method-call pattern `.name(`?
+pub(crate) fn is_method_call(code: &[Token], i: usize, name: &str) -> bool {
+    i > 0
+        && code[i - 1].is_punct('.')
+        && code[i].is_ident(name)
+        && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+}
+
+/// Does `code[i..]` start the path-call pattern `Type::name(`? Returns the
+/// index of the opening parenthesis.
+pub(crate) fn path_call(code: &[Token], i: usize, ty: &str, name: &str) -> Option<usize> {
+    if code[i].is_ident(ty)
+        && code.get(i + 1).is_some_and(|t| t.is_punct(':'))
+        && code.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        && code.get(i + 3).is_some_and(|t| t.is_ident(name))
+        && code.get(i + 4).is_some_and(|t| t.is_punct('('))
+    {
+        Some(i + 4)
+    } else {
+        None
+    }
+}
+
+/// Split the arguments of a call whose opening `(` is at `open` into
+/// top-level token ranges (tracking nested `()`/`[]`/`{}`). Returns the
+/// half-open ranges and the index of the closing `)`. Unbalanced input
+/// (never produced by compiling code) yields what was seen up to EOF.
+pub(crate) fn top_level_args(
+    code: &[Token],
+    open: usize,
+) -> (Vec<(usize, usize)>, usize) {
+    let mut args = Vec::new();
+    let mut depth = 0isize;
+    let mut start = open + 1;
+    let mut j = open;
+    while j < code.len() {
+        let t = &code[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_bytes().first() {
+                Some(b'(') | Some(b'[') | Some(b'{') => depth += 1,
+                Some(b')') | Some(b']') | Some(b'}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        if j > start {
+                            args.push((start, j));
+                        }
+                        return (args, j);
+                    }
+                }
+                Some(b',') if depth == 1 => {
+                    args.push((start, j));
+                    start = j + 1;
+                }
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    (args, code.len())
+}
+
+/// Is this token range exactly the literal `BitCost::zero()`?
+pub(crate) fn is_bitcost_zero(code: &[Token], range: (usize, usize)) -> bool {
+    let (a, b) = range;
+    b - a == 6
+        && code[a].is_ident("BitCost")
+        && code[a + 1].is_punct(':')
+        && code[a + 2].is_punct(':')
+        && code[a + 3].is_ident("zero")
+        && code[a + 4].is_punct('(')
+        && code[a + 5].is_punct(')')
+}
+
+/// Index just past the `}` matching the `{` at `open` (token view).
+pub(crate) fn match_brace(code: &[Token], open: usize) -> usize {
+    let mut depth = 0isize;
+    let mut j = open;
+    while j < code.len() {
+        if code[j].is_punct('{') {
+            depth += 1;
+        } else if code[j].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    code.len()
+}

@@ -1,0 +1,48 @@
+//! `panic-safety`: library paths must not be able to abort the process.
+//!
+//! Flags `.unwrap()`, `.expect(…)`, `panic!`, `unimplemented!` and `todo!`
+//! in non-test code. The fallible-adjacent combinators (`unwrap_or`,
+//! `unwrap_or_else`, `unwrap_or_default`, …) are distinct identifiers and
+//! are deliberately *not* flagged — they cannot panic. `unreachable!` and
+//! the `assert*` family are also exempt: they state invariants, and
+//! converting them to `Result` would bury programming errors as runtime
+//! conditions.
+//!
+//! Provably-infallible sites (an element pushed on the previous line, a
+//! value checked by the surrounding guard) may carry an `audit:allow`
+//! escape naming this rule, with a justification for why it cannot fire.
+
+use super::super::{AuditCtx, Finding};
+use super::is_method_call;
+use crate::audit::lexer::TokKind;
+
+const RULE: &str = "panic-safety";
+
+pub fn check(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    for file in ctx.files {
+        let code = &file.code;
+        for i in 0..code.len() {
+            let t = &code[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let bang = code.get(i + 1).is_some_and(|n| n.is_punct('!'));
+            let msg = match t.text.as_str() {
+                "unwrap" | "expect" if is_method_call(code, i, &t.text) => {
+                    format!(
+                        "`.{}(…)` can panic; return an anyhow error with context instead",
+                        t.text
+                    )
+                }
+                "panic" if bang => {
+                    "`panic!` in a library path; bail with an anyhow error instead".into()
+                }
+                "unimplemented" | "todo" if bang => {
+                    format!("`{}!` must not ship in library paths", t.text)
+                }
+                _ => continue,
+            };
+            out.push(Finding { rule: RULE, file: file.rel.clone(), line: t.line, msg });
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! `registry-sync`: the hand-maintained registries cannot drift.
+//!
+//! Rust's exhaustive `match` already protects the dispatch sites, but
+//! three registries are plain lists the compiler cannot check:
+//!
+//! 1. every `enum Algorithm` variant must appear in the `fn all()` body of
+//!    the same file — `all()` drives CLI parsing and sweep-grid expansion,
+//!    so a variant missing there is silently unreachable;
+//! 2. every variant must appear in `tests/transport_equivalence.rs` — the
+//!    cross-backend determinism contract only covers algorithms the test
+//!    enumerates;
+//! 3. every span/mark name literal passed to `Obs::span`/`span_at`/`mark`,
+//!    and every registered message kind, must appear (backticked) in
+//!    `docs/TRACING.md` — trace consumers read the doc, not the code.
+//!
+//! When auditing the real crate the orchestrator also cross-checks the
+//! text-parsed variant list against the compiled `Algorithm::all()`, so
+//! this parser cannot drift from the enum it audits.
+
+use super::super::{AuditCtx, Finding};
+use super::{bit_accounting, match_brace};
+use crate::audit::lexer::TokKind;
+
+const RULE: &str = "registry-sync";
+
+/// Text-parsed `enum Algorithm` variants (exposed for the runtime
+/// cross-check in the orchestrator).
+pub(crate) fn algorithm_variants(ctx: &AuditCtx) -> Vec<(String, String, u32)> {
+    let mut variants = Vec::new();
+    for file in ctx.files {
+        let code = &file.code;
+        for i in 0..code.len() {
+            if !(code[i].is_ident("enum")
+                && code.get(i + 1).is_some_and(|t| t.is_ident("Algorithm"))
+                && code.get(i + 2).is_some_and(|t| t.is_punct('{')))
+            {
+                continue;
+            }
+            let end = match_brace(code, i + 2);
+            let mut depth = 0isize;
+            for j in i + 2..end {
+                let t = &code[j];
+                if t.is_punct('{') || t.is_punct('(') {
+                    depth += 1;
+                } else if t.is_punct('}') || t.is_punct(')') {
+                    depth -= 1;
+                } else if depth == 1
+                    && t.kind == TokKind::Ident
+                    && code
+                        .get(j + 1)
+                        .is_some_and(|n| n.is_punct(',') || n.is_punct('}'))
+                {
+                    variants.push((t.text.clone(), file.rel.clone(), t.line));
+                }
+            }
+        }
+    }
+    variants
+}
+
+pub fn check(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    let variants = algorithm_variants(ctx);
+
+    // 1. every variant is in `fn all()` of the declaring file.
+    for (name, rel, line) in &variants {
+        let Some(file) = ctx.files.iter().find(|f| &f.rel == rel) else { continue };
+        match fn_body_idents(file, "all") {
+            None => {
+                // Report once, anchored to the first variant.
+                if variants.iter().position(|(_, r, _)| r == rel)
+                    == variants.iter().position(|(n, r, _)| n == name && r == rel)
+                {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: rel.clone(),
+                        line: *line,
+                        msg: "enum Algorithm has no `fn all()` registry in this file".into(),
+                    });
+                }
+            }
+            Some(body) => {
+                if !body.iter().any(|id| id == name) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: rel.clone(),
+                        line: *line,
+                        msg: format!("algorithm variant `{name}` is missing from Algorithm::all()"),
+                    });
+                }
+            }
+        }
+    }
+
+    // 2. every variant appears in the transport-equivalence test.
+    if !variants.is_empty() {
+        match &ctx.equivalence {
+            None => out.push(Finding {
+                rule: RULE,
+                file: "tests/transport_equivalence.rs".into(),
+                line: 1,
+                msg: "tests/transport_equivalence.rs not found; every algorithm must be \
+                      covered by the cross-backend determinism test"
+                    .into(),
+            }),
+            Some(eq) => {
+                for (name, rel, line) in &variants {
+                    let covered = eq.code.iter().any(|t| t.is_ident(name));
+                    if !covered {
+                        out.push(Finding {
+                            rule: RULE,
+                            file: rel.clone(),
+                            line: *line,
+                            msg: format!(
+                                "algorithm variant `{name}` is not exercised by \
+                                 tests/transport_equivalence.rs"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // 3. trace names and message kinds are documented.
+    let mut doc_items: Vec<(String, String, u32, &str)> = Vec::new();
+    for file in ctx.files {
+        let code = &file.code;
+        for i in 0..code.len() {
+            if code[i].kind != TokKind::Ident {
+                continue;
+            }
+            let is_obs = matches!(code[i].text.as_str(), "span" | "span_at" | "mark");
+            if is_obs
+                && i > 0
+                && code[i - 1].is_punct('.')
+                && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+                && code.get(i + 2).map(|t| t.kind) == Some(TokKind::Str)
+            {
+                let name = code[i + 2].text.clone();
+                doc_items.push((name, file.rel.clone(), code[i].line, "trace span/mark"));
+            }
+        }
+    }
+    let mut registry = Vec::new();
+    for file in ctx.files {
+        bit_accounting::collect_registry(file, &mut registry);
+    }
+    for e in &registry {
+        doc_items.push((e.name.clone(), e.file.clone(), e.line, "message kind"));
+    }
+
+    if !doc_items.is_empty() {
+        let Some(doc) = &ctx.tracing_md else {
+            out.push(Finding {
+                rule: RULE,
+                file: "docs/TRACING.md".into(),
+                line: 1,
+                msg: "docs/TRACING.md not found, but the crate declares trace names / \
+                      message kinds that must be documented there"
+                    .into(),
+            });
+            return;
+        };
+        let mut reported: Vec<String> = Vec::new();
+        for (name, rel, line, what) in &doc_items {
+            let key = format!("{what}:{name}");
+            if reported.contains(&key) {
+                continue;
+            }
+            if !doc.contains(&format!("`{name}`")) {
+                reported.push(key);
+                out.push(Finding {
+                    rule: RULE,
+                    file: rel.clone(),
+                    line: *line,
+                    msg: format!("{what} `{name}` is not documented in docs/TRACING.md"),
+                });
+            }
+        }
+    }
+}
+
+/// Identifiers in the body of `fn <name>` in this file, or `None` if the
+/// function is absent.
+fn fn_body_idents(
+    file: &crate::audit::source::SourceFile,
+    name: &str,
+) -> Option<Vec<String>> {
+    let code = &file.code;
+    for i in 0..code.len() {
+        if !(code[i].is_ident("fn") && code.get(i + 1).is_some_and(|t| t.is_ident(name))) {
+            continue;
+        }
+        // Walk from the signature to its body brace.
+        let mut j = i + 2;
+        while j < code.len() && !code[j].is_punct('{') && !code[j].is_punct(';') {
+            j += 1;
+        }
+        if j >= code.len() || code[j].is_punct(';') {
+            continue; // trait method declaration without a body
+        }
+        let end = match_brace(code, j);
+        return Some(
+            code[j..end]
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.clone())
+                .collect(),
+        );
+    }
+    None
+}

@@ -1,0 +1,305 @@
+//! Scanned-source model: one lexed file plus the structure the rules need —
+//! which tokens are test-only code, and which `audit:allow` escapes the
+//! author wrote.
+//!
+//! Test exclusion is *textual*, mirroring what the rules are: `#[cfg(test)]`
+//! items (almost always `mod tests { … }`) are located by token pattern and
+//! brace matching, and every token inside them is dropped from the `code`
+//! view. Integration tests and benches live outside `src/` and are never
+//! scanned, so "code" here means exactly the library/binary paths that run
+//! in production.
+
+use super::lexer::{lex, TokKind, Token};
+use anyhow::{Context, Result};
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+
+/// One `audit:allow` directive — rule id in parentheses, then a
+/// `: <justification>` tail — found in a comment.
+#[derive(Debug)]
+pub struct Allow {
+    /// Rule id between the parentheses (validated upstream against the
+    /// rule registry).
+    pub rule: String,
+    /// Line the comment sits on. The allow applies to findings on this
+    /// line and the next one (comment-above-the-offending-line style).
+    pub line: u32,
+    /// Whether a non-empty `: justification` followed the rule id.
+    pub justified: bool,
+    /// Set when a finding is suppressed by this allow; an allow that
+    /// suppresses nothing is itself a finding (`unused-allow`).
+    pub used: Cell<bool>,
+}
+
+/// A lexed source file ready for rule scans.
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated (stable across OSes
+    /// for JSONL output and sorting).
+    pub rel: String,
+    pub path: PathBuf,
+    /// Non-comment tokens *outside* `#[cfg(test)]` items — the only view
+    /// rules scan.
+    pub code: Vec<Token>,
+    /// Allow directives from comments outside `#[cfg(test)]` items.
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    /// Read, lex, and structure one file. `exclude_tests` is true for
+    /// `src/` scans and false for files that are *supposed* to be tests
+    /// (e.g. `tests/transport_equivalence.rs`, which registry-sync reads).
+    pub fn load(path: &Path, rel: String, exclude_tests: bool) -> Result<SourceFile> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let tokens = lex(&src);
+
+        // Indices of non-comment tokens (the view brace matching uses).
+        let nc: Vec<usize> =
+            (0..tokens.len()).filter(|&i| tokens[i].kind != TokKind::Comment).collect();
+        let test_mask = if exclude_tests {
+            test_token_mask(&tokens, &nc)
+        } else {
+            vec![false; tokens.len()]
+        };
+
+        let mut code = Vec::new();
+        let mut allows = Vec::new();
+        for (i, t) in tokens.iter().enumerate() {
+            if test_mask[i] {
+                continue;
+            }
+            if t.kind == TokKind::Comment {
+                parse_allows(&t.text, t.line, &mut allows);
+            } else {
+                code.push(t.clone());
+            }
+        }
+        Ok(SourceFile { rel, path: path.to_path_buf(), code, allows })
+    }
+
+    /// The allow (if any) that covers a finding of `rule` at `line`.
+    /// Only justified directives count; unjustified ones are inert (and
+    /// flagged separately), so a suppression can never lack a rationale.
+    pub fn allow_for(&self, rule: &str, line: u32) -> Option<&Allow> {
+        self.allows.iter().find(|a| {
+            a.justified && a.rule == rule && (a.line == line || a.line + 1 == line)
+        })
+    }
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item. Works on the
+/// non-comment view `nc` (attributes split by comments still match), then
+/// widens each item span back to raw token indices.
+fn test_token_mask(tokens: &[Token], nc: &[usize]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let is = |vi: usize, pred: &dyn Fn(&Token) -> bool| {
+        nc.get(vi).is_some_and(|&i| pred(&tokens[i]))
+    };
+    let mut vi = 0usize;
+    while vi < nc.len() {
+        let hit = is(vi, &|t| t.is_punct('#'))
+            && is(vi + 1, &|t| t.is_punct('['))
+            && is(vi + 2, &|t| t.is_ident("cfg"))
+            && is(vi + 3, &|t| t.is_punct('('))
+            && is(vi + 4, &|t| t.is_ident("test"))
+            && is(vi + 5, &|t| t.is_punct(')'))
+            && is(vi + 6, &|t| t.is_punct(']'));
+        if !hit {
+            vi += 1;
+            continue;
+        }
+        let start = vi;
+        let mut j = vi + 7;
+        // Skip any further attributes on the same item.
+        while is(j, &|t| t.is_punct('#')) && is(j + 1, &|t| t.is_punct('[')) {
+            j = match_delim(tokens, nc, j + 1, '[', ']');
+        }
+        // Walk to the end of the item: its body `{…}` or a trailing `;`.
+        let end = loop {
+            if j >= nc.len() {
+                break nc.len().saturating_sub(1);
+            }
+            let t = &tokens[nc[j]];
+            if t.is_punct('{') {
+                break match_delim(tokens, nc, j, '{', '}').saturating_sub(1);
+            }
+            if t.is_punct(';') {
+                break j;
+            }
+            if t.is_punct('(') {
+                j = match_delim(tokens, nc, j, '(', ')');
+            } else if t.is_punct('[') {
+                j = match_delim(tokens, nc, j, '[', ']');
+            } else {
+                j += 1;
+            }
+        };
+        let end = end.min(nc.len() - 1);
+        // Widen [start, end] in view indices to raw indices, catching the
+        // comments interleaved with the item.
+        for raw in nc[start]..=nc[end] {
+            mask[raw] = true;
+        }
+        vi = end + 1;
+    }
+    mask
+}
+
+/// From view index `open` (which must hold the opening delimiter), return
+/// the view index just past the matching closer. Unbalanced input returns
+/// the end of the view (graceful, like the lexer).
+fn match_delim(tokens: &[Token], nc: &[usize], open: usize, o: char, c: char) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < nc.len() {
+        let t = &tokens[nc[j]];
+        if t.is_punct(o) {
+            depth += 1;
+        } else if t.is_punct(c) {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    nc.len()
+}
+
+/// Extract every `audit:allow` directive (parenthesised rule id plus an
+/// optional `: justification` tail) from one comment.
+fn parse_allows(comment: &str, line: u32, out: &mut Vec<Allow>) {
+    const NEEDLE: &str = "audit:allow(";
+    let mut rest = comment;
+    while let Some(at) = rest.find(NEEDLE) {
+        let after = &rest[at + NEEDLE.len()..];
+        let Some(close) = after.find(')') else {
+            // Unterminated directive: record it malformed (empty rule id
+            // never validates) so it surfaces instead of silently doing
+            // nothing.
+            out.push(Allow {
+                rule: String::new(),
+                line,
+                justified: false,
+                used: Cell::new(false),
+            });
+            return;
+        };
+        let rule = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let justified = tail
+            .strip_prefix(':')
+            .map(|j| !j.trim().is_empty())
+            .unwrap_or(false);
+        out.push(Allow { rule, line, justified, used: Cell::new(false) });
+        rest = &after[close + 1..];
+    }
+}
+
+/// Recursively collect `*.rs` files under `dir`, sorted by path for
+/// deterministic reports.
+pub fn walk_rs_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d)
+            .with_context(|| format!("listing {}", d.display()))?;
+        for entry in entries {
+            let entry = entry.with_context(|| format!("listing {}", d.display()))?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn load_src(src: &str, exclude_tests: bool) -> SourceFile {
+        static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "audit_source_test_{}_{}",
+            std::process::id(),
+            seq
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.rs");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(src.as_bytes()).unwrap();
+        SourceFile::load(&path, "f.rs".into(), exclude_tests).unwrap()
+    }
+
+    fn has_ident(sf: &SourceFile, name: &str) -> bool {
+        sf.code.iter().any(|t| t.is_ident(name))
+    }
+
+    #[test]
+    fn cfg_test_mod_is_excluded() {
+        let sf = load_src(
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n fn dead() { x.unwrap(); }\n}\nfn live2() {}",
+            true,
+        );
+        assert!(has_ident(&sf, "live"));
+        assert!(has_ident(&sf, "live2"));
+        assert!(!has_ident(&sf, "dead"));
+        assert!(!has_ident(&sf, "unwrap"));
+    }
+
+    #[test]
+    fn cfg_test_non_mod_items_are_excluded() {
+        let sf = load_src(
+            "#[cfg(test)]\nuse crate::testing::helper;\n#[cfg(test)]\nfn fixture() { y.unwrap(); }\nfn live() {}",
+            true,
+        );
+        assert!(!has_ident(&sf, "helper"));
+        assert!(!has_ident(&sf, "fixture"));
+        assert!(has_ident(&sf, "live"));
+    }
+
+    #[test]
+    fn cfg_not_test_is_kept() {
+        let sf = load_src("#[cfg(not(test))]\nfn live() {}", true);
+        assert!(has_ident(&sf, "live"));
+    }
+
+    #[test]
+    fn allows_are_parsed_with_justification() {
+        let sf = load_src(
+            "// audit:allow(panic-safety): element pushed above\nfn a() {}\n// audit:allow(determinism-clock)\nfn b() {}",
+            true,
+        );
+        assert_eq!(sf.allows.len(), 2);
+        assert_eq!(sf.allows[0].rule, "panic-safety");
+        assert!(sf.allows[0].justified);
+        assert_eq!(sf.allows[0].line, 1);
+        assert_eq!(sf.allows[1].rule, "determinism-clock");
+        assert!(!sf.allows[1].justified);
+    }
+
+    #[test]
+    fn allow_matches_same_and_next_line() {
+        let sf = load_src("// audit:allow(panic-safety): ok\nfn a() {}", true);
+        assert!(sf.allow_for("panic-safety", 1).is_some());
+        assert!(sf.allow_for("panic-safety", 2).is_some());
+        assert!(sf.allow_for("panic-safety", 3).is_none());
+        assert!(sf.allow_for("determinism-hash", 2).is_none());
+    }
+
+    #[test]
+    fn allows_inside_test_mods_are_ignored() {
+        let sf = load_src(
+            "#[cfg(test)]\nmod tests {\n // audit:allow(panic-safety): test-only\n}\n",
+            true,
+        );
+        assert!(sf.allows.is_empty());
+    }
+}

@@ -108,10 +108,10 @@ impl Bench {
             }
             times.push(s.elapsed().as_secs_f64() / iters as f64);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let median = times[times.len() / 2];
         let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(|a, b| a.total_cmp(b));
         let mad = devs[devs.len() / 2];
 
         let result = BenchResult {
@@ -130,6 +130,7 @@ impl Bench {
             result.iters
         );
         self.results.push(result);
+        // audit:allow(panic-safety): the element was pushed on the line above.
         self.results.last().unwrap()
     }
 

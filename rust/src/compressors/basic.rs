@@ -62,7 +62,7 @@ impl TopK {
         let mut idx: Vec<usize> = (0..data.len()).collect();
         // Partial selection: O(N) average via select_nth_unstable.
         idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-            data[b].abs().partial_cmp(&data[a].abs()).unwrap()
+            data[b].abs().total_cmp(&data[a].abs())
         });
         idx.truncate(k);
         idx

@@ -37,10 +37,12 @@ impl<Q1: VecCompressor, Q2: VecCompressor> MatCompressor for ComposeRank<Q1, Q2>
 
         let omega1 = match self.q_left.class_vec(m) {
             CompressorClass::Unbiased { omega } => omega,
+            // audit:allow(panic-safety): type-level misuse (App. A.5 requires an unbiased factor); caught by every test that constructs one.
             _ => panic!("ComposeRank requires unbiased left compressor"),
         };
         let omega2 = match self.q_right.class_vec(n) {
             CompressorClass::Unbiased { omega } => omega,
+            // audit:allow(panic-safety): same unbiasedness precondition as the left factor above.
             _ => panic!("ComposeRank requires unbiased right compressor"),
         };
         let scale = 1.0 / ((omega1 + 1.0) * (omega2 + 1.0));
@@ -108,13 +110,14 @@ impl<Q: VecCompressor> Compose<Q> {
         // Select support.
         let mut idx: Vec<usize> = (0..n).collect();
         idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-            data[b].abs().partial_cmp(&data[a].abs()).unwrap()
+            data[b].abs().total_cmp(&data[a].abs())
         });
         idx.truncate(k);
         let values: Vec<f64> = idx.iter().map(|&i| data[i]).collect();
         // Quantize the retained values.
         let omega = match self.q.class_vec(k) {
             CompressorClass::Unbiased { omega } => omega,
+            // audit:allow(panic-safety): contractiveness of Top-K ∘ Q (App. A.5) needs unbiased Q; construction-time invariant.
             _ => panic!("Compose requires an unbiased value compressor"),
         };
         let (qv, qcost) = self.q.compress_vec(&values, rng);

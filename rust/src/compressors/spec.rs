@@ -143,6 +143,7 @@ impl CompressorSpec {
             }
             CompressorSpec::NTopK(k) => Box::new(Compose::new(k.min(dim).max(1), NaturalCompression)),
             CompressorSpec::RankR(_) | CompressorSpec::RRank(_, _) | CompressorSpec::NRank(_) => {
+                // audit:allow(panic-safety): the sweep executor relies on this panic for its broken-cell isolation tests (failed_cell_does_not_kill_the_sweep, broken_config_does_not_hang_under_threaded).
                 panic!("rank-based compressors are matrix-only; got {self:?} for a vector")
             }
         }

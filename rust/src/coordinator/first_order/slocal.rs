@@ -121,7 +121,7 @@ impl ServerState for SLocalServer {
         for (_, up) in replies {
             crate::linalg::axpy(1.0 / n, up.vector("model")?, &mut avg);
             if self.refresh {
-                crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut gbar);
+                crate::linalg::axpy(1.0 / n, up.vector("grad_report")?, &mut gbar);
             }
         }
         self.x = avg.clone();
@@ -166,7 +166,9 @@ impl ClientStep for SLocalClient {
                     let mut g = local.grad(&self.x);
                     crate::linalg::axpy(self.lambda, &self.x, &mut g);
                     self.g_last = g.clone();
-                    up.push_vector("grad", g, BitCost::zero());
+                    // Distinct kind from the charged "grad" uplinks of
+                    // GD/NL1/DINGO: this one is a framework ride-along.
+                    up.push_vector("grad_report", g, BitCost::zero());
                 }
             }
         } else {

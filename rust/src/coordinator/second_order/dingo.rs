@@ -261,6 +261,7 @@ impl ClientStep for DingoClient {
             }
             2 => {
                 let h_g = down.vector("h_g")?;
+                // audit:allow(panic-safety): phase 2 always follows phase 1 of the same round, which populated self.eig.
                 let e = self.eig.as_ref().expect("phase-2 eigens cached");
                 let d = self.x.len();
                 // (H̃ᵀH̃)^{-1}h = V 1/(λ²+φ²) Vᵀ h.

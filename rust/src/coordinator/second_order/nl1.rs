@@ -166,6 +166,7 @@ impl ServerState for Nl1Server {
         // touched coefficients change the estimate).
         for (i, up) in replies {
             let s = up.vector("coeff_delta")?;
+            // audit:allow(panic-safety): split() rejects environments with missing feature matrices before any round runs.
             let a = env.features[*i].as_ref().expect("validated in split()");
             let m = a.rows() as f64;
             for (j, &sj) in s.iter().enumerate() {

@@ -34,7 +34,7 @@ pub fn parse_libsvm(text: &str, dim: Option<usize>) -> Result<Vec<LibsvmRecord>>
         let mut parts = line.split_whitespace();
         let label: f64 = parts
             .next()
-            .unwrap()
+            .with_context(|| format!("line {}: missing label", lineno + 1))?
             .parse()
             .with_context(|| format!("line {}: bad label", lineno + 1))?;
         let mut features = Vec::new();
@@ -95,6 +95,7 @@ pub fn write_libsvm(records: &[LibsvmRecord]) -> String {
 /// Shortest round-trip float formatting.
 fn fmt_float(v: f64) -> String {
     let s = format!("{v}");
+    // audit:allow(panic-safety): debug-build self-check only; `{v}` always reparses.
     debug_assert_eq!(s.parse::<f64>().unwrap(), v);
     s
 }

@@ -121,6 +121,7 @@ impl FederatedDataset {
             let mut a = Mat::zeros(m, d);
             let mut b = Vec::with_capacity(m);
             for i in 0..m {
+                // audit:allow(panic-safety): Σ(base + extra) = records.len() by construction, so the iterator cannot run dry.
                 let rec = it.next().expect("record count mismatch");
                 for &(idx, val) in &rec.features {
                     a[(i, idx - 1)] = val;

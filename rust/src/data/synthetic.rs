@@ -124,6 +124,7 @@ pub fn generate(spec: &SyntheticSpec) -> FederatedDataset {
 
     // Round-trip through the LibSVM text format (see module docs).
     let text = write_libsvm(&records);
+    // audit:allow(panic-safety): parsing back text this function just wrote; a failure is a bug in write_libsvm, not a runtime condition.
     let parsed = parse_libsvm(&text, Some(spec.dim)).expect("internal LibSVM roundtrip failed");
     let mut fed = FederatedDataset::from_records(parsed, spec.n_clients, &spec.name());
     // Sparse parse infers d from the max seen index; pad if the last features

@@ -13,7 +13,7 @@ use crate::compressors::CompressorSpec;
 use crate::config::{Algorithm, BasisKind, RunConfig};
 use crate::data::{registry, DatasetEntry, FederatedDataset};
 use crate::sweep::{run_cells, CellStatus, DatasetRef, SweepCell};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// One labelled run in a figure.
 pub struct Series {
@@ -32,11 +32,16 @@ pub struct FigureSpec {
 /// Gap thresholds reported in the summary tables.
 const TARGETS: [f64; 3] = [1e-4, 1e-7, 1e-10];
 
-fn ds(names: &[&str]) -> Vec<DatasetEntry> {
+fn ds(names: &[&str]) -> Result<Vec<DatasetEntry>> {
     let reg = registry();
     names
         .iter()
-        .map(|n| reg.iter().find(|e| e.name == *n).copied().expect("dataset in registry"))
+        .map(|n| {
+            reg.iter()
+                .find(|e| e.name == *n)
+                .copied()
+                .with_context(|| format!("dataset {n} not in registry"))
+        })
         .collect()
 }
 
@@ -288,9 +293,9 @@ fn spec(id: &str, fed: &FederatedDataset, seed: u64) -> Result<Vec<Series>> {
 /// Which datasets each figure sweeps (paper uses several per row; we default
 /// to a representative pair to keep runtimes short — pass `--full-scale` for
 /// the full registry).
-fn figure_datasets(id: &str, full: bool) -> Vec<DatasetEntry> {
+fn figure_datasets(id: &str, full: bool) -> Result<Vec<DatasetEntry>> {
     if full {
-        return registry();
+        return Ok(registry());
     }
     match id {
         "fig1-second-order" | "fig1-first-order" => ds(&["a1a", "w2a"]),
@@ -315,7 +320,7 @@ pub fn run_figure(id: &str, full_scale: bool, seed: u64, jobs: usize) -> Result<
     let mut labels: Vec<String> = Vec::new();
     // (first cell id of a dataset block, its table header).
     let mut headers: Vec<(usize, String)> = Vec::new();
-    for entry in figure_datasets(id, full_scale) {
+    for entry in figure_datasets(id, full_scale)? {
         let fed = entry.build(seed, full_scale);
         headers.push((
             cells.len(),
@@ -417,9 +422,9 @@ mod tests {
     fn figure_datasets_resolve() {
         for id in super::super::EXPERIMENTS {
             if id.starts_with("fig") {
-                assert!(!figure_datasets(id, false).is_empty());
+                assert!(!figure_datasets(id, false).unwrap().is_empty());
             }
         }
-        assert_eq!(figure_datasets("fig2", true).len(), registry().len());
+        assert_eq!(figure_datasets("fig2", true).unwrap().len(), registry().len());
     }
 }

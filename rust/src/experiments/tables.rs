@@ -70,8 +70,7 @@ pub fn table1(seed: u64, jobs: usize) -> Result<()> {
     let naive = per_round_floats(&results[0])?;
     let ours = per_round_floats(&results[1])?;
     let nl1 = per_round_floats(&results[2])?;
-    let nl1_setup =
-        results[2].history.as_ref().expect("checked above").setup_bits_per_node / float_bits;
+    let nl1_setup = results[2].require_history()?.setup_bits_per_node / float_bits;
 
     println!("{:<42}{:>14}{:>14}{:>14}", "", "Naive", "NL1 [Isl+21]", "Ours (§2.3)");
     println!(

@@ -57,6 +57,7 @@
 //! println!("final gap {:.3e} after {} bits/node", out.final_gap(), out.bits_per_node());
 //! ```
 
+pub mod audit;
 pub mod bench_util;
 pub mod basis;
 pub mod compressors;

@@ -51,13 +51,8 @@ impl EigenDecomposition {
     pub fn rank_r(&self, r: usize) -> Mat {
         let n = self.values.len();
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| {
-            self.values[b]
-                .abs()
-                .partial_cmp(&self.values[a].abs())
-                .unwrap()
-        });
-        let keep: std::collections::HashSet<usize> = order.into_iter().take(r).collect();
+        order.sort_by(|&a, &b| self.values[b].abs().total_cmp(&self.values[a].abs()));
+        let keep: std::collections::BTreeSet<usize> = order.into_iter().take(r).collect();
         let mut out = Mat::zeros(n, n);
         for (k, &lam) in self.values.iter().enumerate() {
             if !keep.contains(&k) || lam == 0.0 {
@@ -144,7 +139,7 @@ pub fn sym_eigen(a: &Mat) -> EigenDecomposition {
 
     // Extract and sort descending by eigenvalue.
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let values: Vec<f64> = pairs.iter().map(|&(lam, _)| lam).collect();
     let mut vectors = Mat::zeros(n, n);
     for (new_k, &(_, old_k)) in pairs.iter().enumerate() {
@@ -194,9 +189,7 @@ pub fn top_eigenpairs(a: &Mat, r: usize, max_iters: usize, tol: f64) -> Option<(
         let small = sym_eigen(&t);
         // Rotate basis to Ritz vectors, sorted by |λ| descending.
         let mut order: Vec<usize> = (0..s).collect();
-        order.sort_by(|&x, &y| {
-            small.values[y].abs().partial_cmp(&small.values[x].abs()).unwrap()
-        });
+        order.sort_by(|&x, &y| small.values[y].abs().total_cmp(&small.values[x].abs()));
         let mut rot = Mat::zeros(s, s);
         let mut vals = vec![0.0; s];
         for (new_k, &old_k) in order.iter().enumerate() {

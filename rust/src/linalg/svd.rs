@@ -126,7 +126,7 @@ pub fn svd(a: &Mat) -> Svd {
         .enumerate()
         .map(|(j, cj)| (dot(cj, cj).sqrt(), j))
         .collect();
-    triples.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    triples.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     let k = n;
     let mut u = Mat::zeros(m, k);

@@ -7,6 +7,7 @@
 //! repro trace <trace.jsonl> [--chrome OUT.json]                summarize / export a trace
 //! repro data <name> [--full-scale]                             inspect a registry dataset
 //! repro list                                                   algorithms / experiments / datasets
+//! repro audit [--root DIR] [--jsonl OUT.jsonl]                 static repo-invariant lint pass
 //! ```
 //!
 //! `repro sweep` grid axes (comma-separated values; the grid is the cartesian
@@ -75,6 +76,14 @@
 //! bit-flow, and sweep-worker-utilization tables from a `--trace` file;
 //! `--chrome OUT.json` additionally exports Chrome trace-event JSON
 //! loadable in `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! `repro audit` runs the static-analysis pass over the crate's own source
+//! (panic-safety, determinism, bit-accounting, registry-sync — see
+//! docs/AUDIT.md) and exits non-zero on findings; CI uses it as a gate.
+//! ```text
+//! --root DIR               crate root to audit       [this crate's source tree]
+//! --jsonl PATH             also write machine-readable findings JSONL
+//! ```
 
 use anyhow::{bail, Context, Result};
 use basis_learn::compressors::CompressorSpec;
@@ -115,7 +124,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 let value = match it.peek() {
-                    Some(v) if !v.starts_with("--") => Some(it.next().unwrap().clone()),
+                    Some(v) if !v.starts_with("--") => it.next().cloned(),
                     _ => None,
                 };
                 flags.push((name.to_string(), value));
@@ -162,7 +171,10 @@ fn real_main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("data") => cmd_data(&args),
         Some("list") => cmd_list(),
-        Some(other) => bail!("unknown command '{other}' (experiment|sweep|run|trace|data|list)"),
+        Some("audit") => cmd_audit(&args),
+        Some(other) => {
+            bail!("unknown command '{other}' (experiment|sweep|run|trace|data|list|audit)")
+        }
         None => {
             print_usage();
             Ok(())
@@ -172,7 +184,9 @@ fn real_main() -> Result<()> {
 
 fn print_usage() {
     println!("repro — Basis Matters (Qian et al., 2021) reproduction");
-    println!("usage: repro <experiment|sweep|run|trace|data|list> [options]   (see README.md)");
+    println!(
+        "usage: repro <experiment|sweep|run|trace|data|list|audit> [options]   (see README.md)"
+    );
 }
 
 /// `--trace <path>`: open a buffered JSONL trace recorder (flushed by the
@@ -363,6 +377,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         None => &NOOP,
     };
     let progress = progress_enabled(args);
+    // audit:allow(determinism-clock): progress/ETA display only; never reaches run state or JSONL rows.
     let sweep_start = std::time::Instant::now();
     let total = todo.len();
     let mut done = 0usize;
@@ -469,9 +484,9 @@ fn resume_sweep(
     // `plan.done`, plus rows outside the current grid (foreign schemas or
     // other specs' cells), which are preserved untouched. Rows for cells
     // being re-run — failed, stale duplicates, other parameters — drop.
-    let kept: std::collections::HashSet<usize> =
+    let kept: std::collections::BTreeSet<usize> =
         plan.kept_prior.iter().map(|&k| orig_idx[k]).collect();
-    let grid_keys: std::collections::HashSet<String> =
+    let grid_keys: std::collections::BTreeSet<String> =
         cells.iter().map(|c| c.key()).collect();
     let mut text = String::new();
     for (i, (j, r)) in parsed.iter().enumerate() {
@@ -670,6 +685,35 @@ fn cmd_trace(args: &Args) -> Result<()> {
             "wrote Chrome trace-event JSON to {out} — load it in chrome://tracing \
              or https://ui.perfetto.dev"
         );
+    }
+    Ok(())
+}
+
+/// Every flag `repro audit` understands (same typo protection as sweep).
+const AUDIT_FLAGS: &[&str] = &["root", "jsonl"];
+
+/// `repro audit` — the static repo-invariant lint pass (docs/AUDIT.md).
+/// Prints the findings table, optionally writes findings JSONL, and exits
+/// non-zero unless the tree is clean — the CI gate.
+fn cmd_audit(args: &Args) -> Result<()> {
+    for (flag, _) in &args.flags {
+        if !AUDIT_FLAGS.contains(&flag.as_str()) {
+            bail!("unknown audit flag '--{flag}'; valid flags: --{}", AUDIT_FLAGS.join(", --"));
+        }
+    }
+    let cfg = match args.flag("root") {
+        Some(root) => basis_learn::audit::AuditConfig::for_root(root),
+        None => basis_learn::audit::AuditConfig::for_this_crate(),
+    };
+    let report = basis_learn::audit::run(&cfg)
+        .with_context(|| format!("auditing {}", cfg.root.display()))?;
+    if let Some(path) = args.flag("jsonl") {
+        std::fs::write(path, basis_learn::audit::report::render_jsonl(&report))
+            .with_context(|| format!("writing {path}"))?;
+    }
+    print!("{}", basis_learn::audit::report::render_table(&report));
+    if !report.clean() {
+        bail!("audit failed with {} finding(s)", report.findings.len());
     }
     Ok(())
 }

@@ -19,7 +19,7 @@ mod pjrt_problem;
 pub use pjrt_problem::PjrtProblem;
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// A parsed manifest row.
@@ -56,7 +56,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
 /// The PJRT executor: one CPU client, one compiled executable per artifact.
 pub struct Runtime {
     client: xla::PjRtClient,
-    exes: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
     dir: PathBuf,
 }
 
@@ -69,7 +69,7 @@ impl Runtime {
             .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
         let entries = parse_manifest(&text)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes = HashMap::new();
+        let mut exes = BTreeMap::new();
         for e in &entries {
             let path = dir.join(&e.file);
             let proto = xla::HloModuleProto::from_text_file(

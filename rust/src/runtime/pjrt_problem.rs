@@ -47,6 +47,7 @@ impl PjrtProblem {
     }
 
     fn x_lit(&self, x: &[f64]) -> xla::Literal {
+        // audit:allow(panic-safety): building a rank-1 f64 literal from a slice is infallible in the xla API.
         literal_f64(x, &[self.d as i64]).expect("1-D literal cannot fail")
     }
 }
@@ -77,8 +78,11 @@ impl LocalProblem for PjrtProblem {
                 self.d,
                 &[self.a_lit.clone(), self.b_lit.clone(), self.x_lit(x)],
             )
+            // audit:allow(panic-safety): LocalProblem::loss_grad returns plain values; a PJRT executor failure after successful load is unrecoverable.
             .expect("PJRT lossgrad execution failed");
+        // audit:allow(panic-safety): readback of literals the executor just produced.
         let loss = literal_to_vec(&out[0]).expect("loss readback")[0];
+        // audit:allow(panic-safety): readback of literals the executor just produced.
         let grad = literal_to_vec(&out[1]).expect("grad readback");
         (loss, grad)
     }
@@ -87,7 +91,9 @@ impl LocalProblem for PjrtProblem {
         let out = self
             .rt
             .execute("logreg_hess", self.m, self.d, &[self.a_lit.clone(), self.x_lit(x)])
+            // audit:allow(panic-safety): LocalProblem::hess returns a plain Mat; a PJRT executor failure after successful load is unrecoverable.
             .expect("PJRT hess execution failed");
+        // audit:allow(panic-safety): readback of a literal the executor just produced.
         let data = literal_to_vec(&out[0]).expect("hess readback");
         let mut h = Mat::from_vec(self.d, self.d, data);
         // Enforce exact symmetry (XLA accumulation order can differ by ulps).

@@ -21,7 +21,7 @@ use super::jsonl::Json;
 use super::spec::SweepCell;
 use anyhow::{Context, Result};
 use std::cmp::Ordering;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Aggregate of one sweep group (same coordinates, all seeds).
@@ -175,7 +175,7 @@ pub fn rows_from_results(results: &[CellResult], targets: &[f64]) -> Vec<RunRow>
 /// first-declaration order.
 pub fn aggregate(rows: &[RunRow], targets: &[f64]) -> Vec<GroupSummary> {
     let mut order: Vec<&str> = Vec::new();
-    let mut buckets: HashMap<&str, Vec<&RunRow>> = HashMap::new();
+    let mut buckets: BTreeMap<&str, Vec<&RunRow>> = BTreeMap::new();
     for r in rows {
         let entry = buckets.entry(r.group.as_str()).or_default();
         if entry.is_empty() {
@@ -240,9 +240,9 @@ pub struct ResumePlan {
 /// appears more than once (an earlier resume re-ran a failed cell), the
 /// last occurrence wins.
 pub fn plan_resume(cells: &[SweepCell], prior: &[RunRow], targets: &[f64]) -> ResumePlan {
-    let by_key: HashMap<String, (usize, u64)> =
+    let by_key: BTreeMap<String, (usize, u64)> =
         cells.iter().map(|c| (c.key(), (c.id, c.cfg.fingerprint()))).collect();
-    let mut done: HashMap<usize, (usize, RunRow)> = HashMap::new();
+    let mut done: BTreeMap<usize, (usize, RunRow)> = BTreeMap::new();
     for (i, r) in prior.iter().enumerate() {
         if !r.ok || !r.covers(targets) {
             continue;

@@ -27,7 +27,7 @@ use crate::data::FederatedDataset;
 use crate::metrics::{History, RunSummary};
 use crate::obs::{CellScope, Ctx, Lane, Obs};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -173,8 +173,8 @@ thread_local! {
     /// design — `LocalProblem` (and anything downstream of a dataset) is
     /// non-`Sync`, so sharing across workers is off the table; worker
     /// threads die with the sweep, taking their memo with them.
-    static DATASET_CACHE: RefCell<HashMap<(String, u64), Rc<FederatedDataset>>> =
-        RefCell::new(HashMap::new());
+    static DATASET_CACHE: RefCell<BTreeMap<(String, u64), Rc<FederatedDataset>>> =
+        RefCell::new(BTreeMap::new());
 }
 
 /// Fetch (or build and memoize) the dataset for a recipe + seed on this
@@ -193,6 +193,7 @@ fn cached_dataset(ds: &DatasetRef, data_seed: u64) -> (Rc<FederatedDataset>, boo
 
 /// Run one cell with panic isolation.
 fn run_cell(cell: &SweepCell, obs: Obs<'_>, worker: usize) -> CellResult {
+    // audit:allow(determinism-clock): wall_ms is a diagnostic-only field; aggregation reads RunRow, which omits it, so byte-identity of summaries is unaffected.
     let start = Instant::now();
     // Everything recorded inside this cell (round loop, transport, the
     // marks below) carries the cell id, no matter how workers interleave.

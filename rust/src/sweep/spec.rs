@@ -145,6 +145,7 @@ impl Default for SweepSpec {
         SweepSpec {
             algos: vec![base.algorithm],
             datasets: vec![DatasetRef::Registry {
+                // audit:allow(panic-safety): Default cannot return Result; "a1a" is a compile-time registry constant, pinned by data::tests.
                 entry: data::find("a1a").expect("a1a in registry"),
                 full_scale: false,
             }],

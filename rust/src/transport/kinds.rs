@@ -1,0 +1,145 @@
+//! The message-kind registry: every `kind` tag a [`super::Msg`] may carry.
+//!
+//! The paper's claims rest on exact bit accounting, so the set of message
+//! kinds that cross the wire is a *closed* vocabulary: each kind is declared
+//! here once, with its direction and whether the simulated network charges
+//! for it under the paper's accounting conventions. `repro audit`'s
+//! bit-accounting rule cross-checks every `push_*("kind", …)` call site in
+//! the codebase against this table (and the table against the call sites),
+//! so a new message cannot be introduced without deciding — visibly, in one
+//! place — whether its bits are charged. `docs/TRACING.md` documents the
+//! same vocabulary for trace consumers; the audit's registry-sync rule keeps
+//! the two in lockstep.
+//!
+//! `Charge::Free` marks framework messages that ride along uncharged by the
+//! reference accounting (control bits, anchors the receiver already knows,
+//! post-step gradients on refresh rounds). `Charge::Mixed` is for the rare
+//! kind whose cost depends on the algorithm: `xi` is charged one bit by BL1
+//! (the ξ schedule is client-observed state there) but rides free on BL2/BL3
+//! rounds (where it duplicates information the participation draw already
+//! paid for).
+
+/// Which way a message kind travels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Server → client only.
+    Down,
+    /// Client → server only.
+    Up,
+    /// Used in both directions (e.g. `model`: broadcast by most servers,
+    /// sent up by S-Local-GD clients on sync rounds).
+    Both,
+}
+
+/// Whether the simulated network charges for a kind's payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Charge {
+    /// Always carries a non-zero [`crate::compressors::BitCost`].
+    Charged,
+    /// Always pushed with exactly `BitCost::zero()` (framework ride-along).
+    Free,
+    /// Charged by some algorithms, free for others (documented per kind).
+    Mixed,
+}
+
+/// One registered message kind.
+#[derive(Clone, Copy, Debug)]
+pub struct Kind {
+    /// The tag passed to `Packet::push_*` and looked up by the receiver.
+    pub name: &'static str,
+    pub dir: Direction,
+    pub charge: Charge,
+}
+
+/// The closed vocabulary of message kinds, sorted by name.
+///
+/// Keep entries in the `Kind { name: …, dir: …, charge: … }` literal form —
+/// the audit's token scanner parses this table from source text so that
+/// fixture crates can declare their own registries.
+pub const KINDS: &[Kind] = &[
+    // ADIANA's anchor-point broadcast (receiver reconstructs it; uncharged).
+    Kind { name: "anchor", dir: Direction::Down, charge: Charge::Free },
+    // S-Local-GD's synced model average.
+    Kind { name: "avg", dir: Direction::Down, charge: Charge::Charged },
+    // BL3's β_i / Δγ ride-along scalars (2 floats + 1 bit).
+    Kind { name: "beta_gamma", dir: Direction::Up, charge: Charge::Charged },
+    // NL1's compressed Hessian-coefficient update.
+    Kind { name: "coeff_delta", dir: Direction::Up, charge: Charge::Charged },
+    // S-Local-GD's sync/refresh control flags.
+    Kind { name: "ctl", dir: Direction::Down, charge: Charge::Free },
+    // Compressed gradient/model difference (DIANA, ADIANA, Artemis, DORE).
+    Kind { name: "delta", dir: Direction::Up, charge: Charge::Charged },
+    // DINGO's local Newton direction (aggregate-only; uncharged by
+    // the reference accounting, which charges the hess_g round trip).
+    Kind { name: "direction", dir: Direction::Up, charge: Charge::Free },
+    // DINGO's gradient broadcast.
+    Kind { name: "g", dir: Direction::Down, charge: Charge::Charged },
+    // BL3's ξ-round gradient pair.
+    Kind { name: "g1", dir: Direction::Up, charge: Charge::Charged },
+    Kind { name: "g2", dir: Direction::Up, charge: Charge::Charged },
+    // S-Local-GD's gradient mean on refresh rounds (framework message).
+    Kind { name: "gbar", dir: Direction::Down, charge: Charge::Free },
+    // Full local gradient (GD, NL1, DINGO line search).
+    Kind { name: "grad", dir: Direction::Up, charge: Charge::Charged },
+    // Compressed gradient coefficients (Newton, BL1 ξ-rounds).
+    Kind { name: "grad_coeff", dir: Direction::Up, charge: Charge::Charged },
+    // S-Local-GD's post-step gradient on refresh rounds: rides along
+    // uncharged under the reference accounting (framework message).
+    Kind { name: "grad_report", dir: Direction::Up, charge: Charge::Free },
+    // BL2's ξ-round gradient at the shifted point.
+    Kind { name: "grad_update", dir: Direction::Up, charge: Charge::Charged },
+    // DINGO's H̃ᵀg broadcast (phase 2).
+    Kind { name: "h_g", dir: Direction::Down, charge: Charge::Charged },
+    // Newton's compressed Hessian coefficients.
+    Kind { name: "hess_coeff", dir: Direction::Up, charge: Charge::Charged },
+    // BL1/BL2/BL3's compressed Hessian-coefficient difference.
+    Kind { name: "hess_delta", dir: Direction::Up, charge: Charge::Charged },
+    // DINGO's [Hg; g] stack (2d floats).
+    Kind { name: "hess_g", dir: Direction::Up, charge: Charge::Charged },
+    // Model broadcast (most servers); S-Local-GD clients also send their
+    // local model up on sync rounds.
+    Kind { name: "model", dir: Direction::Both, charge: Charge::Charged },
+    // BL1/BL2/BL3's compressed model update broadcast.
+    Kind { name: "model_delta", dir: Direction::Down, charge: Charge::Charged },
+    // DORE's compressed model residual broadcast.
+    Kind { name: "model_residual", dir: Direction::Down, charge: Charge::Charged },
+    // Artemis's compressed model update broadcast.
+    Kind { name: "model_update", dir: Direction::Down, charge: Charge::Charged },
+    // DINGO's line-search verdict flag (uncharged control bit).
+    Kind { name: "proceed", dir: Direction::Down, charge: Charge::Free },
+    // BL2's compression-error shift scalar.
+    Kind { name: "shift_delta", dir: Direction::Up, charge: Charge::Charged },
+    // DINGO's current iterate, re-broadcast for clients that already hold
+    // it (uncharged framework message).
+    Kind { name: "x", dir: Direction::Down, charge: Charge::Free },
+    // DINGO's line-search trial point.
+    Kind { name: "x_try", dir: Direction::Down, charge: Charge::Charged },
+    // The ξ Bernoulli flag: BL1 charges 1 bit; BL2/BL3 ride it free.
+    Kind { name: "xi", dir: Direction::Down, charge: Charge::Mixed },
+];
+
+/// Look up a kind by name.
+pub fn find(name: &str) -> Option<&'static Kind> {
+    KINDS.iter().find(|k| k.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_unique() {
+        for w in KINDS.windows(2) {
+            assert!(w[0].name < w[1].name, "{} !< {}", w[0].name, w[1].name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(find("model").unwrap().charge, Charge::Charged);
+        assert_eq!(find("ctl").unwrap().charge, Charge::Free);
+        assert_eq!(find("xi").unwrap().charge, Charge::Mixed);
+        assert_eq!(find("model").unwrap().dir, Direction::Both);
+        assert!(find("warp").is_none());
+    }
+}

@@ -71,6 +71,7 @@
 //! TCP-loopback backend only needs to serialize [`Packet`]s (every payload
 //! is plain `f64`/`bool` data) and implement [`Transport::exchange`].
 
+pub mod kinds;
 mod lockstep;
 mod threaded;
 

@@ -1,0 +1,21 @@
+//! The self-audit: this crate must pass its own static-analysis gate.
+//!
+//! This is the test-suite twin of the CI step `repro audit` — a rule
+//! violation anywhere in `rust/src` (or a drifted registry/doc) fails here
+//! first, with the full finding list in the assertion message.
+
+use basis_learn::audit::{report::render_table, run, AuditConfig};
+
+#[test]
+fn the_crate_audits_clean() {
+    let report = run(&AuditConfig::for_this_crate()).expect("self-audit runs");
+    assert!(
+        report.clean(),
+        "repro audit found violations in this crate:\n{}",
+        render_table(&report)
+    );
+    // The scan actually covered the tree (guards against a silently empty
+    // walk making the gate vacuous).
+    assert!(report.files_scanned > 30, "only {} files scanned", report.files_scanned);
+    assert!(report.allows_honored > 10, "allows: {}", report.allows_honored);
+}

@@ -1,0 +1,127 @@
+//! Fixture-driven tests for `repro audit`'s rule engine.
+//!
+//! Each fixture under `tests/audit_fixtures/` is a tiny crate-shaped tree
+//! (`src/`, optionally `docs/TRACING.md` and `tests/transport_equivalence.rs`)
+//! with violations — or deliberate near-misses — seeded in known places.
+//! Cargo does not compile `.rs` files in `tests/` *subdirectories*, so the
+//! fixtures are plain data as far as the build is concerned.
+
+use basis_learn::audit::{run, AuditConfig, AuditReport};
+use std::path::PathBuf;
+
+fn audit_fixture(name: &str) -> AuditReport {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/audit_fixtures")
+        .join(name);
+    run(&AuditConfig::for_root(root)).expect("fixture audit runs")
+}
+
+fn rules_of(report: &AuditReport) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn panic_hit_fixture_trips_panic_and_determinism_rules() {
+    let report = audit_fixture("panic_hit");
+    let rules = rules_of(&report);
+    // .unwrap() and todo! on library paths.
+    assert_eq!(rules.iter().filter(|r| **r == "panic-safety").count(), 2, "{rules:?}");
+    // HashMap appears in the import and in a signature.
+    assert_eq!(rules.iter().filter(|r| **r == "determinism-hash").count(), 2, "{rules:?}");
+    // Instant::now() fires; the bare `use std::time::Instant` import must not.
+    assert_eq!(rules.iter().filter(|r| **r == "determinism-clock").count(), 1, "{rules:?}");
+    // Rng::new(0x1234) has no seed-named argument.
+    assert_eq!(rules.iter().filter(|r| **r == "determinism-rng").count(), 1, "{rules:?}");
+    assert!(!report.clean());
+    // Findings are sorted by (file, line, rule).
+    let mut sorted = report.findings.clone();
+    sorted.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    assert_eq!(
+        report.findings.iter().map(|f| (f.line, f.rule)).collect::<Vec<_>>(),
+        sorted.iter().map(|f| (f.line, f.rule)).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn justified_allow_suppresses_and_is_counted() {
+    let report = audit_fixture("allow_escape");
+    assert!(report.clean(), "{:?}", report.findings);
+    assert_eq!(report.allows_honored, 1);
+    assert_eq!(report.files_scanned, 1);
+}
+
+#[test]
+fn strings_comments_tests_and_lookalikes_do_not_fire() {
+    let report = audit_fixture("false_positive_guard");
+    assert!(report.clean(), "{:?}", report.findings);
+    assert_eq!(report.allows_honored, 0);
+}
+
+#[test]
+fn charge_policy_violations_are_caught() {
+    let report = audit_fixture("bad_kinds");
+    let bit: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "bit-accounting").collect();
+    let msgs: Vec<&str> = bit.iter().map(|f| f.msg.as_str()).collect();
+    assert_eq!(bit.len(), 5, "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("\"mystery\"")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("\"paid\"") && m.contains("BitCost::zero()")),
+        "{msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("\"free_ride\"") && m.contains("non-zero")),
+        "{msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("\"dead\"") && m.contains("no push site")),
+        "{msgs:?}"
+    );
+    assert!(msgs.iter().any(|m| m.contains("string literal")), "{msgs:?}");
+    // The well-behaved "ok_kind" site produces nothing.
+    assert!(!msgs.iter().any(|m| m.contains("ok_kind")), "{msgs:?}");
+    // The documented registry keeps registry-sync quiet.
+    assert!(
+        !report.findings.iter().any(|f| f.rule == "registry-sync"),
+        "{:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn drifted_algorithm_registries_are_caught() {
+    let report = audit_fixture("unregistered_algo");
+    let sync: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "registry-sync").collect();
+    let msgs: Vec<&str> = sync.iter().map(|f| f.msg.as_str()).collect();
+    assert_eq!(sync.len(), 2, "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("`Beta`") && m.contains("Algorithm::all()")),
+        "{msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("`Beta`") && m.contains("transport_equivalence")),
+        "{msgs:?}"
+    );
+    // Alpha is registered and exercised: no findings mention it.
+    assert!(!msgs.iter().any(|m| m.contains("`Alpha`")), "{msgs:?}");
+}
+
+#[test]
+fn escape_hygiene_is_enforced() {
+    let report = audit_fixture("stale_allows");
+    let rules = rules_of(&report);
+    assert_eq!(rules.iter().filter(|r| **r == "unused-allow").count(), 1, "{rules:?}");
+    assert_eq!(rules.iter().filter(|r| **r == "allow-syntax").count(), 2, "{rules:?}");
+    assert_eq!(report.findings.len(), 3, "{:?}", report.findings);
+    assert_eq!(report.allows_honored, 0);
+}
+
+#[test]
+fn missing_src_dir_is_an_error_not_a_clean_report() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/audit_fixtures/no_such_fixture");
+    assert!(run(&AuditConfig::for_root(root)).is_err());
+}

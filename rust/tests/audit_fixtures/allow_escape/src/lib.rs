@@ -1,0 +1,9 @@
+//! Fixture: the same violation shape as `panic_hit`, but escaped with a
+//! justified inline allow — the audit must come back clean and count the
+//! suppression.
+
+pub fn last_pushed(items: &mut Vec<u32>) -> u32 {
+    items.push(7);
+    // audit:allow(panic-safety): the element was pushed on the previous line.
+    *items.last().unwrap()
+}

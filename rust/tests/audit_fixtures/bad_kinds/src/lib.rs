@@ -1,0 +1,55 @@
+//! Fixture: a self-contained message-kind registry plus push sites that
+//! violate the charge policy in every way bit-accounting checks.
+
+pub enum Direction {
+    Up,
+    Down,
+}
+
+pub enum Charge {
+    Charged,
+    Free,
+    Mixed,
+}
+
+pub struct Kind {
+    pub name: &'static str,
+    pub dir: Direction,
+    pub charge: Charge,
+}
+
+pub const KINDS: &[Kind] = &[
+    // Never pushed anywhere: "dead vocabulary" finding.
+    Kind { name: "dead", dir: Direction::Up, charge: Charge::Charged },
+    Kind { name: "free_ride", dir: Direction::Down, charge: Charge::Free },
+    Kind { name: "ok_kind", dir: Direction::Up, charge: Charge::Charged },
+    Kind { name: "paid", dir: Direction::Up, charge: Charge::Charged },
+];
+
+pub struct BitCost(f64);
+impl BitCost {
+    pub fn zero() -> Self {
+        BitCost(0.0)
+    }
+    pub fn floats(n: usize) -> Self {
+        BitCost(64.0 * n as f64)
+    }
+}
+
+pub struct Packet;
+impl Packet {
+    pub fn push_vector(&mut self, _kind: &'static str, _v: Vec<f64>, _cost: BitCost) {}
+}
+
+pub fn exercise(p: &mut Packet, computed: &'static str) {
+    // Fine: registered, charged, non-zero cost.
+    p.push_vector("ok_kind", vec![1.0], BitCost::floats(1));
+    // Unregistered kind: must be caught.
+    p.push_vector("mystery", vec![1.0], BitCost::floats(1));
+    // Charged kind pushed free: must be caught.
+    p.push_vector("paid", vec![1.0], BitCost::zero());
+    // Free kind pushed with a cost: must be caught.
+    p.push_vector("free_ride", vec![1.0], BitCost::floats(1));
+    // Computed (non-literal) kind: must be caught.
+    p.push_vector(computed, vec![1.0], BitCost::zero());
+}

@@ -1,0 +1,39 @@
+//! Fixture: rule-trigger *text* in places the audit must NOT flag —
+//! string literals, comments, test-only code, and identifiers that merely
+//! resemble the dangerous ones.
+
+// A comment mentioning .unwrap(), HashMap, Instant::now() and panic! is fine.
+
+pub fn strings() -> &'static str {
+    "call .unwrap() on a HashMap at Instant::now() or panic!(\"boom\")"
+}
+
+pub fn raw_strings() -> &'static str {
+    r#"HashMap::new().unwrap() inside a raw string with a "quote""#
+}
+
+/// `unwrap_or` / `unwrap_or_else` / `unwrap_or_default` are infallible.
+pub fn combinators(x: Option<u32>) -> u32 {
+    x.unwrap_or(0).max(x.unwrap_or_else(|| 1)).max(x.unwrap_or_default())
+}
+
+/// `unreachable!` and asserts state invariants; they are exempt.
+pub fn invariants(x: u32) -> u32 {
+    assert!(x < 10, "precondition");
+    match x {
+        0..=9 => x,
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn test_code_may_unwrap() {
+        let mut m = HashMap::new();
+        m.insert("k", 1);
+        assert_eq!(*m.get("k").unwrap(), 1);
+    }
+}

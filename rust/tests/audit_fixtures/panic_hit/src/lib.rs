@@ -1,0 +1,36 @@
+//! Fixture: library-path violations the audit must catch.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn lookup(map: &HashMap<String, u32>, key: &str) -> u32 {
+    // An unwrap on a library path: panic-safety must fire.
+    *map.get(key).unwrap()
+}
+
+pub fn timed() -> f64 {
+    // A wall-clock read outside obs/: determinism-clock must fire.
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+pub fn ambient_random() -> u64 {
+    // An unseeded stream: determinism-rng must fire.
+    let mut rng = Rng::new(0x1234);
+    rng.next()
+}
+
+pub fn unfinished() {
+    todo!("panic-safety flags todo! too")
+}
+
+pub struct Rng(u64);
+impl Rng {
+    pub fn new(state: u64) -> Self {
+        Rng(state)
+    }
+    pub fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1);
+        self.0
+    }
+}

@@ -1,0 +1,17 @@
+//! Fixture: escape-hygiene violations — a stale allow, an unknown rule id,
+//! and a directive without a justification.
+
+// audit:allow(panic-safety): nothing here actually panics any more.
+pub fn fine() -> u32 {
+    1
+}
+
+// audit:allow(no-such-rule): the rule id is not in the registry.
+pub fn also_fine() -> u32 {
+    2
+}
+
+// audit:allow(determinism-hash)
+pub fn still_fine() -> u32 {
+    3
+}

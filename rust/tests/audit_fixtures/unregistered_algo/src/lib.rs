@@ -1,0 +1,14 @@
+//! Fixture: an `Algorithm` enum whose registries have drifted — `Beta` is
+//! missing from `fn all()` and from the transport-equivalence test.
+
+#[derive(Clone, Copy, Debug)]
+pub enum Algorithm {
+    Alpha,
+    Beta,
+}
+
+impl Algorithm {
+    pub fn all() -> &'static [Algorithm] {
+        &[Algorithm::Alpha]
+    }
+}

@@ -1,0 +1,9 @@
+// Fixture equivalence test: covers Alpha only; Beta is missing.
+
+#[test]
+fn alpha_equivalence() {
+    let _ = "Algorithm::Alpha";
+    let _alpha = Alpha;
+}
+
+struct Alpha;
