@@ -3,12 +3,13 @@
 //! and the PJRT dispatch overhead vs the native oracle.
 //!
 //! ```bash
-//! cargo bench --bench hot_path            # all groups
-//! cargo bench --bench hot_path -- gram    # filter by substring
+//! cargo bench --bench hot_path                     # all groups
+//! cargo bench --bench hot_path -- gram             # filter by substring
+//! cargo bench --bench hot_path -- --json out.json  # bench-v1 report (docs/PERF.md)
 //! ```
 
 use basis_learn::basis::{HessianBasis, PsdBasis, StandardBasis, SubspaceBasis};
-use basis_learn::bench_util::{black_box, Bench};
+use basis_learn::bench_util::{black_box, Bench, CountingAlloc};
 use basis_learn::compressors::CompressorSpec;
 use basis_learn::coordinator::project_psd;
 use basis_learn::data::{FederatedDataset, SyntheticSpec};
@@ -16,13 +17,49 @@ use basis_learn::linalg::{cholesky_solve, svd, sym_eigen, Mat};
 use basis_learn::problem::{LocalProblem, LogisticProblem};
 use basis_learn::rng::Rng;
 
-fn filter_match(name: &str) -> bool {
-    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+/// Every case reports gross heap bytes per iteration alongside its time.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Parsed bench CLI: positional args are substring name filters; `--json
+/// PATH` writes the machine-readable report (the PATH value must *not*
+/// leak into the filter set, so parsing consumes it explicitly); `--quick`
+/// switches to the tiny CI smoke budget.
+struct Cli {
+    filters: Vec<String>,
+    json: Option<String>,
+    quick: bool,
+}
+
+fn parse_cli() -> Cli {
+    let mut filters = Vec::new();
+    let mut json = None;
+    let mut quick = false;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            json = it.next();
+        } else if let Some(v) = a.strip_prefix("--json=") {
+            json = Some(v.to_string());
+        } else if a == "--quick" {
+            quick = true;
+        } else if !a.starts_with('-') {
+            filters.push(a);
+        }
+    }
+    Cli { filters, json, quick }
+}
+
+impl Cli {
+    fn matches(&self, name: &str) -> bool {
+        self.filters.is_empty() || self.filters.iter().any(|a| name.contains(a.as_str()))
+    }
 }
 
 fn main() {
-    let mut b = Bench::new();
+    let cli = parse_cli();
+    let filter_match = |name: &str| cli.matches(name);
+    let mut b = if cli.quick { Bench::quick() } else { Bench::new() };
     let mut rng = Rng::new(1);
 
     // ── linalg primitives ──
@@ -101,6 +138,16 @@ fn main() {
         }
     }
 
+    // ── packed symmetric kernels vs dense (the SymMat hot path) ──
+    if filter_match("sym") {
+        basis_learn::bench_util::bench_sym_group(&mut b, &mut rng);
+    }
+
+    // ── in-place kernels vs their allocating counterparts ──
+    if filter_match("into") {
+        basis_learn::bench_util::bench_into_group(&mut b, &mut rng);
+    }
+
     // ── transport backends: per-round wall time, serial vs concurrent ──
     if filter_match("transport") {
         bench_transport(&mut b);
@@ -112,6 +159,15 @@ fn main() {
     }
 
     println!("\n{} cases measured.", b.results().len());
+    if let Some(path) = &cli.json {
+        match std::fs::write(path, basis_learn::bench_util::json_report(b.results())) {
+            Ok(()) => println!("wrote bench report {path}"),
+            Err(e) => {
+                eprintln!("error writing bench report {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }
 
 /// Per-round wall time of one BL1 round (d = 200, n = 8 clients, Top-K on
@@ -123,6 +179,7 @@ fn bench_transport(b: &mut Bench) {
     use basis_learn::config::{Algorithm, RunConfig};
     use basis_learn::coordinator::{
         build_split, estimate_smoothness, native_local, native_locals, run_one_round, Env,
+        ServerState,
     };
     use basis_learn::transport::{client_rngs, Lockstep, Threaded};
 
@@ -156,7 +213,10 @@ fn bench_transport(b: &mut Bench) {
 
     {
         let (mut server, clients) = build_split(&env).unwrap();
-        let mut transport = Lockstep::new(&locals, clients, client_rngs(cfg.seed, env.n));
+        // Pooled, like the production factory: steady-state rounds reuse
+        // packet buffers instead of allocating (visible in the B/it column).
+        let mut transport = Lockstep::new(&locals, clients, client_rngs(cfg.seed, env.n))
+            .with_pool(server.pool().cloned());
         let mut srv_rng = Rng::new(cfg.seed);
         let mut round = 0usize;
         b.bench("transport/lockstep", || {

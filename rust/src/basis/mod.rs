@@ -29,6 +29,17 @@ pub use subspace::SubspaceBasis;
 
 use crate::linalg::Mat;
 
+/// Caller-owned scratch for the allocation-free basis transforms
+/// ([`HessianBasis::encode_into`] / [`HessianBasis::decode_into`]).
+///
+/// Two-step transforms (e.g. [`SubspaceBasis`]'s `VᵀAV`) stage their
+/// intermediate product here so steady-state calls reuse the same buffers.
+#[derive(Default)]
+pub struct BasisScratch {
+    /// Intermediate product (`A·V`, `V·h`, …).
+    pub tmp: Mat,
+}
+
 /// A basis of (a subspace of) the space of `d×d` matrices, with the
 /// coefficient transforms the Basis-Learn algorithms need.
 pub trait HessianBasis: Send + Sync {
@@ -47,6 +58,21 @@ pub trait HessianBasis: Send + Sync {
 
     /// Reconstruct `Σ_{jl} h_{jl} B^{jl}` from coefficients.
     fn decode(&self, h: &Mat) -> Mat;
+
+    /// [`HessianBasis::encode`] into caller-owned storage. Implementations
+    /// must produce bit-identical coefficients to `encode`; the default
+    /// delegates (and therefore still allocates) — hot bases override it.
+    fn encode_into(&self, a: &Mat, out: &mut Mat, scratch: &mut BasisScratch) {
+        let _ = scratch;
+        out.copy_from(&self.encode(a));
+    }
+
+    /// [`HessianBasis::decode`] into caller-owned storage (same
+    /// bit-identity contract as [`HessianBasis::encode_into`]).
+    fn decode_into(&self, h: &Mat, out: &mut Mat, scratch: &mut BasisScratch) {
+        let _ = scratch;
+        out.copy_from(&self.decode(h));
+    }
 
     /// `N_B` of eq. (10): 1 if the basis matrices are mutually orthogonal
     /// (in the Frobenius inner product), `d²` otherwise.
@@ -74,6 +100,22 @@ pub trait HessianBasis: Send + Sync {
     /// Reconstruct a gradient from its coefficients.
     fn decode_grad(&self, c: &[f64]) -> Vec<f64> {
         c.to_vec()
+    }
+
+    /// [`HessianBasis::encode_grad`] into caller-owned storage
+    /// (bit-identical; the default delegates).
+    fn encode_grad_into(&self, g: &[f64], out: &mut Vec<f64>) {
+        let enc = self.encode_grad(g);
+        out.clear();
+        out.extend_from_slice(&enc);
+    }
+
+    /// [`HessianBasis::decode_grad`] into caller-owned storage
+    /// (bit-identical; the default delegates).
+    fn decode_grad_into(&self, c: &[f64], out: &mut Vec<f64>) {
+        let dec = self.decode_grad(c);
+        out.clear();
+        out.extend_from_slice(&dec);
     }
 
     /// Human-readable name.

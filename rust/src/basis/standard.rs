@@ -1,6 +1,6 @@
 //! Standard bases of `R^{d×d}` and of the symmetric subspace (Ex. 4.1/4.2).
 
-use super::HessianBasis;
+use super::{BasisScratch, HessianBasis};
 use crate::linalg::Mat;
 
 /// Example 4.1: the canonical basis `E_{jl}`; `h(A) = A`.
@@ -34,6 +34,24 @@ impl HessianBasis for StandardBasis {
 
     fn decode(&self, h: &Mat) -> Mat {
         h.clone()
+    }
+
+    fn encode_into(&self, a: &Mat, out: &mut Mat, _scratch: &mut BasisScratch) {
+        out.copy_from(a);
+    }
+
+    fn decode_into(&self, h: &Mat, out: &mut Mat, _scratch: &mut BasisScratch) {
+        out.copy_from(h);
+    }
+
+    fn encode_grad_into(&self, g: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(g);
+    }
+
+    fn decode_grad_into(&self, c: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(c);
     }
 
     fn n_b(&self) -> f64 {
@@ -103,6 +121,46 @@ impl HessianBasis for SymTriBasis {
             }
         }
         out
+    }
+
+    fn encode_into(&self, a: &Mat, out: &mut Mat, _scratch: &mut BasisScratch) {
+        debug_assert!(a.is_symmetric(1e-9), "SymTriBasis expects symmetric input");
+        let d = self.d;
+        out.resize_zeroed(d, d);
+        for j in 0..d {
+            for l in 0..=j {
+                out[(j, l)] = a[(j, l)];
+            }
+        }
+    }
+
+    fn decode_into(&self, h: &Mat, out: &mut Mat, _scratch: &mut BasisScratch) {
+        let d = self.d;
+        out.resize_zeroed(d, d);
+        for j in 0..d {
+            for l in 0..d {
+                let c = h[(j, l)];
+                if c == 0.0 {
+                    continue;
+                }
+                if j == l {
+                    out[(j, j)] += c;
+                } else {
+                    out[(j, l)] += c;
+                    out[(l, j)] += c;
+                }
+            }
+        }
+    }
+
+    fn encode_grad_into(&self, g: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(g);
+    }
+
+    fn decode_grad_into(&self, c: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(c);
     }
 
     fn n_b(&self) -> f64 {

@@ -11,7 +11,7 @@
 //! `scipy.linalg.orth`; we use our one-sided-Jacobi SVD), at a one-time cost
 //! of `r·d` floats (Table 1).
 
-use super::HessianBasis;
+use super::{BasisScratch, HessianBasis};
 use crate::linalg::{svd, Mat};
 use crate::rng::Rng;
 
@@ -20,6 +20,9 @@ use crate::rng::Rng;
 pub struct SubspaceBasis {
     /// `d×r` orthonormal matrix.
     v: Mat,
+    /// Precomputed `Vᵀ`, so the hot `encode_into`/`decode_into` paths never
+    /// re-transpose (bit-identical to transposing on the fly).
+    vt: Mat,
 }
 
 impl SubspaceBasis {
@@ -32,7 +35,7 @@ impl SubspaceBasis {
             err < 1e-8,
             "SubspaceBasis requires orthonormal columns (‖VᵀV−I‖={err:.2e})"
         );
-        SubspaceBasis { v }
+        SubspaceBasis { vt: v.transpose(), v }
     }
 
     /// Extract an orthonormal basis of the row space of a data matrix
@@ -87,6 +90,24 @@ impl HessianBasis for SubspaceBasis {
         // A = V h Vᵀ
         let vh = self.v.matmul(h);
         vh.matmul(&self.v.transpose())
+    }
+
+    fn encode_into(&self, a: &Mat, out: &mut Mat, scratch: &mut BasisScratch) {
+        a.matmul_into(&self.v, &mut scratch.tmp);
+        self.vt.matmul_into(&scratch.tmp, out);
+    }
+
+    fn decode_into(&self, h: &Mat, out: &mut Mat, scratch: &mut BasisScratch) {
+        self.v.matmul_into(h, &mut scratch.tmp);
+        scratch.tmp.matmul_into(&self.vt, out);
+    }
+
+    fn encode_grad_into(&self, g: &[f64], out: &mut Vec<f64>) {
+        self.v.matvec_t_into(g, out);
+    }
+
+    fn decode_grad_into(&self, c: &[f64], out: &mut Vec<f64>) {
+        self.v.matvec_into(c, out);
     }
 
     fn n_b(&self) -> f64 {

@@ -2,15 +2,91 @@
 //! environment's crate registry, so we ship our own).
 //!
 //! Provides warmup, adaptive iteration counts targeting a fixed measurement
-//! window, and robust statistics (median + MAD), with the familiar
-//! `group/bench` shape. Used by both `rust/benches/*` entry points.
+//! window, robust statistics (median + MAD), per-case allocation accounting
+//! (when [`CountingAlloc`] is installed as the global allocator), and a
+//! machine-readable JSON report ([`json_report`], schema in `docs/PERF.md`),
+//! with the familiar `group/bench` shape. Used by the `rust/benches/*`
+//! entry points and the `repro bench` subcommand ([`run_cli_suite`]).
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::hint::black_box as bb;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Re-export of `std::hint::black_box` under the name bench code expects.
 pub fn black_box<T>(x: T) -> T {
     bb(x)
+}
+
+/// Gross bytes requested through [`CountingAlloc`] since process start
+/// (frees are not subtracted: steady-state code that allocates and frees
+/// every round still shows up).
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Number of allocation requests through [`CountingAlloc`].
+static ALLOCATION_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Byte-counting wrapper around the system allocator.
+///
+/// Install it as the binary's global allocator to get per-case
+/// bytes-per-iteration in [`Bench`] output and the JSON report, and to
+/// write allocation-regression tests:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: basis_learn::bench_util::CountingAlloc = basis_learn::bench_util::CountingAlloc;
+/// ```
+///
+/// Overhead is two relaxed atomic increments per allocation, so leaving it
+/// installed for ordinary runs is harmless. Counters are process-global and
+/// monotonic; measure deltas, not absolutes.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // Only growth counts as fresh bytes; shrinks release, not request.
+        if new_size > layout.size() {
+            ALLOCATED_BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+            ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+impl CountingAlloc {
+    /// Gross bytes allocated so far (0 forever unless installed globally).
+    pub fn allocated_bytes() -> u64 {
+        ALLOCATED_BYTES.load(Ordering::Relaxed)
+    }
+
+    /// Allocation requests so far (0 forever unless installed globally).
+    pub fn allocation_count() -> u64 {
+        ALLOCATION_COUNT.load(Ordering::Relaxed)
+    }
+
+    /// Whether this process's global allocator routes through the counter
+    /// (probed with one boxed byte; the counters only ever move when the
+    /// wrapper is installed, so any movement is proof).
+    pub fn is_counting() -> bool {
+        let before = Self::allocation_count();
+        drop(bb(Box::new(0u8)));
+        Self::allocation_count() != before
+    }
 }
 
 /// Result of one benchmark case.
@@ -24,6 +100,9 @@ pub struct BenchResult {
     /// Iterations per sample.
     pub iters: u64,
     pub samples: usize,
+    /// Gross heap bytes per iteration, averaged over the measured samples.
+    /// Always 0 unless [`CountingAlloc`] is the process's global allocator.
+    pub bytes_per_iter: u64,
 }
 
 impl BenchResult {
@@ -101,6 +180,7 @@ impl Bench {
             ((self.budget.as_secs_f64() / samples as f64 / per_iter.max(1e-9)).ceil() as u64).max(1);
 
         let mut times: Vec<f64> = Vec::with_capacity(samples);
+        let bytes_before = CountingAlloc::allocated_bytes();
         for _ in 0..samples {
             let s = Instant::now();
             for _ in 0..iters {
@@ -108,6 +188,7 @@ impl Bench {
             }
             times.push(s.elapsed().as_secs_f64() / iters as f64);
         }
+        let bytes = CountingAlloc::allocated_bytes().saturating_sub(bytes_before);
         times.sort_by(|a, b| a.total_cmp(b));
         let median = times[times.len() / 2];
         let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
@@ -120,14 +201,21 @@ impl Bench {
             mad: Duration::from_secs_f64(mad),
             iters,
             samples,
+            bytes_per_iter: bytes / (samples as u64 * iters).max(1),
+        };
+        let alloc_col = if CountingAlloc::is_counting() {
+            format!("  {:>12}", format!("{} B/it", result.bytes_per_iter))
+        } else {
+            String::new()
         };
         println!(
-            "{:<52} {:>12}  (±{:.1}%, {} samples × {} iters)",
+            "{:<52} {:>12}  (±{:.1}%, {} samples × {} iters){}",
             result.name,
             result.human(),
             100.0 * result.mad.as_secs_f64() / result.median.as_secs_f64().max(1e-12),
             result.samples,
-            result.iters
+            result.iters,
+            alloc_col
         );
         self.results.push(result);
         // audit:allow(panic-safety): the element was pushed on the line above.
@@ -141,6 +229,249 @@ impl Bench {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render bench results as the `bench-v1` JSON report (one result object
+/// per line; full schema in `docs/PERF.md`). `bytes_per_iter` is only
+/// meaningful when `alloc_counted` is `true`.
+pub fn json_report(results: &[BenchResult]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"schema\": \"bench-v1\",\n");
+    out.push_str(&format!("  \"alloc_counted\": {},\n", CountingAlloc::is_counting()));
+    out.push_str("  \"results\": [\n");
+    for (k, r) in results.iter().enumerate() {
+        let comma = if k + 1 < results.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ns_per_iter\": {:.3}, \"mad_ns\": {:.3}, \
+             \"iters\": {}, \"samples\": {}, \"bytes_per_iter\": {}}}{comma}\n",
+            json_escape(&r.name),
+            r.ns(),
+            r.mad.as_secs_f64() * 1e9,
+            r.iters,
+            r.samples,
+            r.bytes_per_iter
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The packed-vs-dense `sym` bench group: every [`crate::linalg::SymMat`]
+/// kernel against its dense [`crate::linalg::Mat`] counterpart on the a1a
+/// dimension. Shared by `repro bench` and `benches/hot_path.rs` so both
+/// feed the same case names into the JSON trajectory.
+pub fn bench_sym_group(b: &mut Bench, rng: &mut crate::rng::Rng) {
+    use crate::linalg::{cholesky_solve, Mat, SymCholesky, SymMat};
+
+    b.group("packed symmetric kernels (d=123, packed vs dense)");
+    let d = 123;
+    let mut sym = Mat::from_fn(d, d, |_, _| rng.normal());
+    sym.symmetrize();
+    let mut spd = sym.transpose().matmul(&sym);
+    spd.add_diag(d as f64);
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let psym = SymMat::from_mat(&sym);
+    let pspd = SymMat::from_mat(&spd);
+
+    let mut packed = SymMat::default();
+    let mut dense = Mat::default();
+    b.bench("sym/pack 123", || {
+        packed.pack_from(&sym);
+        packed.data()[0]
+    });
+    b.bench("sym/unpack 123", || {
+        psym.unpack_into(&mut dense);
+        dense[(0, 0)]
+    });
+
+    // Accumulation A += αB — the per-client Hessian-learning update. The
+    // tiny α keeps the accumulator finite over millions of iterations.
+    let mut acc_dense = spd.clone();
+    b.bench("sym/add_scaled dense 123", || {
+        acc_dense.add_scaled(1e-9, &sym);
+        acc_dense[(0, 0)]
+    });
+    let mut acc_packed = pspd.clone();
+    b.bench("sym/add_scaled packed 123", || {
+        acc_packed.add_scaled(1e-9, &psym);
+        acc_packed.data()[0]
+    });
+
+    b.bench("sym/matvec dense 123", || sym.matvec(&x));
+    let mut y = Vec::new();
+    b.bench("sym/matvec packed 123", || {
+        psym.matvec_into(&x, &mut y);
+        y[0]
+    });
+
+    // Scaled Gram accumulation (the GLM Hessian assembly kernel).
+    let m = 200;
+    let feat = Mat::from_fn(m, d, |_, _| rng.normal());
+    let s: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+    b.bench("sym/gram dense 200x123", || feat.gram_scaled(&s));
+    let mut gram = SymMat::default();
+    b.bench("sym/gram packed 200x123", || {
+        gram.gram_scaled_from(&feat, &s);
+        gram.data()[0]
+    });
+
+    // SPD solve: one-shot dense vs reusable packed factor.
+    b.bench("sym/cholesky dense 123", || {
+        cholesky_solve(&spd, &x).map(|v| v[0]).unwrap_or(f64::NAN)
+    });
+    let mut f = SymCholesky::new();
+    let mut sol = Vec::new();
+    b.bench("sym/cholesky packed 123", || {
+        if f.factor_sym(&pspd).is_ok() {
+            f.solve_into(&x, &mut sol);
+        }
+        sol.first().copied().unwrap_or(f64::NAN)
+    });
+}
+
+/// Allocation-free `*_into` kernels vs their allocating counterparts (the
+/// pairs `tests/packed_kernels.rs` pins bitwise-equal).
+pub fn bench_into_group(b: &mut Bench, rng: &mut crate::rng::Rng) {
+    use crate::basis::{BasisScratch, HessianBasis, SubspaceBasis};
+    use crate::compressors::{CompressScratch, CompressorSpec};
+    use crate::linalg::Mat;
+
+    b.group("in-place kernels vs allocating (d=123, r=60)");
+    let d = 123;
+    let a = Mat::from_fn(d, d, |_, _| rng.normal());
+    let mut out = Mat::default();
+    b.bench("into/matmul alloc 123", || a.matmul(&a));
+    b.bench("into/matmul into 123", || {
+        a.matmul_into(&a, &mut out);
+        out[(0, 0)]
+    });
+    b.bench("into/transpose alloc 123", || a.transpose());
+    b.bench("into/transpose into 123", || {
+        a.transpose_into(&mut out);
+        out[(0, 0)]
+    });
+
+    let v = crate::basis::subspace::orthonormal_cols(d, 60, rng);
+    let basis = SubspaceBasis::new(v);
+    let mut h = Mat::from_fn(d, d, |_, _| rng.normal());
+    h.symmetrize();
+    let mut scratch = BasisScratch::default();
+    let mut coeff = Mat::default();
+    b.bench("into/encode alloc subspace", || basis.encode(&h));
+    b.bench("into/encode into subspace", || {
+        basis.encode_into(&h, &mut coeff, &mut scratch);
+        coeff[(0, 0)]
+    });
+    let code = basis.encode(&h);
+    let mut dec = Mat::default();
+    b.bench("into/decode alloc subspace", || basis.decode(&code));
+    b.bench("into/decode into subspace", || {
+        basis.decode_into(&code, &mut dec, &mut scratch);
+        dec[(0, 0)]
+    });
+
+    let comp = CompressorSpec::TopK(60).build_mat(code.rows());
+    let mut r1 = rng.derive(7);
+    b.bench("into/compress alloc topk:60", || comp.compress(&code, &mut r1));
+    let mut cs = CompressScratch::default();
+    let mut cout = Mat::default();
+    let mut r2 = rng.derive(7);
+    b.bench("into/compress into topk:60", || {
+        let _cost = comp.compress_mat_into(&code, &mut cout, &mut cs, &mut r2);
+        cout.data().first().copied().unwrap_or(f64::NAN)
+    });
+}
+
+/// Steady-state second-order rounds over the pooled `Lockstep` transport:
+/// after the warm-up phase these run with zero heap allocations per round
+/// (pinned by `tests/alloc_regression.rs`), which the bytes column shows
+/// directly when [`CountingAlloc`] is installed.
+pub fn bench_round_group(b: &mut Bench) {
+    use crate::compressors::CompressorSpec;
+    use crate::config::{Algorithm, RunConfig};
+    use crate::coordinator::{
+        build_split, estimate_smoothness, native_locals, run_one_round, Env, ServerState,
+    };
+    use crate::data::{FederatedDataset, SyntheticSpec};
+    use crate::transport::{client_rngs, Lockstep};
+
+    b.group("steady-state rounds (pooled lockstep; d=60, n=4, m=40/client)");
+    let fed = FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 4,
+        m_per_client: 40,
+        dim: 60,
+        intrinsic_dim: 10,
+        noise: 0.0,
+        seed: 77,
+    });
+    for (label, algorithm) in [("bl1", Algorithm::Bl1), ("fednl", Algorithm::FedNl)] {
+        let cfg = RunConfig {
+            algorithm,
+            hess_comp: CompressorSpec::TopK(10),
+            target_gap: 0.0,
+            ..RunConfig::default()
+        };
+        let locals = native_locals(&fed);
+        let features: Vec<Option<crate::linalg::Mat>> =
+            fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+        let smoothness = estimate_smoothness(&locals, cfg.lambda);
+        let env = Env {
+            locals: &locals,
+            cfg: &cfg,
+            d: fed.dim(),
+            n: fed.n_clients(),
+            smoothness,
+            features,
+            obs: crate::obs::Obs::noop(),
+        };
+        let Ok((mut server, clients)) = build_split(&env) else {
+            println!("  (skipping round/{label}: split failed)");
+            continue;
+        };
+        let mut transport = Lockstep::new(&locals, clients, client_rngs(cfg.seed, env.n))
+            .with_pool(server.pool().cloned());
+        let mut srv_rng = crate::rng::Rng::new(cfg.seed);
+        let mut round = 0usize;
+        b.bench(format!("round/{label} lockstep"), || {
+            let bits = run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng)
+                .map(|t| t.up_bits)
+                .unwrap_or(f64::NAN);
+            round += 1;
+            bits
+        });
+    }
+}
+
+/// The `repro bench` suite. `keep` filters by group key: `sym` (packed vs
+/// dense symmetric kernels), `into` (in-place vs allocating kernels),
+/// `round` (steady-state pooled rounds).
+pub fn run_cli_suite(b: &mut Bench, keep: &dyn Fn(&str) -> bool) {
+    // Fixed suite seed: bench inputs are reproducible across runs/machines.
+    let bench_seed = 1;
+    let mut rng = crate::rng::Rng::new(bench_seed);
+    if keep("sym") {
+        bench_sym_group(b, &mut rng);
+    }
+    if keep("into") {
+        bench_into_group(b, &mut rng);
+    }
+    if keep("round") {
+        bench_round_group(b);
     }
 }
 
@@ -186,7 +517,47 @@ mod tests {
             mad: Duration::ZERO,
             iters: 1,
             samples: 1,
+            bytes_per_iter: 0,
         };
         assert_eq!(r.human(), "1.50 µs");
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let r = BenchResult {
+            name: "group/case \"q\"".into(),
+            median: Duration::from_nanos(1500),
+            mad: Duration::from_nanos(10),
+            iters: 7,
+            samples: 3,
+            bytes_per_iter: 42,
+        };
+        let json = json_report(&[r]);
+        assert!(json.contains("\"schema\": \"bench-v1\""), "{json}");
+        assert!(json.contains("\"name\": \"group/case \\\"q\\\"\""), "{json}");
+        assert!(json.contains("\"ns_per_iter\": 1500.000"), "{json}");
+        assert!(json.contains("\"iters\": 7"), "{json}");
+        assert!(json.contains("\"bytes_per_iter\": 42"), "{json}");
+        // Balanced braces/brackets (cheap well-formedness check).
+        let opens = json.matches('{').count();
+        assert_eq!(opens, json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_escape_control_chars() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+    }
+
+    #[test]
+    fn counting_alloc_counters_are_monotonic() {
+        // Whether or not the wrapper is installed in this test binary, the
+        // counters must never move backwards.
+        let b0 = CountingAlloc::allocated_bytes();
+        let c0 = CountingAlloc::allocation_count();
+        let v: Vec<u64> = (0..1024).collect();
+        assert_eq!(v.len(), 1024);
+        assert!(CountingAlloc::allocated_bytes() >= b0);
+        assert!(CountingAlloc::allocation_count() >= c0);
     }
 }

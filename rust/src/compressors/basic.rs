@@ -1,7 +1,7 @@
 //! Sparsification compressors: Identity, Top-K (greedy, contractive),
 //! Rand-K (random, unbiased) and the lazy Bernoulli compressor of App. A.8.
 
-use super::{BitCost, CompressorClass, MatCompressor, VecCompressor};
+use super::{BitCost, CompressScratch, CompressorClass, MatCompressor, VecCompressor};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -18,6 +18,17 @@ impl MatCompressor for Identity {
         (a.clone(), BitCost::floats(a.rows() * a.cols()))
     }
 
+    fn compress_mat_into(
+        &self,
+        a: &Mat,
+        out: &mut Mat,
+        _scratch: &mut CompressScratch,
+        _rng: &mut Rng,
+    ) -> BitCost {
+        out.copy_from(a);
+        BitCost::floats(a.rows() * a.cols())
+    }
+
     fn class(&self, _numel: usize, _dim: usize) -> CompressorClass {
         CompressorClass::Unbiased { omega: 0.0 }
     }
@@ -30,6 +41,18 @@ impl MatCompressor for Identity {
 impl VecCompressor for Identity {
     fn compress_vec(&self, x: &[f64], _rng: &mut Rng) -> (Vec<f64>, BitCost) {
         (x.to_vec(), BitCost::floats(x.len()))
+    }
+
+    fn compress_vec_into(
+        &self,
+        x: &[f64],
+        out: &mut Vec<f64>,
+        _scratch: &mut CompressScratch,
+        _rng: &mut Rng,
+    ) -> BitCost {
+        out.clear();
+        out.extend_from_slice(x);
+        BitCost::floats(x.len())
     }
 
     fn class_vec(&self, _n: usize) -> CompressorClass {
@@ -77,12 +100,45 @@ impl TopK {
         }
         (out, BitCost::floats(k) + BitCost::indices(k, data.len()))
     }
+
+    /// [`TopK::top_indices`] into caller-owned storage (identical selection).
+    fn top_indices_into(&self, data: &[f64], idx: &mut Vec<usize>) {
+        let k = self.k.min(data.len());
+        idx.clear();
+        idx.extend(0..data.len());
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            data[b].abs().total_cmp(&data[a].abs())
+        });
+        idx.truncate(k);
+    }
+
+    /// [`TopK::apply`] scattering into a caller-owned zeroed slice; returns
+    /// the wire cost. `out` must already be `data.len()` zeros.
+    fn scatter_into(&self, data: &[f64], out: &mut [f64], idx: &mut Vec<usize>) -> BitCost {
+        let k = self.k.min(data.len());
+        self.top_indices_into(data, idx);
+        for &i in idx.iter() {
+            out[i] = data[i];
+        }
+        BitCost::floats(k) + BitCost::indices(k, data.len())
+    }
 }
 
 impl MatCompressor for TopK {
     fn compress(&self, a: &Mat, _rng: &mut Rng) -> (Mat, BitCost) {
         let (v, cost) = self.apply(a.data());
         (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn compress_mat_into(
+        &self,
+        a: &Mat,
+        out: &mut Mat,
+        scratch: &mut CompressScratch,
+        _rng: &mut Rng,
+    ) -> BitCost {
+        out.resize_zeroed(a.rows(), a.cols());
+        self.scatter_into(a.data(), out.data_mut(), &mut scratch.idx)
     }
 
     fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
@@ -97,6 +153,18 @@ impl MatCompressor for TopK {
 impl VecCompressor for TopK {
     fn compress_vec(&self, x: &[f64], _rng: &mut Rng) -> (Vec<f64>, BitCost) {
         self.apply(x)
+    }
+
+    fn compress_vec_into(
+        &self,
+        x: &[f64],
+        out: &mut Vec<f64>,
+        scratch: &mut CompressScratch,
+        _rng: &mut Rng,
+    ) -> BitCost {
+        out.clear();
+        out.resize(x.len(), 0.0);
+        self.scatter_into(x, out, &mut scratch.idx)
     }
 
     fn class_vec(&self, n: usize) -> CompressorClass {
@@ -135,12 +203,36 @@ impl RandK {
         // Rand-K costs K floats + indices).
         (out, BitCost::floats(k) + BitCost::indices(k, n))
     }
+
+    /// [`RandK::apply`] scattering into a caller-owned zeroed slice (identical
+    /// RNG draws and values). `out` must already be `data.len()` zeros.
+    fn scatter_into(&self, data: &[f64], out: &mut [f64], idx: &mut Vec<usize>, rng: &mut Rng) -> BitCost {
+        let n = data.len();
+        let k = self.k.min(n);
+        let scale = n as f64 / k as f64;
+        rng.sample_without_replacement_into(n, k, idx);
+        for &i in idx.iter() {
+            out[i] = data[i] * scale;
+        }
+        BitCost::floats(k) + BitCost::indices(k, n)
+    }
 }
 
 impl MatCompressor for RandK {
     fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost) {
         let (v, cost) = self.apply(a.data(), rng);
         (Mat::from_vec(a.rows(), a.cols(), v), cost)
+    }
+
+    fn compress_mat_into(
+        &self,
+        a: &Mat,
+        out: &mut Mat,
+        scratch: &mut CompressScratch,
+        rng: &mut Rng,
+    ) -> BitCost {
+        out.resize_zeroed(a.rows(), a.cols());
+        self.scatter_into(a.data(), out.data_mut(), &mut scratch.idx, rng)
     }
 
     fn class(&self, numel: usize, _dim: usize) -> CompressorClass {
@@ -155,6 +247,18 @@ impl MatCompressor for RandK {
 impl VecCompressor for RandK {
     fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost) {
         self.apply(x, rng)
+    }
+
+    fn compress_vec_into(
+        &self,
+        x: &[f64],
+        out: &mut Vec<f64>,
+        scratch: &mut CompressScratch,
+        rng: &mut Rng,
+    ) -> BitCost {
+        out.clear();
+        out.resize(x.len(), 0.0);
+        self.scatter_into(x, out, &mut scratch.idx, rng)
     }
 
     fn class_vec(&self, n: usize) -> CompressorClass {

@@ -49,13 +49,19 @@ impl<Q1: VecCompressor, Q2: VecCompressor> MatCompressor for ComposeRank<Q1, Q2>
 
         let mut out = Mat::zeros(m, n);
         let mut cost = BitCost::floats(r); // the σ_i
+        // Reused column buffers — one fill per retained pair instead of a
+        // fresh `Mat::col` vector per factor per iteration.
+        let mut ucol = Vec::with_capacity(m);
+        let mut vcol = Vec::with_capacity(n);
         for i in 0..r {
             let sigma = dec.s[i];
             if sigma == 0.0 {
                 continue;
             }
-            let (qu, cu) = self.q_left.compress_vec(&dec.u.col(i), rng);
-            let (qv, cv) = self.q_right.compress_vec(&dec.v.col(i), rng);
+            dec.u.col_into(i, &mut ucol);
+            dec.v.col_into(i, &mut vcol);
+            let (qu, cu) = self.q_left.compress_vec(&ucol, rng);
+            let (qv, cv) = self.q_right.compress_vec(&vcol, rng);
             cost += cu;
             cost += cv;
             let f = sigma * scale;

@@ -109,11 +109,37 @@ impl CompressorClass {
     }
 }
 
+/// Caller-owned scratch for the allocation-free compressor paths
+/// ([`MatCompressor::compress_mat_into`] /
+/// [`VecCompressor::compress_vec_into`]).
+#[derive(Default)]
+pub struct CompressScratch {
+    /// Index workspace (Top-K selection, Rand-K sampling).
+    pub idx: Vec<usize>,
+}
+
 /// Compressor acting on matrices.
 pub trait MatCompressor: Send + Sync {
     /// Compress `a`, returning the decompressed-at-receiver matrix and its
     /// wire cost.
     fn compress(&self, a: &Mat, rng: &mut Rng) -> (Mat, BitCost);
+
+    /// [`MatCompressor::compress`] into caller-owned storage. Implementations
+    /// must be bit-identical to `compress` (same RNG draws, same values); the
+    /// default delegates (and therefore still allocates) — hot compressors
+    /// override it.
+    fn compress_mat_into(
+        &self,
+        a: &Mat,
+        out: &mut Mat,
+        scratch: &mut CompressScratch,
+        rng: &mut Rng,
+    ) -> BitCost {
+        let _ = scratch;
+        let (c, cost) = self.compress(a, rng);
+        out.copy_from(&c);
+        cost
+    }
 
     /// Theoretical class/parameter for an input with `numel` entries
     /// (`d²` for `d×d` matrices) and leading dimension `dim`.
@@ -127,6 +153,22 @@ pub trait MatCompressor: Send + Sync {
 pub trait VecCompressor: Send + Sync {
     /// Compress `x`, returning the decompressed vector and its wire cost.
     fn compress_vec(&self, x: &[f64], rng: &mut Rng) -> (Vec<f64>, BitCost);
+
+    /// [`VecCompressor::compress_vec`] into caller-owned storage (same
+    /// bit-identity contract as [`MatCompressor::compress_mat_into`]).
+    fn compress_vec_into(
+        &self,
+        x: &[f64],
+        out: &mut Vec<f64>,
+        scratch: &mut CompressScratch,
+        rng: &mut Rng,
+    ) -> BitCost {
+        let _ = scratch;
+        let (c, cost) = self.compress_vec(x, rng);
+        out.clear();
+        out.extend_from_slice(&c);
+        cost
+    }
 
     /// Theoretical class/parameter for a length-`n` input.
     fn class_vec(&self, n: usize) -> CompressorClass;
@@ -147,6 +189,20 @@ impl<C: MatCompressor> MatCompressor for Symmetrized<C> {
             c.symmetrize();
         }
         (c, cost)
+    }
+
+    fn compress_mat_into(
+        &self,
+        a: &Mat,
+        out: &mut Mat,
+        scratch: &mut CompressScratch,
+        rng: &mut Rng,
+    ) -> BitCost {
+        let cost = self.0.compress_mat_into(a, out, scratch, rng);
+        if a.is_symmetric(0.0) {
+            out.symmetrize();
+        }
+        cost
     }
 
     fn class(&self, numel: usize, dim: usize) -> CompressorClass {

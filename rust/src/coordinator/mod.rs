@@ -170,6 +170,14 @@ pub trait ServerState {
         0.0
     }
 
+    /// The packet pool shared by this method's halves, if it recycles wire
+    /// objects. The round loop returns absorbed uplinks here, and the
+    /// `Lockstep` backend recycles consumed downlinks. `None` (the default)
+    /// keeps the plain allocate-and-drop flow.
+    fn pool(&self) -> Option<&crate::transport::PacketPool> {
+        None
+    }
+
     /// Method label for CSV/legends.
     fn label(&self) -> String;
 }
@@ -285,7 +293,9 @@ pub fn run_federated_factory_traced<'a>(
     let rngs = client_rngs(cfg.seed, n);
     match cfg.transport {
         TransportSpec::Lockstep => {
-            let mut transport = Lockstep::new(env.locals, clients, rngs).with_obs(env.obs);
+            let mut transport = Lockstep::new(env.locals, clients, rngs)
+                .with_obs(env.obs)
+                .with_pool(server.pool().cloned());
             drive(&env, server.as_mut(), &mut transport)
         }
         TransportSpec::Threaded(_) => {
@@ -347,6 +357,11 @@ pub fn run_one_round(
         {
             let _span = obs.span("absorb", Lane::Server, ctx);
             server.absorb(env, round, exchange, &replies, rng)?;
+        }
+        // Absorb only borrows the uplinks, so their buffers can go back to
+        // the method's pool (when it has one) for the next exchange's sends.
+        if let Some(pool) = server.pool() {
+            pool.recycle_batch(replies);
         }
         exchange += 1;
     }

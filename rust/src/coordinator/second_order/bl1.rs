@@ -24,14 +24,43 @@
 //! the server: local Hessians are data-only (inside the data span, keeping
 //! the §2.3 basis lossless) and the server uses `[H^k + λI]_μ` with `μ = λ`.
 
-use crate::basis::HessianBasis;
-use crate::compressors::{BitCost, MatCompressor, VecCompressor};
-use crate::coordinator::{project_psd, Env, RoundPlan, ServerState};
-use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
-use crate::problem::LocalProblem;
+use crate::basis::{BasisScratch, HessianBasis};
+use crate::compressors::{BitCost, CompressScratch, MatCompressor, VecCompressor};
+use crate::coordinator::{Env, RoundPlan, ServerState};
+use crate::linalg::{lu_solve, sub_into, Mat, SymCholesky, Vector};
+use crate::problem::{LocalProblem, OracleScratch};
 use crate::rng::Rng;
-use crate::transport::{ClientStep, Downlink, Packet, Uplink};
+use crate::transport::{ClientStep, Downlink, PacketPool, Uplink};
 use anyhow::Result;
+
+/// Server-side reusable buffers: after the warm-up round every absorb/plan
+/// runs entirely inside this arena (zero heap allocations — asserted by
+/// `tests/alloc_regression.rs`).
+#[derive(Default)]
+struct ServerScratch {
+    /// The PD-safeguarded system matrix `[H^k + λI]_μ`.
+    sym: Mat,
+    /// Probe matrix `sym − μ(1−ε)I` for the cheap-PD check.
+    shifted: Mat,
+    /// Packed Cholesky workspace (probe + Newton solve).
+    chol: SymCholesky,
+    /// `x^{k+1} − z^k` (model-delta input).
+    dx: Vector,
+    /// Compressed model delta `v^k`.
+    v: Vector,
+    /// `z^k − w^k`.
+    dz: Vector,
+    /// Gradient accumulator `g^k`.
+    g: Vector,
+    /// One client's decoded gradient.
+    gdec: Vector,
+    /// Newton step.
+    step: Vector,
+    /// One client's decoded Hessian difference.
+    hdec: Mat,
+    basis: BasisScratch,
+    comp: CompressScratch,
+}
 
 /// BL1 server: decoded Hessian aggregate, gradient anchor, Newton solve.
 pub struct Bl1Server {
@@ -53,6 +82,26 @@ pub struct Bl1Server {
     model_comp: Box<dyn VecCompressor>,
     eta: f64,
     alpha: f64,
+    /// Wire-object recycler shared with the clients and the round loop.
+    pool: PacketPool,
+    scratch: ServerScratch,
+}
+
+/// Client-side reusable buffers (same zero-allocation contract as
+/// [`ServerScratch`]).
+#[derive(Default)]
+struct ClientScratch {
+    /// Local gradient `∇f_i(z^k)`.
+    grad: Vector,
+    /// Local Hessian `∇²f_i(z^k)`.
+    hz: Mat,
+    /// Encoded coefficient target `h(∇²f_i(z^k))`.
+    target: Mat,
+    /// Coefficient difference `h(∇²f_i) − L_i`.
+    diff: Mat,
+    oracle: OracleScratch,
+    basis: BasisScratch,
+    comp: CompressScratch,
 }
 
 /// BL1 client: learned coefficients `L_i^k` and the model mirror.
@@ -67,6 +116,9 @@ pub struct Bl1Client {
     xi: bool,
     eta: f64,
     alpha: f64,
+    /// Handle to the server's recycler (uplink payloads draw from it).
+    pool: PacketPool,
+    scratch: ClientScratch,
 }
 
 /// Build the BL1 split. `fednl_label = Some(..)` forces the standard basis
@@ -84,6 +136,7 @@ pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl1Server, Vec<Bl1Client>
         }
     };
 
+    let pool = PacketPool::new();
     let mut server_bases: Vec<Box<dyn HessianBasis>> = Vec::with_capacity(env.n);
     let mut clients: Vec<Bl1Client> = Vec::with_capacity(env.n);
     let mut h_agg = Mat::zeros(d, d);
@@ -113,6 +166,8 @@ pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl1Server, Vec<Bl1Client>
             xi: true,
             eta,
             alpha,
+            pool: pool.clone(),
+            scratch: ClientScratch::default(),
         });
     }
 
@@ -134,16 +189,30 @@ pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl1Server, Vec<Bl1Client>
         model_comp,
         eta,
         alpha,
+        pool,
+        scratch: ServerScratch::default(),
     };
     (server, clients)
 }
 
 impl Bl1Server {
-    /// The PD-safeguarded system matrix `[H^k + λI]_μ`, μ = λ.
-    fn system_matrix(&self, lambda: f64) -> Mat {
-        let mut m = self.h_agg.clone();
-        m.add_diag(lambda);
-        project_psd(&m, lambda)
+    /// The PD-safeguarded system matrix `[H^k + λI]_μ`, μ = λ, left in
+    /// `scratch.sym`. Allocation-free equivalent of
+    /// [`crate::coordinator::project_psd`] on `H^k + λI`: the packed probe
+    /// factorization performs the same arithmetic as the dense one, so the
+    /// PD decision — and hence the trajectory — is bit-identical. Only the
+    /// non-PD eigenvalue-clamp fallback still allocates (cold path).
+    fn system_matrix_into(&mut self, lambda: f64) {
+        let s = &mut self.scratch;
+        s.sym.copy_from(&self.h_agg);
+        s.sym.add_diag(lambda);
+        s.sym.symmetrize();
+        s.shifted.copy_from(&s.sym);
+        s.shifted.add_diag(-lambda * (1.0 - 1e-12));
+        if s.chol.factor(&s.shifted).is_err() {
+            let e = crate::linalg::sym_eigen(&s.sym);
+            s.sym.copy_from(&e.reconstruct(|l| l.max(lambda)));
+        }
     }
 }
 
@@ -157,18 +226,35 @@ impl ServerState for Bl1Server {
     ) -> Result<Option<RoundPlan>> {
         Ok(match exchange {
             // Trigger: clients hold z^k and ξ^k already.
-            0 => Some(RoundPlan::broadcast(env.n, Packet::empty())),
+            0 => {
+                let mut sends = self.pool.batch(env.n);
+                for i in 0..env.n {
+                    sends.push((i, self.pool.packet()));
+                }
+                Some(RoundPlan::to_clients(sends))
+            }
             // Model broadcast (lines 18–22): v^k = Q(x^{k+1} − z^k), with
             // ξ^{k+1} riding along (1 bit).
             1 => {
-                let dx = crate::linalg::sub(&self.x, &self.z);
-                let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
-                crate::linalg::axpy(self.eta, &v, &mut self.z);
+                sub_into(&self.x, &self.z, &mut self.scratch.dx);
+                let vcost = self.model_comp.compress_vec_into(
+                    &self.scratch.dx,
+                    &mut self.scratch.v,
+                    &mut self.scratch.comp,
+                    rng,
+                );
+                crate::linalg::axpy(self.eta, &self.scratch.v, &mut self.z);
                 self.xi = rng.bernoulli(env.cfg.p);
-                let mut down = Packet::empty();
-                down.push_vector("model_delta", v, vcost);
-                down.push_flags("xi", vec![self.xi], BitCost::bits(1.0));
-                Some(RoundPlan::broadcast(env.n, down))
+                let mut sends = self.pool.batch(env.n);
+                for i in 0..env.n {
+                    let mut down = self.pool.packet();
+                    down.push_vector("model_delta", self.pool.clone_slice(&self.scratch.v), vcost);
+                    let mut xi = self.pool.vec_bool(1);
+                    xi.push(self.xi);
+                    down.push_flags("xi", xi, BitCost::bits(1.0));
+                    sends.push((i, down));
+                }
+                Some(RoundPlan::to_clients(sends))
             }
             _ => None,
         })
@@ -189,40 +275,53 @@ impl ServerState for Bl1Server {
         let lambda = env.cfg.lambda;
 
         // ── gradient phase (lines 4–7 / 12–15) ──
-        let h_mu = self.system_matrix(lambda);
-        let g: Vector = if self.xi {
-            self.w = self.z.clone();
-            let mut g = vec![0.0; env.d];
+        self.system_matrix_into(lambda); // h_mu, left in scratch.sym
+        if self.xi {
+            self.w.clone_from(&self.z);
+            self.scratch.g.clear();
+            self.scratch.g.resize(env.d, 0.0);
             for (i, up) in replies {
                 let gc = up.vector("grad_coeff")?;
-                crate::linalg::axpy(1.0 / n, &self.bases[*i].decode_grad(gc), &mut g);
+                self.bases[*i].decode_grad_into(gc, &mut self.scratch.gdec);
+                crate::linalg::axpy(1.0 / n, &self.scratch.gdec, &mut self.scratch.g);
             }
-            crate::linalg::axpy(lambda, &self.z, &mut g);
-            self.grad_w = g.clone();
-            g
+            crate::linalg::axpy(lambda, &self.z, &mut self.scratch.g);
+            self.grad_w.clone_from(&self.scratch.g);
         } else {
             // g^k = [H^k]_μ (z^k − w^k) + ∇f(w^k)
-            let dz = crate::linalg::sub(&self.z, &self.w);
-            let mut g = h_mu.matvec(&dz);
-            crate::linalg::axpy(1.0, &self.grad_w, &mut g);
-            g
-        };
+            sub_into(&self.z, &self.w, &mut self.scratch.dz);
+            self.scratch.sym.matvec_into(&self.scratch.dz, &mut self.scratch.g);
+            crate::linalg::axpy(1.0, &self.grad_w, &mut self.scratch.g);
+        }
 
-        // ── Newton step with the *current* H^k (line 16) ──
-        let step = cholesky_solve(&h_mu, &g).or_else(|_| lu_solve(&h_mu, &g))?;
-        self.x = crate::linalg::sub(&self.z, &step);
+        // ── Newton step with the *current* H^k (line 16) ── packed Cholesky
+        // first (bit-identical to the dense `cholesky_solve`), dense LU as
+        // the cold fallback.
+        if self.scratch.chol.factor(&self.scratch.sym).is_ok() {
+            self.scratch.chol.solve_into(&self.scratch.g, &mut self.scratch.step);
+        } else {
+            let step = lu_solve(&self.scratch.sym, &self.scratch.g)?;
+            self.scratch.step.clear();
+            self.scratch.step.extend_from_slice(&step);
+        }
+        sub_into(&self.z, &self.scratch.step, &mut self.x);
 
         // ── Hessian learning (lines 8–9 / 17): decode the compressed
         //    differences into the aggregate ──
         for (i, up) in replies {
             let s = up.matrix("hess_delta")?;
-            self.h_agg.add_scaled(self.alpha / n, &self.bases[*i].decode(s));
+            self.bases[*i].decode_into(s, &mut self.scratch.hdec, &mut self.scratch.basis);
+            self.h_agg.add_scaled(self.alpha / n, &self.scratch.hdec);
         }
         Ok(())
     }
 
     fn x(&self) -> &[f64] {
         &self.x
+    }
+
+    fn pool(&self) -> Option<&PacketPool> {
+        Some(&self.pool)
     }
 
     fn setup_bits_per_node(&self, env: &Env) -> f64 {
@@ -260,22 +359,29 @@ impl ClientStep for Bl1Client {
             let v = down.vector("model_delta")?;
             crate::linalg::axpy(self.eta, v, &mut self.z);
             self.xi = down.flags("xi")?[0];
-            return Ok(Packet::empty());
+            // Pooled even though empty: the round loop recycles every reply,
+            // so acquires and recycles must balance to keep the free lists
+            // from growing.
+            return Ok(self.pool.packet());
         }
-        let mut up = Packet::empty();
+        let mut up = self.pool.packet();
         // Gradient in basis coefficients, on ξ rounds only.
         if self.xi {
-            let gi = local.grad(&self.z);
-            let gc = self.basis.encode_grad(&gi);
+            local.grad_into(&self.z, &mut self.scratch.grad, &mut self.scratch.oracle);
+            let mut gc = self.pool.vec_f64(self.basis.grad_coeff_len());
+            self.basis.encode_grad_into(&self.scratch.grad, &mut gc);
             let gcost = BitCost::floats(gc.len());
             up.push_vector("grad_coeff", gc, gcost);
         }
         // Compressed Hessian-coefficient difference; learn locally in sync
-        // with the server's decoded aggregate.
-        let hz = local.hess(&self.z);
-        let target = self.basis.encode(&hz);
-        let diff = &target - &self.l;
-        let (s, cost) = self.comp.compress(&diff, rng);
+        // with the server's decoded aggregate. The compressed output lands
+        // straight in a pooled matrix that then rides the wire.
+        local.hess_into(&self.z, &mut self.scratch.hz, &mut self.scratch.oracle);
+        self.basis.encode_into(&self.scratch.hz, &mut self.scratch.target, &mut self.scratch.basis);
+        self.scratch.diff.sub_from(&self.scratch.target, &self.l);
+        let (cr, cc) = self.basis.coeff_shape();
+        let mut s = Mat::from_vec(0, 0, self.pool.vec_f64(cr * cc));
+        let cost = self.comp.compress_mat_into(&self.scratch.diff, &mut s, &mut self.scratch.comp, rng);
         self.l.add_scaled(self.alpha, &s);
         up.push_matrix("hess_delta", s, cost);
         Ok(up)

@@ -26,14 +26,56 @@
 //! bit, as the paper's accounting rides them along), and — on ξ_i = 1 —
 //! the fresh `g_i` (`d` floats).
 
-use crate::basis::HessianBasis;
+use crate::basis::{BasisScratch, HessianBasis};
 use crate::compressors::{BitCost, MatCompressor, VecCompressor};
 use crate::coordinator::{sample_clients, Env, RoundPlan, ServerState};
-use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
-use crate::problem::LocalProblem;
+use crate::linalg::{lu_solve, sub_into, Mat, SymCholesky, Vector};
+use crate::problem::{LocalProblem, OracleScratch};
 use crate::rng::Rng;
 use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
+
+/// Reusable server-side buffers: everything except the wire objects
+/// themselves (the compressed `v_i` payloads) is computed in place.
+#[derive(Default)]
+struct ServerScratch {
+    /// Symmetrized, shifted system matrix.
+    sym: Mat,
+    /// Packed Cholesky workspace for the Newton solve.
+    chol: SymCholesky,
+    /// `x^{k+1} − z_i^k`.
+    dx: Vector,
+    /// One client's decoded Hessian step (before the α scale).
+    dec: Mat,
+    /// `α · decode(S_i)`.
+    delta_h: Mat,
+    /// Symmetrized copy of `delta_h` for the eq. (13) reconstruction.
+    sym_dh: Mat,
+    /// Gradient increment buffer.
+    dg: Vector,
+    /// Previous `g_i` (for the aggregate delta).
+    g_old: Vector,
+    basis: BasisScratch,
+}
+
+/// Reusable client-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ClientScratch {
+    /// Local Hessian `∇²f_i(z_i^{k+1})`.
+    hz: Mat,
+    /// Encoded coefficient target.
+    target: Mat,
+    /// Coefficient difference / generic matrix temp.
+    diff: Mat,
+    /// Decoded compressed step (before the α scale).
+    dec: Mat,
+    /// `α · decode(S_i)`.
+    delta_h: Mat,
+    /// Local gradient buffer.
+    grad: Vector,
+    oracle: OracleScratch,
+    basis: BasisScratch,
+}
 
 /// Server-side view of one client (everything reconstructible from the
 /// wire: the learned Hessian lives only in the aggregate).
@@ -64,6 +106,7 @@ pub struct Bl2Server {
     /// ξ_i drawn in `plan` for this round's participants (client, ξ_i),
     /// consumed by `absorb`.
     pending_xi: Vec<(usize, bool)>,
+    scratch: ServerScratch,
 }
 
 /// BL2 client.
@@ -82,6 +125,7 @@ pub struct Bl2Client {
     w: Vector,
     eta: f64,
     alpha: f64,
+    scratch: ClientScratch,
 }
 
 /// Build the BL2 split. `fednl_label = Some(..)` forces the standard basis
@@ -141,6 +185,7 @@ pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl2Server, Vec<Bl2Client>
             w: x0.clone(),
             eta,
             alpha,
+            scratch: ClientScratch::default(),
         });
     }
     let label = match fednl_label {
@@ -159,6 +204,7 @@ pub fn split(env: &Env, fednl_label: Option<&str>) -> (Bl2Server, Vec<Bl2Client>
         eta,
         alpha,
         pending_xi: Vec::new(),
+        scratch: ServerScratch::default(),
     };
     (server, clients)
 }
@@ -177,10 +223,16 @@ impl ServerState for Bl2Server {
         let lambda = env.cfg.lambda;
 
         // ── server: Newton-type solve with last round's aggregates ──
-        let mut m = self.h_agg.clone();
-        m.symmetrize();
-        m.add_diag(self.shift_agg + lambda);
-        self.x = cholesky_solve(&m, &self.g_agg).or_else(|_| lu_solve(&m, &self.g_agg))?;
+        // packed Cholesky first (bit-identical to `cholesky_solve`), dense
+        // LU as the cold fallback.
+        self.scratch.sym.copy_from(&self.h_agg);
+        self.scratch.sym.symmetrize();
+        self.scratch.sym.add_diag(self.shift_agg + lambda);
+        if self.scratch.chol.factor(&self.scratch.sym).is_ok() {
+            self.scratch.chol.solve_into(&self.g_agg, &mut self.x);
+        } else {
+            self.x = lu_solve(&self.scratch.sym, &self.g_agg)?;
+        }
 
         // ── participation + per-participant downlink ──
         let selected = sample_clients(env.n, env.cfg.tau, rng);
@@ -188,8 +240,8 @@ impl ServerState for Bl2Server {
         let mut sends = Vec::with_capacity(selected.len());
         for &i in &selected {
             // Model downlink: v_i = Q_i(x^{k+1} − z_i^k).
-            let dx = crate::linalg::sub(&self.x, &self.views[i].z);
-            let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
+            sub_into(&self.x, &self.views[i].z, &mut self.scratch.dx);
+            let (v, vcost) = self.model_comp.compress_vec(&self.scratch.dx, rng);
             crate::linalg::axpy(self.eta, &v, &mut self.views[i].z);
             let xi = rng.bernoulli(env.cfg.p);
             self.pending_xi.push((i, xi));
@@ -213,31 +265,33 @@ impl ServerState for Bl2Server {
         let n = env.n as f64;
         for ((i, up), (xi_client, xi)) in replies.iter().zip(&self.pending_xi) {
             debug_assert_eq!(i, xi_client, "absorb order must match plan order");
-            let view = &mut self.views[*i];
             // Decode the Hessian learning step exactly as the client did.
             let s = up.matrix("hess_delta")?;
-            let delta_h = &self.bases[*i].decode(s) * self.alpha;
+            self.bases[*i].decode_into(s, &mut self.scratch.dec, &mut self.scratch.basis);
+            self.scratch.delta_h.scale_from(&self.scratch.dec, self.alpha);
             let dshift = up.scalars("shift_delta")?[0];
 
-            let g_old = view.g.clone();
+            let view = &mut self.views[*i];
+            self.scratch.g_old.clone_from(&view.g);
             if *xi {
                 // w_i ← z_i^{k+1}; fresh g_i arrives on the wire.
-                view.w = view.z.clone();
-                view.g = up.vector("grad_update")?.to_vec();
+                view.w.clone_from(&view.z);
+                view.g.clear();
+                view.g.extend_from_slice(up.vector("grad_update")?);
             } else {
                 // Server reconstructs: Δg_i = (α·decode(S)_s + Δl·I) w_i
                 // (eq. 13); no gradient upload.
-                let mut sym_dh = delta_h.clone();
-                sym_dh.symmetrize();
-                let mut dg = sym_dh.matvec(&view.w);
-                crate::linalg::axpy(dshift, &view.w, &mut dg);
-                crate::linalg::axpy(1.0, &dg, &mut view.g);
+                self.scratch.sym_dh.copy_from(&self.scratch.delta_h);
+                self.scratch.sym_dh.symmetrize();
+                self.scratch.sym_dh.matvec_into(&view.w, &mut self.scratch.dg);
+                crate::linalg::axpy(dshift, &view.w, &mut self.scratch.dg);
+                crate::linalg::axpy(1.0, &self.scratch.dg, &mut view.g);
             }
 
             // Server aggregate updates.
-            let dg = crate::linalg::sub(&view.g, &g_old);
-            crate::linalg::axpy(1.0 / n, &dg, &mut self.g_agg);
-            self.h_agg.add_scaled(1.0 / n, &delta_h);
+            sub_into(&view.g, &self.scratch.g_old, &mut self.scratch.dg);
+            crate::linalg::axpy(1.0 / n, &self.scratch.dg, &mut self.g_agg);
+            self.h_agg.add_scaled(1.0 / n, &self.scratch.delta_h);
             self.shift_agg += dshift / n;
         }
         Ok(())
@@ -283,15 +337,17 @@ impl ClientStep for Bl2Client {
         let xi = down.flags("xi")?[0];
 
         // Hessian learning at z_i^{k+1}.
-        let hz = local.hess(&self.z);
-        let target = self.basis.encode(&hz);
-        let diff = &target - &self.l;
-        let (s, scost) = self.comp.compress(&diff, rng);
+        local.hess_into(&self.z, &mut self.scratch.hz, &mut self.scratch.oracle);
+        self.basis.encode_into(&self.scratch.hz, &mut self.scratch.target, &mut self.scratch.basis);
+        self.scratch.diff.sub_from(&self.scratch.target, &self.l);
+        let (s, scost) = self.comp.compress(&self.scratch.diff, rng);
         self.l.add_scaled(self.alpha, &s);
-        let delta_h = &self.basis.decode(&s) * self.alpha;
-        self.h += &delta_h;
+        self.basis.decode_into(&s, &mut self.scratch.dec, &mut self.scratch.basis);
+        self.scratch.delta_h.scale_from(&self.scratch.dec, self.alpha);
+        self.h += &self.scratch.delta_h;
         self.h.symmetrize();
-        let new_shift = (&self.h - &hz).fro_norm();
+        self.scratch.diff.sub_from(&self.h, &self.scratch.hz);
+        let new_shift = self.scratch.diff.fro_norm();
         let dshift = new_shift - self.shift;
         self.shift = new_shift;
 
@@ -301,11 +357,11 @@ impl ClientStep for Bl2Client {
         up.push_scalars("shift_delta", vec![dshift], BitCost::floats(1) + BitCost::bits(1.0));
         if xi {
             // w_i ← z_i^{k+1}; fresh g_i; send it whole (d floats).
-            self.w = self.z.clone();
+            self.w.clone_from(&self.z);
             let mut g = self.h.matvec(&self.w);
             crate::linalg::axpy(self.shift, &self.w, &mut g);
-            let gw = local.grad(&self.w);
-            crate::linalg::axpy(-1.0, &gw, &mut g);
+            local.grad_into(&self.w, &mut self.scratch.grad, &mut self.scratch.oracle);
+            crate::linalg::axpy(-1.0, &self.scratch.grad, &mut g);
             up.push_vector("grad_update", g, BitCost::floats(d));
         }
         Ok(up)

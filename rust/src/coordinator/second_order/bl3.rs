@@ -23,15 +23,59 @@
 //! g_{i,2}` (2d floats). The server reconstructs `ΔA_i, ΔC_i` from the wire
 //! exactly as the client applied them.
 
-use crate::basis::{HessianBasis, PsdBasis};
+use crate::basis::{BasisScratch, HessianBasis, PsdBasis};
 use crate::compressors::{BitCost, MatCompressor, VecCompressor};
 use crate::config::Bl3Option;
 use crate::coordinator::{sample_clients, Env, RoundPlan, ServerState};
-use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
-use crate::problem::LocalProblem;
+use crate::linalg::{lu_solve, sub_into, Mat, SymCholesky, Vector};
+use crate::problem::{LocalProblem, OracleScratch};
 use crate::rng::Rng;
 use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
+
+/// Reusable server-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ServerScratch {
+    /// System matrix `βA − C + λI`.
+    h: Mat,
+    /// Packed Cholesky workspace for the Newton solve.
+    chol: SymCholesky,
+    /// Combined gradient `βg₁ − g₂`.
+    g: Vector,
+    /// `x^{k+1} − z_i^k`.
+    dx: Vector,
+    /// `α·S_i` and its decoded split increments.
+    dl: Mat,
+    da: Mat,
+    dc: Mat,
+    /// Matvec temp for the ξ=0 reconstruction.
+    tmp: Vector,
+    /// Previous split gradients (for the aggregate deltas).
+    g1_old: Vector,
+    g2_old: Vector,
+    /// Gradient-delta buffer.
+    dg: Vector,
+    basis: BasisScratch,
+}
+
+/// Reusable client-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ClientScratch {
+    /// Local Hessian at the fresh mirror.
+    hz: Mat,
+    /// Encoded coefficient target.
+    target: Mat,
+    /// Coefficient difference.
+    diff: Mat,
+    /// `α·S_i` and its decoded split increments.
+    dl: Mat,
+    da: Mat,
+    dc: Mat,
+    /// Local gradient buffer.
+    grad: Vector,
+    oracle: OracleScratch,
+    basis: BasisScratch,
+}
 
 /// Server-side view of one client.
 struct ClientView {
@@ -65,6 +109,7 @@ pub struct Bl3Server {
     option: Bl3Option,
     /// ξ_i drawn in `plan` for this round's participants.
     pending_xi: Vec<(usize, bool)>,
+    scratch: ServerScratch,
 }
 
 /// BL3 client.
@@ -88,6 +133,7 @@ pub struct Bl3Client {
     alpha: f64,
     c_const: f64,
     option: Bl3Option,
+    scratch: ClientScratch,
 }
 
 /// Max ratio `(target_{jl} + 2γ)/(L_{jl} + 2γ)` over all entries.
@@ -162,6 +208,7 @@ pub fn split(env: &Env) -> Result<(Bl3Server, Vec<Bl3Client>)> {
             alpha,
             c_const,
             option: env.cfg.bl3_option,
+            scratch: ClientScratch::default(),
         });
     }
 
@@ -180,6 +227,7 @@ pub fn split(env: &Env) -> Result<(Bl3Server, Vec<Bl3Client>)> {
         alpha,
         option: env.cfg.bl3_option,
         pending_xi: Vec::new(),
+        scratch: ServerScratch::default(),
     };
     Ok((server, clients))
 }
@@ -198,23 +246,29 @@ impl ServerState for Bl3Server {
         let lambda = env.cfg.lambda;
 
         // ── server: x^{k+1} = (H^k + λI)^{-1} g^k, H = βA − C, g = βg₁ − g₂.
-        let mut h = &self.a_agg * self.beta;
-        h -= &self.c_agg;
-        h.symmetrize();
-        h.add_diag(lambda);
-        let mut g = self.g1_agg.clone();
-        for (gi, g2i) in g.iter_mut().zip(&self.g2_agg) {
+        self.scratch.h.scale_from(&self.a_agg, self.beta);
+        self.scratch.h -= &self.c_agg;
+        self.scratch.h.symmetrize();
+        self.scratch.h.add_diag(lambda);
+        self.scratch.g.clone_from(&self.g1_agg);
+        for (gi, g2i) in self.scratch.g.iter_mut().zip(&self.g2_agg) {
             *gi = self.beta * *gi - g2i;
         }
-        self.x = cholesky_solve(&h, &g).or_else(|_| lu_solve(&h, &g))?;
+        // Packed Cholesky first (bit-identical to `cholesky_solve`), dense
+        // LU as the cold fallback.
+        if self.scratch.chol.factor(&self.scratch.h).is_ok() {
+            self.scratch.chol.solve_into(&self.scratch.g, &mut self.x);
+        } else {
+            self.x = lu_solve(&self.scratch.h, &self.scratch.g)?;
+        }
 
         // ── participation + per-participant downlink ──
         let selected = sample_clients(env.n, env.cfg.tau, rng);
         self.pending_xi.clear();
         let mut sends = Vec::with_capacity(selected.len());
         for &i in &selected {
-            let dx = crate::linalg::sub(&self.x, &self.views[i].z);
-            let (v, vcost) = self.model_comp.compress_vec(&dx, rng);
+            sub_into(&self.x, &self.views[i].z, &mut self.scratch.dx);
+            let (v, vcost) = self.model_comp.compress_vec(&self.scratch.dx, rng);
             crate::linalg::axpy(self.eta, &v, &mut self.views[i].z);
             let xi = rng.bernoulli(env.cfg.p);
             self.pending_xi.push((i, xi));
@@ -238,36 +292,41 @@ impl ServerState for Bl3Server {
         let n = env.n as f64;
         for ((i, up), (xi_client, xi)) in replies.iter().zip(&self.pending_xi) {
             debug_assert_eq!(i, xi_client, "absorb order must match plan order");
-            let view = &mut self.views[*i];
             let s = up.matrix("hess_delta")?;
             let ride = up.scalars("beta_gamma")?;
             let (beta_new, dgamma) = (ride[0], ride[1]);
 
             // Reconstruct ΔA_i, ΔC_i exactly as the client applied them.
-            let mut dl = s.clone();
-            dl.data_mut().iter_mut().for_each(|v| *v *= self.alpha);
-            let mut da = self.basis.decode(&dl);
-            da.add_scaled(2.0 * dgamma, &self.ones_decoded);
-            let dc = &self.ones_decoded * (2.0 * dgamma);
+            self.scratch.dl.scale_from(s, self.alpha);
+            self.basis.decode_into(&self.scratch.dl, &mut self.scratch.da, &mut self.scratch.basis);
+            self.scratch.da.add_scaled(2.0 * dgamma, &self.ones_decoded);
+            self.scratch.dc.scale_from(&self.ones_decoded, 2.0 * dgamma);
 
-            let g1_old = view.g1.clone();
-            let g2_old = view.g2.clone();
+            let view = &mut self.views[*i];
+            self.scratch.g1_old.clone_from(&view.g1);
+            self.scratch.g2_old.clone_from(&view.g2);
             if *xi {
-                view.w = view.z.clone();
-                view.g1 = up.vector("g1")?.to_vec();
-                view.g2 = up.vector("g2")?.to_vec();
+                view.w.clone_from(&view.z);
+                view.g1.clear();
+                view.g1.extend_from_slice(up.vector("g1")?);
+                view.g2.clear();
+                view.g2.extend_from_slice(up.vector("g2")?);
             } else {
                 // Δg₁ = ΔA·w_i, Δg₂ = ΔC·w_i (w_i and ∇f_i(w_i) unchanged).
-                crate::linalg::axpy(1.0, &da.matvec(&view.w), &mut view.g1);
-                crate::linalg::axpy(1.0, &dc.matvec(&view.w), &mut view.g2);
+                self.scratch.da.matvec_into(&view.w, &mut self.scratch.tmp);
+                crate::linalg::axpy(1.0, &self.scratch.tmp, &mut view.g1);
+                self.scratch.dc.matvec_into(&view.w, &mut self.scratch.tmp);
+                crate::linalg::axpy(1.0, &self.scratch.tmp, &mut view.g2);
             }
             view.beta = beta_new;
 
             // Server aggregates.
-            self.a_agg.add_scaled(1.0 / n, &da);
-            self.c_agg.add_scaled(1.0 / n, &dc);
-            crate::linalg::axpy(1.0 / n, &crate::linalg::sub(&view.g1, &g1_old), &mut self.g1_agg);
-            crate::linalg::axpy(1.0 / n, &crate::linalg::sub(&view.g2, &g2_old), &mut self.g2_agg);
+            self.a_agg.add_scaled(1.0 / n, &self.scratch.da);
+            self.c_agg.add_scaled(1.0 / n, &self.scratch.dc);
+            sub_into(&view.g1, &self.scratch.g1_old, &mut self.scratch.dg);
+            crate::linalg::axpy(1.0 / n, &self.scratch.dg, &mut self.g1_agg);
+            sub_into(&view.g2, &self.scratch.g2_old, &mut self.scratch.dg);
+            crate::linalg::axpy(1.0 / n, &self.scratch.dg, &mut self.g2_agg);
         }
 
         // β^{k+1} = max_i β_i (non-participants keep their β_i).
@@ -300,31 +359,31 @@ impl ClientStep for Bl3Client {
         let xi = down.flags("xi")?[0];
 
         // Hessian-coefficient learning at z_i^{k+1}.
-        let target = self.basis.encode(&local.hess(&self.z));
-        let diff = &target - &self.l;
-        let (s, scost) = self.comp.compress(&diff, rng);
-        let mut dl = s.clone();
-        dl.data_mut().iter_mut().for_each(|v| *v *= self.alpha);
-        let l_new = &self.l + &dl;
-        let gamma_new = self.c_const.max(l_new.max_abs());
+        local.hess_into(&self.z, &mut self.scratch.hz, &mut self.scratch.oracle);
+        self.basis.encode_into(&self.scratch.hz, &mut self.scratch.target, &mut self.scratch.basis);
+        self.scratch.diff.sub_from(&self.scratch.target, &self.l);
+        let (s, scost) = self.comp.compress(&self.scratch.diff, rng);
+        self.scratch.dl.scale_from(&s, self.alpha);
+        // L_i ← L_i + ΔL in place (`x + 1·y` is bit-identical to `x + y`).
+        self.l.add_scaled(1.0, &self.scratch.dl);
+        let gamma_new = self.c_const.max(self.l.max_abs());
         let dgamma = gamma_new - self.gamma;
 
         // β_i update (Option 1 uses the previous round's target).
         let beta_target = match self.option {
             Bl3Option::One => &self.prev_target,
-            Bl3Option::Two => &target,
+            Bl3Option::Two => &self.scratch.target,
         };
-        let beta_new = beta_for(beta_target, &l_new, gamma_new);
+        let beta_new = beta_for(beta_target, &self.l, gamma_new);
 
         // A_i += decode(ΔL) + 2Δγ Σ B;  C_i += 2Δγ Σ B.
-        let mut da = self.basis.decode(&dl);
-        da.add_scaled(2.0 * dgamma, &self.ones_decoded);
-        let dc = &self.ones_decoded * (2.0 * dgamma);
-        self.a += &da;
-        self.c += &dc;
-        self.l = l_new;
+        self.basis.decode_into(&self.scratch.dl, &mut self.scratch.da, &mut self.scratch.basis);
+        self.scratch.da.add_scaled(2.0 * dgamma, &self.ones_decoded);
+        self.scratch.dc.scale_from(&self.ones_decoded, 2.0 * dgamma);
+        self.a += &self.scratch.da;
+        self.c += &self.scratch.dc;
         self.gamma = gamma_new;
-        self.prev_target = target;
+        self.prev_target.copy_from(&self.scratch.target);
 
         let mut up = Packet::empty();
         up.push_matrix("hess_delta", s, scost);
@@ -335,10 +394,11 @@ impl ClientStep for Bl3Client {
             BitCost::floats(2) + BitCost::bits(1.0),
         );
         if xi {
-            self.w = self.z.clone();
+            self.w.clone_from(&self.z);
             let g1 = self.a.matvec(&self.w);
             let mut g2 = self.c.matvec(&self.w);
-            crate::linalg::axpy(1.0, &local.grad(&self.w), &mut g2);
+            local.grad_into(&self.w, &mut self.scratch.grad, &mut self.scratch.oracle);
+            crate::linalg::axpy(1.0, &self.scratch.grad, &mut g2);
             up.push_vector("g1", g1, BitCost::floats(d));
             up.push_vector("g2", g2, BitCost::floats(d));
         }

@@ -17,14 +17,42 @@
 //! coefficients at the current model; exchange 1 broadcasts the solved
 //! model (`d` floats) back.
 
-use crate::basis::HessianBasis;
+use crate::basis::{BasisScratch, HessianBasis};
 use crate::compressors::BitCost;
 use crate::coordinator::{Env, RoundPlan, ServerState};
-use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
-use crate::problem::LocalProblem;
+use crate::linalg::{lu_solve, Mat, SymCholesky, Vector};
+use crate::problem::{LocalProblem, OracleScratch};
 use crate::rng::Rng;
 use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::Result;
+
+/// Reusable server-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ServerScratch {
+    /// Averaged gradient.
+    g: Vector,
+    /// Averaged Hessian / system matrix.
+    h: Mat,
+    /// One client's decoded gradient.
+    gdec: Vector,
+    /// One client's decoded Hessian.
+    hdec: Mat,
+    /// Packed Cholesky workspace for the Newton solve.
+    chol: SymCholesky,
+    /// Newton step.
+    step: Vector,
+    basis: BasisScratch,
+}
+
+/// Reusable client-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ClientScratch {
+    /// Local gradient.
+    grad: Vector,
+    /// Local Hessian.
+    hess: Mat,
+    oracle: OracleScratch,
+}
 
 /// Wire cost of one client's Hessian in its basis (floats).
 fn hess_floats(basis: &dyn HessianBasis) -> usize {
@@ -42,6 +70,7 @@ pub struct NewtonServer {
     x: Vector,
     /// Server-side basis copies (decode side of the basis transfer).
     pub(crate) bases: Vec<Box<dyn HessianBasis>>,
+    scratch: ServerScratch,
 }
 
 /// Newton client: encodes exact local gradient/Hessian at its model mirror.
@@ -49,15 +78,23 @@ pub struct NewtonClient {
     basis: Box<dyn HessianBasis>,
     /// Model mirror `x^k` (kept in sync by the exchange-1 broadcast).
     x: Vector,
+    scratch: ClientScratch,
 }
 
 /// Build the server/client split for classical Newton.
 pub fn split(env: &Env) -> (NewtonServer, Vec<NewtonClient>) {
     let server_bases: Vec<Box<dyn HessianBasis>> = (0..env.n).map(|i| env.build_basis(i)).collect();
     let clients = (0..env.n)
-        .map(|i| NewtonClient { basis: env.build_basis(i), x: vec![0.0; env.d] })
+        .map(|i| NewtonClient {
+            basis: env.build_basis(i),
+            x: vec![0.0; env.d],
+            scratch: ClientScratch::default(),
+        })
         .collect();
-    (NewtonServer { x: vec![0.0; env.d], bases: server_bases }, clients)
+    (
+        NewtonServer { x: vec![0.0; env.d], bases: server_bases, scratch: ServerScratch::default() },
+        clients,
+    )
 }
 
 impl ServerState for NewtonServer {
@@ -94,20 +131,31 @@ impl ServerState for NewtonServer {
         }
         let n = env.n as f64;
         let d = env.d;
-        let mut g = vec![0.0; d];
-        let mut h = Mat::zeros(d, d);
+        self.scratch.g.clear();
+        self.scratch.g.resize(d, 0.0);
+        self.scratch.h.resize_zeroed(d, d);
         for (i, up) in replies {
             let basis = &self.bases[*i];
             let gc = up.vector("grad_coeff")?;
             let hc = up.matrix("hess_coeff")?;
-            crate::linalg::axpy(1.0 / n, &basis.decode_grad(gc), &mut g);
-            h.add_scaled(1.0 / n, &basis.decode(hc));
+            basis.decode_grad_into(gc, &mut self.scratch.gdec);
+            crate::linalg::axpy(1.0 / n, &self.scratch.gdec, &mut self.scratch.g);
+            basis.decode_into(hc, &mut self.scratch.hdec, &mut self.scratch.basis);
+            self.scratch.h.add_scaled(1.0 / n, &self.scratch.hdec);
         }
         // Ridge term (server-side, eq. 16).
-        crate::linalg::axpy(env.cfg.lambda, &self.x, &mut g);
-        h.add_diag(env.cfg.lambda);
-        let step = cholesky_solve(&h, &g).or_else(|_| lu_solve(&h, &g))?;
-        for (xi, si) in self.x.iter_mut().zip(&step) {
+        crate::linalg::axpy(env.cfg.lambda, &self.x, &mut self.scratch.g);
+        self.scratch.h.add_diag(env.cfg.lambda);
+        // Packed Cholesky first (bit-identical to `cholesky_solve`), dense
+        // LU as the cold fallback.
+        if self.scratch.chol.factor(&self.scratch.h).is_ok() {
+            self.scratch.chol.solve_into(&self.scratch.g, &mut self.scratch.step);
+        } else {
+            let step = lu_solve(&self.scratch.h, &self.scratch.g)?;
+            self.scratch.step.clear();
+            self.scratch.step.extend_from_slice(&step);
+        }
+        for (xi, si) in self.x.iter_mut().zip(&self.scratch.step) {
             *xi -= si;
         }
         Ok(())
@@ -148,15 +196,16 @@ impl ClientStep for NewtonClient {
         _rng: &mut Rng,
     ) -> Result<Uplink> {
         if exchange == 1 {
-            self.x = down.vector("model")?.to_vec();
+            self.x.clear();
+            self.x.extend_from_slice(down.vector("model")?);
             return Ok(Packet::empty());
         }
-        let gi = local.grad(&self.x);
-        let hi = local.hess(&self.x);
+        local.grad_into(&self.x, &mut self.scratch.grad, &mut self.scratch.oracle);
+        local.hess_into(&self.x, &mut self.scratch.hess, &mut self.scratch.oracle);
         // Encode → wire → decode (asserting losslessness is covered by
         // basis tests; here we just run the actual path).
-        let gc = self.basis.encode_grad(&gi);
-        let hc = self.basis.encode(&hi);
+        let gc = self.basis.encode_grad(&self.scratch.grad);
+        let hc = self.basis.encode(&self.scratch.hess);
         let mut up = Packet::empty();
         let gcost = BitCost::floats(gc.len());
         up.push_vector("grad_coeff", gc, gcost);

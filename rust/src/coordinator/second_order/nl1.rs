@@ -20,11 +20,24 @@
 
 use crate::compressors::{BitCost, CompressorClass, VecCompressor};
 use crate::coordinator::{Env, RoundPlan, ServerState};
-use crate::linalg::{cholesky_solve, lu_solve, Mat, Vector};
+use crate::linalg::{lu_solve, sub_into, Mat, SymCholesky, Vector};
 use crate::problem::LocalProblem;
 use crate::rng::Rng;
 use crate::transport::{ClientStep, Downlink, Packet, Uplink};
 use anyhow::{Context, Result};
+
+/// Reusable server-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ServerScratch {
+    /// System matrix `H^k + λI`.
+    h: Mat,
+    /// Packed Cholesky workspace for the Newton solve.
+    chol: SymCholesky,
+    /// Averaged gradient.
+    g: Vector,
+    /// Newton step.
+    step: Vector,
+}
 
 /// NL1 server: revealed data + learned per-datapoint coefficients.
 pub struct Nl1Server {
@@ -37,6 +50,18 @@ pub struct Nl1Server {
     /// coefficients, maintained incrementally.
     pub(crate) h_agg: Mat,
     alpha: f64,
+    scratch: ServerScratch,
+}
+
+/// Reusable client-side buffers (wire objects still allocate).
+#[derive(Default)]
+struct ClientScratch {
+    /// Margins `A z` for the φ″ targets.
+    margins: Vector,
+    /// Coefficient target `φ″(a_jᵀz)`.
+    target: Vector,
+    /// Coefficient difference.
+    diff: Vector,
 }
 
 /// NL1 client: its own data (for the φ″ targets) and coefficient copy.
@@ -50,6 +75,7 @@ pub struct Nl1Client {
     /// Model mirror `z^k`.
     z: Vector,
     alpha: f64,
+    scratch: ClientScratch,
 }
 
 /// The Hessian's per-datapoint weights `φ″(a_jᵀx)` — for logistic
@@ -64,6 +90,16 @@ fn hess_coeffs(features: &Mat, x: &[f64]) -> Vector {
             s * (1.0 - s)
         })
         .collect()
+}
+
+/// Allocation-free [`hess_coeffs`] (bit-identical: same margins, same map).
+fn hess_coeffs_into(features: &Mat, x: &[f64], margins: &mut Vector, out: &mut Vector) {
+    features.matvec_into(x, margins);
+    out.clear();
+    out.extend(margins.iter().map(|&z| {
+        let s = crate::problem::sigmoid(z);
+        s * (1.0 - s)
+    }));
 }
 
 /// Assemble `(1/m) Σ_j max(l_j, 0) a_j a_jᵀ` from coefficients.
@@ -101,14 +137,28 @@ pub fn split(env: &Env) -> Result<(Nl1Server, Vec<Nl1Client>)> {
             };
         }
         coeffs_srv.push(coeffs.clone());
-        clients.push(Nl1Client { features, coeffs, comp, z: x0.clone(), alpha });
+        clients.push(Nl1Client {
+            features,
+            coeffs,
+            comp,
+            z: x0.clone(),
+            alpha,
+            scratch: ClientScratch::default(),
+        });
     }
     // All clients share α (probed per client exactly as the pre-transport
     // implementation did — the last client's class wins on heterogeneous m).
     for c in clients.iter_mut() {
         c.alpha = alpha;
     }
-    let server = Nl1Server { x: x0.clone(), z: x0, coeffs: coeffs_srv, h_agg, alpha };
+    let server = Nl1Server {
+        x: x0.clone(),
+        z: x0,
+        coeffs: coeffs_srv,
+        h_agg,
+        alpha,
+        scratch: ServerScratch::default(),
+    };
     Ok((server, clients))
 }
 
@@ -126,7 +176,7 @@ impl ServerState for Nl1Server {
                 // Model broadcast; clients re-anchor z ← x.
                 let mut down = Packet::empty();
                 down.push_vector("model", self.x.clone(), BitCost::floats(env.d));
-                self.z = self.x.clone();
+                self.z.clone_from(&self.x);
                 Some(RoundPlan::broadcast(env.n, down))
             }
             _ => None,
@@ -149,17 +199,25 @@ impl ServerState for Nl1Server {
         let d = env.d;
 
         // Gradient phase: full gradients every round (NL1 is not lazy).
-        let mut g = vec![0.0; d];
+        self.scratch.g.clear();
+        self.scratch.g.resize(d, 0.0);
         for (_, up) in replies {
-            crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut g);
+            crate::linalg::axpy(1.0 / n, up.vector("grad")?, &mut self.scratch.g);
         }
-        crate::linalg::axpy(lambda, &self.z, &mut g);
+        crate::linalg::axpy(lambda, &self.z, &mut self.scratch.g);
 
-        // Newton-type step with the current estimate.
-        let mut h = self.h_agg.clone();
-        h.add_diag(lambda);
-        let step = cholesky_solve(&h, &g).or_else(|_| lu_solve(&h, &g))?;
-        self.x = crate::linalg::sub(&self.z, &step);
+        // Newton-type step with the current estimate: packed Cholesky first
+        // (bit-identical to `cholesky_solve`), dense LU as the cold fallback.
+        self.scratch.h.copy_from(&self.h_agg);
+        self.scratch.h.add_diag(lambda);
+        if self.scratch.chol.factor(&self.scratch.h).is_ok() {
+            self.scratch.chol.solve_into(&self.scratch.g, &mut self.scratch.step);
+        } else {
+            let step = lu_solve(&self.scratch.h, &self.scratch.g)?;
+            self.scratch.step.clear();
+            self.scratch.step.extend_from_slice(&step);
+        }
+        sub_into(&self.z, &self.scratch.step, &mut self.x);
 
         // Coefficient learning: apply the compressed differences to the
         // server's copy, with incremental rank-one Gram updates (only
@@ -178,8 +236,9 @@ impl ServerState for Nl1Server {
                 let dw = (new.max(0.0) - old.max(0.0)) / m;
                 self.coeffs[*i][j] = new;
                 if dw != 0.0 {
-                    // H += (dw/n) a_j a_jᵀ
-                    let row = a.row(j).to_vec();
+                    // H += (dw/n) a_j a_jᵀ — `row` borrows the (non-self)
+                    // feature matrix, so no copy is needed.
+                    let row = a.row(j);
                     for p in 0..d {
                         let f = dw / n * row[p];
                         if f == 0.0 {
@@ -222,7 +281,8 @@ impl ClientStep for Nl1Client {
         rng: &mut Rng,
     ) -> Result<Uplink> {
         if exchange == 1 {
-            self.z = down.vector("model")?.to_vec();
+            self.z.clear();
+            self.z.extend_from_slice(down.vector("model")?);
             return Ok(Packet::empty());
         }
         let d = self.z.len();
@@ -231,9 +291,9 @@ impl ClientStep for Nl1Client {
         let gi = local.grad(&self.z);
         up.push_vector("grad", gi, BitCost::floats(d));
         // Compressed coefficient difference; keep the local copy in sync.
-        let target = hess_coeffs(&self.features, &self.z);
-        let diff = crate::linalg::sub(&target, &self.coeffs);
-        let (s, cost) = self.comp.compress_vec(&diff, rng);
+        hess_coeffs_into(&self.features, &self.z, &mut self.scratch.margins, &mut self.scratch.target);
+        sub_into(&self.scratch.target, &self.coeffs, &mut self.scratch.diff);
+        let (s, cost) = self.comp.compress_vec(&self.scratch.diff, rng);
         for (c, &sj) in self.coeffs.iter_mut().zip(&s) {
             if sj != 0.0 {
                 *c += self.alpha * sj;

@@ -108,6 +108,47 @@ impl Mat {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
+    /// Column `j` into caller-owned storage (the allocation-free [`Mat::col`]).
+    pub fn col_into(&self, j: usize, out: &mut Vector) {
+        out.clear();
+        out.extend((0..self.rows).map(|i| self.data[i * self.cols + j]));
+    }
+
+    /// Become a copy of `src`, reusing this matrix's storage.
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clone_from(&src.data);
+    }
+
+    /// Become `α · src`, reusing this matrix's storage. Elementwise products
+    /// in the same order as `&src * α`.
+    pub fn scale_from(&mut self, src: &Mat, alpha: f64) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend(src.data.iter().map(|a| a * alpha));
+    }
+
+    /// Become `a - b` elementwise, reusing this matrix's storage.
+    /// Bit-identical to `&a - &b`.
+    pub fn sub_from(&mut self, a: &Mat, b: &Mat) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        self.rows = a.rows;
+        self.cols = a.cols;
+        self.data.clear();
+        self.data.extend(a.data.iter().zip(&b.data).map(|(x, y)| x - y));
+    }
+
+    /// Reshape to `rows × cols` and zero every entry (allocation-free within
+    /// capacity).
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Transpose.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
@@ -125,10 +166,34 @@ impl Mat {
         t
     }
 
+    /// Transpose into caller-owned storage (same blocked kernel as
+    /// [`Mat::transpose`]; every output entry is written).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.resize_zeroed(self.cols, self.rows);
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+    }
+
     /// Matrix–vector product `A x`.
     pub fn matvec(&self, x: &[f64]) -> Vector {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
         (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// `A x` into caller-owned storage; bit-identical to [`Mat::matvec`]
+    /// (same per-row [`dot`] reductions).
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vector) {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        out.clear();
+        out.extend((0..self.rows).map(|i| dot(self.row(i), x)));
     }
 
     /// Transposed matrix–vector product `Aᵀ x` without forming `Aᵀ`.
@@ -146,6 +211,24 @@ impl Mat {
             }
         }
         y
+    }
+
+    /// `Aᵀ x` into caller-owned storage; bit-identical to
+    /// [`Mat::matvec_t`] (zero-fill then the same accumulation order).
+    pub fn matvec_t_into(&self, x: &[f64], out: &mut Vector) {
+        assert_eq!(self.rows, x.len(), "matvec_t shape mismatch");
+        out.clear();
+        out.resize(self.cols, 0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                out[j] += xi * row[j];
+            }
+        }
     }
 
     /// Matrix product `A · B` (ikj loop order, blocked over k).
@@ -167,6 +250,27 @@ impl Mat {
             }
         }
         c
+    }
+
+    /// `A · B` into caller-owned storage; bit-identical to [`Mat::matmul`]
+    /// (zeroed accumulator, same ikj loop).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.resize_zeroed(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let c_row = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a_ip) in a_row.iter().enumerate().take(k) {
+                if a_ip == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    c_row[j] += a_ip * b_row[j];
+                }
+            }
+        }
     }
 
     /// `AᵀA`-style scaled Gram product: `Aᵀ diag(s) A` without forming the
@@ -201,6 +305,37 @@ impl Mat {
             }
         }
         g
+    }
+
+    /// `Aᵀ diag(s) A` into caller-owned dense storage; bit-identical to
+    /// [`Mat::gram_scaled`]. For packed output see
+    /// [`super::SymMat::gram_scaled_from`].
+    pub fn gram_scaled_into(&self, s: &[f64], out: &mut Mat) {
+        assert_eq!(self.rows, s.len(), "gram_scaled shape mismatch");
+        let (m, d) = (self.rows, self.cols);
+        out.resize_zeroed(d, d);
+        for r in 0..m {
+            let w = s[r];
+            if w == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            for i in 0..d {
+                let wi = w * row[i];
+                if wi == 0.0 {
+                    continue;
+                }
+                let g_row = &mut out.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    g_row[j] += wi * row[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in (i + 1)..d {
+                out.data[j * d + i] = out.data[i * d + j];
+            }
+        }
     }
 
     /// Frobenius norm.
@@ -299,6 +434,14 @@ impl Mat {
     pub fn trace(&self) -> f64 {
         assert!(self.is_square());
         (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+}
+
+impl Default for Mat {
+    /// Empty `0×0` matrix (no allocation) — the natural seed for
+    /// scratch buffers later filled by the `*_into` kernels.
+    fn default() -> Self {
+        Mat { rows: 0, cols: 0, data: Vec::new() }
     }
 }
 

@@ -15,11 +15,13 @@ mod eigen;
 mod mat;
 mod solve;
 mod svd;
+mod symmat;
 
 pub use eigen::{sym_eigen, top_eigenpairs, EigenDecomposition};
 pub use mat::Mat;
 pub use solve::{cholesky_solve, lu_solve, CholeskyFactor};
 pub use svd::{svd, Svd};
+pub use symmat::{cholesky_solve_packed, packed_len, SymCholesky, SymMat};
 
 /// Dense column vector.
 pub type Vector = Vec<f64>;
@@ -79,6 +81,14 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 pub fn sub(a: &[f64], b: &[f64]) -> Vector {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Elementwise `a - b` into caller-owned storage; bit-identical to [`sub`].
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut Vector) {
+    debug_assert_eq!(a.len(), b.len());
+    out.clear();
+    out.extend(a.iter().zip(b).map(|(x, y)| x - y));
 }
 
 /// Elementwise `a + b` as a new vector.

@@ -70,8 +70,16 @@ pub fn svd(a: &Mat) -> Svd {
     }
     let m = a.rows();
     let n = a.cols();
-    // Work on column-major copies of A's columns for cache-friendly rotation.
-    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    // Work on a single flat column-major copy (column `j` = `colmaj[j*m..]`)
+    // for cache-friendly rotation — one allocation, no per-column `Mat::col`
+    // vectors.
+    let mut colmaj = vec![0.0f64; m * n];
+    for i in 0..m {
+        let row = a.row(i);
+        for (j, &x) in row.iter().enumerate() {
+            colmaj[j * m + i] = x;
+        }
+    }
     let mut v = Mat::eye(n);
 
     const MAX_SWEEPS: usize = 60;
@@ -83,7 +91,8 @@ pub fn svd(a: &Mat) -> Svd {
                 // 2×2 Gram block of columns p, q.
                 let (alpha, beta, gamma);
                 {
-                    let (cp, cq) = (&cols[p], &cols[q]);
+                    let cp = &colmaj[p * m..(p + 1) * m];
+                    let cq = &colmaj[q * m..(q + 1) * m];
                     alpha = dot(cp, cp);
                     beta = dot(cq, cq);
                     gamma = dot(cp, cq);
@@ -97,9 +106,9 @@ pub fn svd(a: &Mat) -> Svd {
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = c * t;
                 // Rotate the column pair.
-                let (left, right) = cols.split_at_mut(q);
-                let cp = &mut left[p];
-                let cq = &mut right[0];
+                let (left, right) = colmaj.split_at_mut(q * m);
+                let cp = &mut left[p * m..(p + 1) * m];
+                let cq = &mut right[..m];
                 for i in 0..m {
                     let xp = cp[i];
                     let xq = cq[i];
@@ -121,8 +130,8 @@ pub fn svd(a: &Mat) -> Svd {
     }
 
     // Singular values = column norms; U = normalized columns.
-    let mut triples: Vec<(f64, usize)> = cols
-        .iter()
+    let mut triples: Vec<(f64, usize)> = colmaj
+        .chunks_exact(m.max(1))
         .enumerate()
         .map(|(j, cj)| (dot(cj, cj).sqrt(), j))
         .collect();
@@ -136,7 +145,7 @@ pub fn svd(a: &Mat) -> Svd {
         s.push(sig);
         if sig > 1e-300 {
             for i in 0..m {
-                u[(i, new_j)] = cols[old_j][i] / sig;
+                u[(i, new_j)] = colmaj[old_j * m + i] / sig;
             }
         }
         for i in 0..n {

@@ -1,0 +1,510 @@
+//! Packed symmetric matrices: lower-triangle row-major storage.
+//!
+//! Every object the Basis-Learn / FedNL round loop ships or learns is a
+//! symmetric `d×d` matrix; storing it dense wastes half the memory bandwidth
+//! the paper's whole premise says is precious. [`SymMat`] keeps only the
+//! `d(d+1)/2` lower-triangle entries (row-major: `(i,j)` with `j ≤ i` lives
+//! at `i(i+1)/2 + j`) and provides the kernels the hot path needs — packed
+//! accumulation ([`SymMat::add_scaled`]), diagonal shifts, Frobenius norms,
+//! matrix–vector products, a scaled-Gram accumulator mirroring
+//! [`Mat::gram_scaled`], and a reusable packed Cholesky ([`SymCholesky`]).
+//!
+//! ## Bit-identity contract
+//!
+//! Two kernels here replace dense calls on numerical trajectories that are
+//! pinned byte-identical by `tests/transport_equivalence.rs`, so their
+//! floating-point operation *order* is locked to the dense originals:
+//!
+//! * [`SymMat::gram_scaled_from`] accumulates each packed entry `(i,j)` with
+//!   exactly the per-row multiply/add sequence `Mat::gram_scaled` uses for
+//!   its upper-triangle entry `(j,i)` (the mirror image), so the packed
+//!   result equals the dense one entry-for-entry in exact `f64`.
+//! * [`SymCholesky`] performs the same flat-buffer row-prefix dot products
+//!   as `solve::CholeskyFactor` — packed row `i` (`i+1` entries starting at
+//!   `i(i+1)/2`) holds the same contiguous prefix a dense row holds, so the
+//!   factor and both substitution passes are bit-identical.
+//!
+//! `tests/packed_kernels.rs` asserts both equalities exactly (`==` on every
+//! `f64`), across shapes.
+
+use super::{dot, Mat};
+use anyhow::{bail, Result};
+
+/// Symmetric matrix in packed lower-triangle row-major storage.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SymMat {
+    n: usize,
+    /// `n(n+1)/2` entries; `(i,j)` with `j ≤ i` at `i(i+1)/2 + j`.
+    data: Vec<f64>,
+}
+
+/// Packed length for order `n`.
+#[inline]
+pub fn packed_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+impl SymMat {
+    /// All-zero packed matrix of order `n`.
+    pub fn zeros(n: usize) -> Self {
+        SymMat { n, data: vec![0.0; packed_len(n)] }
+    }
+
+    /// Pack the lower triangle of a square matrix (entries above the
+    /// diagonal are ignored; pass a symmetric matrix for a lossless pack).
+    pub fn from_mat(a: &Mat) -> Self {
+        let mut s = SymMat::default();
+        s.pack_from(a);
+        s
+    }
+
+    /// Order of the matrix.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Raw packed data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw packed data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Packed index of `(i,j)` with `j ≤ i`.
+    #[inline]
+    fn idx(i: usize, j: usize) -> usize {
+        debug_assert!(j <= i);
+        i * (i + 1) / 2 + j
+    }
+
+    /// Entry `(i,j)` (order-insensitive).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        if j <= i {
+            self.data[Self::idx(i, j)]
+        } else {
+            self.data[Self::idx(j, i)]
+        }
+    }
+
+    /// Set entry `(i,j)` (order-insensitive; one write, both mirror reads).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        if j <= i {
+            self.data[Self::idx(i, j)] = v;
+        } else {
+            self.data[Self::idx(j, i)] = v;
+        }
+    }
+
+    /// Resize to order `n` and zero every entry (allocation-free within
+    /// capacity).
+    pub fn reset_zeros(&mut self, n: usize) {
+        self.n = n;
+        self.data.clear();
+        self.data.resize(packed_len(n), 0.0);
+    }
+
+    /// Re-pack from the lower triangle of `a`, reusing storage.
+    pub fn pack_from(&mut self, a: &Mat) {
+        assert!(a.is_square(), "SymMat::pack_from requires a square matrix");
+        let n = a.rows();
+        self.n = n;
+        self.data.clear();
+        let src = a.data();
+        for i in 0..n {
+            self.data.extend_from_slice(&src[i * n..i * n + i + 1]);
+        }
+    }
+
+    /// Unpack into a dense matrix (mirroring the lower triangle up),
+    /// reusing the target's storage.
+    pub fn unpack_into(&self, out: &mut Mat) {
+        let n = self.n;
+        out.resize_zeroed(n, n);
+        let dst = out.data_mut();
+        for i in 0..n {
+            let off = Self::idx(i, 0);
+            for j in 0..=i {
+                let v = self.data[off + j];
+                dst[i * n + j] = v;
+                dst[j * n + i] = v;
+            }
+        }
+    }
+
+    /// Unpack into a fresh dense matrix.
+    pub fn to_mat(&self) -> Mat {
+        let mut m = Mat::zeros(self.n, self.n);
+        self.unpack_into(&mut m);
+        m
+    }
+
+    /// `A ← A + αB` on packed storage.
+    pub fn add_scaled(&mut self, alpha: f64, other: &SymMat) {
+        assert_eq!(self.n, other.n, "SymMat::add_scaled order mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Add `α` to the diagonal (`A + αI`).
+    pub fn add_diag(&mut self, alpha: f64) {
+        for i in 0..self.n {
+            self.data[Self::idx(i, i)] += alpha;
+        }
+    }
+
+    /// Squared Frobenius norm (off-diagonal entries counted twice).
+    pub fn fro_norm_sq(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.n {
+            let off = Self::idx(i, 0);
+            for j in 0..i {
+                let v = self.data[off + j];
+                s += 2.0 * v * v;
+            }
+            let d = self.data[off + i];
+            s += d * d;
+        }
+        s
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    /// Frobenius inner product `⟨A, B⟩` (off-diagonals counted twice).
+    pub fn fro_dot(&self, other: &SymMat) -> f64 {
+        assert_eq!(self.n, other.n, "SymMat::fro_dot order mismatch");
+        let mut s = 0.0;
+        for i in 0..self.n {
+            let off = Self::idx(i, 0);
+            for j in 0..i {
+                s += 2.0 * self.data[off + j] * other.data[off + j];
+            }
+            s += self.data[off + i] * other.data[off + i];
+        }
+        s
+    }
+
+    /// Matrix–vector product `y = A x` into caller-owned storage.
+    ///
+    /// Walks the packed rows once: the lower-triangle entry `(i,j)` feeds
+    /// both `y_i += a_ij x_j` and (for `j < i`) `y_j += a_ij x_i`.
+    pub fn matvec_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        assert_eq!(self.n, x.len(), "SymMat::matvec shape mismatch");
+        y.clear();
+        y.resize(self.n, 0.0);
+        for i in 0..self.n {
+            let off = Self::idx(i, 0);
+            let xi = x[i];
+            let mut s = 0.0;
+            for j in 0..i {
+                let a = self.data[off + j];
+                s += a * x[j];
+                y[j] += a * xi;
+            }
+            y[i] += s + self.data[off + i] * xi;
+        }
+    }
+
+    /// Matrix–vector product `A x` as a fresh vector.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Scaled Gram accumulation `self = Aᵀ diag(s) A` straight into packed
+    /// storage, resetting first.
+    ///
+    /// Bit-identical to [`Mat::gram_scaled`]: packed entry `(i,j)` (`j ≤ i`)
+    /// receives, row by row, exactly the additions the dense kernel applies
+    /// to its upper-triangle entry `(j,i)` — the products associate as
+    /// `(s_r · a_rj) · a_ri` in both.
+    pub fn gram_scaled_from(&mut self, a: &Mat, s: &[f64]) {
+        assert_eq!(a.rows(), s.len(), "gram_scaled shape mismatch");
+        let (m, d) = (a.rows(), a.cols());
+        self.reset_zeros(d);
+        for r in 0..m {
+            let w = s[r];
+            if w == 0.0 {
+                continue;
+            }
+            let row = a.row(r);
+            for j in 0..d {
+                let wj = w * row[j];
+                if wj == 0.0 {
+                    continue;
+                }
+                for (i, &ri) in row.iter().enumerate().skip(j) {
+                    self.data[Self::idx(i, j)] += wj * ri;
+                }
+            }
+        }
+    }
+}
+
+/// Reusable packed Cholesky factorization `A = L Lᵀ`.
+///
+/// Owns its packed factor and substitution scratch, so repeated
+/// `factor`/`solve_into` cycles over same-order matrices perform zero heap
+/// allocations — the shape the BL1/FedNL server solve needs every round.
+/// Arithmetic is bit-identical to [`super::CholeskyFactor`] (see the module
+/// docs).
+#[derive(Clone, Debug, Default)]
+pub struct SymCholesky {
+    n: usize,
+    /// Packed lower-triangle factor.
+    l: Vec<f64>,
+    /// Forward-substitution scratch.
+    y: Vec<f64>,
+}
+
+impl SymCholesky {
+    /// Fresh factor state (no storage until the first `factor`).
+    pub fn new() -> Self {
+        SymCholesky::default()
+    }
+
+    /// Factor a symmetric positive-definite dense matrix into packed
+    /// storage, reusing the previous factor's buffers.
+    ///
+    /// Fails exactly when [`super::CholeskyFactor::new`] does (same pivot
+    /// test, same scan order), leaving the partial factor unusable.
+    pub fn factor(&mut self, a: &Mat) -> Result<()> {
+        if !a.is_square() {
+            bail!("cholesky: matrix is {}x{}, not square", a.rows(), a.cols());
+        }
+        let n = a.rows();
+        self.n = n;
+        self.l.clear();
+        self.l.resize(packed_len(n), 0.0);
+        for i in 0..n {
+            let ri = SymMat::idx(i, 0);
+            for j in 0..=i {
+                let rj = SymMat::idx(j, 0);
+                let s = a[(i, j)] - dot(&self.l[ri..ri + j], &self.l[rj..rj + j]);
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("cholesky: non-positive pivot {s:.3e} at index {i} (matrix not PD)");
+                    }
+                    self.l[ri + j] = s.sqrt();
+                } else {
+                    self.l[ri + j] = s / self.l[rj + j];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Factor a packed symmetric matrix (same arithmetic; the dense kernel
+    /// only ever reads the lower triangle, which is exactly what `a` holds).
+    pub fn factor_sym(&mut self, a: &SymMat) -> Result<()> {
+        let n = a.n();
+        self.n = n;
+        self.l.clear();
+        self.l.resize(packed_len(n), 0.0);
+        for i in 0..n {
+            let ri = SymMat::idx(i, 0);
+            for j in 0..=i {
+                let rj = SymMat::idx(j, 0);
+                let s = a.data[ri + j] - dot(&self.l[ri..ri + j], &self.l[rj..rj + j]);
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("cholesky: non-positive pivot {s:.3e} at index {i} (matrix not PD)");
+                    }
+                    self.l[ri + j] = s.sqrt();
+                } else {
+                    self.l[ri + j] = s / self.l[rj + j];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Solve `A x = b` into caller-owned storage (allocation-free after the
+    /// first same-order call). Bit-identical to
+    /// [`super::CholeskyFactor::solve`].
+    pub fn solve_into(&mut self, b: &[f64], x: &mut Vec<f64>) {
+        let n = self.n;
+        assert_eq!(b.len(), n, "SymCholesky::solve shape mismatch");
+        // Forward: L y = b.
+        self.y.clear();
+        self.y.resize(n, 0.0);
+        for i in 0..n {
+            let ri = SymMat::idx(i, 0);
+            let mut s = b[i];
+            let row = &self.l[ri..ri + i + 1];
+            for k in 0..i {
+                s -= row[k] * self.y[k];
+            }
+            self.y[i] = s / row[i];
+        }
+        // Backward: Lᵀ x = y.
+        x.clear();
+        x.resize(n, 0.0);
+        for i in (0..n).rev() {
+            let mut s = self.y[i];
+            for k in (i + 1)..n {
+                s -= self.l[SymMat::idx(k, i)] * x[k];
+            }
+            x[i] = s / self.l[SymMat::idx(i, i)];
+        }
+    }
+
+    /// log-determinant of `A` (2·Σ log L_ii).
+    pub fn logdet(&self) -> f64 {
+        (0..self.n).map(|i| self.l[SymMat::idx(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// One-shot packed SPD solve `A x = b`.
+pub fn cholesky_solve_packed(a: &SymMat, b: &[f64]) -> Result<Vec<f64>> {
+    let mut f = SymCholesky::new();
+    f.factor_sym(a)?;
+    let mut x = Vec::new();
+    f.solve_into(b, &mut x);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CholeskyFactor;
+    use crate::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        a
+    }
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.transpose().matmul(&b);
+        a.add_diag(0.5 * n as f64);
+        a
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let mut rng = Rng::new(11);
+        for n in [0, 1, 2, 3, 9, 24] {
+            let a = random_sym(n, &mut rng);
+            let s = SymMat::from_mat(&a);
+            assert_eq!(s.data().len(), packed_len(n));
+            let back = s.to_mat();
+            assert_eq!(a, back, "n={n}");
+        }
+    }
+
+    #[test]
+    fn get_set_mirror() {
+        let mut s = SymMat::zeros(4);
+        s.set(1, 3, 7.5);
+        assert_eq!(s.get(3, 1), 7.5);
+        assert_eq!(s.get(1, 3), 7.5);
+        s.set(2, 2, -1.0);
+        assert_eq!(s.get(2, 2), -1.0);
+    }
+
+    #[test]
+    fn packed_ops_match_dense() {
+        let mut rng = Rng::new(12);
+        let a = random_sym(8, &mut rng);
+        let b = random_sym(8, &mut rng);
+        let (mut pa, pb) = (SymMat::from_mat(&a), SymMat::from_mat(&b));
+        pa.add_scaled(0.3, &pb);
+        let mut da = a.clone();
+        da.add_scaled(0.3, &b);
+        assert_eq!(pa.to_mat(), da);
+        pa.add_diag(1.25);
+        da.add_diag(1.25);
+        assert_eq!(pa.to_mat(), da);
+        assert!((pa.fro_norm_sq() - da.fro_norm_sq()).abs() < 1e-9 * (1.0 + da.fro_norm_sq()));
+        assert!((pa.fro_dot(&pb) - da.fro_dot(&b)).abs() < 1e-9 * (1.0 + da.fro_norm()));
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(13);
+        for n in [1, 2, 5, 17] {
+            let a = random_sym(n, &mut rng);
+            let s = SymMat::from_mat(&a);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let yd = a.matvec(&x);
+            let yp = s.matvec(&x);
+            for (u, v) in yd.iter().zip(&yp) {
+                assert!((u - v).abs() < 1e-12, "n={n}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_scaled_from_is_bit_identical() {
+        let mut rng = Rng::new(14);
+        for (m, d) in [(1, 1), (7, 4), (30, 12), (5, 9)] {
+            let a = Mat::from_fn(m, d, |_, _| rng.normal());
+            let mut s: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+            if m > 2 {
+                s[1] = 0.0; // exercise the skip path
+            }
+            let dense = a.gram_scaled(&s);
+            let mut packed = SymMat::default();
+            packed.gram_scaled_from(&a, &s);
+            for i in 0..d {
+                for j in 0..=i {
+                    assert!(
+                        packed.get(i, j) == dense[(i, j)],
+                        "({i},{j}): {} vs {}",
+                        packed.get(i, j),
+                        dense[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_cholesky_is_bit_identical_and_reusable() {
+        let mut rng = Rng::new(15);
+        let mut f = SymCholesky::new();
+        let mut x = Vec::new();
+        for n in [1, 2, 6, 20] {
+            let a = random_spd(n, &mut rng);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let dense = CholeskyFactor::new(&a).unwrap();
+            let xd = dense.solve(&b);
+            f.factor(&a).unwrap();
+            f.solve_into(&b, &mut x);
+            assert_eq!(x, xd, "n={n} dense-input solve");
+            assert!((f.logdet() - dense.logdet()).abs() < 1e-12);
+            // Packed input: same factor, same solution.
+            let pa = SymMat::from_mat(&a);
+            f.factor_sym(&pa).unwrap();
+            f.solve_into(&b, &mut x);
+            assert_eq!(x, xd, "n={n} packed-input solve");
+            let x2 = cholesky_solve_packed(&pa, &b).unwrap();
+            assert_eq!(x2, xd);
+        }
+    }
+
+    #[test]
+    fn packed_cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        let mut f = SymCholesky::new();
+        assert!(f.factor(&a).is_err());
+        assert!(f.factor_sym(&SymMat::from_mat(&a)).is_err());
+        let b = Mat::zeros(2, 3);
+        assert!(f.factor(&b).is_err());
+    }
+}

@@ -8,6 +8,7 @@
 //! repro data <name> [--full-scale]                             inspect a registry dataset
 //! repro list                                                   algorithms / experiments / datasets
 //! repro audit [--root DIR] [--jsonl OUT.jsonl]                 static repo-invariant lint pass
+//! repro bench [--quick] [--filter KEY] [--json OUT.json]       in-tree micro-benchmarks
 //! ```
 //!
 //! `repro sweep` grid axes (comma-separated values; the grid is the cartesian
@@ -84,6 +85,15 @@
 //! --root DIR               crate root to audit       [this crate's source tree]
 //! --jsonl PATH             also write machine-readable findings JSONL
 //! ```
+//!
+//! `repro bench` runs the in-tree micro-benchmark suite (packed symmetric
+//! kernels vs dense, in-place `*_into` kernels vs allocating, steady-state
+//! pooled rounds) with per-case heap-allocation accounting; see docs/PERF.md.
+//! ```text
+//! --quick                  tiny time budget (CI smoke profile)
+//! --filter KEY             only groups whose key contains KEY (sym|into|round)
+//! --json PATH              write the bench-v1 machine-readable report
+//! ```
 
 use anyhow::{bail, Context, Result};
 use basis_learn::compressors::CompressorSpec;
@@ -102,6 +112,13 @@ use basis_learn::sweep::{
 };
 use std::io::IsTerminal;
 use std::path::PathBuf;
+
+/// Byte-accounting for `repro bench`: routing the whole binary through the
+/// counting wrapper costs two relaxed atomic increments per allocation, so
+/// the other subcommands are unaffected in any measurable way.
+#[global_allocator]
+static COUNTING_ALLOC: basis_learn::bench_util::CountingAlloc =
+    basis_learn::bench_util::CountingAlloc;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -172,8 +189,9 @@ fn real_main() -> Result<()> {
         Some("data") => cmd_data(&args),
         Some("list") => cmd_list(),
         Some("audit") => cmd_audit(&args),
+        Some("bench") => cmd_bench(&args),
         Some(other) => {
-            bail!("unknown command '{other}' (experiment|sweep|run|trace|data|list|audit)")
+            bail!("unknown command '{other}' (experiment|sweep|run|trace|data|list|audit|bench)")
         }
         None => {
             print_usage();
@@ -185,7 +203,7 @@ fn real_main() -> Result<()> {
 fn print_usage() {
     println!("repro — Basis Matters (Qian et al., 2021) reproduction");
     println!(
-        "usage: repro <experiment|sweep|run|trace|data|list|audit> [options]   (see README.md)"
+        "usage: repro <experiment|sweep|run|trace|data|list|audit|bench> [options]   (see README.md)"
     );
 }
 
@@ -714,6 +732,36 @@ fn cmd_audit(args: &Args) -> Result<()> {
     print!("{}", basis_learn::audit::report::render_table(&report));
     if !report.clean() {
         bail!("audit failed with {} finding(s)", report.findings.len());
+    }
+    Ok(())
+}
+
+/// Every flag `repro bench` understands (same typo protection as sweep).
+const BENCH_FLAGS: &[&str] = &["quick", "filter", "json"];
+
+/// `repro bench` — the in-tree micro-benchmark suite with per-case heap
+/// accounting (the binary's allocator is the counting wrapper) and an
+/// optional `bench-v1` JSON report for machine-readable perf trajectories
+/// (docs/PERF.md).
+fn cmd_bench(args: &Args) -> Result<()> {
+    for (flag, _) in &args.flags {
+        if !BENCH_FLAGS.contains(&flag.as_str()) {
+            bail!("unknown bench flag '--{flag}'; valid flags: --{}", BENCH_FLAGS.join(", --"));
+        }
+    }
+    let mut b = if args.has("quick") {
+        basis_learn::bench_util::Bench::quick()
+    } else {
+        basis_learn::bench_util::Bench::new()
+    };
+    let filter = args.flag("filter");
+    let keep = |key: &str| filter.map_or(true, |f| key.contains(f));
+    basis_learn::bench_util::run_cli_suite(&mut b, &keep);
+    println!("\n{} cases measured.", b.results().len());
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, basis_learn::bench_util::json_report(b.results()))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote bench report {path}");
     }
     Ok(())
 }

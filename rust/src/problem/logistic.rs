@@ -9,7 +9,7 @@
 //! CPU baselines; the hot Hessian assembly shares [`Mat::gram_scaled`] with
 //! the benchmarks.
 
-use super::LocalProblem;
+use super::{LocalProblem, OracleScratch};
 use crate::linalg::{Mat, Vector};
 
 /// Numerically-stable `log(1 + e^t)`.
@@ -106,6 +106,26 @@ impl LocalProblem for LogisticProblem {
     fn hess(&self, x: &[f64]) -> Mat {
         let w = self.hess_weights(x);
         self.a.gram_scaled(&w)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut Vector, scratch: &mut OracleScratch) {
+        self.a.matvec_into(x, &mut scratch.margins);
+        let m = self.a.rows() as f64;
+        scratch.weights.clear();
+        scratch
+            .weights
+            .extend(scratch.margins.iter().zip(&self.b).map(|(&zi, &bi)| -bi * sigmoid(-bi * zi) / m));
+        self.a.matvec_t_into(&scratch.weights, out);
+    }
+
+    fn hess_into(&self, x: &[f64], out: &mut Mat, scratch: &mut OracleScratch) {
+        self.a.matvec_into(x, &mut scratch.margins);
+        let m = self.a.rows() as f64;
+        scratch.weights.clear();
+        scratch
+            .weights
+            .extend(scratch.margins.iter().map(|&z| sigmoid(z) * sigmoid(-z) / m));
+        self.a.gram_scaled_into(&scratch.weights, out);
     }
 
     fn hess_vec(&self, x: &[f64], v: &[f64]) -> Vector {

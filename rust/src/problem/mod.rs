@@ -23,6 +23,16 @@ pub use quadratic::QuadraticProblem;
 
 use crate::linalg::{Mat, Vector};
 
+/// Caller-owned scratch for the allocation-free oracle calls
+/// ([`LocalProblem::grad_into`] / [`LocalProblem::hess_into`]).
+#[derive(Default)]
+pub struct OracleScratch {
+    /// Margin buffer `z = A x` (length `m`).
+    pub margins: Vec<f64>,
+    /// Per-point weight buffer (length `m`).
+    pub weights: Vec<f64>,
+}
+
 /// A client's local data objective `f_i`.
 ///
 /// Deliberately not `Send`/`Sync`: the PJRT-backed implementation holds
@@ -43,6 +53,23 @@ pub trait LocalProblem {
 
     /// Local Hessian `∇²f_i(x)` (symmetric `d×d`).
     fn hess(&self, x: &[f64]) -> Mat;
+
+    /// [`LocalProblem::grad`] into caller-owned storage. Implementations
+    /// must produce bit-identical values; the default delegates (and
+    /// therefore still allocates) — hot oracles override it.
+    fn grad_into(&self, x: &[f64], out: &mut Vector, scratch: &mut OracleScratch) {
+        let _ = scratch;
+        let g = self.grad(x);
+        out.clear();
+        out.extend_from_slice(&g);
+    }
+
+    /// [`LocalProblem::hess`] into caller-owned storage (same bit-identity
+    /// contract as [`LocalProblem::grad_into`]).
+    fn hess_into(&self, x: &[f64], out: &mut Mat, scratch: &mut OracleScratch) {
+        let _ = scratch;
+        out.copy_from(&self.hess(x));
+    }
 
     /// Hessian–vector product `∇²f_i(x)·v`. Default: materialize the
     /// Hessian; implementations override with the `O(md)` streaming form

@@ -142,6 +142,19 @@ impl Rng {
         idx
     }
 
+    /// [`Rng::sample_without_replacement`] into caller-owned storage:
+    /// identical draws, identical output, no allocation within capacity.
+    pub fn sample_without_replacement_into(&mut self, n: usize, k: usize, idx: &mut Vec<usize>) {
+        assert!(k <= n, "cannot sample {k} items from a population of {n}");
+        idx.clear();
+        idx.extend(0..n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+    }
+
     /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {

@@ -3,7 +3,7 @@
 //! semantics baseline — [`super::Threaded`] must match it bit for bit —
 //! and the only backend usable with non-`Send` oracles (PJRT).
 
-use super::{ClientStep, Downlink, Transport, Uplink};
+use super::{ClientStep, Downlink, PacketPool, Transport, Uplink};
 use crate::obs::{Ctx, Lane, Obs};
 use crate::problem::LocalProblem;
 use crate::rng::Rng;
@@ -15,6 +15,7 @@ pub struct Lockstep<'a> {
     clients: Vec<Box<dyn ClientStep>>,
     rngs: Vec<Rng>,
     obs: Obs<'a>,
+    pool: Option<PacketPool>,
 }
 
 impl<'a> Lockstep<'a> {
@@ -26,13 +27,20 @@ impl<'a> Lockstep<'a> {
     ) -> Self {
         assert_eq!(locals.len(), clients.len(), "locals/clients length mismatch");
         assert_eq!(rngs.len(), clients.len(), "rngs/clients length mismatch");
-        Lockstep { locals, clients, rngs, obs: Obs::noop() }
+        Lockstep { locals, clients, rngs, obs: Obs::noop(), pool: None }
     }
 
     /// Attach a trace recorder: each client's `compute` is timed on its
     /// own `client:<i>` lane.
     pub fn with_obs(mut self, obs: Obs<'a>) -> Self {
         self.obs = obs;
+        self
+    }
+
+    /// Attach a packet pool: downlinks are recycled once consumed and the
+    /// reply batch draws from the pool's free lists.
+    pub fn with_pool(mut self, pool: Option<PacketPool>) -> Self {
+        self.pool = pool;
         self
     }
 }
@@ -42,10 +50,13 @@ impl Transport for Lockstep<'_> {
         &mut self,
         round: usize,
         exchange: usize,
-        sends: Vec<(usize, Downlink)>,
+        mut sends: Vec<(usize, Downlink)>,
     ) -> Result<Vec<(usize, Uplink)>> {
-        let mut replies = Vec::with_capacity(sends.len());
-        for (i, down) in sends {
+        let mut replies = match &self.pool {
+            Some(pool) => pool.batch(sends.len()),
+            None => Vec::with_capacity(sends.len()),
+        };
+        for (i, down) in sends.drain(..) {
             ensure!(i < self.clients.len(), "no client {i}");
             let _span = self.obs.span("compute", Lane::Client(i), Ctx::client(round, exchange, i));
             let up = self
@@ -53,6 +64,12 @@ impl Transport for Lockstep<'_> {
                 .compute(self.locals[i].as_ref(), round, exchange, &down, &mut self.rngs[i])
                 .with_context(|| format!("client {i}, round {round}"))?;
             replies.push((i, up));
+            if let Some(pool) = &self.pool {
+                pool.recycle_packet(down);
+            }
+        }
+        if let Some(pool) = &self.pool {
+            pool.recycle_batch(sends);
         }
         Ok(replies)
     }

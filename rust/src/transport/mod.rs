@@ -83,6 +83,7 @@ use crate::linalg::{Mat, Vector};
 use crate::problem::LocalProblem;
 use crate::rng::Rng;
 use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
 
 /// One typed message payload (see the module table).
 #[derive(Clone, Debug)]
@@ -212,6 +213,144 @@ impl Packet {
             Some(_) => bail!("message '{kind}' is not a flag list"),
             None => bail!("missing flag message '{kind}'"),
         }
+    }
+}
+
+/// Shared free-list recycler for the per-round wire objects: payload
+/// buffers, message lists, and send/reply batches.
+///
+/// Algorithms that opt in (via [`crate::coordinator::ServerState::pool`])
+/// acquire payload storage here instead of allocating, and the round loop /
+/// [`Lockstep`] backend return packets to the pool once they have been
+/// absorbed. After the warm-up round has populated the free lists, the
+/// steady-state exchange path performs **zero heap allocations** (asserted
+/// by `tests/alloc_regression.rs` for BL1 and FedNL).
+///
+/// Cheap to clone (an `Arc` handle); the mutex is uncontended under
+/// [`Lockstep`] and held only for short free-list operations under
+/// [`Threaded`]. Locking and `Arc` cloning do not allocate.
+#[derive(Clone, Default)]
+pub struct PacketPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    floats: Vec<Vec<f64>>,
+    flags: Vec<Vec<bool>>,
+    msgs: Vec<Vec<Msg>>,
+    batches: Vec<Vec<(usize, Packet)>>,
+}
+
+/// Take the first spare with enough capacity, or `None`. Unfit spares stay
+/// pooled — buffers of different roles (length `d`, `d²`, `n`) coexist and
+/// each acquire finds its own size class after warm-up.
+fn take_fit<T>(list: &mut Vec<Vec<T>>, capacity: usize) -> Option<Vec<T>> {
+    let pos = list.iter().position(|v| v.capacity() >= capacity)?;
+    let mut v = list.swap_remove(pos);
+    v.clear();
+    Some(v)
+}
+
+impl PacketPool {
+    pub fn new() -> Self {
+        PacketPool::default()
+    }
+
+    /// An empty float buffer with at least `capacity` spare capacity
+    /// (recycled if possible, freshly allocated during warm-up).
+    pub fn vec_f64(&self, capacity: usize) -> Vec<f64> {
+        // audit:allow(panic-safety): mutex poisoning only follows a panic on another thread; propagating the poison panic is the correct response.
+        let mut inner = self.inner.lock().unwrap();
+        take_fit(&mut inner.floats, capacity).unwrap_or_else(|| Vec::with_capacity(capacity))
+    }
+
+    /// An empty flag buffer with at least `capacity` spare capacity.
+    pub fn vec_bool(&self, capacity: usize) -> Vec<bool> {
+        // audit:allow(panic-safety): mutex poisoning only follows a panic on another thread; propagating the poison panic is the correct response.
+        let mut inner = self.inner.lock().unwrap();
+        take_fit(&mut inner.flags, capacity).unwrap_or_else(|| Vec::with_capacity(capacity))
+    }
+
+    /// An empty packet whose message list is recycled if possible.
+    pub fn packet(&self) -> Packet {
+        // audit:allow(panic-safety): mutex poisoning only follows a panic on another thread; propagating the poison panic is the correct response.
+        let mut inner = self.inner.lock().unwrap();
+        match take_fit(&mut inner.msgs, 0) {
+            Some(msgs) => Packet { msgs },
+            None => Packet::empty(),
+        }
+    }
+
+    /// An empty send/reply batch with at least `capacity` spare capacity.
+    pub fn batch(&self, capacity: usize) -> Vec<(usize, Packet)> {
+        // audit:allow(panic-safety): mutex poisoning only follows a panic on another thread; propagating the poison panic is the correct response.
+        let mut inner = self.inner.lock().unwrap();
+        take_fit(&mut inner.batches, capacity).unwrap_or_else(|| Vec::with_capacity(capacity))
+    }
+
+    /// An all-zeros `rows × cols` matrix backed by pooled storage.
+    pub fn zeros_mat(&self, rows: usize, cols: usize) -> Mat {
+        let mut data = self.vec_f64(rows * cols);
+        data.resize(rows * cols, 0.0);
+        Mat::from_vec(rows, cols, data)
+    }
+
+    /// A pooled deep copy of a matrix (same shape and values).
+    pub fn clone_mat(&self, src: &Mat) -> Mat {
+        let mut data = self.vec_f64(src.rows() * src.cols());
+        data.extend_from_slice(src.data());
+        Mat::from_vec(src.rows(), src.cols(), data)
+    }
+
+    /// A pooled deep copy of a float slice.
+    pub fn clone_slice(&self, src: &[f64]) -> Vec<f64> {
+        let mut v = self.vec_f64(src.len());
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// A pooled deep copy of a packet (same kinds, values, and costs).
+    pub fn clone_packet(&self, src: &Packet) -> Packet {
+        let mut out = self.packet();
+        for m in &src.msgs {
+            let payload = match &m.payload {
+                Payload::Vector(v) => Payload::Vector(self.clone_slice(v)),
+                Payload::Matrix(a) => Payload::Matrix(self.clone_mat(a)),
+                Payload::Scalars(s) => Payload::Scalars(self.clone_slice(s)),
+                Payload::Flags(f) => {
+                    let mut nf = self.vec_bool(f.len());
+                    nf.extend_from_slice(f);
+                    Payload::Flags(nf)
+                }
+            };
+            out.msgs.push(Msg { kind: m.kind, payload, cost: m.cost });
+        }
+        out
+    }
+
+    /// Return a packet's buffers to the free lists.
+    pub fn recycle_packet(&self, mut p: Packet) {
+        // audit:allow(panic-safety): mutex poisoning only follows a panic on another thread; propagating the poison panic is the correct response.
+        let mut inner = self.inner.lock().unwrap();
+        for m in p.msgs.drain(..) {
+            match m.payload {
+                Payload::Vector(v) | Payload::Scalars(v) => inner.floats.push(v),
+                Payload::Matrix(a) => inner.floats.push(a.into_vec()),
+                Payload::Flags(f) => inner.flags.push(f),
+            }
+        }
+        inner.msgs.push(p.msgs);
+    }
+
+    /// Return a whole send/reply batch (packets and the batch vector itself).
+    pub fn recycle_batch(&self, mut batch: Vec<(usize, Packet)>) {
+        for (_, p) in batch.drain(..) {
+            self.recycle_packet(p);
+        }
+        // audit:allow(panic-safety): mutex poisoning only follows a panic on another thread; propagating the poison panic is the correct response.
+        let mut inner = self.inner.lock().unwrap();
+        inner.batches.push(batch);
     }
 }
 

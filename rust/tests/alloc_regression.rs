@@ -1,0 +1,103 @@
+//! Steady-state rounds must not touch the heap.
+//!
+//! The whole point of the packed-`SymMat`/scratch-arena hot path is that
+//! after warm-up (pool populated, scratch buffers at their steady
+//! capacities) a full BL1 or FedNL round over the pooled `Lockstep`
+//! transport performs **zero** heap allocations. This test installs the
+//! crate's counting allocator as the process allocator and asserts exactly
+//! that: the gross-allocated-bytes counter does not move across measured
+//! rounds.
+//!
+//! Everything runs inside ONE `#[test]` function: the counters are
+//! process-global, so a second concurrently-running test would pollute the
+//! measurement window.
+
+use basis_learn::bench_util::CountingAlloc;
+use basis_learn::compressors::CompressorSpec;
+use basis_learn::config::{Algorithm, RunConfig};
+use basis_learn::coordinator::{
+    build_split, estimate_smoothness, native_locals, run_one_round, Env, ServerState,
+};
+use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::linalg::Mat;
+use basis_learn::obs::Obs;
+use basis_learn::rng::Rng;
+use basis_learn::transport::{client_rngs, Lockstep};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const WARMUP_ROUNDS: usize = 6;
+const MEASURED_ROUNDS: usize = 6;
+
+/// Run `WARMUP_ROUNDS` then `MEASURED_ROUNDS` rounds of `algorithm` on the
+/// pooled lockstep transport; return gross bytes allocated during the
+/// measured window.
+fn steady_state_bytes(algorithm: Algorithm) -> u64 {
+    // Full-rank features (intrinsic == dim) keep every Cholesky probe
+    // comfortably positive-definite, so no round falls back to the
+    // (allocating) eigendecomposition path.
+    let fed = FederatedDataset::synthetic(&SyntheticSpec {
+        n_clients: 4,
+        m_per_client: 60,
+        dim: 24,
+        intrinsic_dim: 24,
+        noise: 0.0,
+        seed: 9,
+    });
+    let cfg = RunConfig {
+        algorithm,
+        rounds: WARMUP_ROUNDS + MEASURED_ROUNDS,
+        lambda: 1e-2,
+        hess_comp: CompressorSpec::TopK(24),
+        target_gap: 0.0,
+        ..RunConfig::default()
+    };
+    let locals = native_locals(&fed);
+    let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+    let smoothness = estimate_smoothness(&locals, cfg.lambda);
+    let env = Env {
+        locals: &locals,
+        cfg: &cfg,
+        d: fed.dim(),
+        n: fed.n_clients(),
+        smoothness,
+        features,
+        obs: Obs::noop(),
+    };
+    let (mut server, clients) = build_split(&env).expect("split");
+    let mut transport = Lockstep::new(&locals, clients, client_rngs(cfg.seed, env.n))
+        .with_pool(server.pool().cloned());
+    let mut srv_rng = Rng::new(cfg.seed);
+    for round in 0..WARMUP_ROUNDS {
+        run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng)
+            .expect("warm-up round");
+    }
+    let before = CountingAlloc::allocated_bytes();
+    for round in WARMUP_ROUNDS..WARMUP_ROUNDS + MEASURED_ROUNDS {
+        run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng)
+            .expect("measured round");
+    }
+    CountingAlloc::allocated_bytes() - before
+}
+
+#[test]
+fn bl1_and_fednl_steady_state_rounds_allocate_zero_bytes() {
+    // The allocator wrapper must actually be installed, or the zero deltas
+    // below would be vacuous.
+    assert!(CountingAlloc::is_counting(), "counting allocator not installed");
+    let setup_bytes = CountingAlloc::allocated_bytes();
+    assert!(setup_bytes > 0, "counter never moved");
+
+    let bl1 = steady_state_bytes(Algorithm::Bl1);
+    assert_eq!(
+        bl1, 0,
+        "BL1 allocated {bl1} bytes across {MEASURED_ROUNDS} steady-state rounds"
+    );
+
+    let fednl = steady_state_bytes(Algorithm::FedNl);
+    assert_eq!(
+        fednl, 0,
+        "FedNL allocated {fednl} bytes across {MEASURED_ROUNDS} steady-state rounds"
+    );
+}

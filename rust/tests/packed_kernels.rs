@@ -1,0 +1,347 @@
+//! Bitwise contracts of the allocation-free hot path.
+//!
+//! Two families of properties, both asserted with exact `f64` equality
+//! (`==`, not tolerances) because the round loop substitutes these kernels
+//! on trajectories `tests/transport_equivalence.rs` pins byte-identical:
+//!
+//! 1. `SymMat ↔ Mat` round-trips are lossless, and every packed kernel
+//!    (`add_scaled`, `add_diag`, `matvec`, `gram_scaled_from`,
+//!    `SymCholesky`) matches its dense counterpart bit for bit.
+//! 2. Every `*_into` kernel equals its allocating counterpart bit for bit
+//!    across rectangular and degenerate shapes — linalg, bases,
+//!    compressors (twin RNG streams), oracles, and RNG sampling.
+
+use basis_learn::basis::{
+    subspace::orthonormal_cols, BasisScratch, HessianBasis, PsdBasis, StandardBasis,
+    SubspaceBasis, SymTriBasis,
+};
+use basis_learn::compressors::{CompressScratch, CompressorSpec};
+use basis_learn::linalg::{
+    cholesky_solve, cholesky_solve_packed, packed_len, sub_into, CholeskyFactor, Mat,
+    SymCholesky, SymMat, Vector,
+};
+use basis_learn::problem::{LocalProblem, LogisticProblem, OracleScratch};
+use basis_learn::rng::Rng;
+
+/// Rectangular and degenerate shapes every `*_into` kernel must survive.
+const SHAPES: &[(usize, usize)] = &[(0, 0), (1, 1), (1, 7), (7, 1), (3, 5), (5, 3), (8, 8)];
+
+fn random_mat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn random_vec(n: usize, rng: &mut Rng) -> Vector {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+    let mut a = random_mat(n, n, rng);
+    a.symmetrize();
+    a
+}
+
+fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+    let b = random_mat(n, n, rng);
+    let mut a = b.transpose().matmul(&b);
+    a.add_diag(0.5 * (n as f64) + 1.0);
+    a
+}
+
+// ── SymMat ↔ Mat round trips ─────────────────────────────────────────────
+
+#[test]
+fn symmat_roundtrip_is_exact() {
+    let mut rng = Rng::new(41);
+    for n in [0usize, 1, 2, 3, 7, 16, 33] {
+        let a = random_sym(n, &mut rng);
+        let packed = SymMat::from_mat(&a);
+        assert_eq!(packed.data().len(), packed_len(n));
+        // Fresh-allocation unpack.
+        assert_eq!(packed.to_mat(), a, "to_mat n={n}");
+        // Storage-reusing unpack, including shrink from a larger previous use.
+        let mut out = Mat::zeros(n + 3, n + 3);
+        packed.unpack_into(&mut out);
+        assert_eq!(out, a, "unpack_into n={n}");
+        // Storage-reusing re-pack.
+        let mut repacked = SymMat::zeros(n + 2);
+        repacked.pack_from(&a);
+        assert_eq!(repacked, packed, "pack_from n={n}");
+    }
+}
+
+#[test]
+fn symmat_packed_ops_match_dense_bitwise() {
+    let mut rng = Rng::new(42);
+    for n in [0usize, 1, 2, 5, 12] {
+        let a = random_sym(n, &mut rng);
+        let b = random_sym(n, &mut rng);
+        let alpha = rng.normal();
+
+        // add_scaled: packed entries must equal the dense lower triangle.
+        let mut pa = SymMat::from_mat(&a);
+        pa.add_scaled(alpha, &SymMat::from_mat(&b));
+        let mut da = a.clone();
+        da.add_scaled(alpha, &b);
+        for i in 0..n {
+            for j in 0..=i {
+                assert!(pa.get(i, j) == da[(i, j)], "add_scaled ({i},{j}) n={n}");
+            }
+        }
+
+        // add_diag.
+        pa.add_diag(alpha);
+        da.add_diag(alpha);
+        for i in 0..n {
+            assert!(pa.get(i, i) == da[(i, i)], "add_diag ({i}) n={n}");
+        }
+
+        // matvec: same accumulation order as the packed walk promises.
+        let x = random_vec(n, &mut rng);
+        let yp = SymMat::from_mat(&a).matvec(&x);
+        let mut yp2 = vec![f64::NAN; 3]; // dirty storage must be overwritten
+        SymMat::from_mat(&a).matvec_into(&x, &mut yp2);
+        assert_eq!(yp, yp2, "matvec vs matvec_into n={n}");
+        assert_eq!(yp.len(), n);
+    }
+}
+
+#[test]
+fn gram_scaled_from_matches_dense_bitwise() {
+    let mut rng = Rng::new(43);
+    for &(m, d) in SHAPES {
+        let a = random_mat(m, d, &mut rng);
+        let mut s = random_vec(m, &mut rng);
+        if m > 2 {
+            s[1] = 0.0; // exercise the zero-weight skip path in both kernels
+        }
+        let dense = a.gram_scaled(&s);
+        let mut packed = SymMat::zeros(d + 1); // dirty, wrong-order start
+        packed.gram_scaled_from(&a, &s);
+        assert_eq!(packed.n(), d);
+        for i in 0..d {
+            for j in 0..=i {
+                assert!(
+                    packed.get(i, j) == dense[(i, j)],
+                    "gram ({i},{j}) m={m} d={d}: {} vs {}",
+                    packed.get(i, j),
+                    dense[(i, j)]
+                );
+            }
+        }
+        // And the dense `_into` variant is bitwise-equal too.
+        let mut dense2 = Mat::zeros(1, 1);
+        a.gram_scaled_into(&s, &mut dense2);
+        assert_eq!(dense, dense2, "gram_scaled_into m={m} d={d}");
+    }
+}
+
+#[test]
+fn packed_cholesky_matches_dense_factor_bitwise() {
+    let mut rng = Rng::new(44);
+    let mut f = SymCholesky::new();
+    let mut x = Vec::new();
+    for n in [0usize, 1, 2, 4, 9, 21] {
+        let a = random_spd(n, &mut rng);
+        let b = random_vec(n, &mut rng);
+        let dense = CholeskyFactor::new(&a).expect("SPD by construction");
+        let xd = dense.solve(&b);
+        let xo = cholesky_solve(&a, &b).expect("SPD by construction");
+        assert_eq!(xd, xo, "one-shot dense n={n}");
+
+        f.factor(&a).expect("SPD by construction");
+        f.solve_into(&b, &mut x);
+        assert_eq!(x, xd, "dense-input packed solve n={n}");
+
+        let pa = SymMat::from_mat(&a);
+        f.factor_sym(&pa).expect("SPD by construction");
+        f.solve_into(&b, &mut x);
+        assert_eq!(x, xd, "packed-input packed solve n={n}");
+        let xp = cholesky_solve_packed(&pa, &b).expect("SPD by construction");
+        assert_eq!(xp, xd, "one-shot packed n={n}");
+    }
+    // Failure parity: the packed factor rejects exactly what the dense does.
+    let indef = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+    assert!(CholeskyFactor::new(&indef).is_err());
+    assert!(f.factor(&indef).is_err());
+    assert!(f.factor_sym(&SymMat::from_mat(&indef)).is_err());
+}
+
+// ── Mat `*_into` kernels vs allocating counterparts ──────────────────────
+
+#[test]
+fn mat_into_kernels_match_allocating_bitwise() {
+    let mut rng = Rng::new(45);
+    for &(m, d) in SHAPES {
+        let a = random_mat(m, d, &mut rng);
+        let x = random_vec(d, &mut rng);
+        let xt = random_vec(m, &mut rng);
+        // Dirty target reused across every kernel: stale shape and contents
+        // must never leak through.
+        let mut out = Mat::from_fn(2, 3, |_, _| f64::NAN);
+
+        a.transpose_into(&mut out);
+        assert_eq!(out, a.transpose(), "transpose {m}x{d}");
+
+        let bt = random_mat(d, m, &mut rng);
+        a.matmul_into(&bt, &mut out);
+        assert_eq!(out, a.matmul(&bt), "matmul {m}x{d}");
+
+        let mut v = vec![f64::NAN; 2];
+        a.matvec_into(&x, &mut v);
+        assert_eq!(v, a.matvec(&x), "matvec {m}x{d}");
+        a.matvec_t_into(&xt, &mut v);
+        assert_eq!(v, a.matvec_t(&xt), "matvec_t {m}x{d}");
+
+        for j in 0..d {
+            a.col_into(j, &mut v);
+            assert_eq!(v, a.col(j), "col {j} of {m}x{d}");
+        }
+
+        let b = random_mat(m, d, &mut rng);
+        let mut diff = Mat::zeros(1, 1);
+        diff.sub_from(&a, &b);
+        assert_eq!(diff, &a - &b, "sub_from {m}x{d}");
+
+        let alpha = rng.normal();
+        let mut scaled = Mat::zeros(1, 1);
+        scaled.scale_from(&a, alpha);
+        assert_eq!(scaled, &a * alpha, "scale_from {m}x{d}");
+
+        let mut copy = Mat::zeros(3, 2);
+        copy.copy_from(&a);
+        assert_eq!(copy, a, "copy_from {m}x{d}");
+    }
+}
+
+#[test]
+fn vector_sub_into_matches_sub() {
+    let mut rng = Rng::new(46);
+    for n in [0usize, 1, 5, 17] {
+        let a = random_vec(n, &mut rng);
+        let b = random_vec(n, &mut rng);
+        let mut out = vec![f64::NAN; 2];
+        sub_into(&a, &b, &mut out);
+        assert_eq!(out, basis_learn::linalg::sub(&a, &b), "n={n}");
+    }
+}
+
+// ── basis `*_into` kernels ───────────────────────────────────────────────
+
+#[test]
+fn basis_into_kernels_match_allocating_bitwise() {
+    let mut rng = Rng::new(47);
+    for d in [1usize, 2, 6, 13] {
+        let r = (d / 2).max(1);
+        let bases: Vec<Box<dyn HessianBasis>> = vec![
+            Box::new(StandardBasis::new(d)),
+            Box::new(SymTriBasis::new(d)),
+            Box::new(SubspaceBasis::new(orthonormal_cols(d, r, &mut rng))),
+            Box::new(PsdBasis::new(d)),
+        ];
+        let h = random_sym(d, &mut rng);
+        let g = random_vec(d, &mut rng);
+        let mut scratch = BasisScratch::default();
+        for basis in &bases {
+            let name = basis.name();
+
+            let coeff = basis.encode(&h);
+            let mut coeff2 = Mat::from_fn(1, 2, |_, _| f64::NAN);
+            basis.encode_into(&h, &mut coeff2, &mut scratch);
+            assert_eq!(coeff, coeff2, "encode {name} d={d}");
+
+            let dec = basis.decode(&coeff);
+            let mut dec2 = Mat::from_fn(2, 1, |_, _| f64::NAN);
+            basis.decode_into(&coeff, &mut dec2, &mut scratch);
+            assert_eq!(dec, dec2, "decode {name} d={d}");
+
+            let gc = basis.encode_grad(&g);
+            let mut gc2 = vec![f64::NAN; 1];
+            basis.encode_grad_into(&g, &mut gc2);
+            assert_eq!(gc, gc2, "encode_grad {name} d={d}");
+
+            let gd = basis.decode_grad(&gc);
+            let mut gd2 = vec![f64::NAN; 1];
+            basis.decode_grad_into(&gc, &mut gd2);
+            assert_eq!(gd, gd2, "decode_grad {name} d={d}");
+        }
+    }
+}
+
+// ── compressor `*_into` kernels (twin RNG streams) ───────────────────────
+
+#[test]
+fn compressor_into_kernels_match_allocating_bitwise() {
+    let specs = [
+        CompressorSpec::Identity,
+        CompressorSpec::TopK(5),
+        CompressorSpec::RandK(5),
+    ];
+    for d in [1usize, 3, 8] {
+        for spec in &specs {
+            let mut rng = Rng::new(48);
+            let h = random_sym(d, &mut rng);
+            let comp = spec.build_mat(d);
+            // Twin RNG streams: the `_into` path must draw identically.
+            let mut r1 = rng.derive(1);
+            let mut r2 = rng.derive(1);
+            let (c, cost) = comp.compress(&h, &mut r1);
+            let mut c2 = Mat::from_fn(1, 2, |_, _| f64::NAN);
+            let mut scratch = CompressScratch::default();
+            let cost2 = comp.compress_mat_into(&h, &mut c2, &mut scratch, &mut r2);
+            assert_eq!(c, c2, "compress_mat {spec:?} d={d}");
+            assert_eq!(cost, cost2, "mat cost {spec:?} d={d}");
+            // RNG streams must stay in lockstep after the call, too.
+            assert_eq!(r1.below(1 << 30), r2.below(1 << 30), "rng drift {spec:?} d={d}");
+
+            let comp_v = spec.build_vec(d);
+            let x = random_vec(d, &mut rng);
+            let mut r1 = rng.derive(2);
+            let mut r2 = rng.derive(2);
+            let (v, vcost) = comp_v.compress_vec(&x, &mut r1);
+            let mut v2 = vec![f64::NAN; 1];
+            let vcost2 = comp_v.compress_vec_into(&x, &mut v2, &mut scratch, &mut r2);
+            assert_eq!(v, v2, "compress_vec {spec:?} d={d}");
+            assert_eq!(vcost, vcost2, "vec cost {spec:?} d={d}");
+            assert_eq!(r1.below(1 << 30), r2.below(1 << 30), "vec rng drift {spec:?} d={d}");
+        }
+    }
+}
+
+// ── oracle `*_into` kernels ──────────────────────────────────────────────
+
+#[test]
+fn oracle_into_kernels_match_allocating_bitwise() {
+    let mut rng = Rng::new(49);
+    for (m, d) in [(1usize, 1usize), (5, 3), (40, 12)] {
+        let a = random_mat(m, d, &mut rng);
+        let b: Vector = (0..m).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
+        let p = LogisticProblem::new(a, b);
+        let x = random_vec(d, &mut rng);
+        let mut scratch = OracleScratch::default();
+
+        let g = p.grad(&x);
+        let mut g2 = vec![f64::NAN; 1];
+        p.grad_into(&x, &mut g2, &mut scratch);
+        assert_eq!(g, g2, "grad m={m} d={d}");
+
+        let h = p.hess(&x);
+        let mut h2 = Mat::from_fn(1, 2, |_, _| f64::NAN);
+        p.hess_into(&x, &mut h2, &mut scratch);
+        assert_eq!(h, h2, "hess m={m} d={d}");
+    }
+}
+
+// ── RNG sampling `_into` ─────────────────────────────────────────────────
+
+#[test]
+fn sample_without_replacement_into_matches_allocating() {
+    for (n, k) in [(1usize, 0usize), (1, 1), (10, 3), (10, 10), (64, 17)] {
+        let mut r1 = Rng::new(50);
+        let mut r2 = Rng::new(50);
+        let idx = r1.sample_without_replacement(n, k);
+        let mut idx2 = vec![usize::MAX; 2];
+        r2.sample_without_replacement_into(n, k, &mut idx2);
+        assert_eq!(idx, idx2, "n={n} k={k}");
+        assert_eq!(r1.below(1 << 30), r2.below(1 << 30), "rng drift n={n} k={k}");
+    }
+}
