@@ -1,6 +1,6 @@
 //! Hot-path micro-benchmarks (the §Perf targets of EXPERIMENTS.md):
 //! linalg primitives, compressors, bases, local oracles, the server solve,
-//! and the PJRT dispatch overhead vs the native oracle.
+//! the wire codec, and the PJRT dispatch overhead vs the native oracle.
 //!
 //! ```bash
 //! cargo bench --bench hot_path                     # all groups
@@ -148,6 +148,11 @@ fn main() {
         basis_learn::bench_util::bench_into_group(&mut b, &mut rng);
     }
 
+    // ── wire codec: packet encode/decode on the TCP backend's hot path ──
+    if filter_match("wire") {
+        basis_learn::bench_util::bench_wire_group(&mut b, &mut rng);
+    }
+
     // ── transport backends: per-round wall time, serial vs concurrent ──
     if filter_match("transport") {
         bench_transport(&mut b);
@@ -181,7 +186,7 @@ fn bench_transport(b: &mut Bench) {
         build_split, estimate_smoothness, native_local, native_locals, run_one_round, Env,
         ServerState,
     };
-    use basis_learn::transport::{client_rngs, Lockstep, Threaded};
+    use basis_learn::transport::{client_rngs, Lockstep, Tcp, Threaded};
 
     b.group("transport backends (one BL1 round, d=200, n=8, m=60/client)");
     let fed = FederatedDataset::synthetic(&SyntheticSpec {
@@ -235,6 +240,31 @@ fn bench_transport(b: &mut Bench) {
             let mut srv_rng = Rng::new(cfg.seed);
             let mut round = 0usize;
             b.bench(format!("transport/threaded:{k}"), || {
+                let tally =
+                    run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng)
+                        .unwrap();
+                round += 1;
+                tally.up_bits
+            });
+        });
+    }
+    // Same round over real loopback sockets: adds the wire codec + kernel
+    // socket round-trips on top of threaded:4's compute parallelism.
+    {
+        let (mut server, clients) = build_split(&env).unwrap();
+        std::thread::scope(|scope| {
+            let mut transport = Tcp::spawn(
+                scope,
+                4,
+                clients,
+                client_rngs(cfg.seed, env.n),
+                &factory,
+                basis_learn::obs::Obs::noop(),
+            )
+            .unwrap();
+            let mut srv_rng = Rng::new(cfg.seed);
+            let mut round = 0usize;
+            b.bench("transport/tcp:4", || {
                 let tally =
                     run_one_round(&env, server.as_mut(), &mut transport, round, &mut srv_rng)
                         .unwrap();

@@ -216,6 +216,40 @@ fn cross_check_runtime(ctx: &AuditCtx, out: &mut Vec<Finding>) {
         });
     }
 
+    // The codec table must exist in this crate, and the text parse must
+    // agree with the compiled table *in order* (wire ids are positional).
+    let wire_parsed: Vec<String> =
+        rules::codec_sync::wire_tables(ctx).into_iter().map(|e| e.name).collect();
+    let wire_compiled: Vec<String> =
+        crate::transport::codec::WIRE_KINDS.iter().map(|k| k.to_string()).collect();
+    if wire_parsed != wire_compiled {
+        out.push(Finding {
+            rule: "codec-sync",
+            file: "transport/codec.rs".into(),
+            line: 1,
+            msg: format!(
+                "text-parsed WIRE_KINDS {wire_parsed:?} disagrees with the compiled \
+                 transport::codec::WIRE_KINDS {wire_compiled:?} (order matters: ids \
+                 are positional)"
+            ),
+        });
+    }
+    let mut wire_sorted = wire_compiled;
+    let mut kinds_sorted: Vec<String> = KINDS.iter().map(|k| k.name.to_string()).collect();
+    wire_sorted.sort_unstable();
+    kinds_sorted.sort_unstable();
+    if wire_sorted != kinds_sorted {
+        out.push(Finding {
+            rule: "codec-sync",
+            file: "transport/codec.rs".into(),
+            line: 1,
+            msg: format!(
+                "compiled WIRE_KINDS {wire_sorted:?} and transport::kinds::KINDS \
+                 {kinds_sorted:?} name different vocabularies"
+            ),
+        });
+    }
+
     let mut parsed_algos: Vec<String> = rules::registry_sync::algorithm_variants(ctx)
         .into_iter()
         .map(|(n, _, _)| n)

@@ -1,0 +1,131 @@
+//! `codec-sync`: every registered message kind has a wire-codec id — a new
+//! kind cannot skip the byte-level codec.
+//!
+//! Ground truth is the `const WIRE_KINDS: &[&str] = &["…", …]` table
+//! (`transport/codec.rs` in the real crate), parsed from *source text* like
+//! the kinds registry itself, so fixture crates under
+//! `tests/audit_fixtures/` can declare their own codec tables. The codec
+//! encodes and decodes through this one positional table (id = index), so
+//! table membership *is* having both an encode and a decode arm.
+//!
+//! Checks (all silent when the tree declares no `WIRE_KINDS` table at all —
+//! most fixtures have no codec; the real crate's table presence is enforced
+//! by the orchestrator's compiled cross-check):
+//! 1. every `Kind { name: … }` registry entry appears in the table;
+//! 2. every table entry names a registered kind (no orphan wire ids);
+//! 3. table entries are unique (a duplicate would shadow an id).
+
+use super::super::{AuditCtx, Finding};
+use super::bit_accounting::collect_registry;
+use crate::audit::lexer::TokKind;
+
+const RULE: &str = "codec-sync";
+
+/// One parsed `WIRE_KINDS` table entry.
+pub(crate) struct WireEntry {
+    pub file: String,
+    pub line: u32,
+    pub name: String,
+}
+
+/// Parse every `const WIRE_KINDS … = … [ "…", … ]` declaration in the tree,
+/// in source order (the order *is* the wire id assignment). Only
+/// declaration sites count — `WIRE_KINDS` uses inside function bodies are
+/// not preceded by the `const` keyword.
+pub(crate) fn wire_tables(ctx: &AuditCtx) -> Vec<WireEntry> {
+    let mut out = Vec::new();
+    for file in ctx.files {
+        let code = &file.code;
+        for i in 0..code.len() {
+            if !code[i].is_ident("WIRE_KINDS") || i == 0 || !code[i - 1].is_ident("const") {
+                continue;
+            }
+            // Skip the type annotation: scan to `=`, then to the first `[`
+            // of the initializer, then collect string literals until the
+            // bracket depth closes.
+            let mut j = i + 1;
+            while j < code.len() && !code[j].is_punct('=') {
+                j += 1;
+            }
+            while j < code.len() && !code[j].is_punct('[') {
+                j += 1;
+            }
+            let mut depth = 0isize;
+            while j < code.len() {
+                let t = &code[j];
+                if t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Str {
+                    out.push(WireEntry {
+                        file: file.rel.clone(),
+                        line: t.line,
+                        name: t.text.clone(),
+                    });
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+pub fn check(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    let table = wire_tables(ctx);
+    if table.is_empty() {
+        return; // no codec in this tree — nothing to hold in sync
+    }
+    let mut registry = Vec::new();
+    for file in ctx.files {
+        collect_registry(file, &mut registry);
+    }
+
+    // 3. duplicate wire ids.
+    for (i, e) in table.iter().enumerate() {
+        if table[..i].iter().any(|p| p.name == e.name) {
+            out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!("wire kind \"{}\" appears more than once in WIRE_KINDS", e.name),
+            });
+        }
+    }
+
+    // 1. registered kind without a wire id.
+    for e in &registry {
+        if !table.iter().any(|t| t.name == e.name) {
+            out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!(
+                    "registered kind \"{}\" has no wire id; append it to the WIRE_KINDS \
+                     table so it can cross the byte codec",
+                    e.name
+                ),
+            });
+        }
+    }
+
+    // 2. orphan wire id.
+    for t in &table {
+        if !registry.iter().any(|e| e.name == t.name) {
+            out.push(Finding {
+                rule: RULE,
+                file: t.file.clone(),
+                line: t.line,
+                msg: format!(
+                    "wire kind \"{}\" is not in the kinds registry; remove the dead wire \
+                     id (ids are positional — removal is a wire-format break) or register \
+                     the kind",
+                    t.name
+                ),
+            });
+        }
+    }
+}

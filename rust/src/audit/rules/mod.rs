@@ -7,6 +7,7 @@
 //! orchestrator — rules never see allows, which keeps them honest.
 
 pub mod bit_accounting;
+pub mod codec_sync;
 pub mod determinism;
 pub mod panic_safety;
 pub mod registry_sync;
@@ -56,6 +57,11 @@ pub const RULES: &[RuleInfo] = &[
         id: "registry-sync",
         summary: "algorithms, message kinds and trace names stay registered and documented",
         run: registry_sync::check,
+    },
+    RuleInfo {
+        id: "codec-sync",
+        summary: "every registered message kind has a wire-codec id (WIRE_KINDS stays in sync)",
+        run: codec_sync::check,
     },
 ];
 

@@ -457,9 +457,74 @@ pub fn bench_round_group(b: &mut Bench) {
     }
 }
 
+/// The wire-codec hot path: encode/decode of a realistic BL1 round's packet
+/// set (d = 200) through `transport::codec` — the per-exchange work the
+/// `Tcp` backend adds on top of the in-process backends. Encoding reuses a
+/// scratch buffer (the `Session` steady state); decode allocates fresh
+/// payload buffers by design.
+pub fn bench_wire_group(b: &mut Bench, rng: &mut crate::rng::Rng) {
+    use crate::compressors::BitCost;
+    use crate::linalg::Mat;
+    use crate::transport::codec::{decode_packet, encode_packet_into};
+    use crate::transport::Packet;
+
+    b.group("wire codec (BL1 round packets, d=200)");
+    let d = 200;
+
+    // Downlink: compressed model step + the lazy-gradient flag.
+    let mut down = Packet::empty();
+    down.push_vector("model_delta", (0..d).map(|_| rng.normal()).collect(), BitCost::floats(d));
+    down.push_flags("xi", vec![true], BitCost::bits(1.0));
+
+    // Uplink: TopK(30)-compressed Hessian coefficient matrix + gradient.
+    let mut up = Packet::empty();
+    up.push_matrix(
+        "hess_delta",
+        Mat::from_fn(d, d, |_, _| rng.normal()),
+        BitCost { floats: 30.0, aux_bits: 480.0 },
+    );
+    up.push_vector("grad_coeff", (0..d).map(|_| rng.normal()).collect(), BitCost::floats(d));
+
+    let mut buf = Vec::new();
+    b.bench("wire/encode down d=200", || {
+        buf.clear();
+        let ok = encode_packet_into(&down, &mut buf).is_ok();
+        (buf.len(), ok)
+    });
+    let mut buf_up = Vec::new();
+    b.bench("wire/encode up 200x200", || {
+        buf_up.clear();
+        let ok = encode_packet_into(&up, &mut buf_up).is_ok();
+        (buf_up.len(), ok)
+    });
+
+    let down_bytes = crate::transport::codec::encode_packet(&down).unwrap_or_default();
+    let up_bytes = crate::transport::codec::encode_packet(&up).unwrap_or_default();
+    b.bench("wire/decode down d=200", || {
+        decode_packet(&down_bytes).map(|p| p.msgs.len()).unwrap_or(0)
+    });
+    b.bench("wire/decode up 200x200", || {
+        decode_packet(&up_bytes).map(|p| p.msgs.len()).unwrap_or(0)
+    });
+
+    let mut rt = Vec::new();
+    b.bench("wire/round-trip exchange d=200", || {
+        rt.clear();
+        let mut n = 0usize;
+        if encode_packet_into(&down, &mut rt).is_ok() {
+            n += decode_packet(&rt).map(|p| p.msgs.len()).unwrap_or(0);
+        }
+        rt.clear();
+        if encode_packet_into(&up, &mut rt).is_ok() {
+            n += decode_packet(&rt).map(|p| p.msgs.len()).unwrap_or(0);
+        }
+        n
+    });
+}
+
 /// The `repro bench` suite. `keep` filters by group key: `sym` (packed vs
 /// dense symmetric kernels), `into` (in-place vs allocating kernels),
-/// `round` (steady-state pooled rounds).
+/// `round` (steady-state pooled rounds), `wire` (byte codec encode/decode).
 pub fn run_cli_suite(b: &mut Bench, keep: &dyn Fn(&str) -> bool) {
     // Fixed suite seed: bench inputs are reproducible across runs/machines.
     let bench_seed = 1;
@@ -472,6 +537,9 @@ pub fn run_cli_suite(b: &mut Bench, keep: &dyn Fn(&str) -> bool) {
     }
     if keep("round") {
         bench_round_group(b);
+    }
+    if keep("wire") {
+        bench_wire_group(b, &mut rng);
     }
 }
 

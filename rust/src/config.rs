@@ -157,7 +157,7 @@ pub enum Bl3Option {
 
 /// Which [`crate::transport`] backend carries the round messages.
 ///
-/// Both backends produce bit-identical [`crate::metrics::History`] traces
+/// All backends produce bit-identical [`crate::metrics::History`] traces
 /// (the determinism contract of the transport layer), so this is an
 /// execution knob, not a semantic one — it is deliberately excluded from
 /// [`RunConfig::fingerprint`].
@@ -173,6 +173,11 @@ pub enum TransportSpec {
     /// core (resolved at run time). Requires rebuildable local problems
     /// (see `run_federated`); `run_federated_with` rejects it.
     Threaded(usize),
+    /// Real-socket backend: like [`TransportSpec::Threaded`], but every
+    /// packet is serialized by the wire codec and crosses a TCP loopback
+    /// connection (one per worker thread). `0` ⇒ one worker per hardware
+    /// core. Requires rebuildable local problems, like `Threaded`.
+    Tcp(usize),
 }
 
 impl TransportSpec {
@@ -181,11 +186,13 @@ impl TransportSpec {
     pub fn resolved_workers(&self, n_clients: usize) -> usize {
         match self {
             TransportSpec::Lockstep => 1,
-            TransportSpec::Threaded(0) => std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-                .min(n_clients.max(1)),
-            TransportSpec::Threaded(k) => (*k).min(n_clients.max(1)),
+            TransportSpec::Threaded(0) | TransportSpec::Tcp(0) => {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+                    .min(n_clients.max(1))
+            }
+            TransportSpec::Threaded(k) | TransportSpec::Tcp(k) => (*k).min(n_clients.max(1)),
         }
     }
 }
@@ -196,6 +203,8 @@ impl std::fmt::Display for TransportSpec {
             TransportSpec::Lockstep => write!(f, "lockstep"),
             TransportSpec::Threaded(0) => write!(f, "threaded"),
             TransportSpec::Threaded(k) => write!(f, "threaded:{k}"),
+            TransportSpec::Tcp(0) => write!(f, "tcp"),
+            TransportSpec::Tcp(k) => write!(f, "tcp:{k}"),
         }
     }
 }
@@ -216,7 +225,16 @@ impl std::str::FromStr for TransportSpec {
                 .map_err(|e| anyhow::anyhow!("bad worker count in '{s}': {e}"))?;
             return Ok(TransportSpec::Threaded(k));
         }
-        bail!("unknown transport '{s}' (lockstep | threaded | threaded:<k>)")
+        if t == "tcp" {
+            return Ok(TransportSpec::Tcp(0));
+        }
+        if let Some(k) = t.strip_prefix("tcp:") {
+            let k: usize = k
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad worker count in '{s}': {e}"))?;
+            return Ok(TransportSpec::Tcp(k));
+        }
+        bail!("unknown transport '{s}' (lockstep | threaded | threaded:<k> | tcp | tcp:<k>)")
     }
 }
 
@@ -378,9 +396,20 @@ mod tests {
         assert_eq!("threaded".parse::<TransportSpec>().unwrap(), TransportSpec::Threaded(0));
         assert_eq!("threaded:4".parse::<TransportSpec>().unwrap(), TransportSpec::Threaded(4));
         assert_eq!("THREADED:2".parse::<TransportSpec>().unwrap(), TransportSpec::Threaded(2));
+        assert_eq!("tcp".parse::<TransportSpec>().unwrap(), TransportSpec::Tcp(0));
+        assert_eq!("tcp:4".parse::<TransportSpec>().unwrap(), TransportSpec::Tcp(4));
+        assert_eq!("TCP:2".parse::<TransportSpec>().unwrap(), TransportSpec::Tcp(2));
         assert!("sockets".parse::<TransportSpec>().is_err());
         assert!("threaded:x".parse::<TransportSpec>().is_err());
-        for t in [TransportSpec::Lockstep, TransportSpec::Threaded(0), TransportSpec::Threaded(8)] {
+        assert!("tcp:x".parse::<TransportSpec>().is_err());
+        let all = [
+            TransportSpec::Lockstep,
+            TransportSpec::Threaded(0),
+            TransportSpec::Threaded(8),
+            TransportSpec::Tcp(0),
+            TransportSpec::Tcp(8),
+        ];
+        for t in all {
             assert_eq!(t.to_string().parse::<TransportSpec>().unwrap(), t);
         }
     }
@@ -393,6 +422,10 @@ mod tests {
         assert_eq!(TransportSpec::Threaded(8).resolved_workers(3), 3);
         assert!(TransportSpec::Threaded(0).resolved_workers(64) >= 1);
         assert_eq!(TransportSpec::Threaded(4).resolved_workers(0), 1);
+        // Tcp resolves exactly like Threaded.
+        assert_eq!(TransportSpec::Tcp(4).resolved_workers(16), 4);
+        assert_eq!(TransportSpec::Tcp(8).resolved_workers(3), 3);
+        assert!(TransportSpec::Tcp(0).resolved_workers(64) >= 1);
     }
 
     #[test]
@@ -401,7 +434,9 @@ mod tests {
         // recorded under either backend as the same run.
         let lock = RunConfig { transport: TransportSpec::Lockstep, ..RunConfig::default() };
         let thr = RunConfig { transport: TransportSpec::Threaded(4), ..RunConfig::default() };
+        let tcp = RunConfig { transport: TransportSpec::Tcp(2), ..RunConfig::default() };
         assert_eq!(lock.fingerprint(), thr.fingerprint());
+        assert_eq!(lock.fingerprint(), tcp.fingerprint());
     }
 
     #[test]

@@ -43,7 +43,7 @@ use crate::obs::{Ctx, Dir, Lane, Obs, Recorder, NOOP};
 use crate::problem::{GlobalObjective, LocalProblem, LogisticProblem};
 use crate::rng::Rng;
 use crate::transport::{
-    client_rngs, ClientStep, Downlink, Lockstep, ProblemFactory, Threaded, Transport, Uplink,
+    client_rngs, ClientStep, Downlink, Lockstep, ProblemFactory, Tcp, Threaded, Transport, Uplink,
 };
 use anyhow::Result;
 
@@ -298,7 +298,7 @@ pub fn run_federated_factory_traced<'a>(
                 .with_pool(server.pool().cloned());
             drive(&env, server.as_mut(), &mut transport)
         }
-        TransportSpec::Threaded(_) => {
+        TransportSpec::Threaded(_) | TransportSpec::Tcp(_) => {
             let Some(factory) = factory else {
                 anyhow::bail!(
                     "transport '{}' needs rebuildable local problems (oracles are \
@@ -309,9 +309,15 @@ pub fn run_federated_factory_traced<'a>(
             };
             let workers = cfg.transport.resolved_workers(n);
             std::thread::scope(|scope| {
-                let mut transport =
-                    Threaded::spawn_obs(scope, workers, clients, rngs, factory, env.obs);
-                drive(&env, server.as_mut(), &mut transport)
+                if let TransportSpec::Tcp(_) = cfg.transport {
+                    let mut transport =
+                        Tcp::spawn(scope, workers, clients, rngs, factory, env.obs)?;
+                    drive(&env, server.as_mut(), &mut transport)
+                } else {
+                    let mut transport =
+                        Threaded::spawn_obs(scope, workers, clients, rngs, factory, env.obs);
+                    drive(&env, server.as_mut(), &mut transport)
+                }
             })
         }
     }

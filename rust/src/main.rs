@@ -24,9 +24,9 @@
 //! --tau t1,...             participation levels (`all` or counts)       [all]
 //! --seeds SPEC             `1..5` (inclusive) or `1,2,7`                [1]
 //! --rounds N --lambda X --target-gap X --max-bits X    shared run template
-//! --transport SPEC         lockstep | threaded | threaded:<k>      [lockstep]
-//!                          (threaded:<k> budgets --jobs down by k so the
-//!                          total thread count stays ≈ --jobs)
+//! --transport SPEC         lockstep | threaded[:<k>] | tcp[:<k>]   [lockstep]
+//!                          (an in-run worker count <k> budgets --jobs down
+//!                          so the total thread count stays ≈ --jobs)
 //! --jobs N                 worker threads                  [all hardware cores]
 //! --name NAME              sweep name (output dir under runs/)         [sweep]
 //! --out DIR                explicit output directory       [runs/<name>]
@@ -63,8 +63,9 @@
 //! --eta X --alpha X        stepsizes (defaults: compressor-class rules)
 //! --target-gap X           stop at f(x)−f* ≤ X                            [1e-12]
 //! --seed N                 RNG seed                                       [1]
-//! --transport SPEC         lockstep | threaded | threaded:<k>             [lockstep]
-//!                          (in-round client concurrency; results are
+//! --transport SPEC         lockstep | threaded[:<k>] | tcp[:<k>]          [lockstep]
+//!                          (in-round client concurrency — tcp moves real
+//!                          bytes over loopback sockets; results are
 //!                          bit-identical across backends)
 //! --pjrt                   evaluate loss/grad/Hessian via PJRT artifacts
 //!                          (needs a build with `--features pjrt`)
@@ -88,10 +89,11 @@
 //!
 //! `repro bench` runs the in-tree micro-benchmark suite (packed symmetric
 //! kernels vs dense, in-place `*_into` kernels vs allocating, steady-state
-//! pooled rounds) with per-case heap-allocation accounting; see docs/PERF.md.
+//! pooled rounds, wire-codec encode/decode) with per-case heap-allocation
+//! accounting; see docs/PERF.md.
 //! ```text
 //! --quick                  tiny time budget (CI smoke profile)
-//! --filter KEY             only groups whose key contains KEY (sym|into|round)
+//! --filter KEY             only groups whose key contains KEY (sym|into|round|wire)
 //! --json PATH              write the bench-v1 machine-readable report
 //! ```
 
@@ -347,7 +349,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let mut jobs: usize = args.parsed("jobs")?.unwrap_or_else(default_jobs);
     // A threaded in-run transport multiplies thread counts: budget the
     // sweep's worker pool so jobs × in-run workers ≈ the requested jobs.
-    if let TransportSpec::Threaded(_) = spec.base.transport {
+    if matches!(spec.base.transport, TransportSpec::Threaded(_) | TransportSpec::Tcp(_)) {
         let per_run = spec.base.transport.resolved_workers(usize::MAX);
         let budgeted = (jobs / per_run.max(1)).max(1);
         if budgeted != jobs {

@@ -1,0 +1,522 @@
+//! The wire codec: a canonical, versioned, dependency-free binary encoding
+//! for [`Packet`]s (frame layout reference: `docs/WIRE.md`).
+//!
+//! In-process backends ([`super::Lockstep`], [`super::Threaded`]) hand
+//! `Packet` structs between halves directly; the TCP backend
+//! ([`super::Tcp`]) moves the *bytes* this module produces. The encoding is
+//! exact: every `f64` travels as its IEEE-754 bit pattern
+//! ([`f64::to_bits`]), so NaN payloads, negative zero and subnormals
+//! round-trip bit-for-bit and a decoded packet's [`BitCost`]s reconcile
+//! with the in-process tally to the last bit — the property
+//! `tests/transport_equivalence.rs` pins across all three backends.
+//!
+//! Everything is little-endian. A frame is a fixed 34-byte header
+//! ([`encode_header`]/[`decode_header`]) followed by `body_len` body bytes;
+//! a [`FrameKind::Packet`] body is produced by [`encode_packet`] and
+//! consumed by [`decode_packet`]. Decoding is strict: truncated input, bad
+//! magic/version, unknown tags or kind ids, non-`0x00`/`0x01` flag bytes
+//! and trailing bytes are all `anyhow` errors — the decoder never panics
+//! and never trusts a length field beyond the bytes actually present
+//! (`rust/tests/wire_codec.rs` drives the rejection paths).
+//!
+//! Message kinds travel as a `u16` index into [`WIRE_KINDS`], the codec's
+//! mirror of the [`super::kinds::KINDS`] registry. The table is
+//! **append-only** (ids are positional; reordering or deleting entries is a
+//! wire-format break and requires a [`VERSION`] bump). The audit's
+//! `codec-sync` rule and its compiled cross-check keep the two tables in
+//! lockstep, so a kind cannot be registered without a wire id.
+
+use super::{kinds, Msg, Packet, Payload};
+use crate::compressors::BitCost;
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+
+/// Frame magic: the first four bytes of every frame ("Basis-Learn Wire
+/// Format").
+pub const MAGIC: [u8; 4] = *b"BLWF";
+
+/// Wire-format version byte. Bump on any incompatible layout change
+/// (including reordering [`WIRE_KINDS`]).
+pub const VERSION: u8 = 1;
+
+/// Fixed frame-header length in bytes: magic(4) + version(1) + kind(1) +
+/// round(8) + exchange(8) + client(8) + body_len(4).
+pub const HEADER_LEN: usize = 34;
+
+/// Wire ids for message kinds: `id = position in this table`. Mirrors the
+/// names in [`super::kinds::KINDS`] (registry order) and is **append-only**
+/// — see the module docs. Checked against the registry by the audit's
+/// `codec-sync` rule (source text) and `cross_check_runtime` (compiled).
+pub const WIRE_KINDS: &[&str] = &[
+    "anchor",
+    "avg",
+    "beta_gamma",
+    "coeff_delta",
+    "ctl",
+    "delta",
+    "direction",
+    "g",
+    "g1",
+    "g2",
+    "gbar",
+    "grad",
+    "grad_coeff",
+    "grad_report",
+    "grad_update",
+    "h_g",
+    "hess_coeff",
+    "hess_delta",
+    "hess_g",
+    "model",
+    "model_delta",
+    "model_residual",
+    "model_update",
+    "proceed",
+    "shift_delta",
+    "x",
+    "x_try",
+    "xi",
+];
+
+/// What a frame carries (byte value on the wire; `0` is reserved so an
+/// all-zero buffer can never parse as a frame).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → server greeting; `client` carries the worker index.
+    Hello = 1,
+    /// A serialized [`Packet`] (either direction).
+    Packet = 2,
+    /// Orderly shutdown; the receiver stops reading.
+    Bye = 3,
+    /// A client-side failure; the body is a UTF-8 message.
+    Error = 4,
+}
+
+/// The addressing header every frame carries: which exchange of which round
+/// this frame belongs to, and which client it is for/from. The TCP backend
+/// verifies these against its expectations on receipt (per-exchange
+/// sequencing), so a delayed or misrouted frame is an error, not silent
+/// state corruption.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub round: u64,
+    pub exchange: u64,
+    pub client: u64,
+}
+
+impl FrameHeader {
+    /// Header for a [`Packet`] frame addressed to/from `client`.
+    pub fn packet(round: usize, exchange: usize, client: usize) -> Self {
+        FrameHeader {
+            kind: FrameKind::Packet,
+            round: round as u64,
+            exchange: exchange as u64,
+            client: client as u64,
+        }
+    }
+
+    /// Header for a control frame (no packet body).
+    pub fn control(kind: FrameKind, client: usize) -> Self {
+        FrameHeader { kind, round: 0, exchange: 0, client: client as u64 }
+    }
+}
+
+/// Look up a kind's wire id. Unregistered kinds cannot be encoded: the
+/// codec's vocabulary is exactly the registry's.
+pub fn wire_id(kind: &str) -> Result<u16> {
+    match WIRE_KINDS.iter().position(|k| *k == kind) {
+        Some(i) => Ok(i as u16),
+        None => bail!("message kind {kind:?} has no wire id (WIRE_KINDS is out of sync)"),
+    }
+}
+
+/// Append the 34-byte frame header for a `body_len`-byte body to `out`.
+pub fn encode_header(h: &FrameHeader, body_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    if body_len > u32::MAX as usize {
+        bail!("frame body of {body_len} bytes exceeds the u32 length field");
+    }
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(h.kind as u8);
+    out.extend_from_slice(&h.round.to_le_bytes());
+    out.extend_from_slice(&h.exchange.to_le_bytes());
+    out.extend_from_slice(&h.client.to_le_bytes());
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    Ok(())
+}
+
+/// Decode a frame header; returns the header and the body length that
+/// follows. Rejects bad magic, unknown versions and unknown frame kinds.
+pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<(FrameHeader, usize)> {
+    if buf[0..4] != MAGIC {
+        bail!("bad frame magic {:02x?} (expected {MAGIC:02x?})", &buf[0..4]);
+    }
+    if buf[4] != VERSION {
+        bail!("unsupported wire version {} (this build speaks {VERSION})", buf[4]);
+    }
+    let kind = match buf[5] {
+        1 => FrameKind::Hello,
+        2 => FrameKind::Packet,
+        3 => FrameKind::Bye,
+        4 => FrameKind::Error,
+        k => bail!("unknown frame kind byte {k:#04x}"),
+    };
+    let u64_at = |i: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&buf[i..i + 8]);
+        u64::from_le_bytes(b)
+    };
+    let mut len = [0u8; 4];
+    len.copy_from_slice(&buf[30..34]);
+    let header = FrameHeader {
+        kind,
+        round: u64_at(6),
+        exchange: u64_at(14),
+        client: u64_at(22),
+    };
+    Ok((header, u32::from_le_bytes(len) as usize))
+}
+
+/// Encode a packet body into a fresh buffer. See [`encode_packet_into`].
+pub fn encode_packet(p: &Packet) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_packet_into(p, &mut out)?;
+    Ok(out)
+}
+
+/// Append the packet-body encoding of `p` to `out` (layout: `docs/WIRE.md`).
+/// Fails — writing nothing useful but possibly a partial body — if a
+/// message's kind is not in [`WIRE_KINDS`]; callers encode into a scratch
+/// buffer they reset on error.
+pub fn encode_packet_into(p: &Packet, out: &mut Vec<u8>) -> Result<()> {
+    if p.msgs.len() > u32::MAX as usize {
+        bail!("packet with {} messages exceeds the u32 count field", p.msgs.len());
+    }
+    out.extend_from_slice(&(p.msgs.len() as u32).to_le_bytes());
+    for msg in &p.msgs {
+        let id = wire_id(msg.kind)?;
+        out.extend_from_slice(&id.to_le_bytes());
+        out.push(payload_tag(&msg.payload));
+        out.extend_from_slice(&msg.cost.floats.to_bits().to_le_bytes());
+        out.extend_from_slice(&msg.cost.aux_bits.to_bits().to_le_bytes());
+        match &msg.payload {
+            Payload::Vector(v) | Payload::Scalars(v) => {
+                encode_len(v.len(), "vector length", out)?;
+                for x in v {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            Payload::Matrix(m) => {
+                encode_len(m.rows(), "matrix rows", out)?;
+                encode_len(m.cols(), "matrix cols", out)?;
+                for x in m.data() {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            Payload::Flags(f) => {
+                encode_len(f.len(), "flag count", out)?;
+                out.extend(f.iter().map(|&b| b as u8));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode a packet body. Strict: every length is validated against the
+/// bytes actually remaining before any allocation, unknown kind ids /
+/// payload tags / flag bytes are errors, and leftover bytes after the last
+/// message are an error. Never panics.
+pub fn decode_packet(buf: &[u8]) -> Result<Packet> {
+    let mut r = Reader { buf, pos: 0 };
+    let count = r.u32().context("packet message count")?;
+    let mut msgs = Vec::new();
+    for i in 0..count {
+        let ctx = || format!("message {i} of {count}");
+        let id = r.u16().with_context(ctx)?;
+        let kind: &'static str = match WIRE_KINDS.get(id as usize) {
+            Some(k) => k,
+            None => bail!("unknown wire kind id {id} in message {i}"),
+        };
+        let tag = r.u8().with_context(ctx)?;
+        let cost = BitCost {
+            floats: f64::from_bits(r.u64().with_context(ctx)?),
+            aux_bits: f64::from_bits(r.u64().with_context(ctx)?),
+        };
+        let payload = match tag {
+            TAG_VECTOR => Payload::Vector(r.f64_vec().with_context(ctx)?),
+            TAG_MATRIX => {
+                let rows = r.u32().with_context(ctx)? as usize;
+                let cols = r.u32().with_context(ctx)? as usize;
+                let n = rows
+                    .checked_mul(cols)
+                    .with_context(|| format!("matrix shape {rows}x{cols} overflows"))?;
+                let data = r.f64s(n).with_context(ctx)?;
+                Payload::Matrix(Mat::from_vec(rows, cols, data))
+            }
+            TAG_SCALARS => Payload::Scalars(r.f64_vec().with_context(ctx)?),
+            TAG_FLAGS => {
+                let n = r.u32().with_context(ctx)? as usize;
+                let bytes = r.take(n).with_context(ctx)?;
+                let mut flags = Vec::with_capacity(n);
+                for &b in bytes {
+                    match b {
+                        0 => flags.push(false),
+                        1 => flags.push(true),
+                        _ => bail!("invalid flag byte {b:#04x} in message {i}"),
+                    }
+                }
+                Payload::Flags(flags)
+            }
+            t => bail!("unknown payload tag {t:#04x} in message {i}"),
+        };
+        msgs.push(Msg { kind, payload, cost });
+    }
+    if r.pos != buf.len() {
+        bail!("{} trailing bytes after the last message", buf.len() - r.pos);
+    }
+    Ok(Packet { msgs })
+}
+
+const TAG_VECTOR: u8 = 0;
+const TAG_MATRIX: u8 = 1;
+const TAG_SCALARS: u8 = 2;
+const TAG_FLAGS: u8 = 3;
+
+fn payload_tag(p: &Payload) -> u8 {
+    match p {
+        Payload::Vector(_) => TAG_VECTOR,
+        Payload::Matrix(_) => TAG_MATRIX,
+        Payload::Scalars(_) => TAG_SCALARS,
+        Payload::Flags(_) => TAG_FLAGS,
+    }
+}
+
+fn encode_len(n: usize, what: &str, out: &mut Vec<u8>) -> Result<()> {
+    if n > u32::MAX as usize {
+        bail!("{what} {n} exceeds the u32 length field");
+    }
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    Ok(())
+}
+
+/// Bounds-checked little-endian cursor over a body buffer.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining {
+            bail!("truncated frame: need {n} bytes, {remaining} remain");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let mut b = [0u8; 2];
+        b.copy_from_slice(self.take(2)?);
+        Ok(u16::from_le_bytes(b))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// `n` consecutive f64 bit patterns. The length is checked against the
+    /// remaining bytes *before* allocating, so a hostile length field
+    /// cannot trigger an over-allocation.
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let nbytes = n.checked_mul(8).with_context(|| format!("{n} floats overflow"))?;
+        let bytes = self.take(nbytes)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(8) {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(chunk);
+            out.push(f64::from_bits(u64::from_le_bytes(b)));
+        }
+        Ok(out)
+    }
+
+    /// A u32 length prefix followed by that many f64 bit patterns.
+    fn f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        self.f64s(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn packets_bit_equal(a: &Packet, b: &Packet) -> bool {
+        a.msgs.len() == b.msgs.len()
+            && a.msgs.iter().zip(&b.msgs).all(|(x, y)| {
+                x.kind == y.kind
+                    && x.cost.floats.to_bits() == y.cost.floats.to_bits()
+                    && x.cost.aux_bits.to_bits() == y.cost.aux_bits.to_bits()
+                    && payloads_bit_equal(&x.payload, &y.payload)
+            })
+    }
+
+    fn payloads_bit_equal(a: &Payload, b: &Payload) -> bool {
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        match (a, b) {
+            (Payload::Vector(x), Payload::Vector(y)) => bits(x) == bits(y),
+            (Payload::Scalars(x), Payload::Scalars(y)) => bits(x) == bits(y),
+            (Payload::Flags(x), Payload::Flags(y)) => x == y,
+            (Payload::Matrix(x), Payload::Matrix(y)) => {
+                x.rows() == y.rows() && x.cols() == y.cols() && bits(x.data()) == bits(y.data())
+            }
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn wire_kinds_mirror_the_registry() {
+        let names: Vec<&str> = kinds::KINDS.iter().map(|k| k.name).collect();
+        assert_eq!(WIRE_KINDS, &names[..], "WIRE_KINDS out of sync with kinds::KINDS");
+    }
+
+    #[test]
+    fn round_trip_every_payload_variant() {
+        let mut p = Packet::empty();
+        p.push_vector("model", vec![1.0, -0.0, f64::MIN_POSITIVE], BitCost::floats(3));
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        p.push_matrix("hess_delta", m, BitCost { floats: 6.0, aux_bits: 96.0 });
+        p.push_scalars("beta_gamma", vec![0.5, -2.5], BitCost::floats(2));
+        p.push_flags("xi", vec![true, false, true], BitCost::bits(3.0));
+        let body = encode_packet(&p).unwrap();
+        let q = decode_packet(&body).unwrap();
+        assert!(packets_bit_equal(&p, &q));
+    }
+
+    #[test]
+    fn special_floats_survive_bit_for_bit() {
+        let specials = vec![
+            f64::NAN,
+            f64::from_bits(0x7ff8_dead_beef_0001),
+            -0.0,
+            0.0,
+            5e-324,
+            -5e-324,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MAX,
+        ];
+        let mut p = Packet::empty();
+        p.push_vector("grad", specials.clone(), BitCost::zero());
+        let q = decode_packet(&encode_packet(&p).unwrap()).unwrap();
+        let got = q.vector("grad").unwrap();
+        let want: Vec<u64> = specials.iter().map(|x| x.to_bits()).collect();
+        let have: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(want, have);
+    }
+
+    #[test]
+    fn empty_shapes_round_trip() {
+        let mut p = Packet::empty();
+        p.push_vector("grad", vec![], BitCost::zero());
+        p.push_matrix("hess_delta", Mat::zeros(0, 0), BitCost::zero());
+        p.push_flags("ctl", vec![], BitCost::zero());
+        let q = decode_packet(&encode_packet(&p).unwrap()).unwrap();
+        assert!(packets_bit_equal(&p, &q));
+        let empty = decode_packet(&encode_packet(&Packet::empty()).unwrap()).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn truncation_is_an_error_at_every_prefix() {
+        let mut p = Packet::empty();
+        p.push_vector("model", vec![1.0, 2.0], BitCost::floats(2));
+        p.push_flags("xi", vec![true], BitCost::bits(1.0));
+        let body = encode_packet(&p).unwrap();
+        for cut in 0..body.len() {
+            assert!(decode_packet(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        assert!(decode_packet(&body).is_ok());
+    }
+
+    #[test]
+    fn hostile_inputs_are_errors_not_panics() {
+        // Unknown kind id.
+        let mut body = 1u32.to_le_bytes().to_vec();
+        body.extend_from_slice(&u16::MAX.to_le_bytes());
+        assert!(decode_packet(&body).is_err());
+        // Unknown payload tag.
+        let mut p = Packet::empty();
+        p.push_vector("model", vec![], BitCost::zero());
+        let mut body = encode_packet(&p).unwrap();
+        body[6] = 9;
+        assert!(decode_packet(&body).is_err());
+        // Flag byte that is neither 0 nor 1.
+        let mut p = Packet::empty();
+        p.push_flags("xi", vec![true], BitCost::bits(1.0));
+        let mut body = encode_packet(&p).unwrap();
+        let last = body.len() - 1;
+        body[last] = 2;
+        assert!(decode_packet(&body).is_err());
+        // Trailing garbage.
+        let mut body = encode_packet(&Packet::empty()).unwrap();
+        body.push(0);
+        assert!(decode_packet(&body).is_err());
+        // A length field far beyond the buffer must not allocate or panic.
+        let mut body = 1u32.to_le_bytes().to_vec();
+        body.extend_from_slice(&0u16.to_le_bytes()); // kind id 0
+        body.push(TAG_VECTOR);
+        body.extend_from_slice(&[0u8; 16]); // cost
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // hostile length
+        assert!(decode_packet(&body).is_err());
+    }
+
+    #[test]
+    fn header_round_trip_and_rejection() {
+        let h = FrameHeader::packet(7, 2, 5);
+        let mut buf = Vec::new();
+        encode_header(&h, 42, &mut buf).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN);
+        let mut arr = [0u8; HEADER_LEN];
+        arr.copy_from_slice(&buf);
+        let (got, len) = decode_header(&arr).unwrap();
+        assert_eq!(got, h);
+        assert_eq!(len, 42);
+
+        let mut bad = arr;
+        bad[0] = b'X';
+        assert!(decode_header(&bad).is_err(), "bad magic accepted");
+        let mut bad = arr;
+        bad[4] = VERSION + 1;
+        assert!(decode_header(&bad).is_err(), "future version accepted");
+        let mut bad = arr;
+        bad[5] = 0;
+        assert!(decode_header(&bad).is_err(), "frame kind 0 accepted");
+    }
+
+    #[test]
+    fn unregistered_kind_cannot_encode() {
+        let p = Packet {
+            msgs: vec![Msg {
+                kind: "not_a_kind",
+                payload: Payload::Vector(vec![]),
+                cost: BitCost::zero(),
+            }],
+        };
+        assert!(encode_packet(&p).is_err());
+    }
+}

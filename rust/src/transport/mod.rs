@@ -41,10 +41,11 @@
 //! |----------------------|-----------------|---------------------|----------|
 //! | [`Lockstep`]         | serially, in-process | borrowed (any, incl. non-`Send` PJRT oracles) | reference semantics, tests, PJRT |
 //! | [`Threaded`]         | concurrently on a scoped worker pool | rebuilt per worker from a [`ProblemFactory`] | multi-core simulation |
+//! | [`Tcp`]              | concurrently, one scoped thread + loopback socket per worker | rebuilt per worker from a [`ProblemFactory`] | real-socket federation (bytes on the wire) |
 //!
 //! # Determinism guarantee
 //!
-//! Both backends produce **bit-identical** [`crate::metrics::History`]
+//! All backends produce **bit-identical** [`crate::metrics::History`]
 //! traces (enforced for every [`crate::config::Algorithm`] by
 //! `tests/transport_equivalence.rs`):
 //!
@@ -67,15 +68,31 @@
 //! uplinks, and sorts them by client index before the server absorbs them,
 //! so the absorb order is identical to [`Lockstep`]'s.
 //!
-//! This layer is the prerequisite for real-socket federation: a future
-//! TCP-loopback backend only needs to serialize [`Packet`]s (every payload
-//! is plain `f64`/`bool` data) and implement [`Transport::exchange`].
+//! # Wire layers
+//!
+//! A backend may move either *structs* (the in-process fast path above) or
+//! *bytes*, through two further layers:
+//!
+//! * [`codec`] — the canonical, versioned binary encoding of [`Packet`]s
+//!   (`encode_packet`/`decode_packet`; exact f64 bit patterns, so costs and
+//!   payloads round-trip bit-for-bit). Frame layout: `docs/WIRE.md`.
+//! * [`session`] — framed, length-prefixed streams over any
+//!   `Read + Write` transport, with per-exchange sequencing headers.
+//!
+//! [`Tcp`] stacks the two over loopback sockets; because the codec is
+//! exact, the tally the round loop derives from *decoded* frames is
+//! bit-identical to the in-process one, and `tests/transport_equivalence.rs`
+//! holds all three backends to the same [`crate::metrics::History`].
 
+pub mod codec;
 pub mod kinds;
 mod lockstep;
+pub mod session;
+mod tcp;
 mod threaded;
 
 pub use lockstep::Lockstep;
+pub use tcp::Tcp;
 pub use threaded::Threaded;
 
 use crate::compressors::BitCost;

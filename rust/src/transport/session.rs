@@ -1,0 +1,194 @@
+//! The session layer: framed, length-prefixed packet streams.
+//!
+//! A [`Session`] wraps any `Read + Write` byte stream (a `TcpStream` in
+//! production, an in-memory cursor in tests) and moves whole frames:
+//! a fixed [`codec::HEADER_LEN`]-byte header ([`codec::FrameHeader`])
+//! followed by `body_len` body bytes. This is the boundary between the two
+//! transport modes described in [`super`]'s module docs — backends either
+//! hand [`Packet`] structs across directly (in-process fast path) or drive
+//! a `Session` per connection (byte path, [`super::Tcp`]).
+//!
+//! The encode scratch buffer is owned by the session and reused across
+//! sends, so steady-state framing costs one `write_all` per frame and no
+//! allocation once the buffer has grown to the round's packet size.
+
+use super::codec::{self, FrameHeader, FrameKind};
+use super::Packet;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// What [`Session::recv`] yielded: the decoded body of one frame.
+#[derive(Debug)]
+pub enum FramePayload {
+    /// A [`FrameKind::Packet`] frame's decoded packet.
+    Packet(Packet),
+    /// A [`FrameKind::Error`] frame's message (a remote failure report).
+    Error(String),
+    /// A bodyless control frame ([`FrameKind::Hello`] / [`FrameKind::Bye`]).
+    Control(FrameKind),
+}
+
+/// One framed byte stream: owns the stream and a reusable encode buffer.
+pub struct Session<S> {
+    stream: S,
+    scratch: Vec<u8>,
+}
+
+impl<S: Read + Write> Session<S> {
+    pub fn new(stream: S) -> Self {
+        Session { stream, scratch: Vec::new() }
+    }
+
+    /// Borrow the underlying stream (to adjust socket options, or to shut
+    /// a TCP connection down out from under a blocked reader).
+    pub fn stream_ref(&self) -> &S {
+        &self.stream
+    }
+
+    /// Frame and send one packet under the given header (the header's
+    /// `kind` is forced to [`FrameKind::Packet`] by construction at the
+    /// call sites; any kind is legal on the wire).
+    pub fn send_packet(&mut self, header: &FrameHeader, packet: &Packet) -> Result<()> {
+        self.scratch.clear();
+        codec::encode_packet_into(packet, &mut self.scratch).context("encoding packet body")?;
+        let mut head = Vec::with_capacity(codec::HEADER_LEN);
+        codec::encode_header(header, self.scratch.len(), &mut head)?;
+        self.stream.write_all(&head).context("writing frame header")?;
+        self.stream.write_all(&self.scratch).context("writing frame body")?;
+        self.stream.flush().context("flushing frame")?;
+        Ok(())
+    }
+
+    /// Send a bodyless control frame ([`FrameKind::Hello`]/[`FrameKind::Bye`]).
+    pub fn send_control(&mut self, kind: FrameKind, client: usize) -> Result<()> {
+        let mut head = Vec::with_capacity(codec::HEADER_LEN);
+        codec::encode_header(&FrameHeader::control(kind, client), 0, &mut head)?;
+        self.stream.write_all(&head).context("writing control frame")?;
+        self.stream.flush().context("flushing control frame")?;
+        Ok(())
+    }
+
+    /// Report a failure to the peer: an [`FrameKind::Error`] frame whose
+    /// body is the UTF-8 message, re-using the failed exchange's header
+    /// coordinates so the receiver can attribute it.
+    pub fn send_error(&mut self, header: &FrameHeader, msg: &str) -> Result<()> {
+        let body = msg.as_bytes();
+        let mut head = Vec::with_capacity(codec::HEADER_LEN);
+        let h = FrameHeader { kind: FrameKind::Error, ..*header };
+        codec::encode_header(&h, body.len(), &mut head)?;
+        self.stream.write_all(&head).context("writing error frame header")?;
+        self.stream.write_all(body).context("writing error frame body")?;
+        self.stream.flush().context("flushing error frame")?;
+        Ok(())
+    }
+
+    /// Block until one whole frame arrives; decode header and body.
+    /// Stream EOF, short reads and undecodable bytes are all errors.
+    pub fn recv(&mut self) -> Result<(FrameHeader, FramePayload)> {
+        let mut head = [0u8; codec::HEADER_LEN];
+        self.stream.read_exact(&mut head).context("reading frame header")?;
+        let (header, body_len) = codec::decode_header(&head)?;
+        self.scratch.clear();
+        self.scratch.resize(body_len, 0);
+        self.stream.read_exact(&mut self.scratch).with_context(|| {
+            format!("reading {body_len}-byte body of a {:?} frame", header.kind)
+        })?;
+        let payload = match header.kind {
+            FrameKind::Packet => FramePayload::Packet(
+                codec::decode_packet(&self.scratch).context("decoding packet body")?,
+            ),
+            FrameKind::Error => {
+                FramePayload::Error(String::from_utf8_lossy(&self.scratch).into_owned())
+            }
+            kind => {
+                if body_len != 0 {
+                    bail!("{kind:?} frame carries an unexpected {body_len}-byte body");
+                }
+                FramePayload::Control(kind)
+            }
+        };
+        Ok((header, payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::BitCost;
+    use std::io::Cursor;
+
+    /// A loopback stream: writes append to an owned buffer, reads consume it.
+    struct Loopback(Cursor<Vec<u8>>);
+
+    impl Read for Loopback {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.0.read(buf)
+        }
+    }
+
+    impl Write for Loopback {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let pos = self.0.position();
+            self.0.set_position(self.0.get_ref().len() as u64);
+            let n = self.0.write(buf)?;
+            self.0.set_position(pos);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn loopback() -> Session<Loopback> {
+        Session::new(Loopback(Cursor::new(Vec::new())))
+    }
+
+    #[test]
+    fn packet_frames_round_trip_in_order() {
+        let mut s = loopback();
+        let mut p1 = Packet::empty();
+        p1.push_vector("model", vec![1.5, -0.0], BitCost::floats(2));
+        let mut p2 = Packet::empty();
+        p2.push_flags("xi", vec![true], BitCost::bits(1.0));
+        s.send_packet(&FrameHeader::packet(3, 0, 1), &p1).unwrap();
+        s.send_packet(&FrameHeader::packet(3, 1, 4), &p2).unwrap();
+
+        let (h1, f1) = s.recv().unwrap();
+        assert_eq!(h1, FrameHeader::packet(3, 0, 1));
+        match f1 {
+            FramePayload::Packet(p) => {
+                assert_eq!(p.vector("model").unwrap(), &[1.5, -0.0]);
+                assert_eq!(p.vector("model").unwrap()[1].to_bits(), (-0.0f64).to_bits());
+            }
+            other => panic!("expected packet, got {other:?}"),
+        }
+        let (h2, f2) = s.recv().unwrap();
+        assert_eq!((h2.round, h2.exchange, h2.client), (3, 1, 4));
+        assert!(matches!(f2, FramePayload::Packet(p) if p.flags("xi").unwrap() == [true]));
+    }
+
+    #[test]
+    fn control_and_error_frames() {
+        let mut s = loopback();
+        s.send_control(FrameKind::Hello, 7).unwrap();
+        s.send_error(&FrameHeader::packet(2, 0, 5), "client 5 exploded").unwrap();
+        s.send_control(FrameKind::Bye, 0).unwrap();
+
+        let (h, f) = s.recv().unwrap();
+        assert_eq!(h.client, 7);
+        assert!(matches!(f, FramePayload::Control(FrameKind::Hello)));
+        let (h, f) = s.recv().unwrap();
+        assert_eq!((h.round, h.client), (2, 5));
+        assert!(matches!(f, FramePayload::Error(m) if m == "client 5 exploded"));
+        let (_, f) = s.recv().unwrap();
+        assert!(matches!(f, FramePayload::Control(FrameKind::Bye)));
+    }
+
+    #[test]
+    fn eof_and_garbage_are_errors() {
+        let mut empty = loopback();
+        assert!(empty.recv().is_err(), "EOF must not parse as a frame");
+        let mut garbage = Session::new(Loopback(Cursor::new(vec![0u8; 64])));
+        assert!(garbage.recv().is_err(), "zero bytes must not parse as a frame");
+    }
+}

@@ -1,0 +1,407 @@
+//! The real-socket backend: every exchange crosses TCP loopback as bytes.
+//!
+//! Layout: one listener per round loop, one connection per worker thread
+//! (client `i` is pinned to worker `i % workers`, exactly like
+//! [`super::Threaded`]). Downlinks are encoded by [`super::codec`], framed
+//! by [`super::session::Session`], written to the worker's socket, decoded
+//! on the worker, computed, and the uplink comes back the same way — so the
+//! server-side [`crate::coordinator::CommTally`] is derived from packets
+//! that were *actually serialized and decoded*, and the codec's exact f64
+//! round-trip is what keeps the tally (and the whole
+//! [`crate::metrics::History`]) bit-identical to the in-process backends
+//! (`tests/transport_equivalence.rs`).
+//!
+//! Deadlock freedom: the server writes every downlink of an exchange before
+//! reading any uplink, so a worker must never be the reason a downlink
+//! write blocks. Each worker therefore runs a dedicated reader thread that
+//! eagerly drains its socket into an in-process channel; compute happens
+//! behind that buffer. Uplink writes can block at worst until the server
+//! finishes its (bounded) downlink writes and starts reading.
+//!
+//! Sequencing: every frame carries `(round, exchange, client)` and the
+//! server verifies them against its expectation on receipt — a misrouted or
+//! stale frame is an immediate error, never silent state corruption.
+//! Replies are read per-connection in the order the downlinks were written
+//! (workers are single-threaded and FIFO), then sorted by client index, so
+//! the absorb order is identical to [`super::Lockstep`].
+//!
+//! Tracing: each client's work still emits its `compute` span (on the
+//! worker, client lane) and the round loop's `bits` events are emitted by
+//! the coordinator from the same decoded packets the server absorbs, so a
+//! traced TCP run validates like any other (`python/analysis/load_trace.py`).
+
+use super::codec::{FrameHeader, FrameKind};
+use super::session::{FramePayload, Session};
+use super::threaded::panic_message;
+use super::{ClientStep, Downlink, ProblemFactory, Transport, Uplink};
+use crate::obs::{Ctx, Lane, Obs};
+use crate::problem::LocalProblem;
+use crate::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::thread::Scope;
+use std::time::Duration;
+
+/// How long the server waits for all workers to connect and greet before
+/// declaring the round loop dead (covers a worker that failed to spawn).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One client pinned to a worker: index, state, private RNG stream.
+type ClientSlot = (usize, Box<dyn ClientStep>, Rng);
+
+/// The server half: one framed connection per worker. Created by
+/// [`Tcp::spawn`] inside a [`std::thread::scope`]; dropping it sends `Bye`
+/// on every connection so the scoped workers shut down and join.
+pub struct Tcp {
+    /// Connection `w` serves the clients of residue class `w`.
+    conns: Vec<Session<TcpStream>>,
+    workers: usize,
+}
+
+impl Tcp {
+    /// Bind a loopback listener, spawn `workers` scoped client threads that
+    /// connect back to it, and complete the `Hello` handshake with each.
+    /// Worker `w` owns the client states (and factory-built local problems)
+    /// of residue class `w`, exactly like [`super::Threaded`].
+    pub fn spawn<'scope, 'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        clients: Vec<Box<dyn ClientStep>>,
+        rngs: Vec<Rng>,
+        factory: ProblemFactory<'env>,
+        obs: Obs<'env>,
+    ) -> Result<Tcp> {
+        assert_eq!(clients.len(), rngs.len(), "rngs/clients length mismatch");
+        let workers = workers.clamp(1, clients.len().max(1));
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("binding the loopback listener")?;
+        let addr = listener.local_addr().context("reading the listener address")?;
+        let mut parts: Vec<Vec<ClientSlot>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, (c, r)) in clients.into_iter().zip(rngs).enumerate() {
+            parts[i % workers].push((i, c, r));
+        }
+        for (w, part) in parts.into_iter().enumerate() {
+            scope.spawn(move || {
+                if let Err(e) = worker_main(addr, w, part, factory, obs) {
+                    // The server sees the broken/missing connection and
+                    // fails the exchange; this is diagnostics, not control.
+                    eprintln!("tcp transport worker {w}: {e:#}");
+                }
+            });
+        }
+        let conns = accept_workers(&listener, workers)?;
+        Ok(Tcp { conns, workers })
+    }
+}
+
+/// Accept until every worker has connected and said `Hello` (the header's
+/// `client` field carries the worker index), or the handshake deadline
+/// passes. Nonblocking accept + poll so a dead worker cannot hang the run.
+fn accept_workers(listener: &TcpListener, workers: usize) -> Result<Vec<Session<TcpStream>>> {
+    listener.set_nonblocking(true).context("making the listener nonblocking")?;
+    // audit:allow(determinism-clock): wall-clock here only bounds the connection handshake; no run result depends on it.
+    let deadline = std::time::Instant::now() + HANDSHAKE_TIMEOUT;
+    let mut conns: Vec<Option<Session<TcpStream>>> = (0..workers).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < workers {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("restoring blocking mode")?;
+                stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                // Bound the greeting read too, then return to fully
+                // blocking reads for the round loop.
+                stream
+                    .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+                    .context("setting the handshake read timeout")?;
+                let mut sess = Session::new(stream);
+                let (hdr, payload) = sess.recv().context("reading a worker greeting")?;
+                if !matches!(payload, FramePayload::Control(FrameKind::Hello)) {
+                    bail!("expected a Hello greeting, got a {:?} frame", hdr.kind);
+                }
+                let w = hdr.client as usize;
+                if w >= workers || conns[w].is_some() {
+                    bail!("invalid or duplicate worker greeting (worker {w} of {workers})");
+                }
+                conns[w] = Some(sess);
+                connected += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // audit:allow(determinism-clock): wall-clock here only bounds the connection handshake; no run result depends on it.
+                if std::time::Instant::now() >= deadline {
+                    bail!("timed out waiting for {} of {workers} workers", workers - connected);
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e).context("accepting a worker connection"),
+        }
+    }
+    let mut out = Vec::with_capacity(workers);
+    for sess in conns.into_iter().flatten() {
+        let stream_ref = sess.stream_ref();
+        stream_ref.set_read_timeout(None).context("clearing the handshake read timeout")?;
+        out.push(sess);
+    }
+    Ok(out)
+}
+
+/// One worker thread: connect, greet, build local problems, then serve
+/// decoded downlinks until `Bye` (or the connection drops).
+fn worker_main(
+    addr: std::net::SocketAddr,
+    w: usize,
+    part: Vec<ClientSlot>,
+    factory: ProblemFactory<'_>,
+    obs: Obs<'_>,
+) -> Result<()> {
+    let stream = TcpStream::connect(addr).context("connecting to the round loop")?;
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    let reader_stream = stream.try_clone().context("cloning the stream for the reader")?;
+    let mut tx_sess = Session::new(stream);
+    // Greet *before* building local problems: the server's accept loop must
+    // learn who we are while dataset/oracle construction is still running.
+    tx_sess.send_control(FrameKind::Hello, w).context("sending the Hello greeting")?;
+    // Local problems are built here, on the owning thread, and never leave.
+    let mut table: Vec<(usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>)> =
+        part.into_iter()
+            .map(|(i, c, r)| {
+                let local = factory(i);
+                (i, c, r, local)
+            })
+            .collect();
+    let (tx, rx) = mpsc::channel::<(FrameHeader, FramePayload)>();
+    std::thread::scope(|s| -> Result<()> {
+        // The reader: eagerly drain the socket so the server's downlink
+        // writes never block on this worker's compute (see module docs).
+        s.spawn(move || {
+            let mut rx_sess = Session::new(reader_stream);
+            loop {
+                match rx_sess.recv() {
+                    Ok((hdr, payload)) => {
+                        let bye = matches!(payload, FramePayload::Control(FrameKind::Bye));
+                        if tx.send((hdr, payload)).is_err() || bye {
+                            break;
+                        }
+                    }
+                    // EOF / reset: the server is gone; dropping `tx` ends
+                    // the compute loop below.
+                    Err(_) => break,
+                }
+            }
+        });
+        let result = serve(&mut table, &rx, &mut tx_sess, w, obs);
+        // Whatever ended the serve loop, tear the socket down so the reader
+        // thread's blocking recv unblocks and the scope can join it.
+        let _ = tx_sess.stream_ref().shutdown(std::net::Shutdown::Both);
+        result
+    })
+}
+
+/// The worker's compute loop: decoded downlinks in, framed uplinks (or
+/// Error frames) out, until `Bye` or the connection drops.
+fn serve(
+    table: &mut [(usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>)],
+    rx: &mpsc::Receiver<(FrameHeader, FramePayload)>,
+    tx_sess: &mut Session<TcpStream>,
+    w: usize,
+    obs: Obs<'_>,
+) -> Result<()> {
+    while let Ok((hdr, payload)) = rx.recv() {
+        let down = match payload {
+            FramePayload::Packet(p) => p,
+            FramePayload::Control(FrameKind::Bye) => break,
+            _ => bail!("unexpected {:?} frame from the server", hdr.kind),
+        };
+        let (round, exchange) = (hdr.round as usize, hdr.exchange as usize);
+        let client = hdr.client as usize;
+        let reply = match table.iter_mut().find(|(i, ..)| *i == client) {
+            None => Err(anyhow::anyhow!("client {client} is not owned by worker {w}")),
+            Some((_, step, rng, local)) => {
+                let ctx = Ctx::client(round, exchange, client);
+                let _span = obs.span("compute", Lane::Client(client), ctx);
+                // A panicking client must still produce a reply (an
+                // Error frame), or the server would wait forever.
+                match catch_unwind(AssertUnwindSafe(|| {
+                    step.compute(local.as_ref(), round, exchange, &down, rng)
+                })) {
+                    Ok(res) => res,
+                    Err(payload) => Err(anyhow::anyhow!(
+                        "client {client} panicked: {}",
+                        panic_message(payload)
+                    )),
+                }
+            }
+        };
+        let sent = match reply {
+            Ok(up) => tx_sess.send_packet(&hdr, &up),
+            Err(e) => tx_sess.send_error(&hdr, &format!("{e:#}")),
+        };
+        if sent.is_err() {
+            break; // server gone mid-reply — shut down quietly
+        }
+    }
+    Ok(())
+}
+
+impl Transport for Tcp {
+    fn exchange(
+        &mut self,
+        round: usize,
+        exchange: usize,
+        sends: Vec<(usize, Downlink)>,
+    ) -> Result<Vec<(usize, Uplink)>> {
+        // Write every downlink first (the workers' reader threads drain
+        // them), then read the replies back in the same per-connection
+        // order they were written.
+        for (client, down) in &sends {
+            self.conns[client % self.workers]
+                .send_packet(&FrameHeader::packet(round, exchange, *client), down)
+                .with_context(|| format!("sending to client {client}, round {round}"))?;
+        }
+        let mut replies = Vec::with_capacity(sends.len());
+        for (client, _) in &sends {
+            let (hdr, payload) = self.conns[client % self.workers]
+                .recv()
+                .with_context(|| format!("awaiting client {client}, round {round}"))?;
+            let up = match payload {
+                FramePayload::Packet(p) => p,
+                FramePayload::Error(msg) => bail!("client {client}, round {round}: {msg}"),
+                FramePayload::Control(k) => {
+                    bail!("unexpected {k:?} frame from client {client}, round {round}")
+                }
+            };
+            let want = FrameHeader::packet(round, exchange, *client);
+            if hdr != want {
+                bail!(
+                    "out-of-sequence frame from client {client}: \
+                     got round {}/exchange {}/client {}, expected round {round}/exchange {exchange}",
+                    hdr.round,
+                    hdr.exchange,
+                    hdr.client
+                );
+            }
+            replies.push((*client, up));
+        }
+        // Restore the deterministic (lockstep) order before the server
+        // absorbs, mirroring the Threaded backend.
+        replies.sort_by_key(|(i, _)| *i);
+        Ok(replies)
+    }
+}
+
+impl Drop for Tcp {
+    fn drop(&mut self) {
+        // Orderly shutdown: tell every worker to stop reading. Errors are
+        // moot — a dead connection shuts the worker down just as well.
+        for sess in &mut self.conns {
+            let _ = sess.send_control(FrameKind::Bye, 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::BitCost;
+    use crate::problem::QuadraticProblem;
+    use crate::transport::{client_rngs, Packet};
+
+    /// Echo client, as in the threaded backend's tests: replies with its id
+    /// and the downlink's scalar doubled; `boom` panics on round ≥ 1.
+    /// Unlike the in-process backends, every packet here crosses the codec,
+    /// so the test must speak registered kinds ("x" down, "avg" up).
+    struct Echo {
+        id: usize,
+        boom: bool,
+    }
+
+    impl ClientStep for Echo {
+        fn compute(
+            &mut self,
+            _local: &dyn LocalProblem,
+            round: usize,
+            _exchange: usize,
+            down: &Downlink,
+            _rng: &mut Rng,
+        ) -> Result<Uplink> {
+            if self.boom && round >= 1 {
+                panic!("client {} exploded", self.id);
+            }
+            let x = down.scalars("x")?[0];
+            let mut up = Packet::empty();
+            up.push_scalars("avg", vec![self.id as f64, 2.0 * x], BitCost::floats(2));
+            Ok(up)
+        }
+    }
+
+    fn factory() -> impl Fn(usize) -> Box<dyn LocalProblem> + Sync {
+        |_i| {
+            Box::new(QuadraticProblem::new(crate::linalg::Mat::diag(&[1.0]), vec![0.0]))
+                as Box<dyn LocalProblem>
+        }
+    }
+
+    fn sends(n: usize, x: f64) -> Vec<(usize, Downlink)> {
+        (0..n)
+            .map(|i| {
+                let mut d = Packet::empty();
+                d.push_scalars("x", vec![x + i as f64], BitCost::zero());
+                (i, d)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn replies_cross_real_sockets_in_client_order() {
+        let n = 7;
+        let clients: Vec<Box<dyn ClientStep>> =
+            (0..n).map(|id| Box::new(Echo { id, boom: false }) as Box<dyn ClientStep>).collect();
+        let f = factory();
+        std::thread::scope(|scope| {
+            let mut t =
+                Tcp::spawn(scope, 3, clients, client_rngs(1, n), &f, Obs::noop()).unwrap();
+            for round in 0..4 {
+                let replies = t.exchange(round, 0, sends(n, 10.0 * round as f64)).unwrap();
+                assert_eq!(replies.len(), n);
+                for (expect, (i, up)) in replies.iter().enumerate() {
+                    assert_eq!(*i, expect);
+                    let echo = up.scalars("avg").unwrap();
+                    assert_eq!(echo[0] as usize, expect);
+                    assert_eq!(echo[1], 2.0 * (10.0 * round as f64 + expect as f64));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn panicking_client_surfaces_as_an_error_frame() {
+        let n = 4;
+        let clients: Vec<Box<dyn ClientStep>> = (0..n)
+            .map(|id| Box::new(Echo { id, boom: id == 2 }) as Box<dyn ClientStep>)
+            .collect();
+        let f = factory();
+        std::thread::scope(|scope| {
+            let mut t =
+                Tcp::spawn(scope, 2, clients, client_rngs(1, n), &f, Obs::noop()).unwrap();
+            assert_eq!(t.exchange(0, 0, sends(n, 0.0)).unwrap().len(), n);
+            let err = t.exchange(1, 0, sends(n, 0.0)).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("client 2") && msg.contains("exploded"), "{msg}");
+        });
+    }
+
+    #[test]
+    fn more_workers_than_clients_is_fine() {
+        let n = 2;
+        let clients: Vec<Box<dyn ClientStep>> =
+            (0..n).map(|id| Box::new(Echo { id, boom: false }) as Box<dyn ClientStep>).collect();
+        let f = factory();
+        std::thread::scope(|scope| {
+            let mut t =
+                Tcp::spawn(scope, 16, clients, client_rngs(1, n), &f, Obs::noop()).unwrap();
+            let replies = t.exchange(0, 0, sends(n, 1.0)).unwrap();
+            assert_eq!(replies.len(), n);
+        });
+    }
+}

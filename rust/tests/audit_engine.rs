@@ -110,6 +110,48 @@ fn drifted_algorithm_registries_are_caught() {
 }
 
 #[test]
+fn codec_table_drift_is_caught() {
+    let report = audit_fixture("codec_drift");
+    let codec: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "codec-sync").collect();
+    let msgs: Vec<&str> = codec.iter().map(|f| f.msg.as_str()).collect();
+    assert_eq!(codec.len(), 4, "{msgs:?}");
+    // "alpha" appears twice in the table: one duplicate-id finding.
+    assert!(
+        msgs.iter().any(|m| m.contains("\"alpha\"") && m.contains("more than once")),
+        "{msgs:?}"
+    );
+    // "beta" and "gamma" are registered but missing from the table.
+    assert!(
+        msgs.iter().any(|m| m.contains("\"beta\"") && m.contains("no wire id")),
+        "{msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("\"gamma\"") && m.contains("no wire id")),
+        "{msgs:?}"
+    );
+    // "delta" is a wire id with no registered kind behind it.
+    assert!(
+        msgs.iter().any(|m| m.contains("\"delta\"") && m.contains("not in the kinds registry")),
+        "{msgs:?}"
+    );
+    // The drift is the only problem: charges are honored, kinds documented.
+    assert_eq!(report.findings.len(), 4, "{:?}", report.findings);
+}
+
+#[test]
+fn fixtures_without_a_codec_table_stay_silent_on_codec_sync() {
+    for fixture in ["bad_kinds", "unregistered_algo", "false_positive_guard"] {
+        let report = audit_fixture(fixture);
+        assert!(
+            !report.findings.iter().any(|f| f.rule == "codec-sync"),
+            "{fixture}: {:?}",
+            report.findings
+        );
+    }
+}
+
+#[test]
 fn escape_hygiene_is_enforced() {
     let report = audit_fixture("stale_allows");
     let rules = rules_of(&report);

@@ -1,0 +1,58 @@
+//! Fixture: a self-contained message-kind registry plus a drifted
+//! `WIRE_KINDS` codec table exercising every codec-sync check. The push
+//! sites honor every charge policy so bit-accounting stays quiet and the
+//! test isolates codec-sync findings.
+
+pub enum Direction {
+    Up,
+    Down,
+}
+
+pub enum Charge {
+    Charged,
+    Free,
+}
+
+pub struct Kind {
+    pub name: &'static str,
+    pub dir: Direction,
+    pub charge: Charge,
+}
+
+pub const KINDS: &[Kind] = &[
+    Kind { name: "alpha", dir: Direction::Up, charge: Charge::Charged },
+    // Missing from WIRE_KINDS: must be caught (one finding each).
+    Kind { name: "beta", dir: Direction::Down, charge: Charge::Free },
+    Kind { name: "gamma", dir: Direction::Up, charge: Charge::Charged },
+];
+
+// A drifted codec table: "alpha" twice (duplicate id), "delta" orphaned
+// (not registered), "beta"/"gamma" absent.
+pub const WIRE_KINDS: &[&str] = &["alpha", "alpha", "delta"];
+
+pub struct BitCost(f64);
+impl BitCost {
+    pub fn zero() -> Self {
+        BitCost(0.0)
+    }
+    pub fn floats(n: usize) -> Self {
+        BitCost(64.0 * n as f64)
+    }
+}
+
+pub struct Packet;
+impl Packet {
+    pub fn push_vector(&mut self, _kind: &'static str, _v: Vec<f64>, _cost: BitCost) {}
+}
+
+pub fn exercise(p: &mut Packet) {
+    p.push_vector("alpha", vec![1.0], BitCost::floats(1));
+    p.push_vector("beta", vec![1.0], BitCost::zero());
+    p.push_vector("gamma", vec![1.0], BitCost::floats(1));
+}
+
+/// A non-declaration use of the table: must not be parsed as a second
+/// codec table (only `const WIRE_KINDS` declaration sites count).
+pub fn wire_id(kind: &str) -> Option<usize> {
+    WIRE_KINDS.iter().position(|k| *k == kind)
+}

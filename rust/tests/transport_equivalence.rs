@@ -1,9 +1,12 @@
 //! The transport layer's determinism contract: for **every** `Algorithm`
 //! variant, a federated run must produce a byte-identical `History`
-//! (rounds, bits up/down, gaps, distances) under the `Lockstep` and
-//! `Threaded` backends, at any worker count — client randomness comes from
+//! (rounds, bits up/down, gaps, distances) under the `Lockstep`, `Threaded`
+//! and `Tcp` backends, at any worker count — client randomness comes from
 //! per-client streams and absorb order is pinned, so scheduling cannot
-//! leak into results.
+//! leak into results. Under `Tcp` every packet additionally crosses the
+//! byte-level wire codec over real loopback sockets, so the identical
+//! `CommTally` columns prove the decoded frames reconcile with the
+//! in-process bit accounting to the last bit.
 //!
 //! Configurations deliberately exercise the stochastic paths (Rand-K /
 //! dithering client compressors, partial participation, lazy-gradient ξ
@@ -137,6 +140,12 @@ fn every_algorithm_is_backend_invariant() {
                 .unwrap_or_else(|e| panic!("{algo} threaded:{workers}: {e:#}"));
             assert_identical(algo, &lockstep, &threaded, &format!("threaded:{workers}"));
         }
+        for workers in [1usize, 3] {
+            let cfg_t = RunConfig { transport: TransportSpec::Tcp(workers), ..cfg.clone() };
+            let tcp = run_federated(&f, &cfg_t)
+                .unwrap_or_else(|e| panic!("{algo} tcp:{workers}: {e:#}"));
+            assert_identical(algo, &lockstep, &tcp, &format!("tcp:{workers}"));
+        }
     }
 }
 
@@ -151,9 +160,12 @@ fn worker_count_may_exceed_clients() {
         ..RunConfig::default()
     };
     let a = run_federated(&f, &cfg).unwrap();
-    let cfg_t = RunConfig { transport: TransportSpec::Threaded(64), ..cfg };
+    let cfg_t = RunConfig { transport: TransportSpec::Threaded(64), ..cfg.clone() };
     let b = run_federated(&f, &cfg_t).unwrap();
     assert_identical(Algorithm::Bl1, &a, &b, "threaded:64");
+    let cfg_tcp = RunConfig { transport: TransportSpec::Tcp(64), ..cfg };
+    let c = run_federated(&f, &cfg_tcp).unwrap();
+    assert_identical(Algorithm::Bl1, &a, &c, "tcp:64");
 }
 
 #[test]

@@ -1,0 +1,311 @@
+//! Property suite for the byte-level wire codec (`transport::codec`), the
+//! frame session layer (`transport::session`), and their interaction with
+//! the [`PacketPool`] recycler.
+//!
+//! The codec's contract is *exactness*: every `f64` travels as its IEEE-754
+//! bit pattern, so a decoded packet is bit-identical to the encoded one —
+//! including NaN payloads, signed zeros and subnormals — and every length
+//! field is validated before allocation, so truncated or hostile bytes are
+//! `anyhow` errors, never panics. This suite drives those properties with
+//! seeded-random packets over the full kind registry, then checks the
+//! framing layer end-to-end over an in-memory stream.
+
+use basis_learn::compressors::BitCost;
+use basis_learn::linalg::Mat;
+use basis_learn::rng::Rng;
+use basis_learn::transport::codec::{
+    decode_header, decode_packet, encode_header, encode_packet, encode_packet_into, wire_id,
+    FrameHeader, FrameKind, HEADER_LEN, WIRE_KINDS,
+};
+use basis_learn::transport::kinds::KINDS;
+use basis_learn::transport::session::{FramePayload, Session};
+use basis_learn::transport::{Packet, PacketPool, Payload};
+use std::io::{Cursor, Read, Write};
+
+// ── helpers ────────────────────────────────────────────────────────────
+
+/// Bit-exact packet equality: kinds, costs and payloads compared through
+/// `to_bits`, so NaN == NaN and -0.0 != 0.0.
+fn assert_bit_identical(a: &Packet, b: &Packet, what: &str) {
+    assert_eq!(a.msgs.len(), b.msgs.len(), "{what}: message count");
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    for (i, (x, y)) in a.msgs.iter().zip(&b.msgs).enumerate() {
+        assert_eq!(x.kind, y.kind, "{what}: msg {i} kind");
+        assert_eq!(x.cost.floats.to_bits(), y.cost.floats.to_bits(), "{what}: msg {i} cost");
+        assert_eq!(
+            x.cost.aux_bits.to_bits(),
+            y.cost.aux_bits.to_bits(),
+            "{what}: msg {i} aux cost"
+        );
+        match (&x.payload, &y.payload) {
+            (Payload::Vector(p), Payload::Vector(q)) => assert_eq!(bits(p), bits(q), "{what}"),
+            (Payload::Scalars(p), Payload::Scalars(q)) => assert_eq!(bits(p), bits(q), "{what}"),
+            (Payload::Flags(p), Payload::Flags(q)) => assert_eq!(p, q, "{what}"),
+            (Payload::Matrix(p), Payload::Matrix(q)) => {
+                assert_eq!((p.rows(), p.cols()), (q.rows(), q.cols()), "{what}: msg {i} shape");
+                assert_eq!(bits(p.data()), bits(q.data()), "{what}: msg {i} matrix");
+            }
+            _ => panic!("{what}: msg {i} changed payload variant"),
+        }
+    }
+}
+
+/// A value stream that sprinkles the adversarial f64s through ordinary
+/// normals: NaN with a payload, ±0.0, subnormals, infinities.
+fn gnarly_f64(rng: &mut Rng) -> f64 {
+    match rng.below(12) {
+        0 => f64::NAN,
+        1 => f64::from_bits(0x7ff8_0000_0000_0000 | rng.next_u64() & 0xf_ffff_ffff_ffff),
+        2 => -0.0,
+        3 => 0.0,
+        4 => f64::from_bits(rng.below(4096) as u64 + 1), // subnormal
+        5 => -f64::from_bits(rng.below(4096) as u64 + 1),
+        6 => f64::INFINITY,
+        7 => f64::NEG_INFINITY,
+        _ => rng.normal() * 10f64.powi(rng.below(7) as i32 - 3),
+    }
+}
+
+fn random_cost(rng: &mut Rng) -> BitCost {
+    BitCost { floats: rng.below(1000) as f64, aux_bits: rng.below(100_000) as f64 }
+}
+
+/// A random packet drawing kinds from the full registry and payloads from
+/// all four variants, sized to exercise empty and non-trivial shapes.
+fn random_packet(rng: &mut Rng) -> Packet {
+    let mut p = Packet::empty();
+    for _ in 0..rng.below(6) {
+        let kind = KINDS[rng.below(KINDS.len())].name;
+        let cost = random_cost(rng);
+        match rng.below(4) {
+            0 => {
+                let n = rng.below(40);
+                p.push_vector(kind, (0..n).map(|_| gnarly_f64(rng)).collect(), cost);
+            }
+            1 => {
+                let (r, c) = (rng.below(7), rng.below(7));
+                p.push_matrix(kind, Mat::from_fn(r, c, |_, _| 0.0), cost);
+                if let Some(Payload::Matrix(m)) = p.msgs.last_mut().map(|m| &mut m.payload) {
+                    for x in m.data_mut() {
+                        *x = gnarly_f64(rng);
+                    }
+                }
+            }
+            2 => {
+                let n = rng.below(10);
+                p.push_scalars(kind, (0..n).map(|_| gnarly_f64(rng)).collect(), cost);
+            }
+            _ => {
+                let n = rng.below(16);
+                p.push_flags(kind, (0..n).map(|_| rng.bernoulli(0.5)).collect(), cost);
+            }
+        }
+    }
+    p
+}
+
+/// In-memory bidirectional-looking stream: reads consume from the front,
+/// writes append at the end (a loopback socket with ourselves on both ends).
+struct Loopback(Cursor<Vec<u8>>);
+
+impl Read for Loopback {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.0.read(buf)
+    }
+}
+
+impl Write for Loopback {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let pos = self.0.position();
+        self.0.set_position(self.0.get_ref().len() as u64);
+        let n = self.0.write(buf)?;
+        self.0.set_position(pos);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+// ── codec properties ───────────────────────────────────────────────────
+
+#[test]
+fn seeded_random_packets_round_trip_bit_for_bit() {
+    let mut rng = Rng::new(0xC0DEC);
+    for trial in 0..200 {
+        let p = random_packet(&mut rng);
+        let body = encode_packet(&p).expect("encode");
+        let q = decode_packet(&body).expect("decode");
+        assert_bit_identical(&p, &q, &format!("trial {trial}"));
+    }
+}
+
+#[test]
+fn every_registered_kind_crosses_the_codec() {
+    // Both directions of the exhaustiveness contract: every registry entry
+    // has a wire id (encodable + decodable), and every wire id names a
+    // registered kind. This is the compile-time mirror of the audit's
+    // codec-sync rule.
+    assert_eq!(WIRE_KINDS.len(), KINDS.len());
+    for k in KINDS {
+        let id = wire_id(k.name).expect("registered kind must have a wire id");
+        assert_eq!(WIRE_KINDS[id as usize], k.name, "wire ids are positional");
+        let mut p = Packet::empty();
+        p.push_vector(k.name, vec![1.5, -2.5], BitCost::floats(2));
+        let q = decode_packet(&encode_packet(&p).expect("encode")).expect("decode");
+        assert_eq!(q.msgs[0].kind, k.name);
+    }
+    for w in WIRE_KINDS {
+        assert!(
+            KINDS.iter().any(|k| k.name == *w),
+            "wire kind {w:?} is not in the registry"
+        );
+    }
+}
+
+#[test]
+fn random_truncation_never_panics_and_always_errors() {
+    let mut rng = Rng::new(0x7256);
+    for _ in 0..50 {
+        let mut p = random_packet(&mut rng);
+        // Guarantee at least one message so every strict prefix is short.
+        p.push_vector("model", vec![1.0], BitCost::floats(1));
+        let body = encode_packet(&p).expect("encode");
+        for cut in 0..body.len() {
+            assert!(decode_packet(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
+    }
+}
+
+#[test]
+fn random_byte_soup_never_panics() {
+    let mut rng = Rng::new(0x50FA);
+    for _ in 0..300 {
+        let n = rng.below(200);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        // Any outcome but a panic is acceptable; decode must stay total.
+        let _ = decode_packet(&bytes);
+        if bytes.len() >= HEADER_LEN {
+            let mut hdr = [0u8; HEADER_LEN];
+            hdr.copy_from_slice(&bytes[..HEADER_LEN]);
+            let _ = decode_header(&hdr);
+        }
+    }
+}
+
+#[test]
+fn encode_into_appends_without_disturbing_the_prefix() {
+    let mut p = Packet::empty();
+    p.push_scalars("avg", vec![3.25], BitCost::floats(1));
+    let mut buf = vec![0xAB, 0xCD];
+    encode_packet_into(&p, &mut buf).expect("encode");
+    assert_eq!(&buf[..2], &[0xAB, 0xCD]);
+    let q = decode_packet(&buf[2..]).expect("decode");
+    assert_bit_identical(&p, &q, "appended body");
+}
+
+// ── session framing ────────────────────────────────────────────────────
+
+#[test]
+fn session_frames_random_packets_in_order() {
+    let mut rng = Rng::new(0x5E55);
+    let packets: Vec<Packet> = (0..20).map(|_| random_packet(&mut rng)).collect();
+    let mut sess = Session::new(Loopback(Cursor::new(Vec::new())));
+    for (i, p) in packets.iter().enumerate() {
+        sess.send_packet(&FrameHeader::packet(i, i % 3, i * 7), p).expect("send");
+    }
+    sess.send_control(FrameKind::Bye, 4).expect("send bye");
+    for (i, p) in packets.iter().enumerate() {
+        let (hdr, payload) = sess.recv().expect("recv");
+        assert_eq!(hdr, FrameHeader::packet(i, i % 3, i * 7), "frame {i} header");
+        match payload {
+            FramePayload::Packet(q) => assert_bit_identical(p, &q, &format!("frame {i}")),
+            other => panic!("frame {i}: expected a packet, got {other:?}"),
+        }
+    }
+    let (hdr, payload) = sess.recv().expect("recv bye");
+    assert_eq!(hdr, FrameHeader::control(FrameKind::Bye, 4));
+    assert!(matches!(payload, FramePayload::Control(FrameKind::Bye)));
+}
+
+#[test]
+fn session_error_frames_carry_their_message() {
+    let mut sess = Session::new(Loopback(Cursor::new(Vec::new())));
+    let at = FrameHeader::packet(3, 1, 9);
+    sess.send_error(&at, "local Hessian exploded").expect("send");
+    let (hdr, payload) = sess.recv().expect("recv");
+    assert_eq!((hdr.round, hdr.exchange, hdr.client), (3, 1, 9));
+    assert_eq!(hdr.kind, FrameKind::Error);
+    match payload {
+        FramePayload::Error(msg) => assert_eq!(msg, "local Hessian exploded"),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn header_encode_is_exactly_header_len_bytes() {
+    let mut buf = Vec::new();
+    encode_header(&FrameHeader::control(FrameKind::Hello, 2), 0, &mut buf).expect("encode");
+    assert_eq!(buf.len(), HEADER_LEN);
+}
+
+// ── pool interaction ───────────────────────────────────────────────────
+
+#[test]
+fn pooled_packets_encode_without_stale_bytes() {
+    // Build a large packet from pooled buffers, encode it, recycle it, then
+    // build a *smaller* packet from the same pool. The recycled buffers have
+    // stale capacity beyond the new lengths; the encoding must match a
+    // fresh, never-pooled packet byte for byte.
+    let pool = PacketPool::new();
+
+    let mut big = pool.packet();
+    let mut v = pool.vec_f64(64);
+    v.extend((0..64).map(|i| i as f64 + 0.5));
+    big.push_vector("model", v, BitCost::floats(64));
+    big.push_matrix("hess_delta", pool.zeros_mat(8, 8), BitCost::floats(64));
+    let mut f = pool.vec_bool(32);
+    f.extend((0..32).map(|i| i % 3 == 0));
+    big.push_flags("xi", f, BitCost::bits(32.0));
+    let big_bytes = encode_packet(&big).expect("encode big");
+    pool.recycle_packet(big);
+
+    let mut small = pool.packet();
+    let mut v = pool.vec_f64(3);
+    v.extend([1.0, 2.0, 3.0]);
+    small.push_vector("model", v, BitCost::floats(3));
+    let mut f = pool.vec_bool(2);
+    f.extend([true, false]);
+    small.push_flags("xi", f, BitCost::bits(2.0));
+    let pooled_bytes = encode_packet(&small).expect("encode pooled");
+
+    let mut fresh = Packet::empty();
+    fresh.push_vector("model", vec![1.0, 2.0, 3.0], BitCost::floats(3));
+    fresh.push_flags("xi", vec![true, false], BitCost::bits(2.0));
+    let fresh_bytes = encode_packet(&fresh).expect("encode fresh");
+
+    assert_ne!(big_bytes, pooled_bytes, "recycling must not preserve old contents");
+    assert_eq!(pooled_bytes, fresh_bytes, "pooled buffers leaked stale bytes");
+    let q = decode_packet(&pooled_bytes).expect("decode pooled");
+    assert_bit_identical(&fresh, &q, "pooled round-trip");
+}
+
+#[test]
+fn decode_then_recycle_then_reencode_is_stable() {
+    // The TCP receive path decodes into fresh buffers which algorithms may
+    // hand to a pool; a second encode of a re-acquired packet must be
+    // byte-identical to the first.
+    let pool = PacketPool::new();
+    let mut rng = Rng::new(0xB00C);
+    for _ in 0..20 {
+        let p = random_packet(&mut rng);
+        let bytes = encode_packet(&p).expect("encode");
+        let decoded = decode_packet(&bytes).expect("decode");
+        let copy = pool.clone_packet(&decoded);
+        let copy_bytes = encode_packet(&copy).expect("re-encode");
+        assert_eq!(bytes, copy_bytes, "pooled clone changed the encoding");
+        pool.recycle_packet(decoded);
+        pool.recycle_packet(copy);
+    }
+}
