@@ -14,6 +14,16 @@
 //! 1. every `Kind { name: … }` registry entry appears in the table;
 //! 2. every table entry names a registered kind (no orphan wire ids);
 //! 3. table entries are unique (a duplicate would shadow an id).
+//!
+//! The rule also covers the *frame* level of the codec: the
+//! `const FRAME_KINDS: &[(&str, u8)]` table and the C-like `enum FrameKind`
+//! whose discriminants are the wire bytes. When a tree declares a
+//! `FRAME_KINDS` table (silent otherwise, like the message-kind half):
+//! 4. table names and bytes are unique, and byte `0` stays reserved;
+//! 5. every `FrameKind` variant has a table entry (matched by lowercased
+//!    name) with the *same* byte, and carries an explicit discriminant —
+//!    an implicit one would silently renumber the wire format;
+//! 6. every table entry names a variant (no orphan frame bytes).
 
 use super::super::{AuditCtx, Finding};
 use super::bit_accounting::collect_registry;
@@ -74,7 +84,251 @@ pub(crate) fn wire_tables(ctx: &AuditCtx) -> Vec<WireEntry> {
     out
 }
 
+/// One parsed `FRAME_KINDS` table entry: `("name", byte)`.
+struct FrameEntry {
+    file: String,
+    line: u32,
+    name: String,
+    byte: Option<u64>,
+}
+
+/// One parsed `enum FrameKind` variant with its explicit discriminant (the
+/// wire byte), or `None` when the variant declares no discriminant.
+struct FrameVariant {
+    file: String,
+    line: u32,
+    name: String,
+    byte: Option<u64>,
+}
+
+/// Parse a numeric-literal token (`1`, `0x1F`, `1_000`) to its value.
+fn parse_num(text: &str) -> Option<u64> {
+    let t = text.replace('_', "");
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+/// Parse every `const FRAME_KINDS … = … [ ("…", n), … ]` declaration in the
+/// tree. Entries are string/number pairs: each string literal opens an
+/// entry, and the first numeric literal after it supplies the wire byte.
+fn frame_tables(ctx: &AuditCtx) -> Vec<FrameEntry> {
+    let mut out = Vec::new();
+    for file in ctx.files {
+        let code = &file.code;
+        for i in 0..code.len() {
+            if !code[i].is_ident("FRAME_KINDS") || i == 0 || !code[i - 1].is_ident("const") {
+                continue;
+            }
+            // Skip the type annotation (which contains its own brackets) by
+            // scanning to `=` first, then walk the initializer's brackets.
+            let mut j = i + 1;
+            while j < code.len() && !code[j].is_punct('=') {
+                j += 1;
+            }
+            while j < code.len() && !code[j].is_punct('[') {
+                j += 1;
+            }
+            let mut depth = 0isize;
+            while j < code.len() {
+                let t = &code[j];
+                if t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Str {
+                    out.push(FrameEntry {
+                        file: file.rel.clone(),
+                        line: t.line,
+                        name: t.text.clone(),
+                        byte: None,
+                    });
+                } else if t.kind == TokKind::Num {
+                    if let Some(last) = out.last_mut() {
+                        if last.byte.is_none() {
+                            last.byte = parse_num(&t.text);
+                        }
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Parse every `enum FrameKind { Variant = N, … }` declaration in the tree.
+/// Only C-like variants are recognized: an identifier at brace depth 1
+/// directly after `{` or `,`, optionally followed by `= <number>`.
+fn frame_enums(ctx: &AuditCtx) -> Vec<FrameVariant> {
+    let mut out = Vec::new();
+    for file in ctx.files {
+        let code = &file.code;
+        for i in 0..code.len() {
+            if !code[i].is_ident("FrameKind") || i == 0 || !code[i - 1].is_ident("enum") {
+                continue;
+            }
+            let mut j = i + 1;
+            while j < code.len() && !code[j].is_punct('{') {
+                j += 1;
+            }
+            let mut depth = 0isize;
+            while j < code.len() {
+                let t = &code[j];
+                if t.is_punct('{') {
+                    depth += 1;
+                } else if t.is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 1
+                    && t.kind == TokKind::Ident
+                    && (code[j - 1].is_punct('{') || code[j - 1].is_punct(','))
+                {
+                    let byte = (code.get(j + 1).is_some_and(|t| t.is_punct('='))
+                        && code.get(j + 2).is_some_and(|t| t.kind == TokKind::Num))
+                    .then(|| parse_num(&code[j + 2].text))
+                    .flatten();
+                    out.push(FrameVariant {
+                        file: file.rel.clone(),
+                        line: t.line,
+                        name: t.text.clone(),
+                        byte,
+                    });
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// The frame-level checks (4–6 in the module docs). Runs only when the tree
+/// declares a `FRAME_KINDS` table.
+fn check_frames(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    let table = frame_tables(ctx);
+    if table.is_empty() {
+        return; // no frame codec in this tree
+    }
+    let variants = frame_enums(ctx);
+
+    // 4. table-local hygiene: unique names, unique bytes, byte 0 reserved.
+    for (i, e) in table.iter().enumerate() {
+        if table[..i].iter().any(|p| p.name == e.name) {
+            out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!("frame kind \"{}\" appears more than once in FRAME_KINDS", e.name),
+            });
+        }
+        match e.byte {
+            None => out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!("frame kind \"{}\" has no wire byte in FRAME_KINDS", e.name),
+            }),
+            Some(0) => out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!(
+                    "frame kind \"{}\" uses reserved byte 0 (an all-zero buffer must \
+                     never parse as a frame)",
+                    e.name
+                ),
+            }),
+            Some(b) => {
+                if let Some(p) =
+                    table[..i].iter().find(|p| p.byte == Some(b) && p.name != e.name)
+                {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: e.file.clone(),
+                        line: e.line,
+                        msg: format!(
+                            "frame byte {b} is assigned to both \"{}\" and \"{}\" in \
+                             FRAME_KINDS",
+                            p.name, e.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // 5. every enum variant is in the table with a matching explicit byte.
+    for v in &variants {
+        let lower = v.name.to_ascii_lowercase();
+        let entry = table.iter().find(|e| e.name == lower);
+        match entry {
+            None => out.push(Finding {
+                rule: RULE,
+                file: v.file.clone(),
+                line: v.line,
+                msg: format!(
+                    "FrameKind::{} has no FRAME_KINDS entry; append (\"{lower}\", …) — \
+                     the table is append-only, like WIRE_KINDS",
+                    v.name
+                ),
+            }),
+            Some(e) => match v.byte {
+                None => out.push(Finding {
+                    rule: RULE,
+                    file: v.file.clone(),
+                    line: v.line,
+                    msg: format!(
+                        "FrameKind::{} declares no explicit discriminant — frame \
+                         discriminants are the wire bytes, so an implicit one can \
+                         silently renumber the wire format",
+                        v.name
+                    ),
+                }),
+                Some(b) if e.byte.is_some() && e.byte != Some(b) => out.push(Finding {
+                    rule: RULE,
+                    file: v.file.clone(),
+                    line: v.line,
+                    msg: format!(
+                        "FrameKind::{} = {b} disagrees with the FRAME_KINDS entry \
+                         (\"{}\", {}) — the enum and the table must assign the same \
+                         wire byte",
+                        v.name,
+                        e.name,
+                        e.byte.unwrap_or(0)
+                    ),
+                }),
+                Some(_) => {}
+            },
+        }
+    }
+
+    // 6. orphan table entries (no variant behind the wire byte).
+    for e in &table {
+        if !variants.iter().any(|v| v.name.to_ascii_lowercase() == e.name) {
+            out.push(Finding {
+                rule: RULE,
+                file: e.file.clone(),
+                line: e.line,
+                msg: format!(
+                    "frame kind \"{}\" has no FrameKind enum variant; bytes are part \
+                     of the wire format — removal is a wire-format break, so add the \
+                     variant back or bump VERSION",
+                    e.name
+                ),
+            });
+        }
+    }
+}
+
 pub fn check(ctx: &AuditCtx, out: &mut Vec<Finding>) {
+    check_frames(ctx, out);
     let table = wire_tables(ctx);
     if table.is_empty() {
         return; // no codec in this tree — nothing to hold in sync

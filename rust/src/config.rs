@@ -161,7 +161,7 @@ pub enum Bl3Option {
 /// (the determinism contract of the transport layer), so this is an
 /// execution knob, not a semantic one — it is deliberately excluded from
 /// [`RunConfig::fingerprint`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum TransportSpec {
     /// In-process reference backend: clients run one after another on the
     /// calling thread. Works with any [`crate::problem::LocalProblem`],
@@ -178,6 +178,15 @@ pub enum TransportSpec {
     /// connection (one per worker thread). `0` ⇒ one worker per hardware
     /// core. Requires rebuildable local problems, like `Threaded`.
     Tcp(usize),
+    /// Multi-process backend: bind `addr` (`host:port`, port `0` = OS
+    /// pick) and wait for `workers` standalone `repro worker --connect`
+    /// processes to complete the Join/Assign handshake (docs/WIRE.md).
+    /// Requires a dataset with a [`crate::data::DataRecipe`] so workers
+    /// can rebuild their shards locally.
+    Listen {
+        addr: String,
+        workers: usize,
+    },
 }
 
 impl TransportSpec {
@@ -192,7 +201,9 @@ impl TransportSpec {
                     .unwrap_or(1)
                     .min(n_clients.max(1))
             }
-            TransportSpec::Threaded(k) | TransportSpec::Tcp(k) => (*k).min(n_clients.max(1)),
+            TransportSpec::Threaded(k)
+            | TransportSpec::Tcp(k)
+            | TransportSpec::Listen { workers: k, .. } => (*k).min(n_clients.max(1)).max(1),
         }
     }
 }
@@ -205,6 +216,7 @@ impl std::fmt::Display for TransportSpec {
             TransportSpec::Threaded(k) => write!(f, "threaded:{k}"),
             TransportSpec::Tcp(0) => write!(f, "tcp"),
             TransportSpec::Tcp(k) => write!(f, "tcp:{k}"),
+            TransportSpec::Listen { addr, workers } => write!(f, "listen:{addr}:{workers}"),
         }
     }
 }
@@ -234,7 +246,28 @@ impl std::str::FromStr for TransportSpec {
                 .map_err(|e| anyhow::anyhow!("bad worker count in '{s}': {e}"))?;
             return Ok(TransportSpec::Tcp(k));
         }
-        bail!("unknown transport '{s}' (lockstep | threaded | threaded:<k> | tcp | tcp:<k>)")
+        if let Some(rest) = t.strip_prefix("listen:") {
+            // `listen:<host>:<port>:<workers>` — the worker count is the
+            // final `:`-separated field; everything before it is the
+            // socket address.
+            let (addr, k) = rest
+                .rsplit_once(':')
+                .ok_or_else(|| anyhow::anyhow!("'{s}' needs listen:<host:port>:<workers>"))?;
+            let workers: usize = k
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad worker count in '{s}': {e}"))?;
+            if workers == 0 {
+                bail!("listen transport needs an explicit worker count ≥ 1 in '{s}'");
+            }
+            if !addr.contains(':') {
+                bail!("'{s}': listen address must be <host>:<port>");
+            }
+            return Ok(TransportSpec::Listen { addr: addr.to_string(), workers });
+        }
+        bail!(
+            "unknown transport '{s}' (lockstep | threaded[:<k>] | tcp[:<k>] | \
+             listen:<host:port>:<workers>)"
+        )
     }
 }
 
@@ -281,7 +314,16 @@ pub struct RunConfig {
     /// Message-passing backend for the round loop (results are identical
     /// across backends; see [`TransportSpec`]).
     pub transport: TransportSpec,
+    /// How long the socket backends wait for all workers to connect and
+    /// complete the handshake (remote workers may build large datasets
+    /// before greeting). Execution knob like `transport` — excluded from
+    /// [`RunConfig::fingerprint`].
+    pub handshake_timeout_ms: u64,
 }
+
+/// Default [`RunConfig::handshake_timeout_ms`] (the historical hard-coded
+/// socket-backend handshake deadline).
+pub const DEFAULT_HANDSHAKE_TIMEOUT_MS: u64 = 30_000;
 
 impl Default for RunConfig {
     fn default() -> Self {
@@ -306,6 +348,7 @@ impl Default for RunConfig {
             max_bits_per_node: None,
             seed: 1,
             transport: TransportSpec::Lockstep,
+            handshake_timeout_ms: DEFAULT_HANDSHAKE_TIMEOUT_MS,
         }
     }
 }
@@ -318,14 +361,129 @@ impl RunConfig {
     /// under different parameters (rounds, λ, stopping rules, master seed,
     /// ...) that the group string doesn't encode.
     ///
-    /// The `transport` backend is canonicalized away before hashing: both
-    /// backends produce bit-identical histories (the transport layer's
-    /// determinism contract, enforced by `tests/transport_equivalence.rs`),
-    /// so a sweep resumed under a different `--transport` must still accept
-    /// its previously recorded rows.
+    /// The `transport` backend (and its `handshake_timeout_ms` companion
+    /// knob) are canonicalized away before hashing: all backends produce
+    /// bit-identical histories (the transport layer's determinism contract,
+    /// enforced by `tests/transport_equivalence.rs`), so a sweep resumed
+    /// under a different `--transport`, or a remote worker validating a
+    /// wire-decoded config against the server's, must agree regardless of
+    /// execution knobs.
     pub fn fingerprint(&self) -> u64 {
-        let canon = RunConfig { transport: TransportSpec::Lockstep, ..self.clone() };
+        let canon = RunConfig {
+            transport: TransportSpec::Lockstep,
+            handshake_timeout_ms: DEFAULT_HANDSHAKE_TIMEOUT_MS,
+            ..self.clone()
+        };
         crate::rng::fnv1a(format!("{canon:?}").as_bytes())
+    }
+
+    /// Render the *semantic* configuration as `key=value` lines for the
+    /// wire (the `Assign` frame of the multi-process handshake). Every f64
+    /// travels as its hex `to_bits` pattern, so [`RunConfig::from_wire`]
+    /// reconstructs a config whose [`RunConfig::fingerprint`] matches this
+    /// one's exactly. The execution knobs (`transport`,
+    /// `handshake_timeout_ms`) are excluded, mirroring the fingerprint.
+    pub fn to_wire(&self) -> String {
+        let f = f64_to_wire;
+        let opt_f = |v: Option<f64>| v.map(f).unwrap_or_else(|| "none".into());
+        let mut out = String::new();
+        for (k, v) in [
+            ("algorithm", self.algorithm.to_string()),
+            ("rounds", self.rounds.to_string()),
+            ("lambda", f(self.lambda)),
+            ("hess_comp", self.hess_comp.to_string()),
+            ("model_comp", self.model_comp.to_string()),
+            ("grad_comp", self.grad_comp.to_string()),
+            ("p", f(self.p)),
+            ("tau", self.tau.map(|t| t.to_string()).unwrap_or_else(|| "none".into())),
+            ("eta", opt_f(self.eta)),
+            ("alpha", opt_f(self.alpha)),
+            ("gamma", opt_f(self.gamma)),
+            ("basis", self.basis.map(|b| b.to_string()).unwrap_or_else(|| "none".into())),
+            ("subspace_tol", f(self.subspace_tol)),
+            ("bl3_c", f(self.bl3_c)),
+            (
+                "bl3_option",
+                match self.bl3_option {
+                    Bl3Option::One => "one".into(),
+                    Bl3Option::Two => "two".into(),
+                },
+            ),
+            ("float_bits", self.float_bits.to_string()),
+            ("target_gap", f(self.target_gap)),
+            ("max_bits_per_node", opt_f(self.max_bits_per_node)),
+            ("seed", self.seed.to_string()),
+        ] {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(&v);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a [`RunConfig::to_wire`] rendering. Strict: every semantic key
+    /// must appear exactly once and unknown keys are errors, so a version
+    /// skew between server and worker binaries fails loudly instead of
+    /// silently running under different parameters. The decoded config
+    /// carries default execution knobs (`transport`, `handshake_timeout_ms`)
+    /// — irrelevant to the fingerprint the caller verifies.
+    pub fn from_wire(text: &str) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let mut seen = std::collections::BTreeSet::new();
+        let opt = |v: &str| -> Result<Option<f64>> {
+            Ok(if v == "none" { None } else { Some(f64_from_wire(v)?) })
+        };
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("malformed config line {line:?}"))?;
+            if !seen.insert(k.to_string()) {
+                bail!("duplicate config key {k:?}");
+            }
+            match k {
+                "algorithm" => cfg.algorithm = v.parse()?,
+                "rounds" => cfg.rounds = v.parse()?,
+                "lambda" => cfg.lambda = f64_from_wire(v)?,
+                "hess_comp" => cfg.hess_comp = v.parse()?,
+                "model_comp" => cfg.model_comp = v.parse()?,
+                "grad_comp" => cfg.grad_comp = v.parse()?,
+                "p" => cfg.p = f64_from_wire(v)?,
+                "tau" => cfg.tau = if v == "none" { None } else { Some(v.parse()?) },
+                "eta" => cfg.eta = opt(v)?,
+                "alpha" => cfg.alpha = opt(v)?,
+                "gamma" => cfg.gamma = opt(v)?,
+                "basis" => cfg.basis = if v == "none" { None } else { Some(v.parse()?) },
+                "subspace_tol" => cfg.subspace_tol = f64_from_wire(v)?,
+                "bl3_c" => cfg.bl3_c = f64_from_wire(v)?,
+                "bl3_option" => {
+                    cfg.bl3_option = match v {
+                        "one" => Bl3Option::One,
+                        "two" => Bl3Option::Two,
+                        other => bail!("unknown bl3_option {other:?}"),
+                    }
+                }
+                "float_bits" => cfg.float_bits = v.parse()?,
+                "target_gap" => cfg.target_gap = f64_from_wire(v)?,
+                "max_bits_per_node" => cfg.max_bits_per_node = opt(v)?,
+                "seed" => cfg.seed = v.parse()?,
+                other => bail!("unknown config key {other:?} (version skew?)"),
+            }
+        }
+        let want = [
+            "algorithm", "rounds", "lambda", "hess_comp", "model_comp", "grad_comp", "p",
+            "tau", "eta", "alpha", "gamma", "basis", "subspace_tol", "bl3_c", "bl3_option",
+            "float_bits", "target_gap", "max_bits_per_node", "seed",
+        ];
+        for k in want {
+            if !seen.contains(k) {
+                bail!("config key {k:?} missing from the wire rendering (version skew?)");
+            }
+        }
+        Ok(cfg)
     }
 
     /// The basis each algorithm uses when none is specified.
@@ -339,6 +497,20 @@ impl RunConfig {
             _ => BasisKind::Standard,
         }
     }
+}
+
+/// An f64 as its hex `to_bits` pattern — the wire rendering that survives
+/// any value (NaN payloads, −0.0, subnormals) bit-for-bit, so a decoded
+/// config's `Debug` rendering (hence its fingerprint) matches the
+/// encoder's exactly.
+pub(crate) fn f64_to_wire(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+pub(crate) fn f64_from_wire(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|e| anyhow::anyhow!("bad f64 bit pattern {s:?}: {e}"))?;
+    Ok(f64::from_bits(bits))
 }
 
 #[cfg(test)]
@@ -399,15 +571,27 @@ mod tests {
         assert_eq!("tcp".parse::<TransportSpec>().unwrap(), TransportSpec::Tcp(0));
         assert_eq!("tcp:4".parse::<TransportSpec>().unwrap(), TransportSpec::Tcp(4));
         assert_eq!("TCP:2".parse::<TransportSpec>().unwrap(), TransportSpec::Tcp(2));
+        assert_eq!(
+            "listen:127.0.0.1:7700:4".parse::<TransportSpec>().unwrap(),
+            TransportSpec::Listen { addr: "127.0.0.1:7700".into(), workers: 4 }
+        );
+        assert_eq!(
+            "listen:0.0.0.0:0:2".parse::<TransportSpec>().unwrap(),
+            TransportSpec::Listen { addr: "0.0.0.0:0".into(), workers: 2 }
+        );
         assert!("sockets".parse::<TransportSpec>().is_err());
         assert!("threaded:x".parse::<TransportSpec>().is_err());
         assert!("tcp:x".parse::<TransportSpec>().is_err());
+        assert!("listen:127.0.0.1:7700".parse::<TransportSpec>().is_err(), "missing workers");
+        assert!("listen:7700:2".parse::<TransportSpec>().is_err(), "missing host");
+        assert!("listen:127.0.0.1:7700:0".parse::<TransportSpec>().is_err(), "zero workers");
         let all = [
             TransportSpec::Lockstep,
             TransportSpec::Threaded(0),
             TransportSpec::Threaded(8),
             TransportSpec::Tcp(0),
             TransportSpec::Tcp(8),
+            TransportSpec::Listen { addr: "127.0.0.1:7700".into(), workers: 3 },
         ];
         for t in all {
             assert_eq!(t.to_string().parse::<TransportSpec>().unwrap(), t);
@@ -426,6 +610,10 @@ mod tests {
         assert_eq!(TransportSpec::Tcp(4).resolved_workers(16), 4);
         assert_eq!(TransportSpec::Tcp(8).resolved_workers(3), 3);
         assert!(TransportSpec::Tcp(0).resolved_workers(64) >= 1);
+        // Listen clamps its explicit worker count the same way.
+        let listen = |workers| TransportSpec::Listen { addr: "127.0.0.1:0".into(), workers };
+        assert_eq!(listen(4).resolved_workers(16), 4);
+        assert_eq!(listen(8).resolved_workers(3), 3);
     }
 
     #[test]
@@ -435,8 +623,63 @@ mod tests {
         let lock = RunConfig { transport: TransportSpec::Lockstep, ..RunConfig::default() };
         let thr = RunConfig { transport: TransportSpec::Threaded(4), ..RunConfig::default() };
         let tcp = RunConfig { transport: TransportSpec::Tcp(2), ..RunConfig::default() };
+        let listen = RunConfig {
+            transport: TransportSpec::Listen { addr: "127.0.0.1:0".into(), workers: 2 },
+            ..RunConfig::default()
+        };
+        let slow = RunConfig { handshake_timeout_ms: 600_000, ..RunConfig::default() };
         assert_eq!(lock.fingerprint(), thr.fingerprint());
         assert_eq!(lock.fingerprint(), tcp.fingerprint());
+        assert_eq!(lock.fingerprint(), listen.fingerprint());
+        assert_eq!(lock.fingerprint(), slow.fingerprint());
+    }
+
+    #[test]
+    fn wire_round_trip_preserves_fingerprint() {
+        // The multi-process handshake's contract: a worker that decodes the
+        // Assign frame's config string must compute the server's exact
+        // fingerprint — including gnarly f64 fields that a decimal
+        // rendering would mangle.
+        let cfgs = [
+            RunConfig::default(),
+            RunConfig {
+                algorithm: Algorithm::Bl3,
+                rounds: 77,
+                lambda: 0.1 + 0.2, // not exactly 0.3
+                hess_comp: CompressorSpec::RandK(3),
+                model_comp: CompressorSpec::TopK(5),
+                grad_comp: CompressorSpec::Dithering(Some(4)),
+                p: 0.5,
+                tau: Some(3),
+                eta: Some(1e-3),
+                alpha: Some(f64::MIN_POSITIVE),
+                gamma: None,
+                basis: Some(BasisKind::Psd),
+                subspace_tol: 1e-9,
+                bl3_c: 0.25,
+                bl3_option: Bl3Option::One,
+                float_bits: 32,
+                target_gap: 0.0,
+                max_bits_per_node: Some(3e8),
+                seed: 99,
+                transport: TransportSpec::Tcp(4),
+                handshake_timeout_ms: 1_000,
+            },
+        ];
+        for cfg in cfgs {
+            let decoded = RunConfig::from_wire(&cfg.to_wire()).unwrap();
+            assert_eq!(decoded.fingerprint(), cfg.fingerprint(), "{cfg:?}");
+            // Execution knobs decode to defaults, not the encoder's.
+            assert_eq!(decoded.transport, TransportSpec::Lockstep);
+            assert_eq!(decoded.handshake_timeout_ms, DEFAULT_HANDSHAKE_TIMEOUT_MS);
+        }
+        // Strictness: missing keys, unknown keys and duplicates all fail.
+        let wire = RunConfig::default().to_wire();
+        let missing: String =
+            wire.lines().filter(|l| !l.starts_with("seed=")).map(|l| format!("{l}\n")).collect();
+        assert!(RunConfig::from_wire(&missing).is_err(), "missing key accepted");
+        assert!(RunConfig::from_wire(&format!("{wire}mystery=1\n")).is_err());
+        assert!(RunConfig::from_wire(&format!("{wire}seed=2\n")).is_err(), "duplicate accepted");
     }
 
     #[test]

@@ -32,7 +32,10 @@
 //! * `first_order/` — GD, DIANA, ADIANA, S-Local-GD, Artemis, DORE.
 
 pub mod first_order;
+pub mod remote;
 pub mod second_order;
+
+pub use remote::{run_federated_listen, run_worker};
 
 use crate::basis::{HessianBasis, PsdBasis, StandardBasis, SubspaceBasis, SymTriBasis};
 use crate::config::{Algorithm, BasisKind, RunConfig, TransportSpec};
@@ -291,12 +294,19 @@ pub fn run_federated_factory_traced<'a>(
 
     let (mut server, clients) = build_split(&env)?;
     let rngs = client_rngs(cfg.seed, n);
-    match cfg.transport {
+    match &cfg.transport {
         TransportSpec::Lockstep => {
             let mut transport = Lockstep::new(env.locals, clients, rngs)
                 .with_obs(env.obs)
                 .with_pool(server.pool().cloned());
             drive(&env, server.as_mut(), &mut transport)
+        }
+        TransportSpec::Listen { .. } => {
+            anyhow::bail!(
+                "the listen transport serves standalone worker processes and needs \
+                 the full dataset recipe — drive it through run_federated_listen \
+                 (CLI: `repro run --listen <host:port>`)"
+            )
         }
         TransportSpec::Threaded(_) | TransportSpec::Tcp(_) => {
             let Some(factory) = factory else {
@@ -309,9 +319,10 @@ pub fn run_federated_factory_traced<'a>(
             };
             let workers = cfg.transport.resolved_workers(n);
             std::thread::scope(|scope| {
-                if let TransportSpec::Tcp(_) = cfg.transport {
+                if let TransportSpec::Tcp(_) = &cfg.transport {
+                    let timeout = std::time::Duration::from_millis(cfg.handshake_timeout_ms);
                     let mut transport =
-                        Tcp::spawn(scope, workers, clients, rngs, factory, env.obs)?;
+                        Tcp::spawn(scope, workers, clients, rngs, factory, env.obs, timeout)?;
                     drive(&env, server.as_mut(), &mut transport)
                 } else {
                     let mut transport =

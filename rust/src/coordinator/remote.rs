@@ -1,0 +1,267 @@
+//! Multi-process federation: the listening server loop and the standalone
+//! worker entry point behind `repro worker --connect`.
+//!
+//! The server side ([`run_federated_listen`]) binds a real TCP listener,
+//! hands every joining worker process an [`Assignment`] — the run
+//! fingerprint, the full wire-rendered [`RunConfig`], and the dataset's
+//! [`DataRecipe`] — and then drives the ordinary round loop over the
+//! connected [`crate::transport::Tcp`] transport. The worker side
+//! ([`run_worker`]) rebuilds the dataset and its half of the algorithm
+//! split locally from that assignment: dataset construction and
+//! [`super::build_split`] are pure functions of (recipe, config), so the
+//! rebuilt `ClientStep`s and `LocalProblem`s are bit-identical to the ones
+//! an in-process backend would hold, and the equivalence contract of
+//! `tests/transport_equivalence.rs` extends across process boundaries
+//! without a single feature byte crossing the wire.
+//!
+//! Handshake (docs/WIRE.md): worker dials and sends `Join`; the server
+//! replies `Assign` (index in the header's `client` field); the worker
+//! decodes the config, cross-checks the run fingerprint, rebuilds its
+//! shards, and greets with `Hello` — or reports an `Error` frame, which the
+//! server surfaces as a rejected assignment on its side.
+
+use super::{build_split, drive, estimate_smoothness, native_local, native_locals, Env, RunOutput};
+use crate::config::{RunConfig, TransportSpec};
+use crate::data::{DataRecipe, FederatedDataset};
+use crate::linalg::Mat;
+use crate::obs::{Obs, Recorder};
+use crate::transport::codec::{Assignment, FrameHeader, FrameKind};
+use crate::transport::session::{FramePayload, Session};
+use crate::transport::worker::{serve_connection, ClientTable};
+use crate::transport::{client_rngs, TcpServer};
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Drive a federated run as the listening side of a multi-process
+/// federation: bind the `listen:` transport's address, report the resolved
+/// address through `announce` (so a port-0 bind can be printed before the
+/// accept phase blocks), handshake the registered number of `repro worker`
+/// processes, and run the round loop over their connections.
+///
+/// Requires a dataset that carries a [`DataRecipe`] — workers rebuild their
+/// shards locally from it, so file-loaded datasets cannot serve
+/// multi-process runs.
+pub fn run_federated_listen(
+    fed: &FederatedDataset,
+    cfg: &RunConfig,
+    rec: &dyn Recorder,
+    announce: &mut dyn FnMut(std::net::SocketAddr),
+) -> Result<RunOutput> {
+    let TransportSpec::Listen { addr, .. } = &cfg.transport else {
+        bail!("run_federated_listen needs a listen transport (got '{}')", cfg.transport)
+    };
+    let recipe = fed.recipe.as_ref().with_context(|| {
+        format!(
+            "dataset '{}' carries no construction recipe — remote workers rebuild \
+             their shards locally, so only registry/synthetic datasets can serve \
+             multi-process runs",
+            fed.name
+        )
+    })?;
+    anyhow::ensure!(!fed.clients.is_empty(), "need at least one client");
+    let locals = native_locals(fed);
+    let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+    let d = locals[0].dim();
+    let n = locals.len();
+    let smoothness = estimate_smoothness(&locals, cfg.lambda);
+    let env = Env { locals: &locals, cfg, d, n, smoothness, features, obs: Obs::new(rec) };
+    // Only the server half lives here; every worker process rebuilds its
+    // client halves from the assignment below.
+    let (mut server, _clients) = build_split(&env)?;
+    let workers = cfg.transport.resolved_workers(n);
+    let assignment = Assignment {
+        fingerprint: cfg.fingerprint(),
+        workers: workers as u64,
+        clients: n as u64,
+        config: cfg.to_wire(),
+        recipe: recipe.render(),
+    };
+    let endpoint =
+        TcpServer::bind(addr, workers, Duration::from_millis(cfg.handshake_timeout_ms))?;
+    announce(endpoint.local_addr()?);
+    let mut transport = endpoint.accept_remote(&assignment)?;
+    drive(&env, server.as_mut(), &mut transport)
+}
+
+/// The standalone worker process: dial the round loop at `addr`, complete
+/// the `Join`/`Assign` handshake, rebuild the assigned dataset and client
+/// halves locally, greet with `Hello`, and serve decoded downlinks until
+/// the round loop says `Bye`. `log` receives human-readable progress lines
+/// (the CLI prints them; tests pass a sink).
+pub fn run_worker(addr: &str, log: &mut dyn FnMut(&str)) -> Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the round loop at {addr}"))?;
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    let mut sess = Session::new(stream);
+    sess.send_control(FrameKind::Join, 0).context("sending the Join request")?;
+    let (hdr, payload) = sess.recv().context("awaiting the run assignment")?;
+    let assignment = match payload {
+        FramePayload::Assign(a) => a,
+        FramePayload::Error(msg) => bail!("the round loop refused the join: {msg}"),
+        _ => bail!("expected an Assign frame, got a {:?} frame", hdr.kind),
+    };
+    let w = hdr.client as usize;
+    log(&format!(
+        "assigned worker {w} of {} ({} clients total); rebuilding shards",
+        assignment.workers, assignment.clients
+    ));
+    // Anything that goes wrong between Assign and Hello is reported back as
+    // an Error frame, so the server surfaces "worker rejected its
+    // assignment: ..." instead of waiting out the handshake timeout.
+    match prepare(&assignment, w) {
+        Ok(table) => {
+            log(&format!("serving {} clients as worker {w}", table.len()));
+            sess.send_control(FrameKind::Hello, w).context("sending the Hello greeting")?;
+            let result = serve_connection(sess.into_inner(), table, w, Obs::noop());
+            log(&format!("worker {w} done"));
+            result
+        }
+        Err(e) => {
+            let _ = sess.send_error(&FrameHeader::control(FrameKind::Error, w), &format!("{e:#}"));
+            Err(e)
+        }
+    }
+}
+
+/// Rebuild this worker's share of the run from its assignment: decode the
+/// wire config, cross-check the run fingerprint, rebuild the dataset from
+/// its recipe, run the algorithm split, and keep the clients of residue
+/// class `w` — the same pinning every other backend uses.
+fn prepare(assignment: &Assignment, w: usize) -> Result<ClientTable> {
+    let workers = assignment.workers as usize;
+    anyhow::ensure!(w < workers, "assigned index {w} out of range ({workers} workers)");
+    let cfg =
+        RunConfig::from_wire(&assignment.config).context("decoding the assigned run config")?;
+    let fp = cfg.fingerprint();
+    if fp != assignment.fingerprint {
+        bail!(
+            "run fingerprint mismatch: the round loop announced {:016x} but this \
+             binary derives {fp:016x} from the same config — incompatible repro \
+             versions on the two hosts?",
+            assignment.fingerprint
+        );
+    }
+    let recipe =
+        DataRecipe::parse(&assignment.recipe).context("decoding the assigned data recipe")?;
+    let fed = recipe.build().context("rebuilding the assigned dataset")?;
+    anyhow::ensure!(
+        fed.n_clients() as u64 == assignment.clients,
+        "the recipe yields {} clients but the assignment says {}",
+        fed.n_clients(),
+        assignment.clients
+    );
+    let locals = native_locals(&fed);
+    let features: Vec<Option<Mat>> = fed.clients.iter().map(|c| Some(c.a.clone())).collect();
+    let d = locals[0].dim();
+    let n = locals.len();
+    let smoothness = estimate_smoothness(&locals, cfg.lambda);
+    let env = Env { locals: &locals, cfg: &cfg, d, n, smoothness, features, obs: Obs::noop() };
+    let (_server, clients) = build_split(&env)?;
+    let rngs = client_rngs(cfg.seed, n);
+    Ok(clients
+        .into_iter()
+        .zip(rngs)
+        .enumerate()
+        .filter(|(i, _)| i % workers == w)
+        .map(|(i, (c, r))| (i, c, r, native_local(&fed, i)))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::coordinator::run_federated;
+    use crate::data::SyntheticSpec;
+    use crate::obs::NOOP;
+
+    fn tiny_fed(seed: u64) -> FederatedDataset {
+        FederatedDataset::synthetic(&SyntheticSpec {
+            n_clients: 5,
+            m_per_client: 25,
+            dim: 8,
+            intrinsic_dim: 3,
+            noise: 0.0,
+            seed,
+        })
+    }
+
+    #[test]
+    fn listen_run_matches_lockstep_in_process() {
+        let fed = tiny_fed(50);
+        let base = RunConfig {
+            algorithm: Algorithm::Bl1,
+            rounds: 6,
+            target_gap: 0.0,
+            ..RunConfig::default()
+        };
+        let lockstep = run_federated(&fed, &base).unwrap();
+        let cfg = RunConfig {
+            transport: TransportSpec::Listen { addr: "127.0.0.1:0".into(), workers: 2 },
+            ..base
+        };
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let out = std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                run_federated_listen(&fed, &cfg, &NOOP, &mut |a| addr_tx.send(a).unwrap())
+            });
+            let addr = addr_rx.recv().unwrap().to_string();
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let addr = addr.clone();
+                    s.spawn(move || run_worker(&addr, &mut |_| {}))
+                })
+                .collect();
+            for h in workers {
+                h.join().unwrap().unwrap();
+            }
+            server.join().unwrap()
+        })
+        .unwrap();
+        assert_eq!(lockstep.history.records, out.history.records);
+        assert_eq!(lockstep.x_final, out.x_final);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected_cleanly_on_both_sides() {
+        let fed = tiny_fed(51);
+        let cfg =
+            RunConfig { algorithm: Algorithm::Gd, rounds: 2, ..RunConfig::default() };
+        let assignment = Assignment {
+            fingerprint: cfg.fingerprint() ^ 0xdead_beef,
+            workers: 1,
+            clients: fed.n_clients() as u64,
+            config: cfg.to_wire(),
+            recipe: fed.recipe.as_ref().unwrap().render(),
+        };
+        let endpoint = TcpServer::bind("127.0.0.1:0", 1, Duration::from_secs(10)).unwrap();
+        let addr = endpoint.local_addr().unwrap().to_string();
+        std::thread::scope(|s| {
+            let worker = s.spawn(move || run_worker(&addr, &mut |_| {}));
+            // Server side: a clean error naming the rejection, not a hang.
+            let server_err = endpoint.accept_remote(&assignment).unwrap_err();
+            let msg = format!("{server_err:#}");
+            assert!(
+                msg.contains("rejected its assignment") && msg.contains("fingerprint mismatch"),
+                "{msg}"
+            );
+            // Worker side: a clean error naming the mismatch.
+            let worker_err = worker.join().unwrap().unwrap_err();
+            let msg = format!("{worker_err:#}");
+            assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        });
+    }
+
+    #[test]
+    fn recipeless_dataset_is_rejected_with_a_clear_error() {
+        let mut fed = tiny_fed(52);
+        fed.recipe = None;
+        let cfg = RunConfig {
+            transport: TransportSpec::Listen { addr: "127.0.0.1:0".into(), workers: 1 },
+            ..RunConfig::default()
+        };
+        let err = run_federated_listen(&fed, &cfg, &NOOP, &mut |_| {}).unwrap_err();
+        assert!(format!("{err:#}").contains("no construction recipe"), "{err:#}");
+    }
+}

@@ -19,8 +19,107 @@ pub use registry::{find, registry, DatasetEntry};
 pub use synthetic::SyntheticSpec;
 
 use crate::linalg::Mat;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// A deterministic *construction recipe* for a [`FederatedDataset`]: the
+/// small value a listening round loop ships to standalone worker processes
+/// (inside the `Assign` handshake frame, docs/WIRE.md) so each worker can
+/// rebuild its data shards locally instead of receiving megabytes of
+/// features over the wire — dataset builds are pure functions of the
+/// recipe, so both sides end up with bit-identical shards.
+///
+/// Datasets loaded from ad-hoc files or records carry no recipe
+/// ([`FederatedDataset::recipe`] is `None`) and cannot serve multi-process
+/// runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataRecipe {
+    /// A Table-2 registry dataset: `registry::find(name).build(seed, full_scale)`.
+    Registry { name: String, seed: u64, full_scale: bool },
+    /// A synthetic dataset: `FederatedDataset::synthetic(&spec)`.
+    Synthetic(SyntheticSpec),
+}
+
+impl DataRecipe {
+    /// Canonical wire rendering ([`DataRecipe::parse`] inverts it). The
+    /// synthetic noise travels as its hex f64 bit pattern so the rebuilt
+    /// dataset is bit-identical.
+    pub fn render(&self) -> String {
+        match self {
+            DataRecipe::Registry { name, seed, full_scale } => {
+                format!(
+                    "registry name={name} seed={seed} scale={}",
+                    if *full_scale { "paper" } else { "scaled" }
+                )
+            }
+            DataRecipe::Synthetic(s) => format!(
+                "synth n={} m={} d={} r={} noise={} seed={}",
+                s.n_clients,
+                s.m_per_client,
+                s.dim,
+                s.intrinsic_dim,
+                crate::config::f64_to_wire(s.noise),
+                s.seed
+            ),
+        }
+    }
+
+    /// Parse a [`DataRecipe::render`] string. Strict: unknown tags, unknown
+    /// or duplicate keys, and missing keys are all errors.
+    pub fn parse(text: &str) -> Result<DataRecipe> {
+        let mut words = text.split_whitespace();
+        let tag = words.next().context("empty data recipe")?;
+        let mut kv = std::collections::BTreeMap::new();
+        for w in words {
+            let (k, v) = w
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("malformed recipe field {w:?}"))?;
+            if kv.insert(k, v).is_some() {
+                bail!("duplicate recipe key {k:?}");
+            }
+        }
+        let take = |kv: &mut std::collections::BTreeMap<&str, &str>, k: &str| -> Result<String> {
+            kv.remove(k).map(str::to_string).with_context(|| format!("recipe key {k:?} missing"))
+        };
+        let recipe = match tag {
+            "registry" => DataRecipe::Registry {
+                name: take(&mut kv, "name")?,
+                seed: take(&mut kv, "seed")?.parse().context("recipe seed")?,
+                full_scale: match take(&mut kv, "scale")?.as_str() {
+                    "paper" => true,
+                    "scaled" => false,
+                    other => bail!("unknown recipe scale {other:?}"),
+                },
+            },
+            "synth" => DataRecipe::Synthetic(SyntheticSpec {
+                n_clients: take(&mut kv, "n")?.parse().context("recipe n")?,
+                m_per_client: take(&mut kv, "m")?.parse().context("recipe m")?,
+                dim: take(&mut kv, "d")?.parse().context("recipe d")?,
+                intrinsic_dim: take(&mut kv, "r")?.parse().context("recipe r")?,
+                noise: crate::config::f64_from_wire(&take(&mut kv, "noise")?)?,
+                seed: take(&mut kv, "seed")?.parse().context("recipe seed")?,
+            }),
+            other => bail!("unknown data recipe tag {other:?}"),
+        };
+        if let Some((k, _)) = kv.into_iter().next() {
+            bail!("unknown recipe key {k:?}");
+        }
+        Ok(recipe)
+    }
+
+    /// Rebuild the dataset this recipe describes (a pure function — every
+    /// call yields bit-identical shards).
+    pub fn build(&self) -> Result<FederatedDataset> {
+        match self {
+            DataRecipe::Registry { name, seed, full_scale } => {
+                let entry = registry::find(name)
+                    .with_context(|| format!("recipe names unknown dataset {name:?}"))?;
+                Ok(entry.build(*seed, *full_scale))
+            }
+            DataRecipe::Synthetic(spec) => Ok(FederatedDataset::synthetic(spec)),
+        }
+    }
+}
 
 /// One client's local shard: `m` data points as rows of `a`, labels in
 /// `b ∈ {−1, +1}^m`.
@@ -56,6 +155,10 @@ pub struct FederatedDataset {
     pub clients: Vec<ClientData>,
     /// Short name used in CSV/plots ("a1a-synth", "madelon-synth", ...).
     pub name: String,
+    /// How to rebuild this dataset from scratch, when known — required for
+    /// multi-process runs (see [`DataRecipe`]). `None` for datasets built
+    /// from ad-hoc files/records.
+    pub recipe: Option<DataRecipe>,
 }
 
 impl FederatedDataset {
@@ -85,7 +188,9 @@ impl FederatedDataset {
 
     /// Generate a synthetic federated dataset (see [`SyntheticSpec`]).
     pub fn synthetic(spec: &SyntheticSpec) -> Self {
-        synthetic::generate(spec)
+        let mut fed = synthetic::generate(spec);
+        fed.recipe = Some(DataRecipe::Synthetic(*spec));
+        fed
     }
 
     /// Load a LibSVM-format file and partition it evenly across `n` clients
@@ -130,7 +235,7 @@ impl FederatedDataset {
             }
             clients.push(ClientData { a, b });
         }
-        FederatedDataset { clients, name: name.to_string() }
+        FederatedDataset { clients, name: name.to_string(), recipe: None }
     }
 }
 
@@ -169,6 +274,58 @@ mod tests {
     #[should_panic]
     fn too_many_clients_panics() {
         FederatedDataset::from_records(tiny_records(), 6, "tiny");
+    }
+
+    #[test]
+    fn recipes_round_trip_and_rebuild_identically() {
+        // Synthetic: recipe is attached, renders/parses losslessly, and a
+        // rebuild from the parsed recipe is bit-identical.
+        let spec = SyntheticSpec {
+            n_clients: 2,
+            m_per_client: 8,
+            dim: 6,
+            intrinsic_dim: 3,
+            noise: 0.1 + 0.2, // not exactly representable in decimal
+            seed: 7,
+        };
+        let fed = FederatedDataset::synthetic(&spec);
+        let recipe = fed.recipe.clone().expect("synthetic datasets carry a recipe");
+        let parsed = DataRecipe::parse(&recipe.render()).unwrap();
+        assert_eq!(parsed, recipe);
+        let rebuilt = parsed.build().unwrap();
+        assert_eq!(rebuilt.name, fed.name);
+        for (a, b) in fed.clients.iter().zip(&rebuilt.clients) {
+            assert_eq!(a.b, b.b);
+            for (x, y) in a.a.data().iter().zip(b.a.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+
+        // Registry: the recipe survives the rename and rebuilds by name.
+        let fed = registry::find("a1a").unwrap().build(3, false);
+        let recipe = fed.recipe.clone().unwrap();
+        assert_eq!(
+            recipe,
+            DataRecipe::Registry { name: "a1a".into(), seed: 3, full_scale: false }
+        );
+        let rebuilt = DataRecipe::parse(&recipe.render()).unwrap().build().unwrap();
+        assert_eq!(rebuilt.name, "a1a-s");
+        assert_eq!(rebuilt.n_clients(), fed.n_clients());
+
+        // Ad-hoc records carry no recipe.
+        assert!(FederatedDataset::from_records(tiny_records(), 2, "tiny").recipe.is_none());
+
+        // Strictness: unknown tag / unknown key / duplicate key / missing key.
+        assert!(DataRecipe::parse("mystery a=1").is_err());
+        assert!(DataRecipe::parse("registry name=a1a seed=1 scale=paper extra=1").is_err());
+        assert!(DataRecipe::parse("registry name=a1a seed=1 seed=2 scale=paper").is_err());
+        assert!(DataRecipe::parse("registry name=a1a scale=paper").is_err());
+        assert!(DataRecipe::parse("registry name=a1a seed=1 scale=huge").is_err());
+        assert!(DataRecipe::parse("").is_err());
+
+        // An unknown registry name parses but cannot build.
+        let bad = DataRecipe::Registry { name: "nope".into(), seed: 1, full_scale: true };
+        assert!(bad.build().is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! `d²`, clients); pass `--full-scale` to the CLI to run the paper-sized
 //! shapes.
 
-use super::{FederatedDataset, SyntheticSpec};
+use super::{DataRecipe, FederatedDataset, SyntheticSpec};
 
 /// One dataset row of Table 2 plus its synthetic stand-in parameters.
 #[derive(Clone, Copy, Debug)]
@@ -56,6 +56,12 @@ impl DatasetEntry {
         let spec = if full_scale { self.paper_spec(seed) } else { self.spec(seed) };
         let mut fed = FederatedDataset::synthetic(&spec);
         fed.name = format!("{}{}", self.name, if full_scale { "" } else { "-s" });
+        // The registry build is itself a pure function of (name, seed, scale),
+        // so remote workers rebuild via the registry rather than a raw spec —
+        // this keeps the renamed dataset (and any future non-synthetic
+        // registry sources) reproducible from the recipe alone.
+        fed.recipe =
+            Some(DataRecipe::Registry { name: self.name.to_string(), seed, full_scale });
         fed
     }
 

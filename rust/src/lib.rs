@@ -83,13 +83,13 @@ pub mod prelude {
         RankR, TopK, VecCompressor,
     };
     pub use crate::config::{Algorithm, RunConfig, TransportSpec};
-    pub use crate::coordinator::{run_federated, RunOutput};
-    pub use crate::data::{FederatedDataset, SyntheticSpec};
+    pub use crate::coordinator::{run_federated, run_federated_listen, run_worker, RunOutput};
+    pub use crate::data::{DataRecipe, FederatedDataset, SyntheticSpec};
     pub use crate::linalg::{Mat, Vector};
     pub use crate::metrics::History;
     pub use crate::obs::{JsonlRecorder, NoopRecorder, Obs, Recorder};
     pub use crate::problem::{LocalProblem, LogisticProblem};
     pub use crate::rng::Rng;
     pub use crate::sweep::{run_cells, DatasetRef, SweepCell, SweepSpec};
-    pub use crate::transport::{ClientStep, Lockstep, Threaded, Transport};
+    pub use crate::transport::{ClientStep, Lockstep, TcpServer, Threaded, Transport};
 }

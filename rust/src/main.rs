@@ -4,6 +4,7 @@
 //! repro experiment <id> [--full-scale] [--seed N] [--jobs N]   regenerate a paper table/figure
 //! repro sweep [grid axes] [--jobs N]                           ad-hoc parallel run grid
 //! repro run [options]                                          one federated run
+//! repro worker --connect <host:port>                           standalone federation worker
 //! repro trace <trace.jsonl> [--chrome OUT.json]                summarize / export a trace
 //! repro data <name> [--full-scale]                             inspect a registry dataset
 //! repro list                                                   algorithms / experiments / datasets
@@ -67,11 +68,28 @@
 //!                          (in-round client concurrency — tcp moves real
 //!                          bytes over loopback sockets; results are
 //!                          bit-identical across backends)
+//! --listen HOST:PORT       serve the round loop to standalone `repro worker`
+//!                          processes instead of in-process workers (port 0
+//!                          picks a free port; the resolved address is printed)
+//! --workers K              remote workers to register with --listen          [1]
+//! --handshake-timeout SECS worker connect/greet deadline                    [30]
 //! --pjrt                   evaluate loss/grad/Hessian via PJRT artifacts
 //!                          (needs a build with `--features pjrt`)
 //! --artifacts DIR          artifact directory for --pjrt                  [artifacts]
 //! --csv PATH               write the run history CSV
 //! --trace PATH             record a trace JSONL (see docs/TRACING.md)
+//! ```
+//!
+//! `repro worker --connect <host:port>` dials a `repro run --listen` round
+//! loop, receives its assignment (run fingerprint, config, data recipe,
+//! client indices) over the `Join`/`Assign` handshake (docs/WIRE.md),
+//! rebuilds its data shards locally, and serves rounds until the run ends.
+//! Two-terminal quickstart:
+//! ```text
+//! # terminal 1 — the round loop, waiting for 2 workers
+//! repro run --algo bl1 --dataset a1a --listen 127.0.0.1:7070 --workers 2
+//! # terminal 2 (×2) — the workers
+//! repro worker --connect 127.0.0.1:7070
 //! ```
 //!
 //! `repro trace <trace.jsonl>` prints per-phase wall-time, per-message-kind
@@ -187,13 +205,17 @@ fn real_main() -> Result<()> {
         Some("experiment") | Some("exp") => cmd_experiment(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("run") => cmd_run(&args),
+        Some("worker") => cmd_worker(&args),
         Some("trace") => cmd_trace(&args),
         Some("data") => cmd_data(&args),
         Some("list") => cmd_list(),
         Some("audit") => cmd_audit(&args),
         Some("bench") => cmd_bench(&args),
         Some(other) => {
-            bail!("unknown command '{other}' (experiment|sweep|run|trace|data|list|audit|bench)")
+            bail!(
+                "unknown command '{other}' \
+                 (experiment|sweep|run|worker|trace|data|list|audit|bench)"
+            )
         }
         None => {
             print_usage();
@@ -205,7 +227,8 @@ fn real_main() -> Result<()> {
 fn print_usage() {
     println!("repro — Basis Matters (Qian et al., 2021) reproduction");
     println!(
-        "usage: repro <experiment|sweep|run|trace|data|list|audit|bench> [options]   (see README.md)"
+        "usage: repro <experiment|sweep|run|worker|trace|data|list|audit|bench> [options]   \
+         (see README.md)"
     );
 }
 
@@ -345,6 +368,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         master_seed: args.parsed("master-seed")?.unwrap_or(0),
     };
 
+    if matches!(spec.base.transport, TransportSpec::Listen { .. }) {
+        bail!(
+            "sweep does not support the listen transport (one listener cannot serve \
+             many concurrent runs) — use `repro run --listen` for multi-process runs"
+        );
+    }
     let cells = spec.expand();
     let mut jobs: usize = args.parsed("jobs")?.unwrap_or_else(default_jobs);
     // A threaded in-run transport multiplies thread counts: budget the
@@ -623,6 +652,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     let fed = load_dataset(args)?;
     let r = fed.avg_intrinsic_dim(1e-9).round() as usize;
 
+    let transport = match args.flag("listen") {
+        Some(addr) => {
+            if args.has("transport") {
+                bail!("--listen and --transport are mutually exclusive");
+            }
+            if !addr.contains(':') {
+                bail!("--listen needs a host:port address (e.g. 127.0.0.1:0)");
+            }
+            let workers: usize = args.parsed("workers")?.unwrap_or(1);
+            if workers == 0 {
+                bail!("--workers must be at least 1");
+            }
+            TransportSpec::Listen { addr: addr.to_string(), workers }
+        }
+        None => args.parsed("transport")?.unwrap_or_default(),
+    };
     let cfg = RunConfig {
         algorithm: args.parsed::<Algorithm>("algo")?.unwrap_or(Algorithm::Bl1),
         rounds: args.parsed("rounds")?.unwrap_or(500),
@@ -640,7 +685,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         gamma: args.parsed("gamma")?,
         target_gap: args.parsed("target-gap")?.unwrap_or(1e-12),
         seed: args.parsed("seed")?.unwrap_or(1),
-        transport: args.parsed("transport")?.unwrap_or_default(),
+        transport,
+        handshake_timeout_ms: args
+            .parsed::<f64>("handshake-timeout")?
+            .map(|secs| (secs * 1000.0).round() as u64)
+            .unwrap_or(basis_learn::config::DEFAULT_HANDSHAKE_TIMEOUT_MS),
         ..RunConfig::default()
     };
     if args.has("pjrt") && cfg.transport != TransportSpec::Lockstep {
@@ -654,6 +703,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let out = if args.has("pjrt") {
         run_pjrt(args, &fed, &cfg, rec)?
+    } else if let TransportSpec::Listen { workers, .. } = &cfg.transport {
+        let workers = *workers;
+        basis_learn::coordinator::run_federated_listen(&fed, &cfg, rec, &mut |addr| {
+            println!("listening on {addr} — waiting for {workers} worker(s)");
+            println!("connect each with: repro worker --connect {addr}");
+        })?
     } else {
         run_federated_traced(&fed, &cfg, rec)?
     };
@@ -676,6 +731,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Every flag `repro worker` understands (same typo protection as sweep).
+const WORKER_FLAGS: &[&str] = &["connect"];
+
+/// `repro worker` — the standalone federation worker process: dial a
+/// `repro run --listen` round loop, rebuild the assigned shards locally
+/// from the Join/Assign handshake, and serve rounds until the run ends.
+fn cmd_worker(args: &Args) -> Result<()> {
+    for (flag, _) in &args.flags {
+        if !WORKER_FLAGS.contains(&flag.as_str()) {
+            bail!("unknown worker flag '--{flag}'; valid flags: --{}", WORKER_FLAGS.join(", --"));
+        }
+    }
+    let addr = args
+        .flag("connect")
+        .context("usage: repro worker --connect <host:port>")?;
+    basis_learn::coordinator::run_worker(addr, &mut |line| println!("{line}"))
 }
 
 /// `repro trace` — summarize a `--trace` JSONL file (per-phase wall time,

@@ -36,12 +36,20 @@ use anyhow::{bail, Context, Result};
 pub const MAGIC: [u8; 4] = *b"BLWF";
 
 /// Wire-format version byte. Bump on any incompatible layout change
-/// (including reordering [`WIRE_KINDS`]).
-pub const VERSION: u8 = 1;
+/// (including reordering [`WIRE_KINDS`]). v2 added the `Join`/`Assign`
+/// handshake frames for standalone worker processes (docs/WIRE.md).
+pub const VERSION: u8 = 2;
 
 /// Fixed frame-header length in bytes: magic(4) + version(1) + kind(1) +
 /// round(8) + exchange(8) + client(8) + body_len(4).
 pub const HEADER_LEN: usize = 34;
+
+/// Hard cap on a frame body. The header's `body_len` is attacker-controlled
+/// on a non-loopback connection, so the session layer rejects anything
+/// larger *before* allocating — a hostile header is a decode error, never a
+/// multi-GiB allocation. 256 MiB is ~3 orders of magnitude above the
+/// largest legitimate frame (a full d×d Hessian at paper scale).
+pub const MAX_BODY_LEN: usize = 1 << 28;
 
 /// Wire ids for message kinds: `id = position in this table`. Mirrors the
 /// names in [`super::kinds::KINDS`] (registry order) and is **append-only**
@@ -80,6 +88,11 @@ pub const WIRE_KINDS: &[&str] = &[
 
 /// What a frame carries (byte value on the wire; `0` is reserved so an
 /// all-zero buffer can never parse as a frame).
+///
+/// Like [`WIRE_KINDS`], the byte assignment is **append-only**: reusing or
+/// renumbering a byte is a wire-format break and requires a [`VERSION`]
+/// bump. The [`FRAME_KINDS`] table mirrors this enum and the audit's
+/// `codec-sync` rule keeps the two in lockstep.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameKind {
     /// Worker → server greeting; `client` carries the worker index.
@@ -88,8 +101,54 @@ pub enum FrameKind {
     Packet = 2,
     /// Orderly shutdown; the receiver stops reading.
     Bye = 3,
-    /// A client-side failure; the body is a UTF-8 message.
+    /// A failure report; the body is a UTF-8 message.
     Error = 4,
+    /// Remote worker → server: request to join a listening round loop
+    /// (extended handshake, v2). Bodyless; the server replies with
+    /// [`FrameKind::Assign`].
+    Join = 5,
+    /// Server → remote worker: the run assignment (v2). `client` carries
+    /// the assigned worker index; the body is an encoded [`Assignment`].
+    Assign = 6,
+}
+
+/// Frame-kind names and their wire bytes, in byte order. Mirrors
+/// [`FrameKind`] exactly (checked by a compiled test and the audit's
+/// `codec-sync` rule) and is **append-only** like [`WIRE_KINDS`].
+pub const FRAME_KINDS: &[(&str, u8)] = &[
+    ("hello", 1),
+    ("packet", 2),
+    ("bye", 3),
+    ("error", 4),
+    ("join", 5),
+    ("assign", 6),
+];
+
+impl FrameKind {
+    /// Decode a wire byte (`None` for unknown bytes, including reserved 0).
+    pub fn from_byte(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::Packet),
+            3 => Some(FrameKind::Bye),
+            4 => Some(FrameKind::Error),
+            5 => Some(FrameKind::Join),
+            6 => Some(FrameKind::Assign),
+            _ => None,
+        }
+    }
+
+    /// The [`FRAME_KINDS`] name of this frame kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameKind::Hello => "hello",
+            FrameKind::Packet => "packet",
+            FrameKind::Bye => "bye",
+            FrameKind::Error => "error",
+            FrameKind::Join => "join",
+            FrameKind::Assign => "assign",
+        }
+    }
 }
 
 /// The addressing header every frame carries: which exchange of which round
@@ -133,8 +192,8 @@ pub fn wire_id(kind: &str) -> Result<u16> {
 
 /// Append the 34-byte frame header for a `body_len`-byte body to `out`.
 pub fn encode_header(h: &FrameHeader, body_len: usize, out: &mut Vec<u8>) -> Result<()> {
-    if body_len > u32::MAX as usize {
-        bail!("frame body of {body_len} bytes exceeds the u32 length field");
+    if body_len > MAX_BODY_LEN {
+        bail!("frame body of {body_len} bytes exceeds MAX_BODY_LEN ({MAX_BODY_LEN})");
     }
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
@@ -155,12 +214,8 @@ pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<(FrameHeader, usize)> {
     if buf[4] != VERSION {
         bail!("unsupported wire version {} (this build speaks {VERSION})", buf[4]);
     }
-    let kind = match buf[5] {
-        1 => FrameKind::Hello,
-        2 => FrameKind::Packet,
-        3 => FrameKind::Bye,
-        4 => FrameKind::Error,
-        k => bail!("unknown frame kind byte {k:#04x}"),
+    let Some(kind) = FrameKind::from_byte(buf[5]) else {
+        bail!("unknown frame kind byte {:#04x}", buf[5]);
     };
     let u64_at = |i: usize| {
         let mut b = [0u8; 8];
@@ -176,6 +231,64 @@ pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<(FrameHeader, usize)> {
         client: u64_at(22),
     };
     Ok((header, u32::from_le_bytes(len) as usize))
+}
+
+/// The body of an [`FrameKind::Assign`] frame: everything a standalone
+/// worker process needs to rebuild its share of the run locally (the
+/// assigned worker index travels in the frame header's `client` field).
+///
+/// The config and data recipe cross as their canonical string renderings
+/// ([`crate::config::RunConfig::to_wire`] /
+/// [`crate::data::DataRecipe::render`]); the fingerprint lets the worker
+/// verify that its decoded config is *semantically identical* to the
+/// server's before any computation starts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    /// [`crate::config::RunConfig::fingerprint`] of the server's config.
+    pub fingerprint: u64,
+    /// Total registered workers K (client `i` is pinned to worker `i % K`).
+    pub workers: u64,
+    /// Total clients n in the federation.
+    pub clients: u64,
+    /// Wire rendering of the run config.
+    pub config: String,
+    /// Wire rendering of the data recipe.
+    pub recipe: String,
+}
+
+/// Encode an [`Assignment`] body: three u64s, then two u32-length-prefixed
+/// UTF-8 strings.
+pub fn encode_assign(a: &Assignment, out: &mut Vec<u8>) -> Result<()> {
+    out.extend_from_slice(&a.fingerprint.to_le_bytes());
+    out.extend_from_slice(&a.workers.to_le_bytes());
+    out.extend_from_slice(&a.clients.to_le_bytes());
+    for (what, s) in [("config", &a.config), ("recipe", &a.recipe)] {
+        encode_len(s.len(), what, out)?;
+        out.extend_from_slice(s.as_bytes());
+    }
+    Ok(())
+}
+
+/// Decode an [`Assignment`] body. Strict like [`decode_packet`]: lengths
+/// are validated against the bytes present before allocation, the strings
+/// must be valid UTF-8, and trailing bytes are an error.
+pub fn decode_assign(buf: &[u8]) -> Result<Assignment> {
+    let mut r = Reader { buf, pos: 0 };
+    let fingerprint = r.u64().context("assignment fingerprint")?;
+    let workers = r.u64().context("assignment worker count")?;
+    let clients = r.u64().context("assignment client count")?;
+    let mut string = |what: &str| -> Result<String> {
+        let n = r.u32().with_context(|| format!("assignment {what} length"))? as usize;
+        let bytes = r.take(n).with_context(|| format!("assignment {what}"))?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| anyhow::anyhow!("assignment {what} is not UTF-8: {e}"))
+    };
+    let config = string("config")?;
+    let recipe = string("recipe")?;
+    if r.pos != buf.len() {
+        bail!("{} trailing bytes after the assignment", buf.len() - r.pos);
+    }
+    Ok(Assignment { fingerprint, workers, clients, config, recipe })
 }
 
 /// Encode a packet body into a fresh buffer. See [`encode_packet_into`].
@@ -506,6 +619,70 @@ mod tests {
         let mut bad = arr;
         bad[5] = 0;
         assert!(decode_header(&bad).is_err(), "frame kind 0 accepted");
+    }
+
+    #[test]
+    fn frame_kinds_mirror_the_enum() {
+        // The compiled half of the codec-sync guarantee for frame kinds:
+        // the table, `from_byte` and `name` agree, byte 0 stays reserved,
+        // and bytes/names are unique.
+        for &(name, byte) in FRAME_KINDS {
+            assert_ne!(byte, 0, "frame byte 0 is reserved");
+            let kind = FrameKind::from_byte(byte)
+                .unwrap_or_else(|| panic!("FRAME_KINDS byte {byte} not decodable"));
+            assert_eq!(kind as u8, byte, "{name}: discriminant mismatch");
+            assert_eq!(kind.name(), name, "byte {byte}: name mismatch");
+        }
+        for b in 0..=u8::MAX {
+            if let Some(kind) = FrameKind::from_byte(b) {
+                assert!(
+                    FRAME_KINDS.iter().any(|&(_, byte)| byte == b),
+                    "decodable byte {b} missing from FRAME_KINDS"
+                );
+                assert_eq!(kind as u8, b);
+            }
+        }
+        let mut names: Vec<&str> = FRAME_KINDS.iter().map(|&(n, _)| n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), FRAME_KINDS.len(), "duplicate frame-kind name");
+    }
+
+    #[test]
+    fn assignment_round_trip_and_strictness() {
+        let a = Assignment {
+            fingerprint: 0xdead_beef_0bad_f00d,
+            workers: 3,
+            clients: 17,
+            config: "algorithm=bl1\nrounds=20".into(),
+            recipe: "synth n=5 m=25".into(),
+        };
+        let mut body = Vec::new();
+        encode_assign(&a, &mut body).unwrap();
+        assert_eq!(decode_assign(&body).unwrap(), a);
+        // Every truncation prefix is an error, never a panic.
+        for cut in 0..body.len() {
+            assert!(decode_assign(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // Trailing garbage is an error.
+        body.push(0);
+        assert!(decode_assign(&body).is_err());
+        // Non-UTF-8 config bytes are an error.
+        let mut bad = Vec::new();
+        encode_assign(&Assignment { config: "ab".into(), ..a.clone() }, &mut bad).unwrap();
+        let cfg_at = 8 * 3 + 4;
+        bad[cfg_at] = 0xff;
+        bad[cfg_at + 1] = 0xfe;
+        assert!(decode_assign(&bad).is_err());
+    }
+
+    #[test]
+    fn oversized_body_cannot_encode() {
+        let h = FrameHeader::control(FrameKind::Packet, 0);
+        let mut out = Vec::new();
+        assert!(encode_header(&h, MAX_BODY_LEN + 1, &mut out).is_err());
+        out.clear();
+        assert!(encode_header(&h, MAX_BODY_LEN, &mut out).is_ok());
     }
 
     #[test]

@@ -42,6 +42,7 @@
 //! | [`Lockstep`]         | serially, in-process | borrowed (any, incl. non-`Send` PJRT oracles) | reference semantics, tests, PJRT |
 //! | [`Threaded`]         | concurrently on a scoped worker pool | rebuilt per worker from a [`ProblemFactory`] | multi-core simulation |
 //! | [`Tcp`]              | concurrently, one scoped thread + loopback socket per worker | rebuilt per worker from a [`ProblemFactory`] | real-socket federation (bytes on the wire) |
+//! | [`Tcp`] via [`TcpServer`] | in standalone `repro worker` processes dialing a listening round loop | rebuilt per process from the `Assign` handshake's data recipe | multi-host federation (`crate::coordinator::remote`) |
 //!
 //! # Determinism guarantee
 //!
@@ -90,9 +91,10 @@ mod lockstep;
 pub mod session;
 mod tcp;
 mod threaded;
+pub(crate) mod worker;
 
 pub use lockstep::Lockstep;
-pub use tcp::Tcp;
+pub use tcp::{Tcp, TcpServer};
 pub use threaded::Threaded;
 
 use crate::compressors::BitCost;

@@ -12,7 +12,7 @@
 //! sends, so steady-state framing costs one `write_all` per frame and no
 //! allocation once the buffer has grown to the round's packet size.
 
-use super::codec::{self, FrameHeader, FrameKind};
+use super::codec::{self, Assignment, FrameHeader, FrameKind};
 use super::Packet;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -24,7 +24,11 @@ pub enum FramePayload {
     Packet(Packet),
     /// A [`FrameKind::Error`] frame's message (a remote failure report).
     Error(String),
-    /// A bodyless control frame ([`FrameKind::Hello`] / [`FrameKind::Bye`]).
+    /// An [`FrameKind::Assign`] frame's decoded run assignment (the
+    /// assigned worker index is in the frame header's `client` field).
+    Assign(Assignment),
+    /// A bodyless control frame ([`FrameKind::Hello`] / [`FrameKind::Bye`]
+    /// / [`FrameKind::Join`]).
     Control(FrameKind),
 }
 
@@ -43,6 +47,12 @@ impl<S: Read + Write> Session<S> {
     /// a TCP connection down out from under a blocked reader).
     pub fn stream_ref(&self) -> &S {
         &self.stream
+    }
+
+    /// Take the stream back out of the session (handing a handshake-phase
+    /// connection over to the round-loop machinery).
+    pub fn into_inner(self) -> S {
+        self.stream
     }
 
     /// Frame and send one packet under the given header (the header's
@@ -68,6 +78,21 @@ impl<S: Read + Write> Session<S> {
         Ok(())
     }
 
+    /// Send an [`FrameKind::Assign`] frame carrying the run assignment for
+    /// worker `worker` (the index rides in the header's `client` field).
+    pub fn send_assign(&mut self, worker: usize, assignment: &Assignment) -> Result<()> {
+        self.scratch.clear();
+        codec::encode_assign(assignment, &mut self.scratch)
+            .context("encoding assignment body")?;
+        let mut head = Vec::with_capacity(codec::HEADER_LEN);
+        let h = FrameHeader::control(FrameKind::Assign, worker);
+        codec::encode_header(&h, self.scratch.len(), &mut head)?;
+        self.stream.write_all(&head).context("writing assignment header")?;
+        self.stream.write_all(&self.scratch).context("writing assignment body")?;
+        self.stream.flush().context("flushing assignment frame")?;
+        Ok(())
+    }
+
     /// Report a failure to the peer: an [`FrameKind::Error`] frame whose
     /// body is the UTF-8 message, re-using the failed exchange's header
     /// coordinates so the receiver can attribute it.
@@ -88,6 +113,16 @@ impl<S: Read + Write> Session<S> {
         let mut head = [0u8; codec::HEADER_LEN];
         self.stream.read_exact(&mut head).context("reading frame header")?;
         let (header, body_len) = codec::decode_header(&head)?;
+        // The length field is peer-controlled: reject absurd values before
+        // the resize below allocates (a hostile header must be a decode
+        // error, never a multi-GiB allocation or OOM abort).
+        if body_len > codec::MAX_BODY_LEN {
+            bail!(
+                "frame body length {body_len} exceeds MAX_BODY_LEN ({}) — \
+                 corrupt or hostile header",
+                codec::MAX_BODY_LEN
+            );
+        }
         self.scratch.clear();
         self.scratch.resize(body_len, 0);
         self.stream.read_exact(&mut self.scratch).with_context(|| {
@@ -100,6 +135,9 @@ impl<S: Read + Write> Session<S> {
             FrameKind::Error => {
                 FramePayload::Error(String::from_utf8_lossy(&self.scratch).into_owned())
             }
+            FrameKind::Assign => FramePayload::Assign(
+                codec::decode_assign(&self.scratch).context("decoding assignment body")?,
+            ),
             kind => {
                 if body_len != 0 {
                     bail!("{kind:?} frame carries an unexpected {body_len}-byte body");
@@ -182,6 +220,25 @@ mod tests {
         assert!(matches!(f, FramePayload::Error(m) if m == "client 5 exploded"));
         let (_, f) = s.recv().unwrap();
         assert!(matches!(f, FramePayload::Control(FrameKind::Bye)));
+    }
+
+    #[test]
+    fn join_and_assign_frames_round_trip() {
+        let mut s = loopback();
+        s.send_control(FrameKind::Join, 0).unwrap();
+        let a = Assignment {
+            fingerprint: 42,
+            workers: 2,
+            clients: 5,
+            config: "algorithm=bl1".into(),
+            recipe: "synth n=5".into(),
+        };
+        s.send_assign(1, &a).unwrap();
+        let (_, f) = s.recv().unwrap();
+        assert!(matches!(f, FramePayload::Control(FrameKind::Join)));
+        let (h, f) = s.recv().unwrap();
+        assert_eq!(h.client, 1, "assigned worker index rides in the header");
+        assert!(matches!(f, FramePayload::Assign(got) if got == a));
     }
 
     #[test]

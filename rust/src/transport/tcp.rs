@@ -1,15 +1,29 @@
-//! The real-socket backend: every exchange crosses TCP loopback as bytes.
+//! The real-socket backend: every exchange crosses TCP as bytes.
 //!
-//! Layout: one listener per round loop, one connection per worker thread
-//! (client `i` is pinned to worker `i % workers`, exactly like
-//! [`super::Threaded`]). Downlinks are encoded by [`super::codec`], framed
-//! by [`super::session::Session`], written to the worker's socket, decoded
-//! on the worker, computed, and the uplink comes back the same way — so the
+//! Layout: one listener per round loop, one connection per worker (client
+//! `i` is pinned to worker `i % workers`, exactly like [`super::Threaded`]).
+//! Downlinks are encoded by [`super::codec`], framed by
+//! [`super::session::Session`], written to the worker's socket, decoded on
+//! the worker, computed, and the uplink comes back the same way — so the
 //! server-side [`crate::coordinator::CommTally`] is derived from packets
 //! that were *actually serialized and decoded*, and the codec's exact f64
 //! round-trip is what keeps the tally (and the whole
 //! [`crate::metrics::History`]) bit-identical to the in-process backends
 //! (`tests/transport_equivalence.rs`).
+//!
+//! Two ways to register the workers, one serving path:
+//!
+//! * [`Tcp::spawn`] — in-process federation: scoped worker *threads* connect
+//!   back over loopback and self-identify with a `Hello` greeting
+//!   (`--transport tcp:<k>`).
+//! * [`TcpServer`] — multi-process federation: standalone `repro worker`
+//!   processes dial in, send `Join`, and receive an `Assign` frame carrying
+//!   the run fingerprint, wire-rendered config, and data recipe so they can
+//!   rebuild their clients locally (`--listen <host:port>`, see
+//!   `crate::coordinator::remote` and docs/WIRE.md).
+//!
+//! Both produce the same [`Tcp`] transport; the worker side of the
+//! connection is [`super::worker::serve_connection`] in both cases.
 //!
 //! Deadlock freedom: the server writes every downlink of an exchange before
 //! reading any uplink, so a worker must never be the reason a downlink
@@ -17,6 +31,12 @@
 //! eagerly drains its socket into an in-process channel; compute happens
 //! behind that buffer. Uplink writes can block at worst until the server
 //! finishes its (bounded) downlink writes and starts reading.
+//!
+//! Handshake liveness: the accept loop never blocks on any single
+//! connection — greetings complete on short-lived per-connection threads
+//! whose reads are bounded by the configurable handshake timeout
+//! (`RunConfig::handshake_timeout_ms`), so one stalled or dead worker can
+//! neither starve the other accepts nor hang the run past the deadline.
 //!
 //! Sequencing: every frame carries `(round, exchange, client)` and the
 //! server verifies them against its expectation on receipt — a misrouted or
@@ -30,30 +50,25 @@
 //! the coordinator from the same decoded packets the server absorbs, so a
 //! traced TCP run validates like any other (`python/analysis/load_trace.py`).
 
-use super::codec::{FrameHeader, FrameKind};
+use super::codec::{Assignment, FrameHeader, FrameKind};
 use super::session::{FramePayload, Session};
-use super::threaded::panic_message;
+use super::worker::{serve_connection, ClientTable};
 use super::{ClientStep, Downlink, ProblemFactory, Transport, Uplink};
-use crate::obs::{Ctx, Lane, Obs};
-use crate::problem::LocalProblem;
+use crate::obs::Obs;
 use crate::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::net::{TcpListener, TcpStream};
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::thread::Scope;
 use std::time::Duration;
-
-/// How long the server waits for all workers to connect and greet before
-/// declaring the round loop dead (covers a worker that failed to spawn).
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One client pinned to a worker: index, state, private RNG stream.
 type ClientSlot = (usize, Box<dyn ClientStep>, Rng);
 
 /// The server half: one framed connection per worker. Created by
-/// [`Tcp::spawn`] inside a [`std::thread::scope`]; dropping it sends `Bye`
-/// on every connection so the scoped workers shut down and join.
+/// [`Tcp::spawn`] (thread workers) or [`TcpServer::accept_remote`] (worker
+/// processes); dropping it sends `Bye` on every connection so the workers
+/// shut down (and, under [`Tcp::spawn`], the scoped threads join).
 pub struct Tcp {
     /// Connection `w` serves the clients of residue class `w`.
     conns: Vec<Session<TcpStream>>,
@@ -62,9 +77,10 @@ pub struct Tcp {
 
 impl Tcp {
     /// Bind a loopback listener, spawn `workers` scoped client threads that
-    /// connect back to it, and complete the `Hello` handshake with each.
-    /// Worker `w` owns the client states (and factory-built local problems)
-    /// of residue class `w`, exactly like [`super::Threaded`].
+    /// connect back to it, and complete the `Hello` handshake with each
+    /// (bounded by `timeout`). Worker `w` owns the client states (and
+    /// factory-built local problems) of residue class `w`, exactly like
+    /// [`super::Threaded`].
     pub fn spawn<'scope, 'env: 'scope>(
         scope: &'scope Scope<'scope, 'env>,
         workers: usize,
@@ -72,6 +88,7 @@ impl Tcp {
         rngs: Vec<Rng>,
         factory: ProblemFactory<'env>,
         obs: Obs<'env>,
+        timeout: Duration,
     ) -> Result<Tcp> {
         assert_eq!(clients.len(), rngs.len(), "rngs/clients length mismatch");
         let workers = workers.clamp(1, clients.len().max(1));
@@ -91,63 +108,167 @@ impl Tcp {
                 }
             });
         }
-        let conns = accept_workers(&listener, workers)?;
+        let conns = accept_workers(&listener, workers, timeout, &GreetMode::Hello)?;
         Ok(Tcp { conns, workers })
     }
 }
 
-/// Accept until every worker has connected and said `Hello` (the header's
-/// `client` field carries the worker index), or the handshake deadline
-/// passes. Nonblocking accept + poll so a dead worker cannot hang the run.
-fn accept_workers(listener: &TcpListener, workers: usize) -> Result<Vec<Session<TcpStream>>> {
+/// A listening round-loop endpoint for standalone worker processes
+/// (`repro worker --connect`). Split into bind/accept phases so the caller
+/// can announce the bound address (port 0 resolves to a free port) *before*
+/// blocking in the accept handshake.
+pub struct TcpServer {
+    listener: TcpListener,
+    workers: usize,
+    timeout: Duration,
+}
+
+impl TcpServer {
+    /// Bind `addr` (`host:port`; port 0 picks a free one) to register
+    /// `workers` remote workers, each handshake bounded by `timeout`.
+    pub fn bind(addr: &str, workers: usize, timeout: Duration) -> Result<TcpServer> {
+        anyhow::ensure!(workers >= 1, "need at least one worker");
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding the round-loop listener on {addr}"))?;
+        Ok(TcpServer { listener, workers, timeout })
+    }
+
+    /// The bound address (resolves a port-0 bind to the actual port).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("reading the listener address")
+    }
+
+    /// Accept and handshake all registered remote workers (`Join` →
+    /// `Assign` → `Hello`, docs/WIRE.md) and return the connected
+    /// transport. Worker indices are handed out in arrival order.
+    pub fn accept_remote(&self, assignment: &Assignment) -> Result<Tcp> {
+        let conns = accept_workers(
+            &self.listener,
+            self.workers,
+            self.timeout,
+            &GreetMode::Assign(assignment.clone()),
+        )?;
+        Ok(Tcp { conns, workers: self.workers })
+    }
+}
+
+/// Which greeting protocol the accept loop runs per connection.
+#[derive(Clone)]
+enum GreetMode {
+    /// In-process thread workers self-identify: a single `Hello(w)`.
+    Hello,
+    /// Remote worker processes: `Join` in, `Assign` out (index = arrival
+    /// order), then `Hello(w)` once the worker has rebuilt its data — or an
+    /// `Error` frame if it rejects the assignment.
+    Assign(Assignment),
+}
+
+/// The greeting exchange for one accepted connection. Runs on its own
+/// short-lived thread so a stalled peer cannot starve the accept loop; each
+/// read is bounded by the handshake read timeout already set on the stream.
+fn greet_worker(
+    stream: TcpStream,
+    index: usize,
+    mode: GreetMode,
+) -> Result<(usize, Session<TcpStream>)> {
+    let mut sess = Session::new(stream);
+    if let GreetMode::Assign(assignment) = &mode {
+        let (hdr, payload) = sess.recv().context("reading a worker's Join request")?;
+        if !matches!(payload, FramePayload::Control(FrameKind::Join)) {
+            bail!("expected a Join request, got a {:?} frame", hdr.kind);
+        }
+        sess.send_assign(index, assignment).context("sending the run assignment")?;
+    }
+    let (hdr, payload) = sess.recv().context("reading a worker greeting")?;
+    match payload {
+        FramePayload::Control(FrameKind::Hello) => {}
+        FramePayload::Error(msg) => bail!("worker {index} rejected its assignment: {msg}"),
+        _ => bail!("expected a Hello greeting, got a {:?} frame", hdr.kind),
+    }
+    let w = hdr.client as usize;
+    if matches!(mode, GreetMode::Assign(_)) && w != index {
+        bail!("worker greeted as {w} but was assigned index {index}");
+    }
+    Ok((w, sess))
+}
+
+/// Accept until every worker has connected and completed its greeting, or
+/// the deadline passes. The accept loop itself never blocks: connections
+/// are accepted nonblockingly and their greetings complete on per-
+/// connection threads (each read bounded by `timeout`), so a dead worker
+/// surfaces as the timeout error and a stalled one cannot starve the rest.
+fn accept_workers(
+    listener: &TcpListener,
+    workers: usize,
+    timeout: Duration,
+    mode: &GreetMode,
+) -> Result<Vec<Session<TcpStream>>> {
     listener.set_nonblocking(true).context("making the listener nonblocking")?;
     // audit:allow(determinism-clock): wall-clock here only bounds the connection handshake; no run result depends on it.
-    let deadline = std::time::Instant::now() + HANDSHAKE_TIMEOUT;
+    let deadline = std::time::Instant::now() + timeout;
+    let (done_tx, done_rx) = mpsc::channel::<Result<(usize, Session<TcpStream>)>>();
+    let mut accepted = 0usize;
     let mut conns: Vec<Option<Session<TcpStream>>> = (0..workers).map(|_| None).collect();
     let mut connected = 0usize;
     while connected < workers {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false).context("restoring blocking mode")?;
-                stream.set_nodelay(true).context("setting TCP_NODELAY")?;
-                // Bound the greeting read too, then return to fully
-                // blocking reads for the round loop.
-                stream
-                    .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
-                    .context("setting the handshake read timeout")?;
-                let mut sess = Session::new(stream);
-                let (hdr, payload) = sess.recv().context("reading a worker greeting")?;
-                if !matches!(payload, FramePayload::Control(FrameKind::Hello)) {
-                    bail!("expected a Hello greeting, got a {:?} frame", hdr.kind);
+        // Drain everything the listener has ready before waiting on
+        // greetings — acceptance must never wait behind a slow peer.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).context("restoring blocking mode")?;
+                    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                    // Bound every greeting read; the round loop restores
+                    // fully blocking reads below.
+                    stream
+                        .set_read_timeout(Some(timeout))
+                        .context("setting the handshake read timeout")?;
+                    let index = accepted;
+                    accepted += 1;
+                    let tx = done_tx.clone();
+                    let mode = mode.clone();
+                    std::thread::spawn(move || {
+                        let _ = tx.send(greet_worker(stream, index, mode));
+                    });
                 }
-                let w = hdr.client as usize;
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting a worker connection"),
+            }
+        }
+        // Wait briefly for a completed greeting (this doubles as the accept
+        // loop's idle sleep), then go accept again.
+        match done_rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(Ok((w, sess))) => {
                 if w >= workers || conns[w].is_some() {
                     bail!("invalid or duplicate worker greeting (worker {w} of {workers})");
                 }
                 conns[w] = Some(sess);
                 connected += 1;
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // audit:allow(determinism-clock): wall-clock here only bounds the connection handshake; no run result depends on it.
-                if std::time::Instant::now() >= deadline {
-                    bail!("timed out waiting for {} of {workers} workers", workers - connected);
-                }
-                std::thread::sleep(Duration::from_millis(2));
+            Ok(Err(e)) => return Err(e).context("completing a worker handshake"),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Unreachable — this function owns a live `done_tx` clone.
+                bail!("worker greeting channel closed unexpectedly");
             }
-            Err(e) => return Err(e).context("accepting a worker connection"),
+        }
+        // audit:allow(determinism-clock): wall-clock here only bounds the connection handshake; no run result depends on it.
+        if connected < workers && std::time::Instant::now() >= deadline {
+            bail!("timed out waiting for {} of {workers} workers", workers - connected);
         }
     }
     let mut out = Vec::with_capacity(workers);
     for sess in conns.into_iter().flatten() {
-        let stream_ref = sess.stream_ref();
-        stream_ref.set_read_timeout(None).context("clearing the handshake read timeout")?;
+        sess.stream_ref()
+            .set_read_timeout(None)
+            .context("clearing the handshake read timeout")?;
         out.push(sess);
     }
     Ok(out)
 }
 
-/// One worker thread: connect, greet, build local problems, then serve
-/// decoded downlinks until `Bye` (or the connection drops).
+/// One in-process worker thread: connect, greet, build local problems, then
+/// serve decoded downlinks until `Bye` (or the connection drops).
 fn worker_main(
     addr: std::net::SocketAddr,
     w: usize,
@@ -157,91 +278,19 @@ fn worker_main(
 ) -> Result<()> {
     let stream = TcpStream::connect(addr).context("connecting to the round loop")?;
     stream.set_nodelay(true).context("setting TCP_NODELAY")?;
-    let reader_stream = stream.try_clone().context("cloning the stream for the reader")?;
-    let mut tx_sess = Session::new(stream);
+    let mut sess = Session::new(stream);
     // Greet *before* building local problems: the server's accept loop must
     // learn who we are while dataset/oracle construction is still running.
-    tx_sess.send_control(FrameKind::Hello, w).context("sending the Hello greeting")?;
+    sess.send_control(FrameKind::Hello, w).context("sending the Hello greeting")?;
     // Local problems are built here, on the owning thread, and never leave.
-    let mut table: Vec<(usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>)> =
-        part.into_iter()
-            .map(|(i, c, r)| {
-                let local = factory(i);
-                (i, c, r, local)
-            })
-            .collect();
-    let (tx, rx) = mpsc::channel::<(FrameHeader, FramePayload)>();
-    std::thread::scope(|s| -> Result<()> {
-        // The reader: eagerly drain the socket so the server's downlink
-        // writes never block on this worker's compute (see module docs).
-        s.spawn(move || {
-            let mut rx_sess = Session::new(reader_stream);
-            loop {
-                match rx_sess.recv() {
-                    Ok((hdr, payload)) => {
-                        let bye = matches!(payload, FramePayload::Control(FrameKind::Bye));
-                        if tx.send((hdr, payload)).is_err() || bye {
-                            break;
-                        }
-                    }
-                    // EOF / reset: the server is gone; dropping `tx` ends
-                    // the compute loop below.
-                    Err(_) => break,
-                }
-            }
-        });
-        let result = serve(&mut table, &rx, &mut tx_sess, w, obs);
-        // Whatever ended the serve loop, tear the socket down so the reader
-        // thread's blocking recv unblocks and the scope can join it.
-        let _ = tx_sess.stream_ref().shutdown(std::net::Shutdown::Both);
-        result
-    })
-}
-
-/// The worker's compute loop: decoded downlinks in, framed uplinks (or
-/// Error frames) out, until `Bye` or the connection drops.
-fn serve(
-    table: &mut [(usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>)],
-    rx: &mpsc::Receiver<(FrameHeader, FramePayload)>,
-    tx_sess: &mut Session<TcpStream>,
-    w: usize,
-    obs: Obs<'_>,
-) -> Result<()> {
-    while let Ok((hdr, payload)) = rx.recv() {
-        let down = match payload {
-            FramePayload::Packet(p) => p,
-            FramePayload::Control(FrameKind::Bye) => break,
-            _ => bail!("unexpected {:?} frame from the server", hdr.kind),
-        };
-        let (round, exchange) = (hdr.round as usize, hdr.exchange as usize);
-        let client = hdr.client as usize;
-        let reply = match table.iter_mut().find(|(i, ..)| *i == client) {
-            None => Err(anyhow::anyhow!("client {client} is not owned by worker {w}")),
-            Some((_, step, rng, local)) => {
-                let ctx = Ctx::client(round, exchange, client);
-                let _span = obs.span("compute", Lane::Client(client), ctx);
-                // A panicking client must still produce a reply (an
-                // Error frame), or the server would wait forever.
-                match catch_unwind(AssertUnwindSafe(|| {
-                    step.compute(local.as_ref(), round, exchange, &down, rng)
-                })) {
-                    Ok(res) => res,
-                    Err(payload) => Err(anyhow::anyhow!(
-                        "client {client} panicked: {}",
-                        panic_message(payload)
-                    )),
-                }
-            }
-        };
-        let sent = match reply {
-            Ok(up) => tx_sess.send_packet(&hdr, &up),
-            Err(e) => tx_sess.send_error(&hdr, &format!("{e:#}")),
-        };
-        if sent.is_err() {
-            break; // server gone mid-reply — shut down quietly
-        }
-    }
-    Ok(())
+    let table: ClientTable = part
+        .into_iter()
+        .map(|(i, c, r)| {
+            let local = factory(i);
+            (i, c, r, local)
+        })
+        .collect();
+    serve_connection(sess.into_inner(), table, w, obs)
 }
 
 impl Transport for Tcp {
@@ -267,8 +316,8 @@ impl Transport for Tcp {
             let up = match payload {
                 FramePayload::Packet(p) => p,
                 FramePayload::Error(msg) => bail!("client {client}, round {round}: {msg}"),
-                FramePayload::Control(k) => {
-                    bail!("unexpected {k:?} frame from client {client}, round {round}")
+                FramePayload::Assign(_) | FramePayload::Control(_) => {
+                    bail!("unexpected {:?} frame from client {client}, round {round}", hdr.kind)
                 }
             };
             let want = FrameHeader::packet(round, exchange, *client);
@@ -304,8 +353,10 @@ impl Drop for Tcp {
 mod tests {
     use super::*;
     use crate::compressors::BitCost;
-    use crate::problem::QuadraticProblem;
+    use crate::problem::{LocalProblem, QuadraticProblem};
     use crate::transport::{client_rngs, Packet};
+
+    const TEST_TIMEOUT: Duration = Duration::from_secs(30);
 
     /// Echo client, as in the threaded backend's tests: replies with its id
     /// and the downlink's scalar doubled; `boom` panics on round ≥ 1.
@@ -360,7 +411,8 @@ mod tests {
         let f = factory();
         std::thread::scope(|scope| {
             let mut t =
-                Tcp::spawn(scope, 3, clients, client_rngs(1, n), &f, Obs::noop()).unwrap();
+                Tcp::spawn(scope, 3, clients, client_rngs(1, n), &f, Obs::noop(), TEST_TIMEOUT)
+                    .unwrap();
             for round in 0..4 {
                 let replies = t.exchange(round, 0, sends(n, 10.0 * round as f64)).unwrap();
                 assert_eq!(replies.len(), n);
@@ -383,7 +435,8 @@ mod tests {
         let f = factory();
         std::thread::scope(|scope| {
             let mut t =
-                Tcp::spawn(scope, 2, clients, client_rngs(1, n), &f, Obs::noop()).unwrap();
+                Tcp::spawn(scope, 2, clients, client_rngs(1, n), &f, Obs::noop(), TEST_TIMEOUT)
+                    .unwrap();
             assert_eq!(t.exchange(0, 0, sends(n, 0.0)).unwrap().len(), n);
             let err = t.exchange(1, 0, sends(n, 0.0)).unwrap_err();
             let msg = format!("{err:#}");
@@ -399,9 +452,53 @@ mod tests {
         let f = factory();
         std::thread::scope(|scope| {
             let mut t =
-                Tcp::spawn(scope, 16, clients, client_rngs(1, n), &f, Obs::noop()).unwrap();
+                Tcp::spawn(scope, 16, clients, client_rngs(1, n), &f, Obs::noop(), TEST_TIMEOUT)
+                    .unwrap();
             let replies = t.exchange(0, 0, sends(n, 1.0)).unwrap();
             assert_eq!(replies.len(), n);
         });
+    }
+
+    #[test]
+    fn dead_worker_times_out_cleanly() {
+        // Nobody ever connects: the accept phase must surface the timeout
+        // error within the (sub-second) deadline, not hang.
+        let srv = TcpServer::bind("127.0.0.1:0", 2, Duration::from_millis(300)).unwrap();
+        let assignment = Assignment {
+            fingerprint: 1,
+            workers: 2,
+            clients: 2,
+            config: String::new(),
+            recipe: String::new(),
+        };
+        let err = srv.accept_remote(&assignment).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out waiting for 2 of 2 workers"), "{msg}");
+    }
+
+    #[test]
+    fn stalled_greeting_does_not_starve_other_workers() {
+        // One connection opens but never greets; the workers that do greet
+        // must still be accepted (the old code read greetings blockingly
+        // inside the accept loop, so the stalled peer starved everyone).
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stall = TcpStream::connect(addr).unwrap();
+        let greeters: Vec<_> = (0..2)
+            .map(|w| {
+                std::thread::spawn(move || {
+                    let mut s = Session::new(TcpStream::connect(addr).unwrap());
+                    s.send_control(FrameKind::Hello, w).unwrap();
+                    s // keep the connection open until accept completes
+                })
+            })
+            .collect();
+        let conns =
+            accept_workers(&listener, 2, Duration::from_secs(10), &GreetMode::Hello).unwrap();
+        assert_eq!(conns.len(), 2);
+        drop(stall);
+        for g in greeters {
+            g.join().unwrap();
+        }
     }
 }

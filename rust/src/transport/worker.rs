@@ -1,0 +1,116 @@
+//! The worker half of the socket backend, shared by the in-process thread
+//! workers ([`super::Tcp::spawn`]) and the standalone `repro worker`
+//! process (`crate::coordinator::remote`).
+//!
+//! Once a connection's handshake is done (however it was established —
+//! `Hello` for spawned threads, `Join`/`Assign`/`Hello` for remote
+//! processes, see docs/WIRE.md), the serving side is identical: a dedicated
+//! reader thread eagerly drains the socket into an in-process channel (so
+//! the server's downlink writes never block on this worker's compute — the
+//! deadlock-freedom argument in [`super::tcp`]'s module docs), while the
+//! compute loop decodes downlinks, runs the owned clients, and frames the
+//! uplinks (or Error frames) back.
+
+use super::codec::{FrameHeader, FrameKind};
+use super::session::{FramePayload, Session};
+use super::threaded::panic_message;
+use super::ClientStep;
+use crate::obs::{Ctx, Lane, Obs};
+use crate::problem::LocalProblem;
+use crate::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+
+/// One served client: global index, protocol half, private RNG stream, and
+/// the locally-built problem its oracle calls run against. Local problems
+/// are built on the owning thread/process and never leave it
+/// ([`LocalProblem`] is deliberately non-`Send`).
+pub type ClientTable = Vec<(usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>)>;
+
+/// Serve an established (post-handshake) connection until the round loop
+/// says `Bye` or the connection drops: spawn the reader thread, run the
+/// compute loop, then tear the socket down so the reader unblocks and
+/// joins.
+pub fn serve_connection(
+    stream: TcpStream,
+    mut table: ClientTable,
+    w: usize,
+    obs: Obs<'_>,
+) -> Result<()> {
+    let reader_stream = stream.try_clone().context("cloning the stream for the reader")?;
+    let mut tx_sess = Session::new(stream);
+    let (tx, rx) = mpsc::channel::<(FrameHeader, FramePayload)>();
+    std::thread::scope(|s| -> Result<()> {
+        // The reader: eagerly drain the socket so the server's downlink
+        // writes never block on this worker's compute (see module docs).
+        s.spawn(move || {
+            let mut rx_sess = Session::new(reader_stream);
+            loop {
+                match rx_sess.recv() {
+                    Ok((hdr, payload)) => {
+                        let bye = matches!(payload, FramePayload::Control(FrameKind::Bye));
+                        if tx.send((hdr, payload)).is_err() || bye {
+                            break;
+                        }
+                    }
+                    // EOF / reset: the server is gone; dropping `tx` ends
+                    // the compute loop below.
+                    Err(_) => break,
+                }
+            }
+        });
+        let result = serve(&mut table, &rx, &mut tx_sess, w, obs);
+        // Whatever ended the serve loop, tear the socket down so the reader
+        // thread's blocking recv unblocks and the scope can join it.
+        let _ = tx_sess.stream_ref().shutdown(std::net::Shutdown::Both);
+        result
+    })
+}
+
+/// The worker's compute loop: decoded downlinks in, framed uplinks (or
+/// Error frames) out, until `Bye` or the connection drops.
+fn serve(
+    table: &mut [(usize, Box<dyn ClientStep>, Rng, Box<dyn LocalProblem>)],
+    rx: &mpsc::Receiver<(FrameHeader, FramePayload)>,
+    tx_sess: &mut Session<TcpStream>,
+    w: usize,
+    obs: Obs<'_>,
+) -> Result<()> {
+    while let Ok((hdr, payload)) = rx.recv() {
+        let down = match payload {
+            FramePayload::Packet(p) => p,
+            FramePayload::Control(FrameKind::Bye) => break,
+            _ => bail!("unexpected {:?} frame from the server", hdr.kind),
+        };
+        let (round, exchange) = (hdr.round as usize, hdr.exchange as usize);
+        let client = hdr.client as usize;
+        let reply = match table.iter_mut().find(|(i, ..)| *i == client) {
+            None => Err(anyhow::anyhow!("client {client} is not owned by worker {w}")),
+            Some((_, step, rng, local)) => {
+                let ctx = Ctx::client(round, exchange, client);
+                let _span = obs.span("compute", Lane::Client(client), ctx);
+                // A panicking client must still produce a reply (an
+                // Error frame), or the server would wait forever.
+                match catch_unwind(AssertUnwindSafe(|| {
+                    step.compute(local.as_ref(), round, exchange, &down, rng)
+                })) {
+                    Ok(res) => res,
+                    Err(payload) => Err(anyhow::anyhow!(
+                        "client {client} panicked: {}",
+                        panic_message(payload)
+                    )),
+                }
+            }
+        };
+        let sent = match reply {
+            Ok(up) => tx_sess.send_packet(&hdr, &up),
+            Err(e) => tx_sess.send_error(&hdr, &format!("{e:#}")),
+        };
+        if sent.is_err() {
+            break; // server gone mid-reply — shut down quietly
+        }
+    }
+    Ok(())
+}

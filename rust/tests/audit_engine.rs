@@ -115,7 +115,7 @@ fn codec_table_drift_is_caught() {
     let codec: Vec<_> =
         report.findings.iter().filter(|f| f.rule == "codec-sync").collect();
     let msgs: Vec<&str> = codec.iter().map(|f| f.msg.as_str()).collect();
-    assert_eq!(codec.len(), 4, "{msgs:?}");
+    assert_eq!(codec.len(), 10, "{msgs:?}");
     // "alpha" appears twice in the table: one duplicate-id finding.
     assert!(
         msgs.iter().any(|m| m.contains("\"alpha\"") && m.contains("more than once")),
@@ -135,8 +135,36 @@ fn codec_table_drift_is_caught() {
         msgs.iter().any(|m| m.contains("\"delta\"") && m.contains("not in the kinds registry")),
         "{msgs:?}"
     );
+    // Frame-level drift: byte disagreement between enum and table.
+    assert!(
+        msgs.iter().any(|m| m.contains("FrameKind::Packet = 2") && m.contains("(\"packet\", 3)")),
+        "{msgs:?}"
+    );
+    // Duplicate wire byte inside the frame table.
+    assert!(
+        msgs.iter()
+            .any(|m| m.contains("frame byte 3") && m.contains("\"packet\"") && m.contains("\"bye\"")),
+        "{msgs:?}"
+    );
+    // Reserved byte 0 must stay unassigned.
+    assert!(msgs.iter().any(|m| m.contains("\"zero\"") && m.contains("reserved byte 0")), "{msgs:?}");
+    // A variant without an explicit discriminant risks silent renumbering.
+    assert!(
+        msgs.iter().any(|m| m.contains("FrameKind::Bye") && m.contains("no explicit discriminant")),
+        "{msgs:?}"
+    );
+    // A variant missing from the table cannot cross the codec.
+    assert!(
+        msgs.iter().any(|m| m.contains("FrameKind::Gone") && m.contains("no FRAME_KINDS entry")),
+        "{msgs:?}"
+    );
+    // An orphan table entry has no variant behind its byte.
+    assert!(
+        msgs.iter().any(|m| m.contains("\"zero\"") && m.contains("no FrameKind enum variant")),
+        "{msgs:?}"
+    );
     // The drift is the only problem: charges are honored, kinds documented.
-    assert_eq!(report.findings.len(), 4, "{:?}", report.findings);
+    assert_eq!(report.findings.len(), 10, "{:?}", report.findings);
 }
 
 #[test]

@@ -30,6 +30,26 @@ pub const KINDS: &[Kind] = &[
 // (not registered), "beta"/"gamma" absent.
 pub const WIRE_KINDS: &[&str] = &["alpha", "alpha", "delta"];
 
+// The frame level of the codec, drifted to exercise every frame check.
+pub enum FrameKind {
+    Hello = 1,
+    // Table assigns byte 3 instead: must be caught (byte disagreement).
+    Packet = 2,
+    // No explicit discriminant: must be caught (implicit renumbering risk).
+    Bye,
+    // Missing from FRAME_KINDS: must be caught.
+    Gone = 4,
+}
+
+pub const FRAME_KINDS: &[(&str, u8)] = &[
+    ("hello", 1),
+    ("packet", 3),
+    // Duplicate byte 3: must be caught.
+    ("bye", 3),
+    // Reserved byte 0 AND no FrameKind variant: two findings.
+    ("zero", 0),
+];
+
 pub struct BitCost(f64);
 impl BitCost {
     pub fn zero() -> Self {

@@ -1,12 +1,14 @@
 //! The transport layer's determinism contract: for **every** `Algorithm`
 //! variant, a federated run must produce a byte-identical `History`
-//! (rounds, bits up/down, gaps, distances) under the `Lockstep`, `Threaded`
-//! and `Tcp` backends, at any worker count — client randomness comes from
-//! per-client streams and absorb order is pinned, so scheduling cannot
-//! leak into results. Under `Tcp` every packet additionally crosses the
-//! byte-level wire codec over real loopback sockets, so the identical
-//! `CommTally` columns prove the decoded frames reconcile with the
-//! in-process bit accounting to the last bit.
+//! (rounds, bits up/down, gaps, distances) under the `Lockstep`, `Threaded`,
+//! `Tcp` and multi-process `Listen` backends, at any worker count — client
+//! randomness comes from per-client streams and absorb order is pinned, so
+//! scheduling cannot leak into results. Under `Tcp` every packet
+//! additionally crosses the byte-level wire codec over real loopback
+//! sockets, so the identical `CommTally` columns prove the decoded frames
+//! reconcile with the in-process bit accounting to the last bit. Under
+//! `Listen` the workers are real `repro worker` child processes that
+//! rebuild their shards from the handshake's data recipe.
 //!
 //! Configurations deliberately exercise the stochastic paths (Rand-K /
 //! dithering client compressors, partial participation, lazy-gradient ξ
@@ -15,8 +17,10 @@
 
 use basis_learn::compressors::CompressorSpec;
 use basis_learn::config::{Algorithm, RunConfig, TransportSpec};
-use basis_learn::coordinator::{run_federated, RunOutput};
+use basis_learn::coordinator::{run_federated, run_federated_listen, RunOutput};
 use basis_learn::data::{FederatedDataset, SyntheticSpec};
+use basis_learn::obs::NOOP;
+use std::process::{Command, Stdio};
 
 fn fed(seed: u64) -> FederatedDataset {
     FederatedDataset::synthetic(&SyntheticSpec {
@@ -146,6 +150,50 @@ fn every_algorithm_is_backend_invariant() {
                 .unwrap_or_else(|e| panic!("{algo} tcp:{workers}: {e:#}"));
             assert_identical(algo, &lockstep, &tcp, &format!("tcp:{workers}"));
         }
+    }
+}
+
+#[test]
+fn every_algorithm_is_process_invariant() {
+    // The fourth backend: a real multi-process federation. The round loop
+    // listens on an ephemeral loopback port and two *separate operating
+    // system processes* of the compiled `repro` binary join it, rebuild
+    // their shards from the Assign handshake's data recipe, and serve the
+    // rounds. Every packet crosses process boundaries through the byte
+    // codec; the trace must still be bit-identical to lockstep.
+    for &algo in Algorithm::all() {
+        let f = fed(2024);
+        let cfg = cfg_for(algo);
+        let lockstep = run_federated(&f, &cfg).unwrap_or_else(|e| panic!("{algo} lockstep: {e:#}"));
+        let cfg_l = RunConfig {
+            transport: TransportSpec::Listen { addr: "127.0.0.1:0".into(), workers: 2 },
+            ..cfg
+        };
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let out = std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                run_federated_listen(&f, &cfg_l, &NOOP, &mut |a| addr_tx.send(a).unwrap())
+            });
+            let addr = addr_rx.recv().expect("listen address").to_string();
+            let children: Vec<_> = (0..2)
+                .map(|i| {
+                    Command::new(env!("CARGO_BIN_EXE_repro"))
+                        .args(["worker", "--connect", &addr])
+                        .stdout(Stdio::null())
+                        .stderr(Stdio::inherit())
+                        .spawn()
+                        .unwrap_or_else(|e| panic!("{algo}: spawning worker process {i}: {e}"))
+                })
+                .collect();
+            let out = server.join().expect("server thread panicked");
+            for (i, mut child) in children.into_iter().enumerate() {
+                let status = child.wait().expect("waiting on a worker process");
+                assert!(status.success(), "{algo}: worker process {i} exited with {status}");
+            }
+            out
+        })
+        .unwrap_or_else(|e| panic!("{algo} listen: {e:#}"));
+        assert_identical(algo, &lockstep, &out, "two repro worker processes");
     }
 }
 

@@ -15,7 +15,7 @@ use basis_learn::linalg::Mat;
 use basis_learn::rng::Rng;
 use basis_learn::transport::codec::{
     decode_header, decode_packet, encode_header, encode_packet, encode_packet_into, wire_id,
-    FrameHeader, FrameKind, HEADER_LEN, WIRE_KINDS,
+    FrameHeader, FrameKind, HEADER_LEN, MAGIC, MAX_BODY_LEN, VERSION, WIRE_KINDS,
 };
 use basis_learn::transport::kinds::KINDS;
 use basis_learn::transport::session::{FramePayload, Session};
@@ -241,6 +241,35 @@ fn session_error_frames_carry_their_message() {
         FramePayload::Error(msg) => assert_eq!(msg, "local Hessian exploded"),
         other => panic!("expected an error frame, got {other:?}"),
     }
+}
+
+#[test]
+fn hostile_body_length_is_rejected_before_allocation() {
+    // The header's `body_len` field is peer-controlled on a real connection.
+    // Hand-craft an otherwise-valid header claiming an absurd body: `recv`
+    // must fail on the MAX_BODY_LEN cap *before* sizing its scratch buffer
+    // to the claimed length (no body bytes follow, so a decoder that
+    // allocated first would block on a 4 GiB read instead of erroring).
+    for claimed in [MAX_BODY_LEN as u32 + 1, u32::MAX] {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&MAGIC);
+        raw.push(VERSION);
+        raw.push(FrameKind::Packet as u8);
+        raw.extend_from_slice(&0u64.to_le_bytes()); // round
+        raw.extend_from_slice(&0u64.to_le_bytes()); // exchange
+        raw.extend_from_slice(&0u64.to_le_bytes()); // client
+        raw.extend_from_slice(&claimed.to_le_bytes());
+        assert_eq!(raw.len(), HEADER_LEN, "hand-built header drifted from the layout");
+        let mut sess = Session::new(Loopback(Cursor::new(raw)));
+        let err = sess.recv().expect_err("hostile body length accepted");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("MAX_BODY_LEN") && msg.contains("hostile"), "{msg}");
+    }
+    // The cap binds symmetrically: the encoder refuses to produce a header
+    // the receiving side would reject.
+    let mut out = Vec::new();
+    let hdr = FrameHeader::control(FrameKind::Packet, 0);
+    assert!(encode_header(&hdr, MAX_BODY_LEN + 1, &mut out).is_err());
 }
 
 #[test]
